@@ -1,0 +1,71 @@
+//! Capacity planner: "will this model fit, and how fast will it run?" —
+//! the Table 5/6 workflow as a tool. For each model of the paper's zoo on
+//! Gaudi 2 and Gaudi 3: weight footprint under FP8-linears, max batch per
+//! context length, prefill and decode throughput.
+//!
+//! ```text
+//! cargo run --release --example capacity_planner
+//! ```
+
+use gaudi_fp8::gaudisim::{
+    decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel, ScalingKind,
+};
+use gaudi_fp8::model::config::ModelConfig;
+use gaudi_fp8::util::render_table;
+
+fn main() {
+    let models = [
+        ModelConfig::llama2_7b(),
+        ModelConfig::llama2_13b(),
+        ModelConfig::llama3_8b(),
+        ModelConfig::mistral_7b(),
+        ModelConfig::mixtral_8x7b(),
+        ModelConfig::llama31_70b(),
+    ];
+    for dev in [Device::gaudi2(), Device::gaudi3()] {
+        let mut rows = Vec::new();
+        for m in &models {
+            let mm = MemoryModel::new(dev, m.clone());
+            let fits_bf16 = mm.fits_bf16(1, 2048);
+            let max_b_2k = mm.max_batch_pow2(2048);
+            let max_b_8k = mm.max_batch_pow2(8192);
+            let e2e = E2eConfig {
+                model: m.clone(),
+                device: dev,
+                scaling: ScalingKind::PerTensorHwPow2,
+                lm_head_bf16: true,
+            };
+            let pf = prefill_tflops(&e2e, 2048);
+            let dc = decode_step_tflops(&e2e, max_b_2k.unwrap_or(1), 2048);
+            rows.push(vec![
+                m.name.clone(),
+                format!("{:.1} GB", mm.weight_bytes_fp8() / 1e9),
+                if fits_bf16 { "yes" } else { "NO" }.into(),
+                max_b_2k.map_or("-".into(), |b| b.to_string()),
+                max_b_8k.map_or("-".into(), |b| b.to_string()),
+                format!("{:.0}", pf.tflops),
+                format!("{:.0}", dc.tflops),
+            ]);
+        }
+        println!(
+            "{}",
+            render_table(
+                &format!(
+                    "Capacity plan — {:?} ({} GB HBM, {} TFLOPS FP8)",
+                    dev.generation, dev.hbm_capacity_gib, dev.peak_fp8_tflops
+                ),
+                &[
+                    "model",
+                    "fp8 weights",
+                    "bf16 fits?",
+                    "maxB@2k",
+                    "maxB@8k",
+                    "prefill TF@2k",
+                    "decode TF@2k"
+                ],
+                &rows
+            )
+        );
+    }
+    println!("Note the paper's §4.2.4 observation: Llama-70B fits a single Gaudi 2 only in FP8.");
+}

@@ -1,0 +1,80 @@
+//! Quickstart: a ten-minute tour of the library.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers: the FP8 formats and the Gaudi2/Gaudi3 range difference, the
+//! scaled FP8 GEMM (Eq. 2), calibration + scheme comparison, and a Gaudi
+//! roofline query. No artifacts required.
+
+use gaudi_fp8::calib::ActObserver;
+use gaudi_fp8::fp8::{decode, encode_rne, CastMode, Fp8Format};
+use gaudi_fp8::gaudisim::{gemm_time_s, Device, GemmConfig, ScalingKind};
+use gaudi_fp8::quant::{QuantScheme, QuantizedLinear};
+use gaudi_fp8::tensor::Tensor2;
+use gaudi_fp8::util::rng::XorShiftRng;
+
+fn main() {
+    // 1. FP8 formats (paper §2.4): the same value on Gaudi 2 vs Gaudi 3.
+    println!("== formats ==");
+    for (fmt, label) in [
+        (Fp8Format::E4M3Gaudi2, "E4M3 (Gaudi 2, ±240)"),
+        (Fp8Format::E4M3, "E4M3 (Gaudi 3/OCP, ±448)"),
+        (Fp8Format::E5M2, "E5M2 (±57344)"),
+    ] {
+        let x = 300.0f32;
+        let q = decode(encode_rne(x, fmt, CastMode::SatFinite), fmt);
+        println!("  {label:<28} Q(300.0) = {q}");
+    }
+
+    // 2. A quantized linear layer under different schemes.
+    println!("\n== quantized linear (Eq. 2) ==");
+    let mut rng = XorShiftRng::new(1);
+    let w = Tensor2::randn(64, 256, 0.05, &mut rng);
+    let x = Tensor2::randn_outlier_cols(32, 256, 1.0, 0.05, 300.0, &mut rng);
+    let mut obs = ActObserver::new(256);
+    obs.observe(&x);
+    let stats = obs.finalize();
+    println!("  calibrated r_x = {:.1} (Eq. 8a)", stats.r_x);
+    for scheme in [
+        QuantScheme::unit_scale(Fp8Format::E4M3Gaudi2),
+        QuantScheme::per_tensor(Fp8Format::E4M3Gaudi2),
+        QuantScheme::per_tensor_hw(Fp8Format::E4M3Gaudi2),
+        QuantScheme::per_channel(Fp8Format::E4M3Gaudi2),
+        QuantScheme::smoothquant(Fp8Format::E4M3Gaudi2, 0.5),
+    ] {
+        let q = QuantizedLinear::prepare(&w, Some(&stats), scheme);
+        println!(
+            "  {:<22} relative error {:.4}",
+            scheme.label(),
+            q.relative_error(&w, &x)
+        );
+    }
+
+    // 3. What does this buy on hardware? Roofline query (Table 1).
+    println!("\n== Gaudi 2 roofline (M=K=N=8192) ==");
+    for scaling in [
+        ScalingKind::PerTensorHwPow2,
+        ScalingKind::PerTensorSw,
+        ScalingKind::PerChannel,
+        ScalingKind::Bf16,
+    ] {
+        let r = gemm_time_s(
+            &GemmConfig {
+                m: 8192,
+                k: 8192,
+                n: 8192,
+                scaling,
+            },
+            &Device::gaudi2(),
+        );
+        println!(
+            "  {:<28} {:>6.1} TFLOPS  (MFU {:>5.1}%)",
+            scaling.label(),
+            r.tflops,
+            r.mfu * 100.0
+        );
+    }
+    println!("\nNext: `make artifacts` then `cargo run --release --example serve_e2e`.");
+}

@@ -1,0 +1,109 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer stack on a real small workload:
+//! the byte-level LM *trained at artifact-build time* (loss curve in
+//! artifacts/loss_curve.json) is served through the Rust coordinator
+//! (continuous batching, slot KV cache) executing the AOT PJRT artifacts —
+//! once in BF16 and once in FP8 (static per-tensor) — and reports the
+//! latency/throughput comparison plus sample generations.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use std::path::Path;
+
+use gaudi_fp8::coordinator::{Engine, EngineConfig};
+use gaudi_fp8::server::workload::{WorkloadConfig, WorkloadGen};
+use gaudi_fp8::util::json::Json;
+use gaudi_fp8::util::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // Training evidence: the served model is real (trained), not random.
+    if let Ok(text) = std::fs::read_to_string(dir.join("loss_curve.json")) {
+        if let Ok(j) = Json::parse(&text) {
+            let loss = j.get("loss").and_then(Json::as_f32_vec).unwrap_or_default();
+            if loss.len() >= 2 {
+                println!(
+                    "byte-LM training: loss {:.3} → {:.3} over {} logged steps\n",
+                    loss[0],
+                    loss[loss.len() - 1],
+                    loss.len()
+                );
+            }
+        }
+    }
+
+    let wl = WorkloadConfig {
+        requests: 24,
+        prompt_len_min: 8,
+        prompt_len_max: 48,
+        max_new_min: 12,
+        max_new_max: 28,
+        seed: 42,
+    };
+
+    let mut rows = Vec::new();
+    let mut samples: Vec<(String, String)> = Vec::new();
+    for variant in ["bf16", "fp8_pt", "fp8_pc"] {
+        let mut engine = Engine::new(EngineConfig::new(dir, variant))?;
+        let tw = std::time::Instant::now();
+        engine.warmup()?; // compile artifacts outside the timed window
+        println!("[{variant}] warmup (XLA compile) {:.1}s", tw.elapsed().as_secs_f64());
+        let t0 = std::time::Instant::now();
+        engine.metrics = gaudi_fp8::coordinator::ServeMetrics::new();
+        let reqs = WorkloadGen::new(wl.clone()).generate_all();
+        for r in reqs {
+            engine.submit(r);
+        }
+        let outs = engine.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let m = &engine.metrics;
+        rows.push(vec![
+            variant.to_string(),
+            outs.len().to_string(),
+            format!("{:.0}", m.generated_tokens as f64 / wall),
+            format!("{:.1}", m.ttft.mean_s() * 1e3),
+            format!("{:.1}", m.ttft.p95_s() * 1e3),
+            format!("{:.2}", m.tpot.mean_s() * 1e3),
+            format!("{:.2}", m.mean_decode_batch()),
+            format!("{:.1}s", wall),
+        ]);
+        if variant != "fp8_pc" {
+            let o = outs.iter().find(|o| o.id == 0).unwrap();
+            let text: String = o.tokens.iter().map(|t| *t as u8 as char).collect();
+            samples.push((variant.to_string(), text));
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            "E2E serving — trained byte-LM, 24 batched requests, full stack",
+            &[
+                "variant",
+                "done",
+                "tok/s",
+                "ttft ms",
+                "ttft p95",
+                "tpot ms",
+                "mean batch",
+                "wall"
+            ],
+            &rows
+        )
+    );
+    println!("\nsample generations (request 0):");
+    for (v, text) in &samples {
+        println!("  {v:<8} {text:?}");
+    }
+    println!("\nNOTE: on this CPU testbed FP8 is *emulated* (decode+mul per element),");
+    println!("so fp8 variants trade accuracy only; the throughput win is the Gaudi");
+    println!("story — see `cargo bench` Tables 1/5/6 for the modelled speedups.");
+    Ok(())
+}

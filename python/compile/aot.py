@@ -1,0 +1,246 @@
+"""AOT compile path: train → calibrate → quantize → lower → artifacts/.
+
+Emits HLO *text* (never `.serialize()` — the image's xla_extension 0.5.1
+rejects jax ≥ 0.5's 64-bit-id protos; the text parser reassigns ids; see
+/opt/xla-example/README.md), plus the weights file, calibration scales,
+training loss curve, and a meta.json manifest the Rust runtime reads.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+        [--steps 300] [--fast] [--model tiny]
+
+Runs ONCE at `make artifacts`; never on the request path.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params_io
+from .train import synthetic_corpus, train_byte_lm
+
+PREFILL_SEQS = (16, 32, 64, 128)
+DECODE_BATCHES = (1, 2, 4, 8)
+CACHE_T = 160
+PREFILL_VARIANTS = ("bf16", "unit", "fp8_pt", "fp8_pc", "fp8_dyn")
+DECODE_VARIANTS = ("bf16", "fp8_pt", "fp8_pc")
+GEMM_SHAPE = (64, 256, 256)  # (M, K, N) operator artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg, names, qc, batch, seq):
+    def fn(params_list, tokens):
+        params = dict(zip(names, params_list))
+        logits, kvs = M.prefill(params, tokens, cfg, qc)
+        k, v = M.prefill_to_cache(kvs, cfg, max_seq=CACHE_T)
+        return (logits, k, v)
+
+    spec_params = [
+        jax.ShapeDtypeStruct(M.param_shape(cfg, n), jnp.float32) for n in names
+    ]
+    spec_tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return jax.jit(fn).lower(spec_params, spec_tokens)
+
+
+def lower_decode(cfg, names, qc, batch):
+    kv_shape = M.kv_cache_shape(cfg, batch, CACHE_T)
+
+    def fn(params_list, token, k_cache, v_cache, pos):
+        params = dict(zip(names, params_list))
+        return M.decode_step(params, token, k_cache, v_cache, pos, cfg, qc)
+
+    spec_params = [
+        jax.ShapeDtypeStruct(M.param_shape(cfg, n), jnp.float32) for n in names
+    ]
+    return jax.jit(fn).lower(
+        spec_params,
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # per-row positions
+    )
+
+
+def gemm_fn(variant):
+    """Standalone scaled-GEMM operator: (x f32[M,K], w f32[N,K]) → f32[M,N].
+
+    Self-contained Eq. 2 with in-graph (JiT, §2.3.2) per-tensor activation
+    scaling and per-tensor ('fp8_pt') or per-output-channel ('fp8_pc')
+    weight scaling; 'unit' uses scale 1 everywhere. The Rust integration
+    test compares this against the native `gemm` crate bit-for-bit-ish
+    (f32 accumulation order differs across tilings)."""
+    from .kernels import fp8_jnp as F
+    from .kernels.scaled_matmul import fused_quant_matmul_fp8
+
+    spec = F.E4M3_GAUDI2
+
+    def fn(x, w):
+        if variant == "bf16":
+            return (x @ w.T,)
+        m = x.shape[0]
+        n = w.shape[0]
+        if variant == "unit":
+            s_x = jnp.ones((m,), jnp.float32)
+            s_w = jnp.ones((n,), jnp.float32)
+        else:
+            r_x = jnp.max(jnp.abs(x))
+            s = jnp.where((r_x > 0) & jnp.isfinite(r_x), r_x / spec.r_q, 1.0)
+            s_x = jnp.full((m,), s)
+            if variant == "fp8_pc":
+                r_w = jnp.max(jnp.abs(w), axis=1)
+            else:  # fp8_pt
+                r_w = jnp.broadcast_to(jnp.max(jnp.abs(w)), (n,))
+            s_w = jnp.where((r_w > 0) & jnp.isfinite(r_w), r_w / spec.r_q, 1.0)
+        wq = F.encode_rne(w / s_w[:, None], spec)
+        return (fused_quant_matmul_fp8(x, wq, s_x, s_w, spec),)
+
+    return fn
+
+
+def lower_gemm(variant, m, k, n):
+    return jax.jit(gemm_fn(variant)).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default="tiny", choices=list(M.CONFIGS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fast", action="store_true", help="skip training (random weights)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = M.CONFIGS[args.model](vocab=256)  # byte-level
+    names = M.param_names(cfg)
+    t_start = time.time()
+
+    # ---- 1. weights: train the byte-LM (or random-init with --fast) -------
+    if args.fast:
+        print("[aot] --fast: random-init weights")
+        params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, 0).items()}
+        curve = []
+    else:
+        print(f"[aot] training byte-LM ({args.steps} steps)")
+        params, curve = train_byte_lm(cfg, steps=args.steps)
+
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    params_io.save_params(os.path.join(args.out_dir, "weights_tiny.bin"), params_np, names)
+    with open(os.path.join(args.out_dir, "loss_curve.json"), "w") as f:
+        json.dump({"steps": [s for s, _ in curve], "loss": [l for _, l in curve]}, f)
+
+    # ---- 2. calibration (§3.1) on held-out corpus --------------------------
+    print("[aot] calibrating")
+    calib_data = synthetic_corpus(n_chars=20_000, seed=99)  # disjoint seed
+    cal_batches = [
+        jnp.asarray(calib_data[i * 64 : i * 64 + 64].reshape(1, 64), jnp.int32)
+        for i in range(4)
+    ]
+    scales = M.calibrate(params, cal_batches, cfg, M.F.E4M3_GAUDI2)
+    with open(os.path.join(args.out_dir, "scales_tiny.json"), "w") as f:
+        json.dump(scales, f, indent=2)
+    print("[aot] act scales:", {k: round(v, 5) for k, v in scales.items()})
+
+    # ---- 3. lower all artifacts --------------------------------------------
+    artifacts = []
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(name)
+        print(f"[aot] wrote {name} ({len(text)//1024} KiB, {time.time()-t_start:.0f}s)")
+
+    for variant in PREFILL_VARIANTS:
+        qc = M.make_quant_config(variant, scales)
+        for seq in PREFILL_SEQS:
+            emit(
+                f"prefill_{variant}_b1_s{seq}.hlo.txt",
+                lower_prefill(cfg, names, qc, 1, seq),
+            )
+
+    for variant in DECODE_VARIANTS:
+        qc = M.make_quant_config(variant, scales)
+        for batch in DECODE_BATCHES:
+            emit(f"decode_{variant}_b{batch}.hlo.txt", lower_decode(cfg, names, qc, batch))
+
+    m, k, n = GEMM_SHAPE
+    for variant in ("bf16", "fp8_pt", "fp8_pc", "unit"):
+        emit(f"gemm_{variant}.hlo.txt", lower_gemm(variant, m, k, n))
+
+    # ---- 3b. cross-language selfcheck --------------------------------------
+    # Expected outputs computed in python for fixed inputs; the Rust
+    # integration suite reruns the artifacts and compares.
+    print("[aot] computing selfcheck expectations")
+    check_tokens = calib_data[:16].reshape(1, 16).astype(np.int32)
+    selfcheck = {"tokens": check_tokens.ravel().tolist(), "prefill": {}, "gemm": {}}
+    for variant in PREFILL_VARIANTS:
+        qc = M.make_quant_config(variant, scales)
+        logits, _ = M.prefill(params, jnp.asarray(check_tokens), cfg, qc)
+        lg = np.asarray(logits)
+        selfcheck["prefill"][variant] = {
+            "first16": lg.ravel()[:16].tolist(),
+            "l2": float(np.linalg.norm(lg.ravel())),
+            "shape": list(lg.shape),
+        }
+    rng = np.random.default_rng(7)
+    gx = (rng.standard_normal((m, k)) * 2).astype(np.float32)
+    gw = (rng.standard_normal((n, k)) * 0.05).astype(np.float32)
+    np.save(os.path.join(args.out_dir, "gemm_x.npy"), gx)
+    np.save(os.path.join(args.out_dir, "gemm_w.npy"), gw)
+    gx.tofile(os.path.join(args.out_dir, "gemm_x.f32"))
+    gw.tofile(os.path.join(args.out_dir, "gemm_w.f32"))
+    for variant in ("bf16", "fp8_pt", "fp8_pc", "unit"):
+        out = np.asarray(gemm_fn(variant)(jnp.asarray(gx), jnp.asarray(gw))[0])
+        selfcheck["gemm"][variant] = {
+            "first16": out.ravel()[:16].tolist(),
+            "l2": float(np.linalg.norm(out.ravel())),
+        }
+    with open(os.path.join(args.out_dir, "selfcheck.json"), "w") as f:
+        json.dump(selfcheck, f, indent=2)
+
+    # ---- 4. manifest --------------------------------------------------------
+    meta = {
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "ffn_hidden": cfg.ffn_hidden,
+        },
+        "param_order": names,
+        "param_shapes": {n_: list(M.param_shape(cfg, n_)) for n_ in names},
+        "cache_t": CACHE_T,
+        "prefill_seqs": list(PREFILL_SEQS),
+        "decode_batches": list(DECODE_BATCHES),
+        "prefill_variants": list(PREFILL_VARIANTS),
+        "decode_variants": list(DECODE_VARIANTS),
+        "gemm_shape": list(GEMM_SHAPE),
+        "act_scales": scales,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] DONE: {len(artifacts)} artifacts in {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Pallas kernel: FP8 quantize (cast) with optional scaling.
+
+The Gaudi TPC performs the high-precision → FP8 cast as an elementwise
+stream; on TPU-style Pallas the analogue is a VPU elementwise kernel over
+VMEM tiles. `interpret=True` everywhere — real-TPU lowering would emit a
+Mosaic custom call the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fp8_jnp import Fp8Spec, encode_rne, decode_table_np
+
+# Tile sizes chosen for VMEM residency: 256×256 f32 in + u8 out ≈ 320 KiB,
+# comfortably inside a 16 MiB VMEM budget with double buffering.
+BLOCK_ROWS = 256
+BLOCK_COLS = 256
+
+
+def _pad2(x, br, bc, value=0):
+    """Pad to block multiples (interpret mode NaN-fills OOB block reads)."""
+    n, c = x.shape
+    pn = (-n) % br
+    pc = (-c) % bc
+    if pn == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pn), (0, pc)), constant_values=value)
+
+
+def _cast_kernel(x_ref, inv_scale_ref, o_ref, *, spec: Fp8Spec):
+    x = x_ref[...]
+    inv = inv_scale_ref[0]
+    o_ref[...] = encode_rne(x * inv, spec)
+
+
+def quantize_per_tensor(x, scale, spec: Fp8Spec):
+    """Q(x / scale) -> uint8 codes, per-tensor scalar scale."""
+    n, c = x.shape
+    bn = min(BLOCK_ROWS, n)
+    bc = min(BLOCK_COLS, c)
+    x = _pad2(x, bn, bc)
+    np_, cp = x.shape
+    grid = (pl.cdiv(np_, bn), pl.cdiv(cp, bc))
+    inv = jnp.reshape(1.0 / jnp.asarray(scale, jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_cast_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, cp), jnp.uint8),
+        interpret=True,
+    )(x, inv)[:n, :c]
+
+
+def _cast_kernel_per_row(x_ref, inv_scale_ref, o_ref, *, spec: Fp8Spec):
+    x = x_ref[...]
+    inv = inv_scale_ref[...]  # (block_rows,)
+    o_ref[...] = encode_rne(x * inv[:, None], spec)
+
+
+def quantize_per_row(x, scales, spec: Fp8Spec):
+    """Q(diag(s)^-1 x) -> uint8 codes, one scale per row (per-sample)."""
+    n, c = x.shape
+    bn = min(BLOCK_ROWS, n)
+    bc = min(BLOCK_COLS, c)
+    x = _pad2(x, bn, bc)
+    np_, cp = x.shape
+    grid = (pl.cdiv(np_, bn), pl.cdiv(cp, bc))
+    inv = (1.0 / jnp.asarray(scales, jnp.float32)).astype(jnp.float32)
+    inv = jnp.pad(inv, (0, np_ - n), constant_values=1.0)
+    return pl.pallas_call(
+        functools.partial(_cast_kernel_per_row, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, cp), jnp.uint8),
+        interpret=True,
+    )(x, inv)[:n, :c]
+
+
+def _dequant_kernel(codes_ref, scale_ref, o_ref, *, spec: Fp8Spec):
+    from .fp8_jnp import decode
+
+    o_ref[...] = decode(codes_ref[...], spec) * scale_ref[0]
+
+
+def dequantize_per_tensor(codes, scale, spec: Fp8Spec):
+    """codes -> f32 values × scale (the inverse stream)."""
+    n, c = codes.shape
+    bn = min(BLOCK_ROWS, n)
+    bc = min(BLOCK_COLS, c)
+    codes = _pad2(codes, bn, bc)
+    np_, cp = codes.shape
+    grid = (pl.cdiv(np_, bn), pl.cdiv(cp, bc))
+    s = jnp.reshape(jnp.asarray(scale, jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, cp), jnp.float32),
+        interpret=True,
+    )(codes, s)[:n, :c]

@@ -1,0 +1,167 @@
+"""Jittable FP8 emulation (JAX) — mirrors rust/src/fp8/ bit-for-bit.
+
+Formats (paper §2, §2.4):
+  * e4m3_gaudi2 — IEEE-style E4M3, top exponent reserved, range ±240
+  * e4m3        — Gaudi 3 / OCP E4M3, range ±448
+  * e5m2        — IEEE-style E5M2, range ±57344
+
+Encode is round-to-nearest-even with saturating cast (the Gaudi inference
+cast), implemented with the same integer tricks as the Rust encoder so the
+two sides agree on every value. Codes are uint8.
+"""
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Fp8Spec:
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    ieee_reserved_top_exp: bool
+    max_normal: float
+    max_code: int
+    nan_code: int
+
+    @property
+    def r_q(self) -> float:
+        """The paper's r_q: largest representable magnitude."""
+        return self.max_normal
+
+    @property
+    def min_normal_exp(self) -> int:
+        return 1 - self.bias
+
+
+E4M3_GAUDI2 = Fp8Spec("e4m3_gaudi2", 4, 3, 7, True, 240.0, 0x77, 0x7F)
+E4M3 = Fp8Spec("e4m3", 4, 3, 7, False, 448.0, 0x7E, 0x7F)
+E5M2 = Fp8Spec("e5m2", 5, 2, 15, True, 57344.0, 0x7B, 0x7F)
+
+FORMATS = {s.name: s for s in (E4M3_GAUDI2, E4M3, E5M2)}
+
+
+@lru_cache(maxsize=None)
+def decode_table_np(spec: Fp8Spec) -> np.ndarray:
+    """Exact 256-entry decode table (float32). NaN/Inf entries included."""
+    out = np.zeros(256, dtype=np.float32)
+    exp_mask = (1 << spec.exp_bits) - 1
+    man_mask = (1 << spec.man_bits) - 1
+    for code in range(256):
+        sign = -1.0 if code & 0x80 else 1.0
+        exp = (code >> spec.man_bits) & exp_mask
+        man = code & man_mask
+        if exp == exp_mask and spec.ieee_reserved_top_exp:
+            out[code] = sign * (np.inf if man == 0 else np.nan)
+            continue
+        if exp == exp_mask and not spec.ieee_reserved_top_exp and man == man_mask:
+            out[code] = np.nan
+            continue
+        if exp == 0:
+            val = man * 2.0 ** (spec.min_normal_exp - spec.man_bits)
+        else:
+            val = (1.0 + man / (1 << spec.man_bits)) * 2.0 ** (exp - spec.bias)
+        out[code] = sign * val
+    return out
+
+
+def decode(codes, spec: Fp8Spec):
+    """uint8/uint32 codes -> float32, branchless bit assembly (jittable).
+
+    NO gather: xla_extension 0.5.1 (the version the rust `xla` crate loads
+    artifacts with) mis-executes jax≥0.8-emitted gather ops, so the decode
+    table must never appear in artifact HLO. This also mirrors the hardware
+    more closely — the MME consumes FP8 natively, there is no LUT.
+    """
+    c = codes.astype(jnp.uint32)
+    m = spec.man_bits
+    emask = jnp.uint32((1 << spec.exp_bits) - 1)
+    mmask = jnp.uint32((1 << m) - 1)
+    exp = (c >> m) & emask
+    man = c & mmask
+    neg = (c & jnp.uint32(0x80)) != 0
+    sign_f = jnp.where(neg, jnp.float32(-1.0), jnp.float32(1.0))
+
+    # Normal numbers: assemble the f32 bit pattern directly.
+    nb = (
+        ((c & jnp.uint32(0x80)) << 24)
+        | ((exp + jnp.uint32(127 - spec.bias)) << 23)
+        | (man << (23 - m))
+    )
+    normal = jax.lax.bitcast_convert_type(nb, jnp.float32)
+
+    # Subnormals: value = man · 2^(1-bias-m). float(man) via the 2^23 trick
+    # (man < 2^m ≤ 8, exact), avoiding an integer convert.
+    manf = (
+        jax.lax.bitcast_convert_type(jnp.uint32(0x4B000000) | man, jnp.float32)
+        - jnp.float32(8388608.0)
+    )
+    sub = sign_f * manf * np.float32(2.0 ** (spec.min_normal_exp - m))
+
+    out = jnp.where(exp == 0, sub, normal)
+
+    # Specials.
+    if spec.ieee_reserved_top_exp:
+        inf = sign_f * jnp.float32(np.inf)
+        out = jnp.where(exp == emask, jnp.where(man == 0, inf, jnp.float32(np.nan)), out)
+    else:
+        out = jnp.where((exp == emask) & (man == mmask), jnp.float32(np.nan), out)
+    return out
+
+
+def encode_rne(x, spec: Fp8Spec):
+    """float32 -> uint8 codes, RNE + saturating (SatFinite) cast. Jittable.
+
+    Identical algorithm to rust/src/fp8/encode.rs::encode_rne.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = ((bits >> 31) << 7).astype(jnp.uint32)
+    abs_bits = bits & jnp.uint32(0x7FFFFFFF)
+
+    m = spec.man_bits
+    shift = 23 - m
+    min_norm_exp = spec.min_normal_exp
+
+    # --- normal path: RNE on the f32 mantissa (add-half trick) ------------
+    lsb = (abs_bits >> shift) & 1
+    rounded = abs_bits + jnp.uint32((1 << (shift - 1)) - 1) + lsb
+    r_exp = (rounded >> 23).astype(jnp.int32) - 127
+    r_man = (rounded >> shift) & jnp.uint32((1 << m) - 1)
+    max_exp = (spec.max_code >> m) - spec.bias
+    max_man = spec.max_code & ((1 << m) - 1)
+    overflow = (r_exp > max_exp) | ((r_exp == max_exp) & (r_man > max_man))
+    code_exp = (r_exp + spec.bias).astype(jnp.uint32)
+    normal_code = (code_exp << m) | r_man
+    normal_code = jnp.where(overflow, jnp.uint32(spec.max_code), normal_code)
+
+    # --- subnormal path ----------------------------------------------------
+    x_abs = jnp.abs(x)
+    scaled = x_abs * np.float32(2.0 ** (m - min_norm_exp))
+    # round-half-even on the scaled magnitude
+    q = jnp.round(scaled).astype(jnp.uint32)  # jnp.round is ties-to-even
+    sub_code = q  # q == 2^m lands exactly on the min normal code
+
+    e_unb = (abs_bits >> 23).astype(jnp.int32) - 127
+    is_sub = e_unb < min_norm_exp
+    code = jnp.where(is_sub, sub_code, normal_code)
+
+    # --- specials -----------------------------------------------------------
+    is_nan = abs_bits > jnp.uint32(0x7F800000)
+    is_inf = abs_bits == jnp.uint32(0x7F800000)
+    is_zero = abs_bits == 0
+    code = jnp.where(is_inf, jnp.uint32(spec.max_code), code)  # saturate inf
+    code = jnp.where(is_nan, jnp.uint32(spec.nan_code), code)
+    code = jnp.where(is_zero, jnp.uint32(0), code)
+
+    return (sign | code).astype(jnp.uint8)
+
+
+def fake_quant(x, spec: Fp8Spec):
+    """decode(encode(x)): project onto the FP8 grid, staying in f32."""
+    return decode(encode_rne(x, spec), spec)

@@ -1,0 +1,92 @@
+"""Pure-numpy correctness oracles for the FP8 kernels.
+
+`encode_nearest_oracle` is correct *by definition*: nearest representable
+value by table search, exact ties to the even mantissa code — the same
+oracle used on the Rust side (rust/src/fp8/encode.rs). The Pallas kernels
+and the jittable bit-twiddling encoder are tested against it.
+"""
+
+import numpy as np
+
+from .fp8_jnp import Fp8Spec, decode_table_np
+
+
+def _sorted_positive(spec: Fp8Spec):
+    table = decode_table_np(spec)
+    vals, codes = [], []
+    for c in range(128):  # positive codes only
+        v = table[c]
+        if np.isfinite(v):
+            vals.append(v)
+            codes.append(c)
+    order = np.argsort(np.array(vals), kind="stable")
+    return np.array(vals)[order], np.array(codes)[order]
+
+
+def encode_nearest_oracle(x: np.ndarray, spec: Fp8Spec) -> np.ndarray:
+    """RNE + saturating cast by exhaustive nearest search (slow, exact)."""
+    vals, codes = _sorted_positive(spec)
+    x = np.asarray(x, np.float32)
+    out = np.zeros(x.shape, dtype=np.uint8)
+    flat = x.ravel()
+    res = out.ravel()
+    for i, v in enumerate(flat):
+        if np.isnan(v):
+            res[i] = spec.nan_code | (0x80 if np.signbit(v) else 0)
+            continue
+        sign = 0x80 if (v < 0 or (v == 0 and np.signbit(v))) else 0
+        a = abs(v)
+        if a >= vals[-1]:
+            res[i] = sign | spec.max_code
+            continue
+        j = int(np.searchsorted(vals, a))
+        best_code, best_d = None, None
+        for k in (j - 1, j):
+            if 0 <= k < len(vals):
+                d = abs(vals[k] - a)
+                if best_d is None or d < best_d:
+                    best_d, best_code = d, codes[k]
+                elif d == best_d and codes[k] % 2 == 0:
+                    best_code = codes[k]
+        res[i] = sign | best_code
+    return out
+
+
+def quantize_ref(x: np.ndarray, scale, spec: Fp8Spec) -> np.ndarray:
+    """Q(x / scale) — reference quantization (scale scalar or per-row)."""
+    scale = np.asarray(scale, dtype=np.float32)
+    if scale.ndim == 1:
+        scale = scale[:, None]
+    return encode_nearest_oracle(np.asarray(x, np.float32) / scale, spec)
+
+
+def scaled_matmul_ref(x, w, s_x, s_w, spec: Fp8Spec) -> np.ndarray:
+    """Eq. 2 reference: out = S_x (Q(S_x^-1 X) ⊗ Q(S_w^-1 W)^T) S_w.
+
+    x: (N, C) float32 activations; w: (K, C) float32 weights.
+    s_x: scalar or (N,); s_w: scalar or (K,). f32 accumulation.
+    """
+    table = decode_table_np(spec)
+    xq = table[quantize_ref(x, s_x, spec)]
+    wq = table[quantize_ref(w, s_w, spec)]
+    acc = xq.astype(np.float32) @ wq.astype(np.float32).T
+    s_x = np.asarray(s_x, np.float32)
+    s_w = np.asarray(s_w, np.float32)
+    sx_col = s_x[:, None] if s_x.ndim == 1 else s_x
+    sw_row = s_w[None, :] if s_w.ndim == 1 else s_w
+    return (acc * sx_col * sw_row).astype(np.float32)
+
+
+def per_tensor_scale_ref(x, spec: Fp8Spec, backoff: float = 1.0) -> float:
+    """Eq. 15a."""
+    x = np.asarray(x)
+    r = float(np.max(np.abs(x))) if x.size else 0.0
+    s = r / (backoff * spec.r_q)
+    return s if (s > 0 and np.isfinite(s)) else 1.0
+
+
+def per_row_scale_ref(x, spec: Fp8Spec, backoff: float = 1.0) -> np.ndarray:
+    """Eq. 17a / Eq. 20a (rows of x)."""
+    r = np.max(np.abs(np.asarray(x)), axis=1)
+    s = r / (backoff * spec.r_q)
+    return np.where((s > 0) & np.isfinite(s), s, 1.0).astype(np.float32)

@@ -1,0 +1,177 @@
+"""Pallas kernel: scaled FP8 GEMM (Eq. 2) — the paper's compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the Gaudi MME is a
+256×256 systolic array fed from on-chip SRAM with FP8 operands at 2× BF16
+rate; descale runs on the TPC. On TPU-style Pallas the same structure is:
+
+  * operands stay quantized (uint8 codes) in VMEM — half the footprint of
+    bf16, so K-tiles are twice as deep for the same VMEM budget;
+  * decode is a 256-entry table gather (VPU) feeding the MXU matmul with
+    `preferred_element_type=f32` — the FP32 accumulator of Eq. 2;
+  * the per-tensor/per-channel descale is fused into the output-tile write
+    (the TPC step of Fig. 3), so the BF16 output is written exactly once;
+  * per-tensor power-of-two scales are folded BEFORE the gather by integer
+    exponent-bias adjustment on the code (the §2.4 trick) — no per-element
+    FP multiply anywhere on that path.
+
+Block shapes: (BM, BK) × (BN, BK) → (BM, BN) with a grid over (M/BM, N/BN,
+K/BK), accumulating into the output block across the K dimension (output
+revisiting), the standard Pallas matmul schedule.
+
+VMEM budget at the default 128×128×512 tiles:
+  x tile 128·512 u8 = 64 KiB, w tile 128·512 u8 = 64 KiB,
+  out tile 128·128 f32 = 64 KiB, tables 2 KiB  →  ~194 KiB/step,
+  ×2 for double buffering ≈ 388 KiB ≪ 16 MiB VMEM.  MXU utilization is
+  bounded by the gather:matmul ratio ≈ (BM·BK + BN·BK) : 2·BM·BN·BK flops
+  = 1/2·(1/BN + 1/BM) gathers/flop → ≥128-wide tiles keep the MXU >90% busy.
+
+interpret=True: real-TPU lowering emits a Mosaic custom call the CPU PJRT
+plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fp8_jnp import Fp8Spec, decode_table_np
+
+BM, BN, BK = 128, 128, 512
+
+
+def _pad_axis(x, axis: int, multiple: int, value=0):
+    """Pad `axis` up to the next multiple (Pallas interpret mode fills
+    out-of-bounds block reads with NaN, so ragged shapes must be padded
+    explicitly; zero padding is exact for GEMM accumulation)."""
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def _scaled_gemm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, *, spec, nk):
+    """One (BM, BN) output tile; K-step `pl.program_id(2)` accumulates.
+    Decode is branchless bit assembly (fp8_jnp.decode) — no gather, no LUT:
+    the artifact-executing XLA (0.5.1) mis-executes jax-0.8 gathers, and the
+    MME consumes FP8 natively anyway."""
+    from .fp8_jnp import decode
+
+    k = pl.program_id(2)
+    xf = decode(x_ref[...], spec)  # (BM, BK) f32
+    wf = decode(w_ref[...], spec)  # (BN, BK) f32
+    part = jax.lax.dot_general(
+        xf,
+        wf,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+    # Final K step: fused descale (Fig. 3) + implicit bf16 round on store.
+    @pl.when(k == nk - 1)
+    def _descale():
+        o_ref[...] = o_ref[...] * sx_ref[...][:, None] * sw_ref[...][None, :]
+
+
+def scaled_matmul_fp8(x_codes, w_codes, s_x_rows, s_w_rows, spec: Fp8Spec):
+    """out = S_x (X̂ ⊗ Ŵᵀ) S_w with f32 accumulation.
+
+    x_codes: (M, K) uint8; w_codes: (N, K) uint8 (weights stored C'×C as in
+    the paper); s_x_rows: (M,) f32 per-row descale (broadcast a scalar to M
+    for per-tensor); s_w_rows: (N,) f32.
+    Returns (M, N) float32.
+    """
+    m, k = x_codes.shape
+    n, k2 = w_codes.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn, bk = min(BM, m), min(BN, n), min(BK, k)
+    # Pad ragged dims (code 0 decodes to +0.0 → exact for accumulation;
+    # scale pads of 1.0 are benign on sliced-off rows/cols).
+    x_codes = _pad_axis(_pad_axis(x_codes, 0, bm), 1, bk)
+    w_codes = _pad_axis(_pad_axis(w_codes, 0, bn), 1, bk)
+    s_x_rows = _pad_axis(s_x_rows.astype(jnp.float32), 0, bm, 1.0)
+    s_w_rows = _pad_axis(s_w_rows.astype(jnp.float32), 0, bn, 1.0)
+    mp, kp = x_codes.shape
+    np_, _ = w_codes.shape
+    grid = (pl.cdiv(mp, bm), pl.cdiv(np_, bn), pl.cdiv(kp, bk))
+    return pl.pallas_call(
+        functools.partial(_scaled_gemm_kernel, spec=spec, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x_codes, w_codes, s_x_rows, s_w_rows)[:m, :n]
+
+
+def _fused_kernel(x_ref, w_ref, inv_sx_ref, sx_ref, sw_ref, o_ref, *, spec, nk):
+    """Fused online-quantize + GEMM: activations arrive in f32, are cast to
+    the FP8 grid in VMEM (the JiT path of §2.3.2), then multiplied."""
+    from .fp8_jnp import decode, encode_rne
+
+    k = pl.program_id(2)
+    x = x_ref[...] * inv_sx_ref[...][:, None]
+    xq = encode_rne(x, spec)
+    xf = decode(xq, spec)
+    wf = decode(w_ref[...], spec)
+    part = jax.lax.dot_general(
+        xf,
+        wf,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+    @pl.when(k == nk - 1)
+    def _descale():
+        o_ref[...] = o_ref[...] * sx_ref[...][:, None] * sw_ref[...][None, :]
+
+
+def fused_quant_matmul_fp8(x, w_codes, s_x_rows, s_w_rows, spec: Fp8Spec):
+    """JiT activation quantization fused into the GEMM (single pass over X —
+    the efficiency argument of §2.3.2). x: (M, K) f32; w_codes: (N, K) u8."""
+    m, k = x.shape
+    n, k2 = w_codes.shape
+    assert k == k2
+    bm, bn, bk = min(BM, m), min(BN, n), min(BK, k)
+    x = _pad_axis(_pad_axis(x, 0, bm), 1, bk)
+    w_codes = _pad_axis(_pad_axis(w_codes, 0, bn), 1, bk)
+    s_x_rows = _pad_axis(s_x_rows.astype(jnp.float32), 0, bm, 1.0)
+    s_w_rows = _pad_axis(s_w_rows.astype(jnp.float32), 0, bn, 1.0)
+    mp, kp = x.shape
+    np_, _ = w_codes.shape
+    grid = (pl.cdiv(mp, bm), pl.cdiv(np_, bn), pl.cdiv(kp, bk))
+    inv = 1.0 / s_x_rows
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, spec=spec, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w_codes, inv, s_x_rows, s_w_rows)[:m, :n]

@@ -1,0 +1,393 @@
+"""L2: Llama-style decoder-only transformer in pure JAX with quantized
+linears (Eq. 2), mirroring rust/src/model/config.rs geometry.
+
+Build-time only: this module is lowered once by `aot.py` to HLO text; the
+Rust coordinator executes the compiled artifacts. Nothing here runs on the
+request path.
+
+Quantization variants (the paper's Tables 2–4 grid):
+  * ``bf16``      — high-precision reference;
+  * ``unit``      — FP8 with all scales = 1;
+  * ``fp8_pt``    — static per-tensor activation scales (Eq. 15) +
+                    per-tensor weight scales (Eq. 18);
+  * ``fp8_pc``    — static per-tensor activations + per-output-channel
+                    weight scales (Eq. 20);
+  * ``fp8_dyn``   — dynamic (JiT) per-sample activation scales (Eq. 17).
+
+Attention and the LM head stay high-precision (§4.2.4, Table 5 caption).
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fp8_jnp as F
+from .kernels.scaled_matmul import fused_quant_matmul_fp8
+
+VARIANTS = ("bf16", "unit", "fp8_pt", "fp8_pc", "fp8_dyn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    kv_heads: int
+    ffn_hidden: int
+    max_seq: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+def tiny_config(vocab: int = 512) -> ModelConfig:
+    """~3.5M-parameter Llama-style model — the e2e serving model."""
+    return ModelConfig("syn-tiny", vocab, 256, 4, 8, 2, 704)
+
+
+def small_config(vocab: int = 512) -> ModelConfig:
+    return ModelConfig("syn-small", vocab, 448, 6, 8, 2, 1216)
+
+
+def base_config(vocab: int = 512) -> ModelConfig:
+    """~100M-parameter analogue (the '70B-class' stand-in)."""
+    return ModelConfig("syn-base", vocab, 768, 12, 12, 4, 2048)
+
+
+CONFIGS = {"tiny": tiny_config, "small": small_config, "base": base_config}
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Flat deterministic parameter order — the Rust runtime marshals
+    arguments by this order."""
+    names = ["embed"]
+    for i in range(cfg.layers):
+        names += [
+            f"l{i}.attn_norm",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.mlp_norm",
+            f"l{i}.gate",
+            f"l{i}.up",
+            f"l{i}.down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shape(cfg: ModelConfig, name: str) -> tuple:
+    h, hd = cfg.hidden, cfg.head_dim
+    if name in ("embed", "lm_head"):
+        return (cfg.vocab, h)  # linears stored out×in
+    if name.endswith("norm"):
+        return (h,)
+    key = name.split(".")[1]
+    return {
+        "wq": (cfg.heads * hd, h),
+        "wk": (cfg.kv_heads * hd, h),
+        "wv": (cfg.kv_heads * hd, h),
+        "wo": (h, cfg.heads * hd),
+        "gate": (cfg.ffn_hidden, h),
+        "up": (cfg.ffn_hidden, h),
+        "down": (h, cfg.ffn_hidden),
+    }[key]
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(param_shape(cfg, n))) for n in param_names(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Scaled-normal init (numpy, so artifacts are reproducible)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name in param_names(cfg):
+        shape = param_shape(cfg, name)
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(
+                np.float32
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# Quantization config
+# --------------------------------------------------------------------------
+
+# lm_head/embed are never quantized (§3.3 step 5).
+QUANT_SITES = ("wq", "wk", "wv", "wo", "gate", "up", "down")
+
+
+@dataclass
+class QuantConfig:
+    variant: str = "bf16"
+    spec: F.Fp8Spec = F.E4M3_GAUDI2
+    backoff: float = 1.0
+    # Static per-tensor activation scales per site kind, from calibration.
+    act_scales: Dict[str, float] = field(default_factory=dict)
+
+    def is_fp8(self) -> bool:
+        return self.variant != "bf16"
+
+
+def _weight_scales(w: jnp.ndarray, qc: QuantConfig) -> jnp.ndarray:
+    """Per-row (out-channel) scale vector; per-tensor/unit broadcast."""
+    k = w.shape[0]
+    if qc.variant == "unit":
+        return jnp.ones((k,), jnp.float32)
+    if qc.variant == "fp8_pc":
+        r = jnp.max(jnp.abs(w), axis=1)
+        s = r / qc.spec.r_q
+        return jnp.where((s > 0) & jnp.isfinite(s), s, 1.0)
+    r = jnp.max(jnp.abs(w))
+    s = r / qc.spec.r_q
+    s = jnp.where((s > 0) & jnp.isfinite(s), s, 1.0)
+    return jnp.full((k,), 1.0, jnp.float32) * s
+
+
+def quant_linear(x: jnp.ndarray, w: jnp.ndarray, site: str, qc: QuantConfig) -> jnp.ndarray:
+    """One linear `x @ w.T` under the active quantization config.
+
+    x: (..., C); w: (K, C). Weight quantization happens in-graph on the f32
+    master weights — numerically identical to offline quantization with the
+    same (statically known) scales, and it keeps one weights file for all
+    variants. XLA constant-folds none of it away since weights are runtime
+    inputs; the cost is visible and measured in the operator benches.
+    """
+    if not qc.is_fp8():
+        return x @ w.T
+
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    x2 = x.reshape((-1, c))
+    m = x2.shape[0]
+
+    s_w = _weight_scales(w, qc)
+    wq = F.encode_rne(w / s_w[:, None], qc.spec)
+
+    if qc.variant == "unit":
+        s_x = jnp.ones((m,), jnp.float32)
+    elif qc.variant == "fp8_dyn":
+        r = jnp.max(jnp.abs(x2), axis=1)
+        s = r / (qc.backoff * qc.spec.r_q)
+        s_x = jnp.where((s > 0) & jnp.isfinite(s), s, 1.0)
+    else:  # static per-tensor from calibration
+        s = qc.act_scales.get(site, 1.0)
+        s_x = jnp.full((m,), jnp.float32(s))
+
+    # L2 perf (EXPERIMENTS.md §Perf): the tiled Pallas kernel is the
+    # hardware-shaped path and pays off at prefill sizes; at decode sizes
+    # (M ≤ a few tokens) its grid loop is pure overhead on the CPU PJRT
+    # backend — an M<64 GEMM occupies a single MME tile on Gaudi anyway, so
+    # the dense Eq.-2 path (identical numerics: same casts, same f32
+    # accumulation) is used below the threshold.
+    if m >= 64:
+        out = fused_quant_matmul_fp8(x2, wq, s_x, s_w, qc.spec)
+    else:
+        xf = F.decode(F.encode_rne(x2 / s_x[:, None], qc.spec), qc.spec)
+        wf = F.decode(wq, qc.spec)
+        acc = jax.lax.dot_general(
+            xf, wf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        out = acc * s_x[:, None] * s_w[None, :]
+    return out.reshape(lead + (w.shape[0],))
+
+
+# --------------------------------------------------------------------------
+# Transformer
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x, positions, base: float = 10000.0):
+    """x: (B, S, H, D). Rotary embedding on split halves."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention(q, k, v, mask):
+    """q: (B,S,H,D); k,v: (B,T,Hkv,D) — GQA by head repetition. Kept
+    high-precision (out of FP8) per the paper."""
+    d = q.shape[-1]
+    rep = q.shape[2] // k.shape[2]
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / np.float32(np.sqrt(d))
+    logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def block(x, params, i, cfg: ModelConfig, qc: QuantConfig, positions, kv_prev, mask):
+    """One decoder block. kv_prev: (k, v) of past keys (B,T,Hkv,D) or None.
+    Returns (x, (k_new, v_new)) where k_new/v_new cover only this call's
+    positions."""
+    hd = cfg.head_dim
+    b, s = x.shape[0], x.shape[1]
+    xn = rms_norm(x, params[f"l{i}.attn_norm"])
+    q = quant_linear(xn, params[f"l{i}.wq"], "wq", qc).reshape(b, s, cfg.heads, hd)
+    k = quant_linear(xn, params[f"l{i}.wk"], "wk", qc).reshape(b, s, cfg.kv_heads, hd)
+    v = quant_linear(xn, params[f"l{i}.wv"], "wv", qc).reshape(b, s, cfg.kv_heads, hd)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    if kv_prev is not None:
+        k_all = jnp.concatenate([kv_prev[0], k], axis=1)
+        v_all = jnp.concatenate([kv_prev[1], v], axis=1)
+    else:
+        k_all, v_all = k, v
+    att = attention(q, k_all, v_all, mask).reshape(b, s, cfg.heads * hd)
+    x = x + quant_linear(att, params[f"l{i}.wo"], "wo", qc)
+    xn = rms_norm(x, params[f"l{i}.mlp_norm"])
+    g = quant_linear(xn, params[f"l{i}.gate"], "gate", qc)
+    u = quant_linear(xn, params[f"l{i}.up"], "up", qc)
+    x = x + quant_linear(jax.nn.silu(g) * u, params[f"l{i}.down"], "down", qc)
+    return x, (k, v)
+
+
+def embed_lookup(embed, tokens):
+    """Embedding via one-hot matmul — gather-free (the artifact-executing
+    XLA 0.5.1 mis-executes jax-0.8 gather ops; see kernels/fp8_jnp.decode)."""
+    onehot = jax.nn.one_hot(tokens, embed.shape[0], dtype=jnp.float32)
+    return onehot @ embed
+
+
+def prefill(params, tokens, cfg: ModelConfig, qc: QuantConfig):
+    """tokens: (B, S) int32 → (logits (B,S,V), kvs: list of (k, v))."""
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None, :, :]
+    kvs = []
+    for i in range(cfg.layers):
+        x, kv = block(x, params, i, cfg, qc, positions, None, causal)
+        kvs.append(kv)
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].T  # lm_head stays high-precision
+    return logits, kvs
+
+
+def decode_step(params, token, k_cache, v_cache, pos, cfg: ModelConfig, qc: QuantConfig):
+    """One decode step with a static-shape cache and RAGGED positions —
+    the continuous batcher mixes requests at different lengths.
+
+    token: (B,) int32; k_cache/v_cache: (L, B, T, Hkv, D) f32; pos: (B,)
+    int32 — per-row count of valid cache entries. Returns (logits (B, V),
+    k_cache, v_cache) with each row's `pos[b]` slot written.
+
+    The per-row cache write is an unrolled loop of dynamic_update_slice
+    calls (B ≤ 8): scatter ops are out — the artifact-executing XLA 0.5.1
+    mis-executes jax-0.8 gather/scatter.
+    """
+    b = token.shape[0]
+    t = k_cache.shape[2]
+    x = embed_lookup(params["embed"], token[:, None])  # (B, 1, H)
+    positions = pos[:, None].astype(jnp.int32)  # (B, 1)
+    idx = jnp.arange(t)
+    # Keys: T cache slots (valid where slot < pos[b]) + self (always seen).
+    valid = (idx[None, :] < pos[:, None])[:, None, None, :]  # (B,1,1,T)
+    mask = jnp.concatenate([valid, jnp.ones((b, 1, 1, 1), bool)], axis=-1)
+    new_k, new_v = [], []
+    for i in range(cfg.layers):
+        kv_prev = (k_cache[i], v_cache[i])
+        x, kv = block(x, params, i, cfg, qc, positions, kv_prev, mask)
+        new_k.append(kv[0])
+        new_v.append(kv[1])
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].T)[:, 0, :]
+    nk = jnp.stack(new_k, 0)  # (L, B, 1, Hkv, D)
+    nv = jnp.stack(new_v, 0)
+    for row in range(b):
+        k_slice = jax.lax.dynamic_slice_in_dim(nk, row, 1, axis=1)
+        v_slice = jax.lax.dynamic_slice_in_dim(nv, row, 1, axis=1)
+        start = (0, row, pos[row], 0, 0)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_slice, start)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_slice, start)
+    return logits, k_cache, v_cache
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, max_seq: Optional[int] = None):
+    t = max_seq or cfg.max_seq
+    return (cfg.layers, batch, t, cfg.kv_heads, cfg.head_dim)
+
+
+def prefill_to_cache(kvs, cfg: ModelConfig, max_seq: Optional[int] = None):
+    """Stack prefill KV lists into the static cache layout (padded to T)."""
+    t = max_seq or cfg.max_seq
+    k = jnp.stack([kv[0] for kv in kvs], 0)  # (L, B, S, Hkv, D)
+    v = jnp.stack([kv[1] for kv in kvs], 0)
+    s = k.shape[2]
+    pad = [(0, 0), (0, 0), (0, t - s), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+# --------------------------------------------------------------------------
+# Calibration (§3.1)
+# --------------------------------------------------------------------------
+
+
+def calibrate(params, token_batches, cfg: ModelConfig, spec: F.Fp8Spec, backoff=1.0):
+    """Run calibration batches through the high-precision model, record
+    per-site-kind r_x (Eq. 8a), return static per-tensor scales (Eq. 15a)."""
+    site_max: Dict[str, float] = {s: 0.0 for s in QUANT_SITES}
+
+    def record(site, value):
+        site_max[site] = max(site_max[site], float(jnp.max(jnp.abs(value))))
+
+    for tokens in token_batches:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        causal = jnp.tril(jnp.ones((s, s), bool))[None, None, :, :]
+        for i in range(cfg.layers):
+            hd = cfg.head_dim
+            xn = rms_norm(x, params[f"l{i}.attn_norm"])
+            record("wq", xn)
+            record("wk", xn)
+            record("wv", xn)
+            q = (xn @ params[f"l{i}.wq"].T).reshape(b, s, cfg.heads, hd)
+            k = (xn @ params[f"l{i}.wk"].T).reshape(b, s, cfg.kv_heads, hd)
+            v = (xn @ params[f"l{i}.wv"].T).reshape(b, s, cfg.kv_heads, hd)
+            q, k = rope(q, positions), rope(k, positions)
+            att = attention(q, k, v, causal).reshape(b, s, cfg.heads * hd)
+            record("wo", att)
+            x = x + att @ params[f"l{i}.wo"].T
+            xn = rms_norm(x, params[f"l{i}.mlp_norm"])
+            record("gate", xn)
+            record("up", xn)
+            g = xn @ params[f"l{i}.gate"].T
+            u = xn @ params[f"l{i}.up"].T
+            act = jax.nn.silu(g) * u
+            record("down", act)
+            x = x + act @ params[f"l{i}.down"].T
+    scales = {}
+    for site, r in site_max.items():
+        s = r / (backoff * spec.r_q)
+        scales[site] = float(s) if (s > 0 and np.isfinite(s)) else 1.0
+    return scales
+
+
+def make_quant_config(variant: str, act_scales: Dict[str, float], spec=F.E4M3_GAUDI2):
+    assert variant in VARIANTS, variant
+    return QuantConfig(variant=variant, spec=spec, act_scales=dict(act_scales))

@@ -1,0 +1,75 @@
+"""Weights file writer — format shared with rust/src/runtime/params.rs.
+
+Layout (little-endian):
+  magic  b"GFP8PARM"
+  u32    version (1)
+  u32    tensor count
+  repeat:
+    u16  name length, name bytes (utf-8)
+    u8   dtype (0 = f32, 1 = bf16-as-u16)
+    u8   ndim
+    u32×ndim dims
+    data (f32 LE or u16 LE)
+"""
+
+import struct
+from typing import Dict, List
+
+import numpy as np
+
+MAGIC = b"GFP8PARM"
+
+
+def _to_bf16_u16(x: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even f32 → bf16 bit pattern (u16)."""
+    bits = x.astype(np.float32).view(np.uint32)
+    lsb = (bits >> 16) & 1
+    rounded = bits + np.uint32(0x7FFF) + lsb
+    out = (rounded >> 16).astype(np.uint16)
+    nan = np.isnan(x)
+    if nan.any():
+        out = np.where(nan, ((bits >> 16) | 0x0040).astype(np.uint16), out)
+    return out
+
+
+def save_params(path: str, tensors: Dict[str, np.ndarray], order: List[str], dtype="f32"):
+    """Write tensors in `order` (the artifact argument order)."""
+    assert dtype in ("f32", "bf16")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(order)))
+        for name in order:
+            arr = np.asarray(tensors[name], np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            tag = 0 if dtype == "f32" else 1
+            f.write(struct.pack("<BB", tag, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            if dtype == "f32":
+                f.write(arr.astype("<f4").tobytes())
+            else:
+                f.write(_to_bf16_u16(arr).astype("<u2").tobytes())
+
+
+def load_params(path: str) -> Dict[str, np.ndarray]:
+    """Read back (for tests)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            tag, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            numel = int(np.prod(dims)) if ndim else 1
+            if tag == 0:
+                data = np.frombuffer(f.read(4 * numel), "<f4").reshape(dims)
+            else:
+                raw = np.frombuffer(f.read(2 * numel), "<u2").astype(np.uint32)
+                data = (raw << 16).view(np.float32).reshape(dims)
+            out[name] = data.copy()
+    return out

@@ -1,0 +1,76 @@
+//! Figure B: accuracy-vs-method comparison across model families — the Δ%
+//! bar-chart data underlying Tables 2–4, plus the extended method grid
+//! (MSE search, SmoothQuant, dynamic per-sample, pow2/HW scales) the paper
+//! describes in §3.2 but does not tabulate.
+
+use gaudi_fp8::eval::suite::{evaluate_model, EvalConfig};
+use gaudi_fp8::fp8::Fp8Format;
+use gaudi_fp8::gaudisim::Generation;
+use gaudi_fp8::model::config::{ModelConfig, ModelFamily};
+use gaudi_fp8::quant::{ActScaling, QuantScheme, ScaleSet, WeightScaling};
+
+fn main() {
+    let fmt = Fp8Format::E4M3Gaudi2;
+    let schemes: Vec<(String, QuantScheme)> = vec![
+        ("Unit Scale".into(), QuantScheme::unit_scale(fmt)),
+        ("Per Tensor".into(), QuantScheme::per_tensor(fmt)),
+        ("Per Tensor (HW pow2)".into(), QuantScheme::per_tensor_hw(fmt)),
+        ("Per Channel".into(), QuantScheme::per_channel(fmt)),
+        (
+            "MSE Per Tensor".into(),
+            QuantScheme {
+                weight: WeightScaling::MsePerTensor(ScaleSet::Arbitrary),
+                ..QuantScheme::per_tensor(fmt)
+            },
+        ),
+        (
+            "MSE Per Channel (HW set)".into(),
+            QuantScheme {
+                weight: WeightScaling::MsePerChannel(ScaleSet::HwAccelerated(Generation::Gaudi2)),
+                ..QuantScheme::per_tensor(fmt)
+            },
+        ),
+        (
+            "Dynamic Per Sample".into(),
+            QuantScheme {
+                act: ActScaling::PerSampleDynamic { backoff: 1.0 },
+                ..QuantScheme::per_channel(fmt)
+            },
+        ),
+        ("SmoothQuant α=0.5".into(), QuantScheme::smoothquant(fmt, 0.5)),
+    ];
+
+    let ec = EvalConfig {
+        eval_samples: 384,
+        ..Default::default()
+    };
+    println!("# Figure B data (CSV)");
+    println!("family,method,ppl_delta_pct,commonsense_delta,mmlu_delta");
+    for family in [
+        ModelFamily::Llama2,
+        ModelFamily::Llama3,
+        ModelFamily::Mistral,
+        ModelFamily::Mixtral,
+    ] {
+        let cfg = ModelConfig::synthetic_small(family);
+        let rows = evaluate_model(&cfg, &schemes, &ec);
+        for r in &rows[1..] {
+            println!(
+                "{:?},{},{:.2},{:.2},{:.2}",
+                family, r.configuration, r.ppl_delta_pct, r.commonsense_delta_pct, r.mmlu_delta_pct
+            );
+        }
+        // Bar chart of ΔPPL (log-ish clamp for the unit-scale blowups).
+        println!("\n# ΔPPL% — {family:?}");
+        for r in &rows[1..] {
+            let v = r.ppl_delta_pct.clamp(0.0, 400.0);
+            println!(
+                "{:>26} | {:<40} {:.1}%",
+                r.configuration,
+                "#".repeat((v / 10.0) as usize),
+                r.ppl_delta_pct
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,57 @@
+//! Figure C: end-to-end throughput curves — prefill TFLOPS vs sequence
+//! length (finer sweep than Table 5) and decode TFLOPS vs batch at several
+//! context lengths (finer than Table 6), with BF16-peak and FP8-peak
+//! reference lines; plus the Gaudi 2 vs Gaudi 3 projection.
+
+use gaudi_fp8::gaudisim::{decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel};
+use gaudi_fp8::model::config::ModelConfig;
+
+fn main() {
+    let cfg = E2eConfig::llama31_70b_paper();
+    println!("# Figure C1 (CSV): prefill TFLOPS vs seq (Llama3.1-70B, Gaudi2)");
+    println!("seq,tflops,mfu");
+    let mut seq = 256usize;
+    while seq <= 32768 {
+        let r = prefill_tflops(&cfg, seq);
+        println!("{seq},{:.1},{:.3}", r.tflops, r.mfu);
+        seq *= 2;
+    }
+    println!("ref,bf16_peak,432");
+    println!("ref,fp8_peak,865");
+
+    println!("\n# Figure C2 (CSV): decode TFLOPS vs batch at context lengths");
+    println!("context,batch,tflops,fits");
+    let mm = MemoryModel::new(Device::gaudi2(), ModelConfig::llama31_70b());
+    for context in [512usize, 2048, 8192] {
+        for batch in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let fits = mm.fits(batch, context);
+            let r = decode_step_tflops(&cfg, batch, context);
+            println!("{context},{batch},{:.1},{}", r.tflops, fits);
+        }
+    }
+
+    println!("\n# Figure C3: Gaudi 3 projection (same model)");
+    println!("seq,g2_tflops,g3_tflops,ratio");
+    let g3 = E2eConfig {
+        device: Device::gaudi3(),
+        ..E2eConfig::llama31_70b_paper()
+    };
+    for seq in [1024usize, 4096, 16384] {
+        let a = prefill_tflops(&cfg, seq).tflops;
+        let b = prefill_tflops(&g3, seq).tflops;
+        println!("{seq},{a:.1},{b:.1},{:.2}", b / a);
+    }
+
+    // ASCII curve of C1.
+    println!("\n# prefill TFLOPS vs seq (ASCII)");
+    let mut seq = 256usize;
+    while seq <= 32768 {
+        let r = prefill_tflops(&cfg, seq);
+        println!(
+            "{seq:>6} | {:<56} {:.0}",
+            "#".repeat((r.tflops / 12.0) as usize),
+            r.tflops
+        );
+        seq *= 2;
+    }
+}

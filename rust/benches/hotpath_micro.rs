@@ -1,0 +1,111 @@
+//! Hot-path micro-benchmarks — the §Perf targets: FP8 encode/decode, the
+//! emulated scaled GEMM, KV gather/scatter, and the batcher admission path.
+//! Run before/after each optimization; results recorded in EXPERIMENTS.md.
+
+use gaudi_fp8::coordinator::KvStore;
+use gaudi_fp8::fp8::{
+    decode, encode_rne, encode_stochastic, rescale_pow2, CastMode, DecodeTable, Fp8Format,
+    Fp8Gemm8x8,
+};
+use gaudi_fp8::gemm::{quantize_matrix, scaled_gemm_with_table, DiagScale, QuantRounding};
+use gaudi_fp8::tensor::{matmul_nt, Tensor2};
+use gaudi_fp8::util::rng::XorShiftRng;
+use gaudi_fp8::util::{bench::black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("hotpath");
+    let fmt = Fp8Format::E4M3Gaudi2;
+    let mut rng = XorShiftRng::new(9);
+
+    // --- encode -----------------------------------------------------------
+    let xs: Vec<f32> = (0..4096).map(|_| rng.normal() * 50.0).collect();
+    b.bench_throughput("encode_rne_4k", 4096.0, "Gelem/s", || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(encode_rne(x, fmt, CastMode::SatFinite) as u32);
+        }
+        black_box(acc);
+    });
+    let mut srng = XorShiftRng::new(11);
+    b.bench_throughput("encode_stochastic_4k", 4096.0, "Gelem/s", || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(encode_stochastic(x, fmt, CastMode::SatFinite, &mut srng) as u32);
+        }
+        black_box(acc);
+    });
+
+    // --- decode -----------------------------------------------------------
+    let codes: Vec<u8> = (0..4096).map(|i| (i % 251) as u8).collect();
+    let table = DecodeTable::new(fmt);
+    b.bench_throughput("decode_table_4k", 4096.0, "Gelem/s", || {
+        let mut acc = 0.0f32;
+        for &c in &codes {
+            acc += table.get(c);
+        }
+        black_box(acc);
+    });
+    b.bench_throughput("decode_scalar_4k", 4096.0, "Gelem/s", || {
+        let mut acc = 0.0f32;
+        for &c in &codes {
+            acc += decode(c, fmt);
+        }
+        black_box(acc);
+    });
+    b.bench_throughput("rescale_pow2_4k", 4096.0, "Gelem/s", || {
+        let mut acc = 0u32;
+        for &c in &codes {
+            acc = acc.wrapping_add(rescale_pow2(c, 2, fmt) as u32);
+        }
+        black_box(acc);
+    });
+
+    // --- GEMM -------------------------------------------------------------
+    let n = 256;
+    let x = Tensor2::randn(n, n, 1.0, &mut rng);
+    let w = Tensor2::randn(n, n, 0.05, &mut rng);
+    let flops = 2.0 * (n as f64).powi(3);
+    b.bench_throughput("f32_gemm_256", flops, "GFLOP/s", || {
+        black_box(matmul_nt(&x, &w));
+    });
+    let xq = quantize_matrix(&x, &[0.0125], &[], fmt, QuantRounding::Nearest);
+    let wq = quantize_matrix(&w, &[0.001], &[], fmt, QuantRounding::Nearest);
+    let ptable = Fp8Gemm8x8::new(fmt, fmt);
+    b.bench_throughput("fp8_emulated_gemm_256", flops, "GFLOP/s", || {
+        black_box(scaled_gemm_with_table(
+            &xq,
+            &wq,
+            &DiagScale::Scalar(0.0125),
+            &DiagScale::Scalar(0.001),
+            false,
+            &ptable,
+        ));
+    });
+    b.bench_throughput("quantize_matrix_256", (n * n) as f64, "Gelem/s", || {
+        black_box(quantize_matrix(&x, &[0.0125], &[], fmt, QuantRounding::Nearest));
+    });
+
+    // --- KV management ----------------------------------------------------
+    let mut kv = KvStore::new(4, 8, 160, 2, 32);
+    let ss = 160 * 2 * 32;
+    let kdata = vec![0.5f32; 4 * ss];
+    for _ in 0..4 {
+        let s = kv.alloc_slot().unwrap();
+        kv.write_slot(s, &kdata, &kdata, 100);
+    }
+    let slots = kv.active_slots();
+    let kv_bytes = (4 * slots.len() * ss * 4 * 2) as f64;
+    b.bench_throughput("kv_gather_4slots", kv_bytes, "GB/s", || {
+        black_box(kv.gather_batch(&slots));
+    });
+    // §Perf L3: allocation-free gather into persistent scratch.
+    let mut sk = vec![0.0f32; 4 * slots.len() * ss];
+    let mut sv = vec![0.0f32; 4 * slots.len() * ss];
+    b.bench_throughput("kv_gather_into_4slots", kv_bytes, "GB/s", || {
+        black_box(kv.gather_batch_into(&slots, slots.len(), &mut sk, &mut sv));
+    });
+    let (gk, gv, _) = kv.gather_batch(&slots);
+    b.bench_throughput("kv_scatter_4slots", kv_bytes, "GB/s", || {
+        kv.scatter_batch(&slots, &gk, &gv);
+    });
+}

@@ -1,0 +1,163 @@
+//! Streaming activation-statistics collectors.
+
+use super::histogram::Histogram;
+use crate::tensor::Tensor2;
+
+/// Final calibration statistics for one tensor site (the measurements §3.1
+/// enumerates).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActStats {
+    /// Eq. 8a: per-tensor max-abs over all calibration batches.
+    pub r_x: f32,
+    /// Eq. 8b: per-channel max-abs (length C).
+    pub r_x_cols: Vec<f32>,
+    /// min / max over everything.
+    pub min: f32,
+    pub max: f32,
+    /// Mean absolute value (running).
+    pub abs_mean: f32,
+    /// Number of samples (rows) observed.
+    pub samples: usize,
+    /// Optional histogram of |x|.
+    pub histogram: Option<Histogram>,
+}
+
+/// Accumulates statistics across calibration batches for one site.
+#[derive(Clone, Debug)]
+pub struct ActObserver {
+    channels: usize,
+    r_x: f32,
+    r_x_cols: Vec<f32>,
+    min: f32,
+    max: f32,
+    abs_sum: f64,
+    count: usize,
+    samples: usize,
+    histogram: Option<Histogram>,
+}
+
+impl ActObserver {
+    pub fn new(channels: usize) -> Self {
+        Self {
+            channels,
+            r_x: 0.0,
+            r_x_cols: vec![0.0; channels],
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            abs_sum: 0.0,
+            count: 0,
+            samples: 0,
+            histogram: None,
+        }
+    }
+
+    pub fn with_histogram(mut self, bins: usize, max_abs: f32) -> Self {
+        self.histogram = Some(Histogram::new(bins, max_abs));
+        self
+    }
+
+    /// Observe one batch of activations (N×C).
+    pub fn observe(&mut self, x: &Tensor2) {
+        assert_eq!(x.cols, self.channels, "channel mismatch");
+        self.samples += x.rows;
+        for r in 0..x.rows {
+            for (c, &v) in x.row(r).iter().enumerate() {
+                let a = v.abs();
+                if a > self.r_x {
+                    self.r_x = a;
+                }
+                if a > self.r_x_cols[c] {
+                    self.r_x_cols[c] = a;
+                }
+                if v < self.min {
+                    self.min = v;
+                }
+                if v > self.max {
+                    self.max = v;
+                }
+                self.abs_sum += a as f64;
+                self.count += 1;
+                if let Some(h) = &mut self.histogram {
+                    h.record(a);
+                }
+            }
+        }
+    }
+
+    pub fn finalize(&self) -> ActStats {
+        ActStats {
+            r_x: self.r_x,
+            r_x_cols: self.r_x_cols.clone(),
+            min: if self.min.is_finite() { self.min } else { 0.0 },
+            max: if self.max.is_finite() { self.max } else { 0.0 },
+            abs_mean: if self.count > 0 {
+                (self.abs_sum / self.count as f64) as f32
+            } else {
+                0.0
+            },
+            samples: self.samples,
+            histogram: self.histogram.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+
+    #[test]
+    fn single_batch_matches_direct_reductions() {
+        let mut rng = XorShiftRng::new(1);
+        let x = Tensor2::randn(32, 16, 2.0, &mut rng);
+        let mut obs = ActObserver::new(16);
+        obs.observe(&x);
+        let s = obs.finalize();
+        assert_eq!(s.r_x, crate::tensor::abs_max(&x));
+        assert_eq!(s.r_x_cols, crate::tensor::col_abs_max(&x));
+        let (lo, hi) = crate::tensor::stats::min_max(&x);
+        assert_eq!((s.min, s.max), (lo, hi));
+        assert_eq!(s.samples, 32);
+    }
+
+    #[test]
+    fn multi_batch_accumulates_max() {
+        let mut obs = ActObserver::new(2);
+        obs.observe(&Tensor2::from_vec(1, 2, vec![1.0, -3.0]));
+        obs.observe(&Tensor2::from_vec(2, 2, vec![5.0, 0.5, -0.1, 2.0]));
+        let s = obs.finalize();
+        assert_eq!(s.r_x, 5.0);
+        assert_eq!(s.r_x_cols, vec![5.0, 3.0]);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.min, -3.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn abs_mean_running_average() {
+        let mut obs = ActObserver::new(1);
+        obs.observe(&Tensor2::from_vec(2, 1, vec![2.0, -4.0]));
+        obs.observe(&Tensor2::from_vec(2, 1, vec![0.0, 6.0]));
+        assert_eq!(obs.finalize().abs_mean, 3.0);
+    }
+
+    #[test]
+    fn empty_observer_finalizes_safely() {
+        let s = ActObserver::new(4).finalize();
+        assert_eq!(s.r_x, 0.0);
+        assert_eq!(s.abs_mean, 0.0);
+        assert_eq!(s.samples, 0);
+    }
+
+    #[test]
+    fn histogram_populated() {
+        let mut obs = ActObserver::new(1).with_histogram(10, 10.0);
+        obs.observe(&Tensor2::from_vec(3, 1, vec![0.5, 5.5, 9.9]));
+        let s = obs.finalize();
+        let h = s.histogram.unwrap();
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 1);
+    }
+}

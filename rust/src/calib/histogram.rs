@@ -1,0 +1,79 @@
+//! |x| histogram — the calibration statistic §3.1 mentions for
+//! percentile-style scale selection.
+
+/// Fixed-range linear histogram over [0, max_abs); the last bin also counts
+/// overflow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    pub counts: Vec<u64>,
+    pub max_abs: f32,
+}
+
+impl Histogram {
+    pub fn new(bins: usize, max_abs: f32) -> Self {
+        assert!(bins > 0 && max_abs > 0.0);
+        Self {
+            counts: vec![0; bins],
+            max_abs,
+        }
+    }
+
+    pub fn record(&mut self, abs_value: f32) {
+        let bins = self.counts.len();
+        let idx = ((abs_value / self.max_abs) * bins as f32) as usize;
+        self.counts[idx.min(bins - 1)] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Smallest |x| bound such that at least `q` (0..=1) of mass is below it
+    /// — used for percentile-clipping scales.
+    pub fn quantile(&self, q: f64) -> f32 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (i + 1) as f32 / self.counts.len() as f32 * self.max_abs;
+            }
+        }
+        self.max_abs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_quantile() {
+        let mut h = Histogram::new(100, 1.0);
+        for i in 0..100 {
+            h.record(i as f32 / 100.0);
+        }
+        assert_eq!(h.total(), 100);
+        let q50 = h.quantile(0.5);
+        assert!((q50 - 0.5).abs() < 0.02, "{q50}");
+        let q99 = h.quantile(0.99);
+        assert!(q99 >= 0.98, "{q99}");
+    }
+
+    #[test]
+    fn overflow_lands_in_last_bin() {
+        let mut h = Histogram::new(4, 1.0);
+        h.record(123.0);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let h = Histogram::new(4, 1.0);
+        assert_eq!(h.quantile(0.9), 0.0);
+    }
+}

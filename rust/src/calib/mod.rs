@@ -1,0 +1,14 @@
+//! Calibration (paper §3.1): run typical inputs through the model and
+//! measure activation statistics — per-tensor, per-channel, or per-sample
+//! max-abs, min/max, mean-abs, or a histogram.
+//!
+//! The static scaling methods (§2.3.1) consume these offline statistics;
+//! dynamic (JiT) scaling measures Eq. 9 at runtime instead.
+
+pub mod collector;
+pub mod histogram;
+pub mod store;
+
+pub use collector::{ActObserver, ActStats};
+pub use histogram::Histogram;
+pub use store::MeasurementStore;

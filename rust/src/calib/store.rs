@@ -1,0 +1,127 @@
+//! Persisted measurement files: calibration stats keyed by layer name,
+//! serialized as JSON (consumed by `aot.py` to bake static scales into the
+//! HLO artifacts, and by the Rust eval harness).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::collector::ActStats;
+use crate::util::json::Json;
+
+/// A named collection of per-site activation statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MeasurementStore {
+    pub entries: BTreeMap<String, ActStats>,
+}
+
+impl MeasurementStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, site: &str, stats: ActStats) {
+        self.entries.insert(site.to_string(), stats);
+    }
+
+    pub fn get(&self, site: &str) -> Option<&ActStats> {
+        self.entries.get(site)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, s) in &self.entries {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("r_x", Json::Num(s.r_x as f64)),
+                    ("r_x_cols", Json::arr_f32(&s.r_x_cols)),
+                    ("min", Json::Num(s.min as f64)),
+                    ("max", Json::Num(s.max as f64)),
+                    ("abs_mean", Json::Num(s.abs_mean as f64)),
+                    ("samples", Json::Num(s.samples as f64)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let Json::Obj(map) = j else {
+            return Err("expected object".into());
+        };
+        let mut out = Self::new();
+        for (k, v) in map {
+            let stats = ActStats {
+                r_x: v
+                    .get("r_x")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{k}: missing r_x"))? as f32,
+                r_x_cols: v
+                    .get("r_x_cols")
+                    .and_then(Json::as_f32_vec)
+                    .ok_or_else(|| format!("{k}: missing r_x_cols"))?,
+                min: v.get("min").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                max: v.get("max").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                abs_mean: v.get("abs_mean").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                samples: v.get("samples").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+                histogram: None,
+            };
+            out.entries.insert(k.clone(), stats);
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> ActStats {
+        ActStats {
+            r_x: 3.5,
+            r_x_cols: vec![1.0, 3.5, 0.25],
+            min: -3.5,
+            max: 2.0,
+            abs_mean: 0.8,
+            samples: 128,
+            histogram: None,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut st = MeasurementStore::new();
+        st.insert("layers.0.QProj", stats());
+        st.insert("layers.1.Down", stats());
+        let back = MeasurementStore::from_json(&st.to_json()).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut st = MeasurementStore::new();
+        st.insert("site", stats());
+        let dir = std::env::temp_dir().join("gaudi_fp8_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meas.json");
+        st.save(&p).unwrap();
+        let back = MeasurementStore::load(&p).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(MeasurementStore::from_json(&Json::Num(1.0)).is_err());
+        let j = Json::parse(r#"{"site": {"min": 0}}"#).unwrap();
+        assert!(MeasurementStore::from_json(&j).is_err()); // missing r_x
+    }
+}

@@ -1,0 +1,104 @@
+//! Admission queue + continuous-batching plan construction.
+
+use std::collections::VecDeque;
+
+use super::request::{Request, RequestId};
+
+/// FIFO admission queue with a capacity bound (backpressure).
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    queue: VecDeque<Request>,
+    pub capacity: usize,
+    rejected: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            capacity,
+            rejected: 0,
+        }
+    }
+
+    /// Returns false (and counts a rejection) when full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+/// One engine iteration's work: at most one prefill plus one decode group.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchPlan {
+    /// Request to prefill this iteration (admitted into `slot`).
+    pub prefill: Option<(RequestId, usize)>,
+    /// Slots to run one decode step for.
+    pub decode_slots: Vec<usize>,
+}
+
+impl BatchPlan {
+    pub fn is_idle(&self) -> bool {
+        self.prefill.is_none() && self.decode_slots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = AdmissionQueue::new(4);
+        for i in 0..3 {
+            assert!(q.push(Request::new(i, vec![1], 4)));
+        }
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.push(Request::new(0, vec![1], 1)));
+        assert!(q.push(Request::new(1, vec![1], 1)));
+        assert!(!q.push(Request::new(2, vec![1], 1)));
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn plan_idle() {
+        assert!(BatchPlan::default().is_idle());
+        let p = BatchPlan {
+            prefill: None,
+            decode_slots: vec![0],
+        };
+        assert!(!p.is_idle());
+    }
+}

@@ -1,0 +1,465 @@
+//! The serving engine: continuous-batching loop over the AOT artifacts.
+//!
+//! Each `step()`:
+//!   1. asks the [`Scheduler`] for a plan (admit-one-prefill + decode-all);
+//!   2. runs the prefill artifact for the admitted request (prompt padded
+//!      to the compiled bucket), writes its KV into the allocated slot, and
+//!      samples the first token (TTFT);
+//!   3. runs one decode step per artifact-sized group of active slots with
+//!      per-row (ragged) positions, samples greedily, retires finished
+//!      requests.
+//!
+//! All compute is the PJRT executables; the engine only moves bytes and
+//! makes decisions — the "Python never on the request path" invariant.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batcher::AdmissionQueue;
+use super::kvcache::KvStore;
+use super::metrics::ServeMetrics;
+use super::request::{Request, RequestId, RequestOutput};
+use super::scheduler::{SchedulePolicy, Scheduler};
+use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
+use crate::util::json::Json;
+
+/// Parsed artifacts/meta.json.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub cache_t: usize,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub prefill_variants: Vec<String>,
+    pub decode_variants: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {dir:?}/meta.json — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let model = j.get("model").ok_or_else(|| anyhow!("meta: no model"))?;
+        let geti = |obj: &Json, k: &str| -> Result<usize> {
+            obj.get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("meta: missing {k}"))
+        };
+        let get_list = |k: &str| -> Result<Vec<usize>> {
+            Ok(j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("meta: missing {k}"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .map(|v| v as usize)
+                .collect())
+        };
+        let get_strs = |k: &str| -> Vec<String> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        Ok(Self {
+            vocab: geti(model, "vocab")?,
+            hidden: geti(model, "hidden")?,
+            layers: geti(model, "layers")?,
+            heads: geti(model, "heads")?,
+            kv_heads: geti(model, "kv_heads")?,
+            cache_t: geti(&j, "cache_t")?,
+            prefill_seqs: get_list("prefill_seqs")?,
+            decode_batches: get_list("decode_batches")?,
+            prefill_variants: get_strs("prefill_variants"),
+            decode_variants: get_strs("decode_variants"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Quantization variant served ("bf16", "fp8_pt", "fp8_pc").
+    pub variant: String,
+    /// Concurrent KV slots (≥ max decode batch bucket is wasteful; ≤ is
+    /// fine — groups are chunked).
+    pub slots: usize,
+    pub policy: SchedulePolicy,
+    pub queue_capacity: usize,
+}
+
+impl EngineConfig {
+    pub fn new(artifacts_dir: &Path, variant: &str) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            variant: variant.to_string(),
+            slots: 8,
+            policy: SchedulePolicy::PrefillFirst,
+            queue_capacity: 256,
+        }
+    }
+}
+
+struct ActiveRequest {
+    id: RequestId,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    stop_token: Option<i32>,
+    arrival: Instant,
+    first_token_at: Option<Instant>,
+    generated: Vec<i32>,
+    last_token: i32,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub meta: ModelMeta,
+    registry: ArtifactRegistry,
+    /// Model weights as long-lived PJRT literals, in artifact arg order.
+    param_literals: Vec<xla::Literal>,
+    kv: KvStore,
+    queue: AdmissionQueue,
+    scheduler: Scheduler,
+    active: HashMap<usize, ActiveRequest>, // slot → request
+    pub metrics: ServeMetrics,
+    finished: Vec<RequestOutput>,
+    /// Reusable decode-batch KV staging buffers (§Perf L3: avoids a
+    /// multi-MB alloc + zero-fill per decode step).
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    scratch_bucket: usize,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+        if !meta.decode_variants.iter().any(|v| v == &cfg.variant) {
+            bail!(
+                "variant {:?} has no decode artifacts (available: {:?})",
+                cfg.variant,
+                meta.decode_variants
+            );
+        }
+        let rt = Runtime::cpu()?;
+        let registry = ArtifactRegistry::new(rt, &cfg.artifacts_dir);
+        let params = load_params_bin(&cfg.artifacts_dir.join("weights_tiny.bin"))?;
+        let param_literals = params
+            .iter()
+            .map(|p| TensorIn::f32(&p.dims, p.data.clone()).to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let kv = KvStore::new(
+            meta.layers,
+            cfg.slots,
+            meta.cache_t,
+            meta.kv_heads,
+            meta.head_dim(),
+        );
+        let scheduler = Scheduler::new(
+            cfg.policy,
+            meta.prefill_seqs.clone(),
+            meta.decode_batches.clone(),
+        );
+        Ok(Self {
+            queue: AdmissionQueue::new(cfg.queue_capacity),
+            active: HashMap::new(),
+            metrics: ServeMetrics::new(),
+            finished: Vec::new(),
+            cfg,
+            meta,
+            registry,
+            param_literals,
+            kv,
+            scheduler,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+            scratch_bucket: 0,
+        })
+    }
+
+    /// Pre-compile the artifacts this engine will use, so TTFT/TPOT metrics
+    /// measure service latency rather than first-use XLA compilation.
+    pub fn warmup(&mut self) -> Result<()> {
+        for &b in &self.meta.decode_batches.clone() {
+            self.artifact(&ArtifactKey::decode(&self.cfg.variant, b))?;
+        }
+        for &s in &self.meta.prefill_seqs.clone() {
+            self.artifact(&ArtifactKey::prefill(&self.cfg.variant, 1, s))?;
+        }
+        Ok(())
+    }
+
+    pub fn submit(&mut self, req: Request) -> bool {
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.queue.push(req)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// One engine iteration. Returns false when there is nothing to do.
+    pub fn step(&mut self) -> Result<bool> {
+        let plan = self.scheduler.plan(&self.queue, &mut self.kv);
+        if plan.is_idle() && self.queue.is_empty() {
+            return Ok(false);
+        }
+
+        if let Some((_, slot)) = plan.prefill {
+            let req = self.queue.pop().expect("planned prefill without request");
+            self.run_prefill(req, slot)?;
+        } else if plan.decode_slots.is_empty() {
+            // Nothing active and nothing admissible (e.g. oversized prompt).
+            if let Some(req) = self.queue.pop() {
+                self.finished.push(RequestOutput {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    ttft_s: 0.0,
+                    tpot_s: 0.0,
+                    total_s: 0.0,
+                });
+                return Ok(true);
+            }
+            return Ok(false);
+        }
+
+        let active: Vec<usize> = {
+            let mut s: Vec<usize> = self.active.keys().copied().collect();
+            s.sort_unstable();
+            s
+        };
+        for group in self.scheduler.decode_groups(&active) {
+            self.run_decode_group(&group)?;
+        }
+        Ok(true)
+    }
+
+    /// Drive until every submitted request completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestOutput>> {
+        while self.pending() > 0 {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+
+    fn artifact(&self, key: &ArtifactKey) -> Result<std::sync::Arc<Artifact>> {
+        self.registry.get(key)
+    }
+
+    fn run_prefill(&mut self, req: Request, slot: usize) -> Result<()> {
+        let bucket = self
+            .scheduler
+            .prefill_bucket(req.prompt.len())
+            .ok_or_else(|| anyhow!("prompt of {} exceeds buckets", req.prompt.len()))?;
+        let key = ArtifactKey::prefill(&self.cfg.variant, 1, bucket);
+        let art = self.artifact(&key)?;
+        let t0 = Instant::now();
+
+        let mut tokens = req.prompt.clone();
+        tokens.resize(bucket, 0);
+        let mut literals = self.param_literals.clone();
+        literals.push(TensorIn::i32(&[1, bucket], tokens).to_literal()?);
+        let outs = art.run_literals(&literals)?;
+        // outputs: logits (1, S, V), k (L,1,T,Hkv,D), v (...)
+        let logits = &outs[0];
+        let v = self.meta.vocab;
+        let last = req.prompt.len() - 1;
+        let row = &logits.data[last * v..(last + 1) * v];
+        let first_token = argmax(row);
+
+        self.kv
+            .write_slot(slot, &outs[1].data, &outs[2].data, req.prompt.len());
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_time.record(t0.elapsed().as_secs_f64());
+        let now = Instant::now();
+        self.metrics
+            .ttft
+            .record(now.duration_since(req.arrival).as_secs_f64());
+
+        self.active.insert(
+            slot,
+            ActiveRequest {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                max_new_tokens: req.max_new_tokens,
+                stop_token: req.stop_token,
+                arrival: req.arrival,
+                first_token_at: Some(now),
+                generated: vec![first_token],
+                last_token: first_token,
+            },
+        );
+        self.metrics.generated_tokens += 1;
+        // Immediately-finished request (max_new_tokens == 1 or stop token).
+        self.maybe_finish(slot);
+        Ok(())
+    }
+
+    fn run_decode_group(&mut self, group: &[usize]) -> Result<()> {
+        if group.is_empty() {
+            return Ok(());
+        }
+        let bucket = self.scheduler.decode_bucket(group.len());
+        let key = ArtifactKey::decode(&self.cfg.variant, bucket);
+        let art = self.artifact(&key)?;
+        let t0 = Instant::now();
+
+        let ss = self.meta.cache_t * self.meta.kv_heads * self.meta.head_dim();
+        // Stage the batch in reusable scratch (padding rows beyond the group
+        // carry stale-but-masked data; pos=0 hides them from attention and
+        // their outputs are never scattered back).
+        let need = self.meta.layers * bucket * ss;
+        if self.scratch_bucket != bucket {
+            self.scratch_k.clear();
+            self.scratch_k.resize(need, 0.0);
+            self.scratch_v.clear();
+            self.scratch_v.resize(need, 0.0);
+            self.scratch_bucket = bucket;
+        }
+        let lens = self
+            .kv
+            .gather_batch_into(group, bucket, &mut self.scratch_k, &mut self.scratch_v);
+        // One unavoidable copy into the PJRT literal; the scratch persists.
+        let (k, v) = (self.scratch_k.clone(), self.scratch_v.clone());
+        let tokens: Vec<i32> = {
+            let mut t: Vec<i32> = group
+                .iter()
+                .map(|s| self.active[s].last_token)
+                .collect();
+            t.resize(bucket, 0);
+            t
+        };
+
+        let kv_dims = [
+            self.meta.layers,
+            bucket,
+            self.meta.cache_t,
+            self.meta.kv_heads,
+            self.meta.head_dim(),
+        ];
+        let mut literals = self.param_literals.clone();
+        literals.push(TensorIn::i32(&[bucket], tokens).to_literal()?);
+        literals.push(TensorIn::f32(&kv_dims, k).to_literal()?);
+        literals.push(TensorIn::f32(&kv_dims, v).to_literal()?);
+        literals.push(TensorIn::i32(&[bucket], lens).to_literal()?);
+        let outs = art.run_literals(&literals)?;
+
+        // outputs: logits (B, V), k, v.
+        let vsz = self.meta.vocab;
+        // Scatter back only the real rows.
+        let (l, b) = (self.meta.layers, group.len());
+        let (mut kr, mut vr) = (vec![0.0f32; l * b * ss], vec![0.0f32; l * b * ss]);
+        for li in 0..l {
+            for bi in 0..b {
+                let src = (li * bucket + bi) * ss;
+                let dst = (li * b + bi) * ss;
+                kr[dst..dst + ss].copy_from_slice(&outs[1].data[src..src + ss]);
+                vr[dst..dst + ss].copy_from_slice(&outs[2].data[src..src + ss]);
+            }
+        }
+        self.kv.scatter_batch(group, &kr, &vr);
+
+        let now = Instant::now();
+        for (bi, &slot) in group.iter().enumerate() {
+            let row = &outs[0].data[bi * vsz..(bi + 1) * vsz];
+            let tok = argmax(row);
+            let a = self.active.get_mut(&slot).unwrap();
+            a.generated.push(tok);
+            a.last_token = tok;
+            if let Some(ft) = a.first_token_at {
+                self.metrics
+                    .tpot
+                    .record(now.duration_since(ft).as_secs_f64() / a.generated.len().max(1) as f64);
+            }
+        }
+        self.metrics.generated_tokens += group.len() as u64;
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_batch_sum += group.len() as u64;
+        self.metrics.decode_time.record(t0.elapsed().as_secs_f64());
+
+        for &slot in group {
+            self.maybe_finish(slot);
+        }
+        Ok(())
+    }
+
+    fn maybe_finish(&mut self, slot: usize) {
+        let done = {
+            let Some(a) = self.active.get(&slot) else {
+                return;
+            };
+            let hit_stop = a
+                .stop_token
+                .map(|s| a.generated.last() == Some(&s))
+                .unwrap_or(false);
+            let cache_full = self.kv.len(slot).unwrap_or(0) + a.generated.len()
+                >= self.meta.cache_t;
+            a.generated.len() >= a.max_new_tokens || hit_stop || cache_full
+        };
+        if done {
+            let a = self.active.remove(&slot).unwrap();
+            self.kv.free_slot(slot);
+            let total = a.arrival.elapsed().as_secs_f64();
+            let ttft = a
+                .first_token_at
+                .map(|t| t.duration_since(a.arrival).as_secs_f64())
+                .unwrap_or(total);
+            let n = a.generated.len();
+            self.finished.push(RequestOutput {
+                id: a.id,
+                prompt_len: a.prompt_len,
+                tokens: a.generated,
+                ttft_s: ttft,
+                tpot_s: if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 },
+                total_s: total,
+            });
+            self.metrics.requests_completed += 1;
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    // Engine integration tests (require artifacts) are in
+    // rust/tests/serving_integration.rs.
+}

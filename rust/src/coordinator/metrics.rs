@@ -1,0 +1,182 @@
+//! Serving metrics: TTFT / TPOT / throughput, in the units the paper's
+//! e2e evaluation reports.
+
+use std::time::Instant;
+
+/// Streaming latency statistic (count / mean / min / max / p50-ish via
+/// reservoir of recent values).
+#[derive(Clone, Debug)]
+pub struct LatencyStat {
+    pub count: u64,
+    pub sum_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    recent: Vec<f64>,
+}
+
+impl Default for LatencyStat {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyStat {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+            recent: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.count += 1;
+        self.sum_s += seconds;
+        self.min_s = self.min_s.min(seconds);
+        self.max_s = self.max_s.max(seconds);
+        if self.recent.len() < 4096 {
+            self.recent.push(seconds);
+        } else {
+            let i = (self.count as usize) % 4096;
+            self.recent[i] = seconds;
+        }
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        if self.recent.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.recent.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        if self.recent.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.recent.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[(v.len() * 95 / 100).min(v.len() - 1)]
+    }
+}
+
+/// Engine-level counters.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    pub started: Instant,
+    pub requests_completed: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub decode_batch_sum: u64,
+    pub ttft: LatencyStat,
+    pub tpot: LatencyStat,
+    pub prefill_time: LatencyStat,
+    pub decode_time: LatencyStat,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests_completed: 0,
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            prefill_steps: 0,
+            decode_steps: 0,
+            decode_batch_sum: 0,
+            ttft: LatencyStat::new(),
+            tpot: LatencyStat::new(),
+            prefill_time: LatencyStat::new(),
+            decode_time: LatencyStat::new(),
+        }
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el > 0.0 {
+            self.generated_tokens as f64 / el
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_batch_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} gen_tokens={} tok/s={:.1} ttft_mean={:.1}ms ttft_p95={:.1}ms \
+             tpot_mean={:.2}ms decode_steps={} mean_batch={:.2}",
+            self.requests_completed,
+            self.generated_tokens,
+            self.tokens_per_s(),
+            self.ttft.mean_s() * 1e3,
+            self.ttft.p95_s() * 1e3,
+            self.tpot.mean_s() * 1e3,
+            self.decode_steps,
+            self.mean_decode_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_stat_moments() {
+        let mut s = LatencyStat::new();
+        for v in [0.1, 0.2, 0.3] {
+            s.record(v);
+        }
+        assert_eq!(s.count, 3);
+        assert!((s.mean_s() - 0.2).abs() < 1e-12);
+        assert_eq!(s.min_s, 0.1);
+        assert_eq!(s.max_s, 0.3);
+        assert!((s.p50_s() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p95_on_many_samples() {
+        let mut s = LatencyStat::new();
+        for i in 0..100 {
+            s.record(i as f64 / 100.0);
+        }
+        assert!(s.p95_s() >= 0.9);
+    }
+
+    #[test]
+    fn serve_metrics_report() {
+        let mut m = ServeMetrics::new();
+        m.requests_completed = 2;
+        m.generated_tokens = 100;
+        m.decode_steps = 50;
+        m.decode_batch_sum = 100;
+        assert_eq!(m.mean_decode_batch(), 2.0);
+        assert!(m.report().contains("requests=2"));
+    }
+}

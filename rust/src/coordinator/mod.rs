@@ -1,0 +1,21 @@
+//! L3 serving coordinator — the vLLM-style layer the paper's end-to-end
+//! numbers (Tables 5–6) presuppose: request admission, continuous batching
+//! with prefill/decode interleave, slot-based KV management, and metrics.
+//!
+//! Everything here is plain Rust (std threads + channels — the request path
+//! has no Python and no async runtime); the compute is the AOT artifacts
+//! executed through [`crate::runtime`].
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use batcher::{AdmissionQueue, BatchPlan};
+pub use engine::{Engine, EngineConfig};
+pub use kvcache::{BlockAllocator, KvStore};
+pub use metrics::{LatencyStat, ServeMetrics};
+pub use request::{Request, RequestId, RequestOutput, RequestState};
+pub use scheduler::{SchedulePolicy, Scheduler};

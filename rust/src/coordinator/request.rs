@@ -1,0 +1,86 @@
+//! Request types flowing through the coordinator.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// An inference request: prompt tokens + generation budget.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop generation at this token (e.g. b'.' for the byte-LM demo).
+    pub stop_token: Option<i32>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+/// Lifecycle of an admitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Waiting,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+/// Completed request with latency breakdown.
+#[derive(Clone, Debug)]
+pub struct RequestOutput {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill + queueing), seconds.
+    pub ttft_s: f64,
+    /// Mean time per output token after the first, seconds.
+    pub tpot_s: f64,
+    pub total_s: f64,
+}
+
+impl RequestOutput {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.tokens.len() as f64 / self.total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = Request::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt.len(), 3);
+        assert!(r.stop_token.is_none());
+    }
+
+    #[test]
+    fn output_throughput() {
+        let o = RequestOutput {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![0; 10],
+            ttft_s: 0.1,
+            tpot_s: 0.01,
+            total_s: 0.2,
+        };
+        assert_eq!(o.tokens_per_s(), 50.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Scheduling policy: prefill/decode interleave and shape-bucket selection.
+//!
+//! The AOT architecture compiles one executable per (variant, batch, seq)
+//! bucket, so the scheduler's job includes *bucketing*: choosing the
+//! smallest compiled prefill length ≥ prompt, and the smallest compiled
+//! decode batch ≥ active slots.
+
+use super::batcher::{AdmissionQueue, BatchPlan};
+use super::kvcache::KvStore;
+
+/// Prefill/decode interleave policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Admit new work as soon as a slot frees (lower TTFT, can stall
+    /// decodes behind prefills).
+    PrefillFirst,
+    /// Only admit when the decode group would go below `min_decode` active
+    /// slots (protects TPOT under load).
+    DecodeFirst { min_decode: usize },
+}
+
+pub struct Scheduler {
+    pub policy: SchedulePolicy,
+    /// Compiled prefill sequence buckets (ascending).
+    pub prefill_seqs: Vec<usize>,
+    /// Compiled decode batch buckets (ascending).
+    pub decode_batches: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedulePolicy, prefill_seqs: Vec<usize>, decode_batches: Vec<usize>) -> Self {
+        let mut s = prefill_seqs;
+        s.sort_unstable();
+        let mut b = decode_batches;
+        b.sort_unstable();
+        Self {
+            policy,
+            prefill_seqs: s,
+            decode_batches: b,
+        }
+    }
+
+    /// Smallest compiled prefill length that fits `prompt_len`, or None if
+    /// the prompt exceeds every bucket.
+    pub fn prefill_bucket(&self, prompt_len: usize) -> Option<usize> {
+        self.prefill_seqs.iter().copied().find(|s| *s >= prompt_len)
+    }
+
+    /// Smallest compiled decode batch ≥ `active`, or the largest if the
+    /// group must be split (caller then runs multiple groups).
+    pub fn decode_bucket(&self, active: usize) -> usize {
+        self.decode_batches
+            .iter()
+            .copied()
+            .find(|b| *b >= active)
+            .unwrap_or_else(|| *self.decode_batches.last().unwrap())
+    }
+
+    /// Partition active slots into artifact-sized decode groups.
+    pub fn decode_groups(&self, slots: &[usize]) -> Vec<Vec<usize>> {
+        let max_b = *self.decode_batches.last().unwrap();
+        let mut groups = Vec::new();
+        for chunk in slots.chunks(max_b) {
+            groups.push(chunk.to_vec());
+        }
+        groups
+    }
+
+    /// Build the next iteration's plan.
+    pub fn plan(&self, queue: &AdmissionQueue, kv: &mut KvStore) -> BatchPlan {
+        let active = kv.active_slots();
+        let mut plan = BatchPlan {
+            prefill: None,
+            decode_slots: active.clone(),
+        };
+        let admit = match self.policy {
+            SchedulePolicy::PrefillFirst => true,
+            SchedulePolicy::DecodeFirst { min_decode } => active.len() < min_decode,
+        };
+        if admit {
+            if let Some(req) = queue.peek() {
+                if self.prefill_bucket(req.prompt.len()).is_some() {
+                    if let Some(slot) = kv.alloc_slot() {
+                        plan.prefill = Some((req.id, slot));
+                    }
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn sched(policy: SchedulePolicy) -> Scheduler {
+        Scheduler::new(policy, vec![16, 32, 64, 128], vec![1, 2, 4, 8])
+    }
+
+    #[test]
+    fn prefill_bucketing() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        assert_eq!(s.prefill_bucket(1), Some(16));
+        assert_eq!(s.prefill_bucket(16), Some(16));
+        assert_eq!(s.prefill_bucket(17), Some(32));
+        assert_eq!(s.prefill_bucket(128), Some(128));
+        assert_eq!(s.prefill_bucket(129), None);
+    }
+
+    #[test]
+    fn decode_bucketing() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        assert_eq!(s.decode_bucket(1), 1);
+        assert_eq!(s.decode_bucket(3), 4);
+        assert_eq!(s.decode_bucket(8), 8);
+        assert_eq!(s.decode_bucket(9), 8); // split into groups
+        assert_eq!(s.decode_groups(&[0, 1, 2, 3, 4, 5, 6, 7, 8]).len(), 2);
+    }
+
+    #[test]
+    fn prefill_first_admits_when_slot_free() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, vec![0; 20], 4));
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan(&q, &mut kv);
+        assert!(plan.prefill.is_some());
+        assert!(plan.decode_slots.is_empty());
+    }
+
+    #[test]
+    fn decode_first_defers_admission() {
+        let s = sched(SchedulePolicy::DecodeFirst { min_decode: 1 });
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, vec![0; 20], 4));
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        // One active slot already decoding → admission deferred.
+        let slot = kv.alloc_slot().unwrap();
+        kv.set_len(slot, 5);
+        let plan = s.plan(&q, &mut kv);
+        assert!(plan.prefill.is_none());
+        assert_eq!(plan.decode_slots, vec![slot]);
+    }
+
+    #[test]
+    fn oversized_prompt_not_admitted() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, vec![0; 300], 4));
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan(&q, &mut kv);
+        assert!(plan.prefill.is_none());
+    }
+
+    #[test]
+    fn no_slot_no_prefill() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, vec![0; 8], 4));
+        let mut kv = KvStore::new(2, 1, 160, 2, 4);
+        kv.alloc_slot().unwrap(); // occupy the only slot
+        let plan = s.plan(&q, &mut kv);
+        assert!(plan.prefill.is_none());
+        assert_eq!(plan.decode_slots.len(), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Accuracy evaluation harness — regenerates the structure of Tables 2–4.
+//!
+//! Metrics (synthetic analogues of the paper's three columns):
+//! * **PPL** — perplexity of the quantized model against labels drawn from
+//!   the reference model (WikiText2 stand-in); reported as Δ% vs BF16 where
+//!   lower/smaller Δ is better.
+//! * **Common sense** — top-1 agreement with the reference on *large-margin*
+//!   examples: robust reasoning-style tasks degrade little (§4.2.2).
+//! * **MMLU** — top-1 agreement restricted to *small-margin* examples:
+//!   knowledge-retrieval tasks sit near decision boundaries and are more
+//!   quantization-sensitive (§4.2.2).
+
+pub mod suite;
+pub mod tables;
+
+pub use suite::{evaluate_model, AccuracyRow, EvalConfig};
+pub use tables::render_accuracy_table;

@@ -1,0 +1,244 @@
+//! Accuracy suite over SyntheticLm models.
+
+use crate::fp8::Fp8Format;
+use crate::model::config::ModelConfig;
+use crate::model::synthetic::SyntheticLm;
+use crate::quant::QuantScheme;
+use crate::tensor::Tensor2;
+use crate::util::rng::XorShiftRng;
+
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub classes: usize,
+    pub calib_samples: usize,
+    pub eval_samples: usize,
+    pub seed: u64,
+    pub format: Fp8Format,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            classes: 64,
+            calib_samples: 128,
+            eval_samples: 512,
+            seed: 2024,
+            format: Fp8Format::E4M3Gaudi2,
+        }
+    }
+}
+
+/// One row of a Tables-2–4-style report.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub configuration: String,
+    pub ppl: f64,
+    pub ppl_delta_pct: f64,
+    pub commonsense_acc: f64,
+    pub commonsense_delta_pct: f64,
+    pub mmlu_acc: f64,
+    pub mmlu_delta_pct: f64,
+}
+
+fn softmax_row(row: &[f32]) -> Vec<f64> {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
+    let exps: Vec<f64> = row.iter().map(|v| ((*v as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Margin = top1 − top2 of the reference logits; splits examples into the
+/// robust ("common sense") and sensitive ("MMLU") populations.
+fn margin(row: &[f32]) -> f32 {
+    let mut a = f32::NEG_INFINITY;
+    let mut b = f32::NEG_INFINITY;
+    for &v in row {
+        if v > a {
+            b = a;
+            a = v;
+        } else if v > b {
+            b = v;
+        }
+    }
+    a - b
+}
+
+struct Metrics {
+    ppl: f64,
+    commonsense: f64,
+    mmlu: f64,
+}
+
+fn metrics(
+    logits: &Tensor2,
+    labels: &[usize],
+    ref_logits: &Tensor2,
+    margin_split: f32,
+) -> Metrics {
+    let n = logits.rows;
+    let mut nll = 0.0f64;
+    let (mut cs_ok, mut cs_n, mut mm_ok, mut mm_n) = (0usize, 0usize, 0usize, 0usize);
+    for i in 0..n {
+        let p = softmax_row(logits.row(i));
+        nll -= p[labels[i]].max(1e-12).ln();
+        let pred = argmax(logits.row(i));
+        let ok = pred == labels[i];
+        if margin(ref_logits.row(i)) >= margin_split {
+            cs_n += 1;
+            cs_ok += ok as usize;
+        } else {
+            mm_n += 1;
+            mm_ok += ok as usize;
+        }
+    }
+    Metrics {
+        ppl: (nll / n as f64).exp(),
+        commonsense: 100.0 * cs_ok as f64 / cs_n.max(1) as f64,
+        mmlu: 100.0 * mm_ok as f64 / mm_n.max(1) as f64,
+    }
+}
+
+/// Evaluate one model config across schemes. Returns rows: BF16 reference
+/// first, then each scheme with Δ% columns (the paper's table layout).
+pub fn evaluate_model(
+    cfg: &ModelConfig,
+    schemes: &[(String, QuantScheme)],
+    ec: &EvalConfig,
+) -> Vec<AccuracyRow> {
+    let lm = SyntheticLm::new(cfg, ec.classes, ec.seed);
+    let mut rng = XorShiftRng::new(ec.seed ^ 0x5EED);
+    let x_cal = lm.sample_inputs(ec.calib_samples, &mut rng);
+    let x_eval = lm.sample_inputs(ec.eval_samples, &mut rng);
+    let stats = lm.calibrate(&x_cal);
+
+    let ref_logits = lm.forward_reference(&x_eval);
+    // Labels: reference argmax (the model's own "truth") — Δ measures how
+    // quantization perturbs the model away from its reference behaviour.
+    let labels: Vec<usize> = (0..ref_logits.rows)
+        .map(|i| argmax(ref_logits.row(i)))
+        .collect();
+    // Margin split point: median margin → halves form the two populations.
+    let mut margins: Vec<f32> = (0..ref_logits.rows)
+        .map(|i| margin(ref_logits.row(i)))
+        .collect();
+    margins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let split = margins[margins.len() / 2];
+
+    let base = metrics(&ref_logits, &labels, &ref_logits, split);
+    let mut rows = vec![AccuracyRow {
+        configuration: "BF16 Reference".into(),
+        ppl: base.ppl,
+        ppl_delta_pct: 0.0,
+        commonsense_acc: base.commonsense,
+        commonsense_delta_pct: 0.0,
+        mmlu_acc: base.mmlu,
+        mmlu_delta_pct: 0.0,
+    }];
+
+    for (name, scheme) in schemes {
+        let q_logits = lm.forward_quantized(&x_eval, *scheme, &stats);
+        let m = metrics(&q_logits, &labels, &ref_logits, split);
+        rows.push(AccuracyRow {
+            configuration: name.clone(),
+            ppl: m.ppl,
+            ppl_delta_pct: 100.0 * (m.ppl - base.ppl) / base.ppl,
+            commonsense_acc: m.commonsense,
+            commonsense_delta_pct: m.commonsense - base.commonsense,
+            mmlu_acc: m.mmlu,
+            mmlu_delta_pct: m.mmlu - base.mmlu,
+        });
+    }
+    rows
+}
+
+/// The Tables 2–4 scheme grid.
+pub fn paper_schemes(format: Fp8Format) -> Vec<(String, QuantScheme)> {
+    vec![
+        ("Unit Scale".into(), QuantScheme::unit_scale(format)),
+        ("Per Tensor Scaling".into(), QuantScheme::per_tensor(format)),
+        ("Per Channel Scaling".into(), QuantScheme::per_channel(format)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelFamily;
+
+    fn quick_ec() -> EvalConfig {
+        EvalConfig {
+            eval_samples: 128,
+            calib_samples: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn reference_row_is_self_consistent() {
+        let cfg = ModelConfig::synthetic_tiny(ModelFamily::Llama2);
+        let rows = evaluate_model(&cfg, &paper_schemes(Fp8Format::E4M3Gaudi2), &quick_ec());
+        assert_eq!(rows.len(), 4);
+        // BF16 row: accuracy on its own labels = 100%.
+        assert_eq!(rows[0].commonsense_acc, 100.0);
+        assert_eq!(rows[0].mmlu_acc, 100.0);
+        assert!(rows[0].ppl >= 1.0);
+    }
+
+    #[test]
+    fn llama_family_degradation_small_for_scaled_schemes() {
+        let cfg = ModelConfig::synthetic_small(ModelFamily::Llama2);
+        let rows = evaluate_model(&cfg, &paper_schemes(Fp8Format::E4M3Gaudi2), &quick_ec());
+        for row in &rows[2..] {
+            // Per-tensor / per-channel: commonsense within a few points
+            // (paper: "typically below 1%"; our tiny models are noisier).
+            assert!(
+                row.commonsense_delta_pct.abs() < 8.0,
+                "{}: cs Δ {}",
+                row.configuration,
+                row.commonsense_delta_pct
+            );
+        }
+    }
+
+    #[test]
+    fn mmlu_more_sensitive_than_commonsense() {
+        // §4.2.2: small-margin (knowledge) tasks degrade more.
+        let cfg = ModelConfig::synthetic_tiny(ModelFamily::Llama2);
+        let rows = evaluate_model(&cfg, &paper_schemes(Fp8Format::E4M3Gaudi2), &quick_ec());
+        let pt = &rows[2]; // per-tensor
+        assert!(
+            pt.mmlu_delta_pct <= pt.commonsense_delta_pct + 1e-9,
+            "mmlu Δ {} should be ≤ cs Δ {}",
+            pt.mmlu_delta_pct,
+            pt.commonsense_delta_pct
+        );
+    }
+
+    #[test]
+    fn mistral_unit_scale_collapses() {
+        // Table 4's structure: unit-scale PPL explodes on outlier families.
+        let cfg = ModelConfig::synthetic_tiny(ModelFamily::Mistral);
+        let rows = evaluate_model(&cfg, &paper_schemes(Fp8Format::E4M3Gaudi2), &quick_ec());
+        let unit = &rows[1];
+        let pt = &rows[2];
+        assert!(
+            unit.ppl_delta_pct > 5.0 * pt.ppl_delta_pct.max(0.5),
+            "unit Δppl {} vs pt {}",
+            unit.ppl_delta_pct,
+            pt.ppl_delta_pct
+        );
+        assert!(
+            unit.commonsense_delta_pct < -5.0,
+            "unit cs Δ should collapse (got {})",
+            unit.commonsense_delta_pct
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Render accuracy rows in the paper's table format.
+
+use super::suite::AccuracyRow;
+use crate::util::render_table;
+
+/// Tables 2–4 layout: PPL (Acc↓, Δ%↓), Common sense (Acc↑, Δ%↑),
+/// MMLU (Acc↑, Δ%↑).
+pub fn render_accuracy_table(model_name: &str, rows: &[AccuracyRow]) -> String {
+    let header = [
+        "Configuration",
+        "PPL Acc↓",
+        "PPL Δ(%)↓",
+        "CSense Acc↑",
+        "CSense Δ↑",
+        "MMLU Acc↑",
+        "MMLU Δ↑",
+    ];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let d = |v: f64, is_ref: bool| {
+                if is_ref {
+                    "_".to_string()
+                } else {
+                    format!("{v:+.2}")
+                }
+            };
+            let is_ref = r.configuration == "BF16 Reference";
+            vec![
+                r.configuration.clone(),
+                format!("{:.3}", r.ppl),
+                d(r.ppl_delta_pct, is_ref),
+                format!("{:.3}", r.commonsense_acc),
+                d(r.commonsense_delta_pct, is_ref),
+                format!("{:.3}", r.mmlu_acc),
+                d(r.mmlu_delta_pct, is_ref),
+            ]
+        })
+        .collect();
+    render_table(
+        &format!("{model_name} accuracy for various quantization methods"),
+        &header,
+        &body,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_reference_row_with_dashes() {
+        let rows = vec![
+            AccuracyRow {
+                configuration: "BF16 Reference".into(),
+                ppl: 13.066,
+                ppl_delta_pct: 0.0,
+                commonsense_acc: 67.388,
+                commonsense_delta_pct: 0.0,
+                mmlu_acc: 43.085,
+                mmlu_delta_pct: 0.0,
+            },
+            AccuracyRow {
+                configuration: "Unit Scale".into(),
+                ppl: 14.143,
+                ppl_delta_pct: 8.24,
+                commonsense_acc: 67.102,
+                commonsense_delta_pct: -0.42,
+                mmlu_acc: 42.483,
+                mmlu_delta_pct: -1.40,
+            },
+        ];
+        let t = render_accuracy_table("Llama2-7B", &rows);
+        assert!(t.contains("Llama2-7B"));
+        assert!(t.contains("| _"));
+        assert!(t.contains("+8.24"));
+        assert!(t.contains("-0.42"));
+    }
+}

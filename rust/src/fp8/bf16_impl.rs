@@ -1,0 +1,88 @@
+//! Minimal bfloat16 support (the `half` crate is unreachable offline).
+//!
+//! BF16 is the high-precision type on Gaudi's GEMM path: FP8 × FP8 → FP32
+//! accumulate → BF16 output (Table 1: "Two FP8 matrices are multiplied to
+//! produce a BF16 output matrix"). Only conversions and a few helpers are
+//! needed; arithmetic happens in f32.
+
+/// Round-to-nearest-even f32 → bf16 bit pattern.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet NaN, preserve sign.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE on the low 16 bits.
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    (rounded >> 16) as u16
+}
+
+/// bf16 bit pattern → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Quantize a slice to bf16 precision in place (simulating a bf16 tensor
+/// stored as f32 — our tensors are f32-backed).
+pub fn round_slice_to_bf16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_to_f32(f32_to_bf16(*x));
+    }
+}
+
+/// Max finite bf16 value.
+pub const BF16_MAX: f32 = 3.3895314e38;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x);
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-8 is exactly between bf16(1.0) and the next bf16 value
+        // (1 + 2^-7); RNE goes to even mantissa → 1.0.
+        let x = 1.0 + (2.0f32).powi(-8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0);
+        // 1 + 3*2^-8 ties between 1+2^-7 (odd) and 1+2^-6 (even) → 1+2^-6.
+        let x = 1.0 + 3.0 * (2.0f32).powi(-8);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0 + (2.0f32).powi(-6));
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn error_bounded() {
+        let mut r = crate::util::rng::XorShiftRng::new(4);
+        for _ in 0..10_000 {
+            let x = r.normal() * 100.0;
+            let y = bf16_to_f32(f32_to_bf16(x));
+            let rel = if x != 0.0 { ((y - x) / x).abs() } else { 0.0 };
+            assert!(rel <= (2.0f32).powi(-8), "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn slice_rounding() {
+        let mut v = vec![1.0f32, 1.0 + (2.0f32).powi(-9), -3.14159];
+        round_slice_to_bf16(&mut v);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[1], 1.0);
+        assert!((v[2] + 3.140625).abs() < 2e-2);
+    }
+}

@@ -1,0 +1,180 @@
+//! Exact FP8 → f32 decode. Every finite FP8 value is exactly representable
+//! in f32, so decode is lossless by construction.
+
+use super::format::{exp2i, Fp8Format, SpecialCase};
+
+/// Decode one code to f32. Inf maps to f32 INFINITY (E4M3-Gaudi2 / E5M2),
+/// NaN to f32 NAN. Sign of zero is preserved.
+pub fn decode(code: u8, format: Fp8Format) -> f32 {
+    let p = format.params();
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    match format.classify(code) {
+        SpecialCase::Nan => f32::NAN,
+        SpecialCase::Inf => sign * f32::INFINITY,
+        SpecialCase::Zero => sign * 0.0,
+        SpecialCase::Subnormal => {
+            let man = (code & ((1 << p.man_bits) - 1)) as f32;
+            sign * man * exp2i(1 - p.bias - p.man_bits as i32)
+        }
+        SpecialCase::Normal => {
+            let exp = ((code >> p.man_bits) & ((1 << p.exp_bits) - 1)) as i32;
+            let man = (code & ((1 << p.man_bits) - 1)) as f32;
+            let frac = 1.0 + man * exp2i(-(p.man_bits as i32));
+            sign * frac * exp2i(exp - p.bias)
+        }
+    }
+}
+
+/// Precomputed 256-entry decode table — the hot-path decode used by the
+/// emulated GEMM. NaN entries hold f32::NAN; callers on the GEMM path are
+/// expected to have saturating-cast inputs so specials never occur there.
+#[derive(Clone)]
+pub struct DecodeTable {
+    pub format: Fp8Format,
+    pub values: [f32; 256],
+}
+
+impl DecodeTable {
+    pub fn new(format: Fp8Format) -> Self {
+        let mut values = [0.0f32; 256];
+        for (c, v) in values.iter_mut().enumerate() {
+            *v = decode(c as u8, format);
+        }
+        Self { format, values }
+    }
+
+    #[inline]
+    pub fn get(&self, code: u8) -> f32 {
+        self.values[code as usize]
+    }
+
+    /// Sorted list of (value, code) for all finite non-negative codes —
+    /// the encode oracle searches this.
+    pub fn sorted_positive(&self) -> Vec<(f32, u8)> {
+        let mut v: Vec<(f32, u8)> = (0u16..=255)
+            .map(|c| (self.values[c as usize], c as u8))
+            .filter(|(v, c)| v.is_finite() && c & 0x80 == 0)
+            .collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_known_values_e4m3() {
+        let f = Fp8Format::E4M3;
+        // 0x38 = 0.0111.000 → exp=7-7=0 → 1.0
+        assert_eq!(decode(0x38, f), 1.0);
+        // 0x3C = 0.0111.100 → 1.5
+        assert_eq!(decode(0x3C, f), 1.5);
+        // 0xBC → -1.5
+        assert_eq!(decode(0xBC, f), -1.5);
+        // max normal 0x7E → 448
+        assert_eq!(decode(0x7E, f), 448.0);
+        // min subnormal 0x01 → 2^-9
+        assert_eq!(decode(0x01, f), exp2i(-9));
+        // min normal 0x08 → 2^-6
+        assert_eq!(decode(0x08, f), exp2i(-6));
+    }
+
+    #[test]
+    fn decode_known_values_e4m3_gaudi2() {
+        let f = Fp8Format::E4M3Gaudi2;
+        assert_eq!(decode(0x77, f), 240.0); // max normal
+        assert!(decode(0x78, f).is_infinite());
+        assert!(decode(0x79, f).is_nan());
+        assert_eq!(decode(0x38, f), 1.0);
+    }
+
+    #[test]
+    fn decode_known_values_e5m2() {
+        let f = Fp8Format::E5M2;
+        // 0x3C = 0.01111.00 → exp=15-15=0 → 1.0
+        assert_eq!(decode(0x3C, f), 1.0);
+        assert_eq!(decode(0x7B, f), 57344.0);
+        assert!(decode(0x7C, f).is_infinite());
+        assert!(decode(0x7D, f).is_nan());
+        assert_eq!(decode(0x01, f), exp2i(-16));
+    }
+
+    #[test]
+    fn negative_zero_preserved() {
+        for f in Fp8Format::ALL {
+            let v = decode(0x80, f);
+            assert_eq!(v, 0.0);
+            assert!(v.is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn table_matches_scalar_decode() {
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            for c in 0u16..=255 {
+                let a = t.get(c as u8);
+                let b = decode(c as u8, f);
+                assert!(
+                    (a.is_nan() && b.is_nan()) || a == b,
+                    "format {f:?} code {c:#x}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_is_monotone_on_positive_codes() {
+        // Within positive finite codes, numeric value increases with code.
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            let sp = t.sorted_positive();
+            for w in sp.windows(2) {
+                // Strictly increasing except the two zeros (+0 appears once).
+                assert!(w[0].0 < w[1].0 || (w[0].0 == 0.0 && w[1].0 == 0.0));
+            }
+            // And sorted order equals code order for positives.
+            let codes: Vec<u8> = sp.iter().map(|(_, c)| *c).collect();
+            let mut sorted_codes = codes.clone();
+            sorted_codes.sort();
+            assert_eq!(codes, sorted_codes, "format {f:?}");
+        }
+    }
+
+    #[test]
+    fn e4m3_variants_agree_below_240() {
+        let g2 = DecodeTable::new(Fp8Format::E4M3Gaudi2);
+        let g3 = DecodeTable::new(Fp8Format::E4M3);
+        for c in 0u16..=255 {
+            let c = c as u8;
+            let (a, b) = (g2.get(c), g3.get(c));
+            if a.is_finite() && a.abs() <= 240.0 {
+                assert_eq!(a, b, "code {c:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_finite_codes_counted() {
+        // E4M3 OCP: 256 codes - 2 NaN = 254 finite (incl. two zeros).
+        let t = DecodeTable::new(Fp8Format::E4M3);
+        let finite = (0u16..=255)
+            .filter(|c| t.get(*c as u8).is_finite())
+            .count();
+        assert_eq!(finite, 254);
+        // E4M3 Gaudi2: 2 Inf + 14 NaN removed → 240 finite.
+        let t = DecodeTable::new(Fp8Format::E4M3Gaudi2);
+        let finite = (0u16..=255)
+            .filter(|c| t.get(*c as u8).is_finite())
+            .count();
+        assert_eq!(finite, 240);
+        // E5M2: exp=31 (8 codes) are Inf/NaN → 248 finite.
+        let t = DecodeTable::new(Fp8Format::E5M2);
+        let finite = (0u16..=255)
+            .filter(|c| t.get(*c as u8).is_finite())
+            .count();
+        assert_eq!(finite, 248);
+    }
+}

@@ -1,0 +1,388 @@
+//! f32 → FP8 cast with round-to-nearest-even (the Gaudi default cast) and
+//! round-toward-zero.
+//!
+//! Two implementations exist:
+//! * [`encode_rne`] — branch-light bit manipulation, the hot path;
+//! * [`encode_nearest_oracle`] — a table search that is correct *by
+//!   definition* (nearest representable, ties to the even mantissa code).
+//!
+//! `encode_rne` is validated against the oracle exhaustively over every code
+//! midpoint and by property tests over millions of random floats (see tests
+//! and `rust/tests/fp8_exhaustive.rs`).
+
+use super::decode::DecodeTable;
+use super::format::{exp2i, Fp8Format};
+
+/// Behavior on overflow (|x| beyond the largest finite value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CastMode {
+    /// Saturate to the largest finite magnitude (Gaudi inference cast; the
+    /// paper §1: "large absolute values are clipped to the maximum").
+    SatFinite,
+    /// IEEE-style: overflow produces Inf (formats with Inf) or NaN (OCP
+    /// E4M3, which has no Inf).
+    Ieee,
+}
+
+#[inline]
+fn overflow_code(sign: u8, format: Fp8Format, mode: CastMode) -> u8 {
+    let p = format.params();
+    match mode {
+        CastMode::SatFinite => sign | p.max_code,
+        CastMode::Ieee => {
+            if p.ieee_reserved_top_exp {
+                // Inf: top exponent, zero mantissa.
+                sign | (((1u8 << p.exp_bits) - 1) << p.man_bits)
+            } else {
+                sign | p.nan_code
+            }
+        }
+    }
+}
+
+/// Round-to-nearest-even cast, bit-manipulation implementation.
+pub fn encode_rne(x: f32, format: Fp8Format, mode: CastMode) -> u8 {
+    let p = format.params();
+    let bits = x.to_bits();
+    let sign = ((bits >> 31) as u8) << 7;
+    let abs_bits = bits & 0x7FFF_FFFF;
+
+    if abs_bits > 0x7F80_0000 {
+        return sign | p.nan_code; // NaN propagates
+    }
+    if abs_bits == 0x7F80_0000 {
+        return overflow_code(sign, format, mode); // Inf input
+    }
+    if abs_bits == 0 {
+        return sign; // ±0
+    }
+
+    let m = p.man_bits;
+    let min_norm_exp = 1 - p.bias;
+    let e_unb = ((abs_bits >> 23) as i32) - 127;
+
+    if e_unb < min_norm_exp {
+        // Subnormal target (possibly rounding up into the minimal normal).
+        // q = RNE(x / ulp_sub), ulp_sub = 2^(min_norm_exp - m).
+        let x_abs = f32::from_bits(abs_bits);
+        let q = (x_abs * exp2i(m as i32 - min_norm_exp)).round_ties_even() as u32;
+        // q ∈ [0, 2^m]; q == 2^m lands exactly on the minimal normal whose
+        // code is (1 << m) — the expression below covers it uniformly.
+        return sign | q as u8;
+    }
+
+    // Normal path: RNE on the f32 mantissa via the classic add-half trick;
+    // a carry out of the mantissa correctly bumps the exponent.
+    let shift = 23 - m;
+    let lsb = (abs_bits >> shift) & 1;
+    let rounded = abs_bits + ((1u32 << (shift - 1)) - 1) + lsb;
+    let r_exp = ((rounded >> 23) & 0xFF) as i32 - 127;
+    let r_man = ((rounded >> shift) & ((1u32 << m) - 1)) as u8;
+
+    // Overflow detection against the format's top finite value.
+    let (max_exp, max_man) = {
+        let pmax = p.max_code;
+        (
+            (((pmax >> m) & ((1 << p.exp_bits) - 1)) as i32) - p.bias,
+            pmax & ((1 << m) - 1),
+        )
+    };
+    if r_exp > max_exp || (r_exp == max_exp && r_man > max_man) {
+        return overflow_code(sign, format, mode);
+    }
+    let code_exp = (r_exp + p.bias) as u8;
+    sign | (code_exp << m) | r_man
+}
+
+/// Round-toward-zero cast (truncation). Not used on Gaudi's GEMM path but
+/// included for completeness and as a reference point in rounding studies.
+pub fn encode_rz(x: f32, format: Fp8Format, mode: CastMode) -> u8 {
+    let p = format.params();
+    let bits = x.to_bits();
+    let sign = ((bits >> 31) as u8) << 7;
+    let abs_bits = bits & 0x7FFF_FFFF;
+    if abs_bits > 0x7F80_0000 {
+        return sign | p.nan_code;
+    }
+    if abs_bits == 0x7F80_0000 {
+        return overflow_code(sign, format, mode);
+    }
+    if abs_bits == 0 {
+        return sign;
+    }
+    let m = p.man_bits;
+    let min_norm_exp = 1 - p.bias;
+    let e_unb = ((abs_bits >> 23) as i32) - 127;
+    let x_abs = f32::from_bits(abs_bits);
+    if x_abs > p.max_normal {
+        // RZ of an overflow saturates to max in both modes (truncation never
+        // reaches Inf).
+        return sign | p.max_code;
+    }
+    if e_unb < min_norm_exp {
+        let q = (x_abs * exp2i(m as i32 - min_norm_exp)).floor() as u32;
+        return sign | q as u8;
+    }
+    let shift = 23 - m;
+    let r_exp = e_unb;
+    let r_man = ((abs_bits >> shift) & ((1u32 << m) - 1)) as u8;
+    let code_exp = (r_exp + p.bias) as u8;
+    sign | (code_exp << m) | r_man
+}
+
+/// Correct-by-definition nearest encode: searches the decode table for the
+/// closest representable value; ties go to the even mantissa code (even code
+/// parity ≡ even mantissa LSB, including across binade boundaries).
+pub fn encode_nearest_oracle(x: f32, table: &DecodeTable, mode: CastMode) -> u8 {
+    let p = table.format.params();
+    if x.is_nan() {
+        return p.nan_code | if x.is_sign_negative() { 0x80 } else { 0 };
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let ax = x.abs();
+    if ax.is_infinite() {
+        return overflow_code(sign, table.format, mode);
+    }
+    let sp = table.sorted_positive();
+    let max_val = sp.last().unwrap().0;
+    if ax > max_val {
+        // Nearest finite is max; in IEEE mode values beyond the RNE
+        // threshold overflow to Inf/NaN. The spacing above max equals the
+        // spacing below it (max sits mid-binade in all three formats:
+        // its mantissa field is not zero), and the exact midpoint ties to
+        // the even mantissa: up (overflow) iff max_code's mantissa is odd.
+        let second = sp[sp.len() - 2].0;
+        let ulp_above = max_val - second;
+        let half = ulp_above / 2.0;
+        let tie_up = p.max_code & 1 == 1;
+        let over = ax - max_val > half || (ax - max_val == half && tie_up);
+        if over && mode == CastMode::Ieee {
+            return overflow_code(sign, table.format, mode);
+        }
+        return sign | p.max_code;
+    }
+    // Binary search for the insertion point.
+    let idx = sp.partition_point(|(v, _)| *v < ax);
+    let candidates = [
+        idx.checked_sub(1).map(|i| sp[i]),
+        sp.get(idx).copied(),
+    ];
+    let mut best: Option<(f32, u8)> = None;
+    for c in candidates.into_iter().flatten() {
+        best = Some(match best {
+            None => c,
+            Some(b) => {
+                let (db, dc) = ((b.0 - ax).abs(), (c.0 - ax).abs());
+                if dc < db {
+                    c
+                } else if dc > db {
+                    b
+                } else {
+                    // exact tie → even code (mantissa LSB 0)
+                    if c.1 & 1 == 0 {
+                        c
+                    } else {
+                        b
+                    }
+                }
+            }
+        });
+    }
+    sign | best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall_msg, interesting_f32};
+
+    fn codes_equal_semantically(a: u8, b: u8, f: Fp8Format) -> bool {
+        use crate::fp8::decode::decode;
+        let (va, vb) = (decode(a, f), decode(b, f));
+        (va.is_nan() && vb.is_nan()) || (va == vb && (va != 0.0 || (a & 0x80) == (b & 0x80)))
+    }
+
+    #[test]
+    fn roundtrip_every_finite_code() {
+        // encode(decode(c)) must reproduce c for every finite code.
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            for c in 0u16..=255 {
+                let c = c as u8;
+                let v = t.get(c);
+                if !v.is_finite() {
+                    continue;
+                }
+                let e = encode_rne(v, f, CastMode::SatFinite);
+                assert!(
+                    codes_equal_semantically(e, c, f),
+                    "format {f:?}: code {c:#04x} (value {v}) re-encoded to {e:#04x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn midpoints_round_to_even_exhaustive() {
+        // For every adjacent pair of positive representable values, the exact
+        // midpoint must round to the code with even parity.
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            let sp = t.sorted_positive();
+            for w in sp.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                if lo.0 == hi.0 {
+                    continue;
+                }
+                let mid = lo.0 + (hi.0 - lo.0) / 2.0;
+                // Midpoints of fp8 neighbours are exact in f32.
+                let e = encode_rne(mid, f, CastMode::SatFinite);
+                let expect = if hi.1 & 1 == 0 { hi.1 } else { lo.1 };
+                assert_eq!(
+                    e, expect,
+                    "format {f:?}: midpoint {mid} between {} ({:#04x}) and {} ({:#04x}) → {e:#04x}",
+                    lo.0, lo.1, hi.0, hi.1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bitmanip_matches_oracle_on_interesting_floats() {
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            let scale = f.params().max_normal / 4.0;
+            forall_msg(
+                0xF8_u64 + f as u64,
+                20_000,
+                |r| interesting_f32(r, scale),
+                |x| {
+                    for mode in [CastMode::SatFinite, CastMode::Ieee] {
+                        let fast = encode_rne(*x, f, mode);
+                        let slow = encode_nearest_oracle(*x, &t, mode);
+                        if !codes_equal_semantically(fast, slow, f) {
+                            return Err(format!(
+                                "format {f:?} mode {mode:?} x={x}: fast={fast:#04x} slow={slow:#04x}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_vs_ieee_overflow() {
+        // Above threshold: SatFinite clamps, Ieee produces Inf (or NaN for OCP).
+        let cases = [
+            (Fp8Format::E4M3Gaudi2, 10_000.0f32),
+            (Fp8Format::E4M3, 10_000.0),
+            (Fp8Format::E5M2, 1e6),
+        ];
+        for (f, big) in cases {
+            let p = f.params();
+            let sat = encode_rne(big, f, CastMode::SatFinite);
+            assert_eq!(sat, p.max_code, "{f:?}");
+            assert_eq!(crate::fp8::decode(sat, f), p.max_normal);
+            let ieee = encode_rne(big, f, CastMode::Ieee);
+            let v = crate::fp8::decode(ieee, f);
+            assert!(v.is_infinite() || v.is_nan(), "{f:?} → {v}");
+            // Negative side.
+            let nsat = encode_rne(-big, f, CastMode::SatFinite);
+            assert_eq!(crate::fp8::decode(nsat, f), -p.max_normal);
+        }
+    }
+
+    #[test]
+    fn gaudi2_saturates_at_240_not_448() {
+        // The paper's headline format difference (§2.4).
+        let x = 300.0f32;
+        let g2 = encode_rne(x, Fp8Format::E4M3Gaudi2, CastMode::SatFinite);
+        let g3 = encode_rne(x, Fp8Format::E4M3, CastMode::SatFinite);
+        assert_eq!(crate::fp8::decode(g2, Fp8Format::E4M3Gaudi2), 240.0);
+        assert_eq!(crate::fp8::decode(g3, Fp8Format::E4M3), 288.0); // 1.125*256
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormals() {
+        for f in Fp8Format::ALL {
+            let p = f.params();
+            // Below half the min subnormal → 0.
+            let tiny = p.min_subnormal / 4.0;
+            assert_eq!(encode_rne(tiny, f, CastMode::SatFinite), 0);
+            assert_eq!(encode_rne(-tiny, f, CastMode::SatFinite), 0x80);
+            // Exactly min subnormal roundtrips.
+            let c = encode_rne(p.min_subnormal, f, CastMode::SatFinite);
+            assert_eq!(crate::fp8::decode(c, f), p.min_subnormal);
+            // Half the min subnormal is a tie → even → 0.
+            let c = encode_rne(p.min_subnormal / 2.0, f, CastMode::SatFinite);
+            assert_eq!(crate::fp8::decode(c, f), 0.0);
+            // 0.75 * min_subnormal → nearest is min_subnormal.
+            let c = encode_rne(p.min_subnormal * 0.75, f, CastMode::SatFinite);
+            assert_eq!(crate::fp8::decode(c, f), p.min_subnormal);
+        }
+    }
+
+    #[test]
+    fn nan_propagates() {
+        for f in Fp8Format::ALL {
+            let c = encode_rne(f32::NAN, f, CastMode::SatFinite);
+            assert!(crate::fp8::decode(c, f).is_nan());
+        }
+    }
+
+    #[test]
+    fn rz_truncates() {
+        let f = Fp8Format::E4M3;
+        // 1.9 truncates to 1.875 (1.111), RNE would give 1.875 too; use 1.96:
+        // grid around 2.0: 1.875, 2.0. RZ(1.99) = 1.875, RNE(1.99) = 2.0.
+        assert_eq!(crate::fp8::decode(encode_rz(1.99, f, CastMode::SatFinite), f), 1.875);
+        assert_eq!(crate::fp8::decode(encode_rne(1.99, f, CastMode::SatFinite), f), 2.0);
+        // RZ never overflows to Inf.
+        assert_eq!(
+            crate::fp8::decode(encode_rz(1e30, f, CastMode::Ieee), f),
+            448.0
+        );
+    }
+
+    #[test]
+    fn rz_magnitude_never_exceeds_input() {
+        for f in Fp8Format::ALL {
+            let t = DecodeTable::new(f);
+            crate::util::prop::forall(
+                0xA11CE,
+                10_000,
+                |r| interesting_f32(r, f.params().max_normal / 2.0),
+                |x| {
+                    let v = t.get(encode_rz(*x, f, CastMode::SatFinite));
+                    v.abs() <= x.abs() && (v == 0.0 || v.signum() == x.signum())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn rne_error_bounded_by_half_ulp() {
+        // |encode(x) - x| ≤ max(ulp(x)/2) for in-range x — the fundamental
+        // quantization-error bound used throughout the paper's analysis.
+        for f in Fp8Format::ALL {
+            let p = f.params();
+            let t = DecodeTable::new(f);
+            crate::util::prop::forall_msg(
+                0xBEEF,
+                10_000,
+                |r| r.range_f32(-p.max_normal, p.max_normal),
+                |x| {
+                    let v = t.get(encode_rne(*x, f, CastMode::SatFinite));
+                    let ulp = (x.abs().max(p.min_normal)) * exp2i(-(p.man_bits as i32));
+                    if (v - x).abs() <= ulp / 2.0 + 1e-12 {
+                        Ok(())
+                    } else {
+                        Err(format!("x={x} v={v} ulp={ulp}"))
+                    }
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! FP8 format descriptors (paper §2, §2.4).
+
+/// The FP8 formats supported by the Gaudi accelerators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Fp8Format {
+    /// Gaudi 2 E4M3: IEEE-style, largest exponent reserved for NaN/Inf.
+    /// Range ±240 (paper §2.4).
+    E4M3Gaudi2,
+    /// Gaudi 3 / OCP E4M3: maximal exponent usable for normals; only
+    /// S.1111.111 is NaN; no Inf. Range ±448.
+    E4M3,
+    /// E5M2, IEEE-style (it is a proper subset of IEEE half precision):
+    /// exp=31 reserved for Inf/NaN. Range ±57344.
+    E5M2,
+}
+
+/// How a code's special bit patterns are interpreted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecialCase {
+    Normal,
+    Subnormal,
+    Zero,
+    Inf,
+    Nan,
+}
+
+/// Static parameters fully describing an FP8 format's bit layout.
+#[derive(Clone, Copy, Debug)]
+pub struct FormatParams {
+    pub format: Fp8Format,
+    /// Number of exponent bits (E).
+    pub exp_bits: u32,
+    /// Number of mantissa bits (M).
+    pub man_bits: u32,
+    /// Exponent bias.
+    pub bias: i32,
+    /// Whether the all-ones exponent is reserved for Inf/NaN (IEEE style).
+    pub ieee_reserved_top_exp: bool,
+    /// Largest finite representable magnitude.
+    pub max_normal: f32,
+    /// Smallest positive normal magnitude: 2^(1-bias).
+    pub min_normal: f32,
+    /// Smallest positive subnormal magnitude: 2^(1-bias-M).
+    pub min_subnormal: f32,
+    /// Canonical NaN code (positive sign).
+    pub nan_code: u8,
+    /// Code of the largest finite magnitude (positive sign).
+    pub max_code: u8,
+}
+
+impl Fp8Format {
+    pub const ALL: [Fp8Format; 3] = [Fp8Format::E4M3Gaudi2, Fp8Format::E4M3, Fp8Format::E5M2];
+
+    pub fn params(self) -> FormatParams {
+        match self {
+            // E4M3 with IEEE reservation: max normal = 1.875 * 2^7 = 240.
+            Fp8Format::E4M3Gaudi2 => FormatParams {
+                format: self,
+                exp_bits: 4,
+                man_bits: 3,
+                bias: 7,
+                ieee_reserved_top_exp: true,
+                max_normal: 240.0,
+                min_normal: exp2i(-6),
+                min_subnormal: exp2i(-9),
+                nan_code: 0x7F, // S.1111.111 (any nonzero mantissa w/ exp=15)
+                max_code: 0x77, // S.1110.111
+            },
+            // OCP E4M3: max normal = 1.75 * 2^8 = 448. NaN only at S.1111.111.
+            Fp8Format::E4M3 => FormatParams {
+                format: self,
+                exp_bits: 4,
+                man_bits: 3,
+                bias: 7,
+                ieee_reserved_top_exp: false,
+                max_normal: 448.0,
+                min_normal: exp2i(-6),
+                min_subnormal: exp2i(-9),
+                nan_code: 0x7F,
+                max_code: 0x7E, // S.1111.110
+            },
+            // E5M2: max normal = 1.75 * 2^15 = 57344.
+            Fp8Format::E5M2 => FormatParams {
+                format: self,
+                exp_bits: 5,
+                man_bits: 2,
+                bias: 15,
+                ieee_reserved_top_exp: true,
+                max_normal: 57344.0,
+                min_normal: exp2i(-14),
+                min_subnormal: exp2i(-16),
+                nan_code: 0x7F, // S.11111.11 canonical
+                max_code: 0x7B, // S.11110.11
+            },
+        }
+    }
+
+    /// `r_q` in the paper: the maximal representable quantized magnitude,
+    /// used as the denominator in every scale computation (Eqs. 15, 18, 20).
+    pub fn r_q(self) -> f32 {
+        self.params().max_normal
+    }
+
+    /// Short name used in artifact filenames and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Fp8Format::E4M3Gaudi2 => "e4m3_gaudi2",
+            Fp8Format::E4M3 => "e4m3",
+            Fp8Format::E5M2 => "e5m2",
+        }
+    }
+
+    /// Classify a code.
+    pub fn classify(self, code: u8) -> SpecialCase {
+        let p = self.params();
+        let exp_mask = (1u8 << p.exp_bits) - 1;
+        let man_mask = (1u8 << p.man_bits) - 1;
+        let exp = (code >> p.man_bits) & exp_mask;
+        let man = code & man_mask;
+        if exp == exp_mask {
+            if p.ieee_reserved_top_exp {
+                return if man == 0 {
+                    SpecialCase::Inf
+                } else {
+                    SpecialCase::Nan
+                };
+            }
+            // OCP E4M3: only all-ones mantissa is NaN.
+            if man == man_mask {
+                return SpecialCase::Nan;
+            }
+            return SpecialCase::Normal;
+        }
+        if exp == 0 {
+            return if man == 0 {
+                SpecialCase::Zero
+            } else {
+                SpecialCase::Subnormal
+            };
+        }
+        SpecialCase::Normal
+    }
+}
+
+#[inline]
+pub(crate) fn exp2i(e: i32) -> f32 {
+    (2.0f32).powi(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_gaudi2_range_is_pm240() {
+        let p = Fp8Format::E4M3Gaudi2.params();
+        assert_eq!(p.max_normal, 240.0);
+        assert_eq!(Fp8Format::E4M3Gaudi2.r_q(), 240.0);
+    }
+
+    #[test]
+    fn e4m3_ocp_range_is_pm448() {
+        assert_eq!(Fp8Format::E4M3.params().max_normal, 448.0);
+    }
+
+    #[test]
+    fn e5m2_range() {
+        assert_eq!(Fp8Format::E5M2.params().max_normal, 57344.0);
+    }
+
+    #[test]
+    fn classify_specials_e4m3_gaudi2() {
+        let f = Fp8Format::E4M3Gaudi2;
+        assert_eq!(f.classify(0x00), SpecialCase::Zero);
+        assert_eq!(f.classify(0x80), SpecialCase::Zero); // -0
+        assert_eq!(f.classify(0x01), SpecialCase::Subnormal);
+        assert_eq!(f.classify(0x78), SpecialCase::Inf); // exp=15, man=0
+        assert_eq!(f.classify(0x79), SpecialCase::Nan);
+        assert_eq!(f.classify(0x7F), SpecialCase::Nan);
+        assert_eq!(f.classify(0x77), SpecialCase::Normal); // 240
+    }
+
+    #[test]
+    fn classify_specials_e4m3_ocp() {
+        let f = Fp8Format::E4M3;
+        assert_eq!(f.classify(0x78), SpecialCase::Normal); // 256
+        assert_eq!(f.classify(0x7E), SpecialCase::Normal); // 448
+        assert_eq!(f.classify(0x7F), SpecialCase::Nan);
+        assert_eq!(f.classify(0xFF), SpecialCase::Nan);
+    }
+
+    #[test]
+    fn classify_specials_e5m2() {
+        let f = Fp8Format::E5M2;
+        assert_eq!(f.classify(0x7C), SpecialCase::Inf); // exp=31, man=0
+        assert_eq!(f.classify(0x7D), SpecialCase::Nan);
+        assert_eq!(f.classify(0x7B), SpecialCase::Normal); // 57344
+        assert_eq!(f.classify(0x03), SpecialCase::Subnormal);
+    }
+
+    #[test]
+    fn min_magnitudes() {
+        let p = Fp8Format::E4M3.params();
+        assert_eq!(p.min_normal, 0.015625); // 2^-6
+        assert_eq!(p.min_subnormal, 0.001953125); // 2^-9
+        let p = Fp8Format::E5M2.params();
+        assert_eq!(p.min_subnormal, exp2i(-16));
+    }
+}

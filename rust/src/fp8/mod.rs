@@ -1,0 +1,71 @@
+//! Bit-exact software emulation of the FP8 formats implemented by the Intel
+//! Gaudi 2 and Gaudi 3 accelerators (paper §2, §2.4).
+//!
+//! Three formats are modelled:
+//!
+//! * [`Fp8Format::E4M3Gaudi2`] — Gaudi 2's E4M3. Follows IEEE-754 conventions:
+//!   the largest exponent is *reserved* for NaN/Inf, limiting the range to
+//!   ±240 (paper §2.4).
+//! * [`Fp8Format::E4M3`] — Gaudi 3 / OCP E4M3 ("fn"): the maximal exponent is
+//!   available for normal numbers except mantissa=111 (NaN), extending the
+//!   range to ±448 as per Micikevicius et al. (2022).
+//! * [`Fp8Format::E5M2`] — IEEE-style 5-exponent format used for gradients in
+//!   training; wider dynamic range, lower precision.
+//!
+//! The module provides:
+//! * exact decode ([`decode`], [`DecodeTable`]) — every code maps to an f32
+//!   exactly (all fp8 values are exactly representable in f32);
+//! * round-to-nearest-even encode ([`encode_rne`]) as fast bit manipulation,
+//!   exhaustively validated against a table-search oracle;
+//! * stochastic-rounding encode ([`encode_stochastic`]) — unbiased cast used
+//!   by Gaudi during training (paper §2.4);
+//! * the hardware power-of-two rescaling trick ([`rescale_pow2`]) — adjusting
+//!   the exponent bias instead of multiplying elements (paper §2.4), with the
+//!   Gaudi 2 / Gaudi 3 supported scale sets in [`hw_scale_exponents`];
+//! * bf16 helpers ([`bf16`]) for the high-precision side of the GEMM.
+
+pub mod bf16_impl;
+mod decode;
+mod encode;
+mod format;
+mod stochastic;
+mod tables;
+
+pub use bf16_impl as bf16;
+pub use decode::{decode, DecodeTable};
+pub use encode::{encode_nearest_oracle, encode_rne, encode_rz, CastMode};
+pub use format::{Fp8Format, FormatParams, SpecialCase};
+pub use stochastic::encode_stochastic;
+pub use tables::{hw_scale_exponents, rescale_pow2, Fp8Gemm8x8};
+
+/// A quantized FP8 value paired with its format — convenience for tests and
+/// debugging; hot paths work on raw `u8` + a `Fp8Format`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fp8 {
+    pub code: u8,
+    pub format: Fp8Format,
+}
+
+impl Fp8 {
+    pub fn from_f32(v: f32, format: Fp8Format) -> Self {
+        Self {
+            code: encode_rne(v, format, CastMode::SatFinite),
+            format,
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        decode(self.code, self.format)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_wrapper_roundtrip() {
+        let v = Fp8::from_f32(1.5, Fp8Format::E4M3);
+        assert_eq!(v.to_f32(), 1.5);
+    }
+}

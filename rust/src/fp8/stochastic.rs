@@ -1,0 +1,175 @@
+//! Stochastic-rounding cast (paper §2.4).
+//!
+//! During the high-precision → FP8 cast, Gaudi can apply stochastic rounding:
+//! the value rounds up with probability proportional to its distance from the
+//! lower grid point, making the cast *unbiased* (E[Q(x)] = x for in-range x).
+//! The paper notes the overhead is negligible versus RNE, that it is
+//! beneficial for training, and that it is *not* applied in the accumulator
+//! (which stays high-precision).
+
+use super::encode::{encode_rz, CastMode};
+use super::format::{exp2i, Fp8Format};
+use crate::util::rng::XorShiftRng;
+
+/// Stochastic-rounding encode. Deterministic given the RNG state.
+///
+/// Implementation: find the lower neighbour by truncation (RZ on magnitude),
+/// compute the fractional position within the ulp, and round up with that
+/// probability using a 24-bit uniform draw.
+pub fn encode_stochastic(
+    x: f32,
+    format: Fp8Format,
+    mode: CastMode,
+    rng: &mut XorShiftRng,
+) -> u8 {
+    let p = format.params();
+    if x.is_nan() {
+        return p.nan_code | if x.is_sign_negative() { 0x80 } else { 0 };
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let ax = x.abs();
+    if ax >= p.max_normal {
+        // Overflow: stochastic rounding still saturates on the inference
+        // cast. (Between max_normal and max_normal+ulp the probabilistic
+        // round-up has nowhere to go in SatFinite mode.)
+        return match mode {
+            CastMode::SatFinite => sign | p.max_code,
+            CastMode::Ieee => {
+                if ax == p.max_normal {
+                    sign | p.max_code
+                } else {
+                    super::encode::encode_rne(x, format, mode)
+                }
+            }
+        };
+    }
+    // Lower grid point via truncation of the magnitude.
+    let lo_code = encode_rz(ax, format, CastMode::SatFinite);
+    let lo = super::decode::decode(lo_code, format);
+    debug_assert!(lo <= ax);
+    if lo == ax {
+        return sign | lo_code;
+    }
+    // ulp at lo: spacing to the next representable magnitude.
+    let m = p.man_bits as i32;
+    let ulp = if ax < p.min_normal {
+        p.min_subnormal
+    } else {
+        // lo is normal; ulp = 2^(floor(log2 lo) - m). Use lo's exponent.
+        let e = lo.log2().floor() as i32;
+        exp2i(e - m)
+    };
+    let frac = ((ax - lo) / ulp).clamp(0.0, 1.0);
+    let draw = (rng.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+    let round_up = draw < frac;
+    if round_up {
+        // Next code up in magnitude is lo_code + 1 (positive codes are
+        // value-ordered; +1 crosses binade boundaries correctly).
+        let up = lo_code + 1;
+        // Guard: never step into Inf/NaN space.
+        if super::decode::decode(up, format).is_finite() {
+            return sign | up;
+        }
+        return sign | p.max_code;
+    }
+    sign | lo_code
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::decode::decode;
+
+    #[test]
+    fn exact_values_never_randomized() {
+        let mut rng = XorShiftRng::new(1);
+        for f in Fp8Format::ALL {
+            for code in [0x00u8, 0x38, 0x3C, 0x01, 0x08] {
+                let v = decode(code, f);
+                if !v.is_finite() {
+                    continue;
+                }
+                for _ in 0..32 {
+                    let c = encode_stochastic(v, f, CastMode::SatFinite, &mut rng);
+                    assert_eq!(decode(c, f), v, "format {f:?} code {code:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_is_unbiased() {
+        // E[Q(x)] ≈ x: the defining property (paper: "unbiased rounding
+        // method introduces increased quantization noise").
+        let f = Fp8Format::E4M3;
+        let mut rng = XorShiftRng::new(7);
+        for &x in &[1.3f32, 0.071, 100.0, 3.99, 0.0021] {
+            let n = 40_000;
+            let mut sum = 0.0f64;
+            for _ in 0..n {
+                let c = encode_stochastic(x, f, CastMode::SatFinite, &mut rng);
+                sum += decode(c, f) as f64;
+            }
+            let mean = sum / n as f64;
+            let rel = ((mean - x as f64) / x as f64).abs();
+            assert!(rel < 0.01, "x={x}: mean={mean} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn rne_is_biased_where_sr_is_not() {
+        // For a value 1/4 of the way between grid points, RNE always returns
+        // the lower point (bias = -0.25 ulp); SR returns the upper point 25%
+        // of the time (bias ~ 0).
+        let f = Fp8Format::E4M3;
+        let lo = 1.0f32;
+        let hi = 1.125f32;
+        let x = lo + 0.25 * (hi - lo);
+        let rne = decode(super::super::encode::encode_rne(x, f, CastMode::SatFinite), f);
+        assert_eq!(rne, lo);
+        let mut rng = XorShiftRng::new(9);
+        let n = 20_000;
+        let ups = (0..n)
+            .filter(|_| decode(encode_stochastic(x, f, CastMode::SatFinite, &mut rng), f) == hi)
+            .count();
+        let frac = ups as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn results_are_always_neighbours() {
+        let mut rng = XorShiftRng::new(3);
+        for f in Fp8Format::ALL {
+            let p = f.params();
+            crate::util::prop::forall_msg(
+                0x51,
+                5_000,
+                |r| r.range_f32(-p.max_normal * 0.99, p.max_normal * 0.99),
+                |x| {
+                    let c = encode_stochastic(*x, f, CastMode::SatFinite, &mut rng);
+                    let v = decode(c, f);
+                    if !v.is_finite() {
+                        return Err(format!("non-finite {v}"));
+                    }
+                    // v must be within one ulp of x.
+                    let ulp = (x.abs().max(p.min_normal)) * exp2i(-(p.man_bits as i32));
+                    if (v - x).abs() <= ulp + 1e-12 {
+                        Ok(())
+                    } else {
+                        Err(format!("x={x} v={v} ulp={ulp}"))
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn saturates_on_overflow() {
+        let mut rng = XorShiftRng::new(5);
+        let f = Fp8Format::E4M3Gaudi2;
+        let c = encode_stochastic(1e6, f, CastMode::SatFinite, &mut rng);
+        assert_eq!(decode(c, f), 240.0);
+        let c = encode_stochastic(-1e6, f, CastMode::SatFinite, &mut rng);
+        assert_eq!(decode(c, f), -240.0);
+    }
+}

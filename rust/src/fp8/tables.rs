@@ -1,0 +1,203 @@
+//! Hardware-accelerated power-of-two scaling (paper §2.4) and product tables
+//! for the emulated GEMM hot path.
+//!
+//! On Gaudi, when both GEMM inputs use per-tensor power-of-two scales, the
+//! scaling is folded into the MME's exponent bias instead of multiplying
+//! elements — worth several percent of throughput (Table 1). We model the
+//! *numeric* side here: [`rescale_pow2`] adjusts an FP8 code's exponent field
+//! directly, and [`hw_scale_exponents`] lists the scale sets each generation
+//! accelerates (Gaudi 2: {2⁻⁸, 2⁻⁴, 2⁰, 2⁴}; Gaudi 3: 2⁻³²…2³¹).
+
+use super::decode::{decode, DecodeTable};
+use super::encode::{encode_rne, CastMode};
+use super::format::Fp8Format;
+use crate::gaudisim::device::Generation;
+
+/// Exponents `k` such that scale `2^k` is hardware-accelerated (exponent-bias
+/// adjustment, no per-element multiply) on the given Gaudi generation.
+pub fn hw_scale_exponents(generation: Generation) -> Vec<i32> {
+    match generation {
+        Generation::Gaudi2 => vec![-8, -4, 0, 4],
+        Generation::Gaudi3 => (-32..=31).collect(),
+    }
+}
+
+/// Is `s` a hardware-accelerated scale on `generation`?
+pub fn is_hw_accelerated_scale(s: f32, generation: Generation) -> bool {
+    if s <= 0.0 || !s.is_finite() {
+        return false;
+    }
+    let l = s.log2();
+    if l.fract() != 0.0 {
+        return false;
+    }
+    hw_scale_exponents(generation).contains(&(l as i32))
+}
+
+/// Multiply a quantized FP8 value by 2^k *in the code domain* — the
+/// exponent-bias trick. Saturates/flushes exactly as a decode → scale →
+/// re-encode would. Returns the rescaled code.
+pub fn rescale_pow2(code: u8, k: i32, format: Fp8Format) -> u8 {
+    let p = format.params();
+    match format.classify(code) {
+        super::format::SpecialCase::Nan
+        | super::format::SpecialCase::Inf
+        | super::format::SpecialCase::Zero => return code,
+        _ => {}
+    }
+    let sign = code & 0x80;
+    let man_mask = (1u8 << p.man_bits) - 1;
+    let exp = ((code >> p.man_bits) & ((1 << p.exp_bits) - 1)) as i32;
+    if exp != 0 {
+        let new_exp = exp + k;
+        let max_exp = ((p.max_code >> p.man_bits) & ((1 << p.exp_bits) - 1)) as i32;
+        let man = code & man_mask;
+        if new_exp > max_exp || (new_exp == max_exp && man > (p.max_code & man_mask)) {
+            return sign | p.max_code; // saturate
+        }
+        if new_exp >= 1 {
+            return sign | ((new_exp as u8) << p.man_bits) | man;
+        }
+        // Falls into the subnormal range: shift the (implicit-1) mantissa.
+        let full_man = (1u32 << p.man_bits) | man as u32; // 1.mmm as integer
+        let shift = 1 - new_exp; // ≥ 1
+        if shift > p.man_bits as i32 + 1 {
+            return sign; // underflow to zero (RNE of the exact value)
+        }
+        // Round-to-nearest-even the shifted mantissa.
+        let kept = full_man >> shift;
+        let rem = full_man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = match rem.cmp(&half) {
+            std::cmp::Ordering::Less => kept,
+            std::cmp::Ordering::Greater => kept + 1,
+            std::cmp::Ordering::Equal => kept + (kept & 1),
+        };
+        // rounded may reach 2^man_bits → that's the min normal, uniform code.
+        return sign | rounded as u8;
+    }
+    // Subnormal source: exact value is man * 2^(1-bias-M); scaling by 2^k
+    // shifts it. Re-encode via the exact arithmetic path (cheap; subnormals
+    // are rare on the GEMM path).
+    let v = decode(code, format) * (2.0f32).powi(k);
+    encode_rne(v, format, CastMode::SatFinite)
+}
+
+/// 256×256 product table: `table[a][b] = decode(a) * decode(b)` as f32.
+/// 256 KiB; fits in L2. This is the emulated-GEMM inner-loop trick: one load
+/// replaces two decodes and a multiply. Specials (NaN/Inf) decode to f32
+/// specials and propagate through the f32 accumulation naturally.
+pub struct Fp8Gemm8x8 {
+    pub products: Vec<f32>, // 65536 entries, row-major [a][b]
+}
+
+impl Fp8Gemm8x8 {
+    pub fn new(fa: Fp8Format, fb: Fp8Format) -> Self {
+        let ta = DecodeTable::new(fa);
+        let tb = DecodeTable::new(fb);
+        let mut products = vec![0.0f32; 65536];
+        for a in 0..256usize {
+            let va = ta.values[a];
+            for b in 0..256usize {
+                products[(a << 8) | b] = va * tb.values[b];
+            }
+        }
+        Self { products }
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u8, b: u8) -> f32 {
+        // Safety: index is always < 65536 by construction.
+        unsafe { *self.products.get_unchecked(((a as usize) << 8) | b as usize) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_scale_sets_match_paper() {
+        assert_eq!(hw_scale_exponents(Generation::Gaudi2), vec![-8, -4, 0, 4]);
+        let g3 = hw_scale_exponents(Generation::Gaudi3);
+        assert_eq!(g3.first(), Some(&-32));
+        assert_eq!(g3.last(), Some(&31));
+        assert_eq!(g3.len(), 64);
+    }
+
+    #[test]
+    fn hw_accel_predicate() {
+        assert!(is_hw_accelerated_scale(1.0, Generation::Gaudi2));
+        assert!(is_hw_accelerated_scale(0.0625, Generation::Gaudi2)); // 2^-4
+        assert!(!is_hw_accelerated_scale(0.5, Generation::Gaudi2)); // 2^-1 not in set
+        assert!(is_hw_accelerated_scale(0.5, Generation::Gaudi3));
+        assert!(!is_hw_accelerated_scale(3.0, Generation::Gaudi3)); // not pow2
+        assert!(!is_hw_accelerated_scale(-2.0, Generation::Gaudi3));
+        assert!(is_hw_accelerated_scale((2.0f32).powi(-32), Generation::Gaudi3));
+        assert!(!is_hw_accelerated_scale((2.0f32).powi(-33), Generation::Gaudi3));
+    }
+
+    #[test]
+    fn rescale_matches_decode_scale_encode_exhaustive() {
+        // For every code and a sweep of k, the code-domain rescale must agree
+        // with the arithmetic route decode → ×2^k → RNE encode.
+        for f in Fp8Format::ALL {
+            for k in [-10, -4, -1, 0, 1, 4, 6] {
+                for c in 0u16..=255 {
+                    let c = c as u8;
+                    let fast = rescale_pow2(c, k, f);
+                    let v = decode(c, f);
+                    if v.is_nan() {
+                        assert!(decode(fast, f).is_nan());
+                        continue;
+                    }
+                    if v.is_infinite() {
+                        assert_eq!(fast, c);
+                        continue;
+                    }
+                    let slow = encode_rne(v * (2.0f32).powi(k), f, CastMode::SatFinite);
+                    let (vf, vs) = (decode(fast, f), decode(slow, f));
+                    assert!(
+                        vf == vs && (vf != 0.0 || (fast & 0x80) == (slow & 0x80)),
+                        "format {f:?} k={k} code {c:#04x} ({v}): fast {vf} slow {vs}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_zero_and_specials_unchanged() {
+        for f in Fp8Format::ALL {
+            assert_eq!(rescale_pow2(0x00, 4, f), 0x00);
+            assert_eq!(rescale_pow2(0x80, -4, f), 0x80);
+            let nan = f.params().nan_code;
+            assert!(decode(rescale_pow2(nan, 4, f), f).is_nan());
+        }
+    }
+
+    #[test]
+    fn product_table_matches_scalar() {
+        let g = Fp8Gemm8x8::new(Fp8Format::E4M3, Fp8Format::E4M3);
+        let t = DecodeTable::new(Fp8Format::E4M3);
+        let mut rng = crate::util::rng::XorShiftRng::new(2);
+        for _ in 0..2000 {
+            let a = (rng.next_u32() & 0xFF) as u8;
+            let b = (rng.next_u32() & 0xFF) as u8;
+            let expect = t.get(a) * t.get(b);
+            let got = g.mul(a, b);
+            assert!(
+                (expect.is_nan() && got.is_nan()) || expect == got,
+                "a={a:#x} b={b:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_format_product_table() {
+        let g = Fp8Gemm8x8::new(Fp8Format::E4M3, Fp8Format::E5M2);
+        let ta = DecodeTable::new(Fp8Format::E4M3);
+        let tb = DecodeTable::new(Fp8Format::E5M2);
+        assert_eq!(g.mul(0x38, 0x3C), ta.get(0x38) * tb.get(0x3C));
+    }
+}

@@ -1,0 +1,98 @@
+//! Gaudi device descriptors: the published constants the analytical
+//! performance model is built from.
+//!
+//! Sources: the paper (§2.4, Table 1 caption: "peak scaled FP8 dense GEMM
+//! throughput is 865 TFLOPS" on Gaudi 2; §4.2.4: 96 GB HBM implied by
+//! Llama-70B-FP8 fitting on one card) and Intel's published Gaudi 2/3 specs.
+
+/// Gaudi accelerator generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Generation {
+    Gaudi2,
+    Gaudi3,
+}
+
+/// Device model: peak rates and capacities used by the roofline.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub generation: Generation,
+    /// Peak dense FP8 GEMM throughput (TFLOP/s). Paper: 865 for Gaudi 2.
+    pub peak_fp8_tflops: f64,
+    /// Peak dense BF16 GEMM throughput (TFLOP/s). Gaudi 2: ~432 (half of FP8).
+    pub peak_bf16_tflops: f64,
+    /// HBM bandwidth (TB/s). Gaudi 2: 2.46, Gaudi 3: 3.7.
+    pub hbm_bandwidth_tbps: f64,
+    /// HBM capacity (GiB). Gaudi 2: 96, Gaudi 3: 128.
+    pub hbm_capacity_gib: f64,
+    /// On-chip SRAM (MiB) — the analogue of VMEM for tiling decisions.
+    pub sram_mib: f64,
+    /// MME systolic-array tile (square side, elements) per engine.
+    pub mme_tile: usize,
+    /// Number of MME engines.
+    pub mme_engines: usize,
+    /// Vector-engine (TPC) elementwise throughput in Gelem/s for f32 —
+    /// bounds descale/quantize side ops.
+    pub tpc_gelems_per_s: f64,
+}
+
+impl Device {
+    pub fn gaudi2() -> Self {
+        Device {
+            generation: Generation::Gaudi2,
+            peak_fp8_tflops: 865.0,
+            peak_bf16_tflops: 432.0,
+            hbm_bandwidth_tbps: 2.46,
+            hbm_capacity_gib: 96.0,
+            sram_mib: 48.0,
+            mme_tile: 256,
+            mme_engines: 2,
+            tpc_gelems_per_s: 600.0,
+        }
+    }
+
+    pub fn gaudi3() -> Self {
+        Device {
+            generation: Generation::Gaudi3,
+            peak_fp8_tflops: 1835.0,
+            peak_bf16_tflops: 1835.0, // Gaudi 3 MME runs BF16 at FP8 rate
+            hbm_bandwidth_tbps: 3.7,
+            hbm_capacity_gib: 128.0,
+            sram_mib: 96.0,
+            mme_tile: 256,
+            mme_engines: 8,
+            tpc_gelems_per_s: 1200.0,
+        }
+    }
+
+    pub fn new(generation: Generation) -> Self {
+        match generation {
+            Generation::Gaudi2 => Self::gaudi2(),
+            Generation::Gaudi3 => Self::gaudi3(),
+        }
+    }
+
+    pub fn hbm_capacity_bytes(&self) -> f64 {
+        self.hbm_capacity_gib * 1024.0 * 1024.0 * 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaudi2_constants_match_paper() {
+        let d = Device::gaudi2();
+        assert_eq!(d.peak_fp8_tflops, 865.0); // Table 1 caption
+        assert_eq!(d.hbm_capacity_gib, 96.0);
+        assert_eq!(d.generation, Generation::Gaudi2);
+    }
+
+    #[test]
+    fn gaudi3_outclasses_gaudi2() {
+        let (g2, g3) = (Device::gaudi2(), Device::gaudi3());
+        assert!(g3.peak_fp8_tflops > g2.peak_fp8_tflops);
+        assert!(g3.hbm_bandwidth_tbps > g2.hbm_bandwidth_tbps);
+        assert!(g3.hbm_capacity_gib > g2.hbm_capacity_gib);
+    }
+}

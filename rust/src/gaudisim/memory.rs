@@ -1,0 +1,177 @@
+//! HBM capacity model — predicts the OOM frontier of Table 6.
+//!
+//! Accounting (single Gaudi 2, 96 GB):
+//! * linear weights in FP8 (1 B/param) — the paper quantizes all linears;
+//! * embedding + LM head kept in BF16 (2 B/param) — excluded from FP8
+//!   (§3.3 step 5, Table 5 caption);
+//! * KV cache in FP8 (1 B/elem) — required for the Table 6 batch grid to
+//!   fit (e.g. batch 16 × seq 8192 works on 96 GB only with FP8 KV);
+//! * a fixed activation/workspace reserve.
+//!
+//! The paper notes: "thanks to the memory gain, we can measure Llama 70B on
+//! a single Gaudi 2, which would not be possible with BF16" — reproduced by
+//! `fits_bf16` below.
+
+use super::device::Device;
+use crate::model::config::ModelConfig;
+
+/// Fixed workspace reserve (bytes): activations, cos/sin tables, comms.
+pub const WORKSPACE_BYTES: f64 = 0.5e9;
+
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    pub device: Device,
+    pub cfg: ModelConfig,
+}
+
+impl MemoryModel {
+    pub fn new(device: Device, cfg: ModelConfig) -> Self {
+        Self { device, cfg }
+    }
+
+    /// Marketed capacity uses decimal GB (96 GB = 96e9 bytes).
+    pub fn capacity_bytes(&self) -> f64 {
+        self.device.hbm_capacity_gib * 1e9
+    }
+
+    /// Model weights resident in HBM under FP8 linear quantization.
+    pub fn weight_bytes_fp8(&self) -> f64 {
+        let linear = self.cfg.linear_params() as f64; // 1 B/param
+        let edges = (self.cfg.total_params() - self.cfg.linear_params()) as f64 * 2.0;
+        linear + edges
+    }
+
+    /// Model weights fully in BF16.
+    pub fn weight_bytes_bf16(&self) -> f64 {
+        self.cfg.total_params() as f64 * 2.0
+    }
+
+    /// KV cache bytes for `batch` sequences of length `seq` (FP8 KV).
+    pub fn kv_bytes(&self, batch: usize, seq: usize) -> f64 {
+        (batch * seq) as f64 * self.cfg.kv_bytes_per_token(1) as f64
+    }
+
+    pub fn total_bytes_fp8(&self, batch: usize, seq: usize) -> f64 {
+        self.weight_bytes_fp8() + self.kv_bytes(batch, seq) + WORKSPACE_BYTES
+    }
+
+    /// Does the FP8-quantized model with this KV footprint fit?
+    pub fn fits(&self, batch: usize, seq: usize) -> bool {
+        self.total_bytes_fp8(batch, seq) <= self.capacity_bytes()
+    }
+
+    /// Would the BF16 model fit (without quantization)?
+    pub fn fits_bf16(&self, batch: usize, seq: usize) -> bool {
+        self.weight_bytes_bf16() + 2.0 * self.kv_bytes(batch, seq) + WORKSPACE_BYTES
+            <= self.capacity_bytes()
+    }
+
+    /// Largest power-of-two batch that fits at sequence length `seq`.
+    pub fn max_batch_pow2(&self, seq: usize) -> Option<usize> {
+        let mut best = None;
+        let mut b = 1usize;
+        while b <= 1024 {
+            if self.fits(b, seq) {
+                best = Some(b);
+            }
+            b *= 2;
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaudisim::device::Device;
+
+    fn mm() -> MemoryModel {
+        MemoryModel::new(Device::gaudi2(), ModelConfig::llama31_70b())
+    }
+
+    /// Table 6's exact OOM pattern (true = runs, false = OOM in the paper).
+    const TABLE6_FITS: &[(usize, usize, bool)] = &[
+        (8, 512, true),
+        (8, 1024, true),
+        (8, 2048, true),
+        (8, 4096, true),
+        (8, 8192, true),
+        (16, 512, true),
+        (16, 1024, true),
+        (16, 2048, true),
+        (16, 4096, true),
+        (16, 8192, true),
+        (32, 512, true),
+        (32, 1024, true),
+        (32, 2048, true),
+        (32, 4096, true),
+        (32, 8192, false),
+        (64, 512, true),
+        (64, 1024, true),
+        (64, 2048, true),
+        (64, 4096, false),
+        (64, 8192, false),
+        (128, 512, true),
+        (128, 1024, true),
+        (128, 2048, false),
+        (128, 4096, false),
+        (128, 8192, false),
+    ];
+
+    #[test]
+    fn table6_oom_frontier_matches_exactly() {
+        let m = mm();
+        for &(b, s, fits) in TABLE6_FITS {
+            assert_eq!(
+                m.fits(b, s),
+                fits,
+                "batch {b} seq {s}: modelled {:.1} GB vs capacity {:.1} GB",
+                m.total_bytes_fp8(b, s) / 1e9,
+                m.capacity_bytes() / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_llama70b_does_not_fit_single_gaudi2() {
+        // Paper §4.2.4: impossible without FP8.
+        let m = mm();
+        assert!(!m.fits_bf16(1, 512));
+        assert!(m.fits(1, 512));
+    }
+
+    #[test]
+    fn weights_dominate() {
+        let m = mm();
+        assert!(m.weight_bytes_fp8() > 65e9 && m.weight_bytes_fp8() < 78e9);
+        assert!(m.weight_bytes_bf16() > 135e9);
+    }
+
+    #[test]
+    fn kv_scaling_linear() {
+        let m = mm();
+        assert_eq!(m.kv_bytes(16, 1024), 2.0 * m.kv_bytes(8, 1024));
+        assert_eq!(m.kv_bytes(8, 2048), m.kv_bytes(16, 1024));
+    }
+
+    #[test]
+    fn max_batch_matches_frontier() {
+        let m = mm();
+        assert_eq!(m.max_batch_pow2(8192), Some(16));
+        assert_eq!(m.max_batch_pow2(4096), Some(32));
+        assert_eq!(m.max_batch_pow2(2048), Some(64));
+        assert_eq!(m.max_batch_pow2(1024), Some(128));
+    }
+
+    #[test]
+    fn gaudi3_fits_more() {
+        let m3 = MemoryModel::new(Device::gaudi3(), ModelConfig::llama31_70b());
+        assert!(m3.fits(32, 8192)); // OOM on Gaudi 2
+    }
+
+    #[test]
+    fn small_models_fit_in_bf16() {
+        let m = MemoryModel::new(Device::gaudi2(), ModelConfig::llama3_8b());
+        assert!(m.fits_bf16(32, 4096));
+    }
+}

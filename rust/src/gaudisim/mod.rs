@@ -1,0 +1,16 @@
+//! Analytical performance model of the Gaudi 2/3 accelerators.
+//!
+//! The paper's throughput numbers (Tables 1, 5, 6) were measured on real
+//! hardware; this module reproduces their *shape* from first principles:
+//! a roofline over the MME systolic array and HBM, plus the §2.4 scaling
+//! fast-path and the §4.2.4 end-to-end prefill/decode FLOPs model.
+
+pub mod device;
+pub mod e2e;
+pub mod memory;
+pub mod mme;
+
+pub use device::{Device, Generation};
+pub use e2e::{decode_step_tflops, prefill_tflops, E2eConfig};
+pub use memory::MemoryModel;
+pub use mme::{gemm_time_s, GemmConfig, GemmReport, ScalingKind};

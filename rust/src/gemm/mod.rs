@@ -1,0 +1,17 @@
+//! Scaled FP8 GEMM — the bit-exact software reference for Eq. 2.
+//!
+//! `X_{l+1} = S_x ( Q(S_x⁻¹·X·S_c⁻¹) ⊗ Q(S_c·Wᵀ·S_w⁻¹) ) S_w`
+//!
+//! The ⊗ multiply takes FP8 codes and accumulates in FP32 (the MME
+//! accumulator), then the diagonal descale applies per-row (`s_x`) and
+//! per-column (`s_w`) factors; the output is rounded to BF16 like the
+//! hardware's GEMM output (Table 1: FP8 × FP8 → BF16).
+//!
+//! This module is the numeric oracle the Pallas kernel (L1) is tested
+//! against, and the engine behind the Rust-side accuracy experiments.
+
+mod qmatrix;
+mod scaled;
+
+pub use qmatrix::{quantize_matrix, QMatrix, QuantRounding};
+pub use scaled::{scaled_gemm, scaled_gemm_ref, scaled_gemm_with_table, DiagScale};

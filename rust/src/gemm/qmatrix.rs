@@ -1,0 +1,214 @@
+//! Quantized matrices: FP8 codes + the scales that produced them.
+
+use crate::fp8::{encode_rne, encode_stochastic, CastMode, DecodeTable, Fp8Format};
+use crate::tensor::Tensor2;
+use crate::util::rng::XorShiftRng;
+
+/// A row-major matrix of FP8 codes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<u8>,
+    pub format: Fp8Format,
+}
+
+impl QMatrix {
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dequantize to f32 (no descaling — raw representable values).
+    pub fn dequantize(&self) -> Tensor2 {
+        let t = DecodeTable::new(self.format);
+        Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.codes.iter().map(|c| t.get(*c)).collect(),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.codes.len()
+    }
+}
+
+/// How values are rounded during the cast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantRounding {
+    Nearest,
+    Stochastic { seed: u64 },
+}
+
+/// Quantize `x` after applying inverse row scales (`s_row`, length rows or
+/// 1) and inverse column scales (`s_col`, length cols or empty=unit):
+/// `Q(S_row⁻¹ · X · S_col⁻¹)`.
+///
+/// Pass the *scales themselves*; the division happens here. This one
+/// function covers activations (rows = samples) and transposed-weight
+/// quantization (rows = output channels: `Q(S_c·Wᵀ·S_w⁻¹)` is
+/// `quantize_matrix(W, s_row = s_w, s_col = 1/s_c)` since W is C'×C).
+pub fn quantize_matrix(
+    x: &Tensor2,
+    s_row: &[f32],
+    s_col: &[f32],
+    format: Fp8Format,
+    rounding: QuantRounding,
+) -> QMatrix {
+    assert!(
+        s_row.len() == x.rows || s_row.len() == 1,
+        "row scales: {} for {} rows",
+        s_row.len(),
+        x.rows
+    );
+    assert!(
+        s_col.is_empty() || s_col.len() == x.cols,
+        "col scales: {} for {} cols",
+        s_col.len(),
+        x.cols
+    );
+    let mut codes = Vec::with_capacity(x.rows * x.cols);
+    let mut rng = match rounding {
+        QuantRounding::Stochastic { seed } => Some(XorShiftRng::new(seed)),
+        QuantRounding::Nearest => None,
+    };
+    let inv_col: Vec<f32> = s_col.iter().map(|s| 1.0 / s).collect();
+    for r in 0..x.rows {
+        let s = s_row[if s_row.len() == 1 { 0 } else { r }];
+        let inv_r = 1.0 / s;
+        for (c, &v) in x.row(r).iter().enumerate() {
+            let scaled = if inv_col.is_empty() {
+                v * inv_r
+            } else {
+                v * inv_r * inv_col[c]
+            };
+            let code = match &mut rng {
+                None => encode_rne(scaled, format, CastMode::SatFinite),
+                Some(g) => encode_stochastic(scaled, format, CastMode::SatFinite, g),
+            };
+            codes.push(code);
+        }
+    }
+    QMatrix {
+        rows: x.rows,
+        cols: x.cols,
+        codes,
+        format,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_scale_quantization_roundtrips_representables() {
+        let x = Tensor2::from_vec(2, 2, vec![1.5, -2.0, 0.0, 240.0]);
+        let q = quantize_matrix(
+            &x,
+            &[1.0],
+            &[],
+            Fp8Format::E4M3Gaudi2,
+            QuantRounding::Nearest,
+        );
+        assert_eq!(q.dequantize().data, x.data);
+    }
+
+    #[test]
+    fn row_scales_divide_before_cast() {
+        let x = Tensor2::from_vec(2, 1, vec![480.0, 480.0]);
+        let q = quantize_matrix(
+            &x,
+            &[2.0, 4.0],
+            &[],
+            Fp8Format::E4M3Gaudi2,
+            QuantRounding::Nearest,
+        );
+        let d = q.dequantize();
+        assert_eq!(d.get(0, 0), 240.0); // 480/2
+        assert_eq!(d.get(1, 0), 120.0); // 480/4
+    }
+
+    #[test]
+    fn col_scales_divide_before_cast() {
+        let x = Tensor2::from_vec(1, 2, vec![100.0, 100.0]);
+        let q = quantize_matrix(
+            &x,
+            &[1.0],
+            &[1.0, 100.0],
+            Fp8Format::E4M3,
+            QuantRounding::Nearest,
+        );
+        let d = q.dequantize();
+        // Grid around 100 is {96, 104}; 100 is the exact midpoint and ties
+        // to the even mantissa → 96.
+        assert_eq!(d.get(0, 0), 96.0);
+        assert_eq!(d.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn out_of_range_saturates_not_infs() {
+        let x = Tensor2::from_vec(1, 2, vec![1e9, -1e9]);
+        let q = quantize_matrix(&x, &[1.0], &[], Fp8Format::E4M3, QuantRounding::Nearest);
+        assert_eq!(q.dequantize().data, vec![448.0, -448.0]);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_seed_deterministic() {
+        let mut rng = XorShiftRng::new(1);
+        let x = Tensor2::randn(8, 8, 1.0, &mut rng);
+        let a = quantize_matrix(
+            &x,
+            &[1.0],
+            &[],
+            Fp8Format::E4M3,
+            QuantRounding::Stochastic { seed: 9 },
+        );
+        let b = quantize_matrix(
+            &x,
+            &[1.0],
+            &[],
+            Fp8Format::E4M3,
+            QuantRounding::Stochastic { seed: 9 },
+        );
+        assert_eq!(a, b);
+        let c = quantize_matrix(
+            &x,
+            &[1.0],
+            &[],
+            Fp8Format::E4M3,
+            QuantRounding::Stochastic { seed: 10 },
+        );
+        assert_ne!(a.codes, c.codes);
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_good_scale() {
+        let mut rng = XorShiftRng::new(2);
+        // Values of ~1e-3 sit at the bottom of E4M3's subnormal range where
+        // unit-scale resolution (2^-9) is catastrophically coarse.
+        let x = Tensor2::randn(32, 32, 0.001, &mut rng);
+        let f = Fp8Format::E4M3Gaudi2;
+        // Unit scale: resolution wasted, error relatively large.
+        let q_unit = quantize_matrix(&x, &[1.0], &[], f, QuantRounding::Nearest);
+        let err_unit = q_unit.dequantize().mse(&x);
+        // Max-abs scale: error much smaller.
+        let s = crate::quant::act_scale_per_tensor(crate::tensor::abs_max(&x), 1.0, f);
+        let q_scaled = quantize_matrix(&x, &[s], &[], f, QuantRounding::Nearest);
+        // Descale before comparing.
+        let deq = q_scaled.dequantize().map(|v| v * s);
+        let err_scaled = deq.mse(&x);
+        assert!(
+            err_scaled < err_unit / 20.0,
+            "unit {err_unit} scaled {err_scaled}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "row scales")]
+    fn wrong_scale_length_panics() {
+        let x = Tensor2::zeros(3, 2);
+        quantize_matrix(&x, &[1.0, 1.0], &[], Fp8Format::E4M3, QuantRounding::Nearest);
+    }
+}

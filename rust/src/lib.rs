@@ -1,0 +1,46 @@
+//! # gaudi-fp8 — Faster Inference of LLMs using FP8 (Intel Gaudi), reproduced
+//!
+//! A from-scratch reproduction of the paper's full system as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`fp8`] — bit-exact software emulation of the Gaudi 2/3 FP8 formats
+//!   (E4M3 ±240 / ±448, E5M2), RNE + stochastic rounding, and the
+//!   hardware power-of-two exponent-bias rescaling trick.
+//! * [`tensor`] — minimal dense 2-D tensor with the reductions the paper's
+//!   calibration equations need.
+//! * [`quant`] — every scaling method in §3.2: per-tensor / per-sample
+//!   activations, per-tensor / per-output-channel weights, MSE scale search
+//!   over arbitrary / pow2 / hardware-accelerated scale sets, SmoothQuant,
+//!   unit scale, backoff, pow2 rounding; plus the §3.3 quantization recipe.
+//! * [`calib`] — statistics collectors and the calibration runner (§3.1).
+//! * [`gemm`] — the scaled FP8 GEMM reference (Eq. 2): quantize → multiply →
+//!   FP32 accumulate → descale, bit-exact against the Pallas kernel.
+//! * [`gaudisim`] — analytical Gaudi 2/3 performance model (MME roofline,
+//!   HBM bandwidth/capacity, pow2 fast path) regenerating Tables 1, 5, 6.
+//! * [`model`] — LLM config zoo (Llama2/3, Mistral, Mixtral + synthetic
+//!   scales), parameter/FLOPs/KV accounting, synthetic-statistics models.
+//! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
+//!   `python/compile/aot.py`.
+//! * [`coordinator`] — the serving layer: continuous batcher, KV-cache block
+//!   allocator, prefill/decode scheduler, metrics.
+//! * [`eval`] — accuracy harness (perplexity, KL, top-1 agreement) emitting
+//!   the paper's Δ% tables.
+//! * [`server`] — CLI plumbing for the `repro` binary.
+//! * [`util`] — dependency-free RNG / property-testing / bench / JSON
+//!   utilities (the usual crates are unreachable in this offline build).
+//!
+//! See DESIGN.md for the paper → module map and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod fp8;
+pub mod gaudisim;
+pub mod gemm;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,17 @@
+//! `repro` — leader entrypoint for the gaudi-fp8 reproduction.
+//!
+//! Subcommands:
+//!   serve     — run the serving engine on a synthetic workload (artifacts
+//!               required: `make artifacts`)
+//!   eval      — Tables 2–4 accuracy analogues on synthetic-statistics models
+//!   simulate  — Gaudi performance model queries (Tables 5–6)
+//!   gemm      — single-GEMM roofline query (Table 1)
+//!   info      — artifact/manifest inspection
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = gaudi_fp8::server::run_cli(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,355 @@
+//! Model architecture configs (the paper's §4 evaluation zoo).
+
+/// Model family — determines activation-outlier structure in the synthetic
+/// analogues (Mistral-family models show strong outlier channels, which is
+/// why unit scaling collapses on them in Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    Llama2,
+    Llama3,
+    Mistral,
+    Mixtral,
+    Synthetic,
+}
+
+/// Decoder-only transformer geometry. Enough to account parameters, FLOPs,
+/// KV-cache bytes, and enumerate every linear op for quantization.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: ModelFamily,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    /// Mixture-of-experts: number of experts (1 = dense) and active experts.
+    pub experts: usize,
+    pub active_experts: usize,
+    pub tied_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Parameters in the attention block of one layer (Q,K,V,O projections).
+    pub fn attn_params_per_layer(&self) -> usize {
+        let hd = self.head_dim();
+        let q = self.hidden * self.hidden;
+        let kv = 2 * self.hidden * (self.kv_heads * hd);
+        let o = self.hidden * self.hidden;
+        q + kv + o
+    }
+
+    /// Parameters in the MLP of one layer (SwiGLU: gate, up, down), for one
+    /// expert.
+    pub fn mlp_params_per_expert(&self) -> usize {
+        3 * self.hidden * self.ffn_hidden
+    }
+
+    /// Total parameters (weights of linears + embeddings; norms negligible
+    /// but included at 2*hidden per layer + final).
+    pub fn total_params(&self) -> usize {
+        let per_layer = self.attn_params_per_layer()
+            + self.experts * self.mlp_params_per_expert()
+            + if self.experts > 1 {
+                self.hidden * self.experts // router
+            } else {
+                0
+            }
+            + 2 * self.hidden; // norms
+        let embed = self.vocab * self.hidden;
+        let head = if self.tied_embeddings { 0 } else { self.vocab * self.hidden };
+        self.layers * per_layer + embed + head + self.hidden
+    }
+
+    /// Parameters that participate in a decode step (active experts only).
+    pub fn active_params(&self) -> usize {
+        let per_layer = self.attn_params_per_layer()
+            + self.active_experts * self.mlp_params_per_expert()
+            + if self.experts > 1 { self.hidden * self.experts } else { 0 }
+            + 2 * self.hidden;
+        let embed = self.vocab * self.hidden;
+        let head = if self.tied_embeddings { 0 } else { self.vocab * self.hidden };
+        self.layers * per_layer + embed + head + self.hidden
+    }
+
+    /// Linear-layer parameters only (what FP8 quantization touches; the
+    /// paper excludes embeddings and the LM head — §3.3 step 5, §4.2.4).
+    pub fn linear_params(&self) -> usize {
+        self.layers * (self.attn_params_per_layer() + self.experts * self.mlp_params_per_expert())
+    }
+
+    /// KV-cache bytes per token for the whole model.
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: usize) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim() * bytes_per_elem
+    }
+
+    // ----- the paper's zoo -------------------------------------------------
+
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "Llama2-7B".into(),
+            family: ModelFamily::Llama2,
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            ffn_hidden: 11008,
+            vocab: 32000,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "Llama2-13B".into(),
+            family: ModelFamily::Llama2,
+            hidden: 5120,
+            layers: 40,
+            heads: 40,
+            kv_heads: 40,
+            ffn_hidden: 13824,
+            vocab: 32000,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama2_70b() -> Self {
+        Self {
+            name: "Llama2-70B".into(),
+            family: ModelFamily::Llama2,
+            hidden: 8192,
+            layers: 80,
+            heads: 64,
+            kv_heads: 8,
+            ffn_hidden: 28672,
+            vocab: 32000,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama3_8b() -> Self {
+        Self {
+            name: "Llama3-8B".into(),
+            family: ModelFamily::Llama3,
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            ffn_hidden: 14336,
+            vocab: 128256,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn llama3_70b() -> Self {
+        Self {
+            name: "Llama3-70B".into(),
+            family: ModelFamily::Llama3,
+            hidden: 8192,
+            layers: 80,
+            heads: 64,
+            kv_heads: 8,
+            ffn_hidden: 28672,
+            vocab: 128256,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Llama v3.1 70B — the Table 5/6 model. Same geometry as Llama3-70B.
+    pub fn llama31_70b() -> Self {
+        let mut c = Self::llama3_70b();
+        c.name = "Llama3.1-70B".into();
+        c
+    }
+
+    pub fn mistral_7b() -> Self {
+        Self {
+            name: "Mistral-7B".into(),
+            family: ModelFamily::Mistral,
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            ffn_hidden: 14336,
+            vocab: 32000,
+            experts: 1,
+            active_experts: 1,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn mixtral_8x7b() -> Self {
+        Self {
+            name: "Mixtral-8x7B".into(),
+            family: ModelFamily::Mixtral,
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            ffn_hidden: 14336,
+            vocab: 32000,
+            experts: 8,
+            active_experts: 2,
+            tied_embeddings: false,
+        }
+    }
+
+    // ----- synthetic reduced-scale analogues (accuracy experiments) --------
+
+    /// ~8M-parameter analogue: the "7B-class" stand-in.
+    pub fn synthetic_tiny(family: ModelFamily) -> Self {
+        Self {
+            name: format!("syn-tiny-{family:?}"),
+            family,
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: if family == ModelFamily::Llama2 { 8 } else { 2 },
+            ffn_hidden: 704,
+            vocab: 512,
+            experts: if family == ModelFamily::Mixtral { 4 } else { 1 },
+            active_experts: if family == ModelFamily::Mixtral { 2 } else { 1 },
+            tied_embeddings: false,
+        }
+    }
+
+    /// ~25M-parameter analogue: the "13B-class" stand-in.
+    pub fn synthetic_small(family: ModelFamily) -> Self {
+        Self {
+            name: format!("syn-small-{family:?}"),
+            family,
+            hidden: 448,
+            layers: 6,
+            heads: 8,
+            kv_heads: if family == ModelFamily::Llama2 { 8 } else { 2 },
+            ffn_hidden: 1216,
+            vocab: 512,
+            experts: if family == ModelFamily::Mixtral { 4 } else { 1 },
+            active_experts: if family == ModelFamily::Mixtral { 2 } else { 1 },
+            tied_embeddings: false,
+        }
+    }
+
+    /// ~100M-parameter analogue: the "70B-class" stand-in; also the e2e
+    /// serving model.
+    pub fn synthetic_base(family: ModelFamily) -> Self {
+        Self {
+            name: format!("syn-base-{family:?}"),
+            family,
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            kv_heads: if family == ModelFamily::Llama2 { 12 } else { 4 },
+            ffn_hidden: 2048,
+            vocab: 512,
+            experts: if family == ModelFamily::Mixtral { 4 } else { 1 },
+            active_experts: if family == ModelFamily::Mixtral { 2 } else { 1 },
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        let all = [
+            Self::llama2_7b(),
+            Self::llama2_13b(),
+            Self::llama2_70b(),
+            Self::llama3_8b(),
+            Self::llama3_70b(),
+            Self::llama31_70b(),
+            Self::mistral_7b(),
+            Self::mixtral_8x7b(),
+            Self::synthetic_tiny(ModelFamily::Llama2),
+            Self::synthetic_small(ModelFamily::Llama2),
+            Self::synthetic_base(ModelFamily::Llama2),
+        ];
+        all.iter()
+            .find(|c| c.name.eq_ignore_ascii_case(name))
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // Within 5% of the nominal sizes.
+        let cases = [
+            (ModelConfig::llama2_7b(), 6.7e9, 7.5e9),
+            (ModelConfig::llama2_13b(), 12.5e9, 13.5e9),
+            (ModelConfig::llama2_70b(), 66.0e9, 72.0e9),
+            (ModelConfig::llama3_8b(), 7.5e9, 8.5e9),
+            (ModelConfig::llama3_70b(), 68.0e9, 72.5e9),
+            (ModelConfig::mistral_7b(), 6.9e9, 7.6e9),
+            (ModelConfig::mixtral_8x7b(), 45.0e9, 48.0e9),
+        ];
+        for (c, lo, hi) in cases {
+            let p = c.total_params() as f64;
+            assert!(
+                p > lo && p < hi,
+                "{}: {p:.3e} not in [{lo:.1e}, {hi:.1e}]",
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn mixtral_active_params_much_smaller_than_total() {
+        let c = ModelConfig::mixtral_8x7b();
+        let total = c.total_params() as f64;
+        let active = c.active_params() as f64;
+        assert!(active < 0.35 * total, "active {active:.2e} total {total:.2e}");
+    }
+
+    #[test]
+    fn gqa_kv_cache_smaller_than_mha() {
+        let l2 = ModelConfig::llama2_70b(); // GQA 8 kv heads
+        let per_tok = l2.kv_bytes_per_token(1);
+        // 2 * 80 layers * 8 heads * 128 dim = 163840 B/token in fp8.
+        assert_eq!(per_tok, 163_840);
+        let l27 = ModelConfig::llama2_7b(); // MHA
+        assert_eq!(l27.kv_bytes_per_token(2), 2 * 32 * 4096 * 2);
+    }
+
+    #[test]
+    fn synthetic_scales_ordered() {
+        let t = ModelConfig::synthetic_tiny(ModelFamily::Llama2).total_params();
+        let s = ModelConfig::synthetic_small(ModelFamily::Llama2).total_params();
+        let b = ModelConfig::synthetic_base(ModelFamily::Llama2).total_params();
+        assert!(t < s && s < b, "{t} {s} {b}");
+        // tiny ≈ 3-12M, base ≈ 70-140M.
+        assert!((2_500_000..14_000_000).contains(&t), "{t}");
+        assert!((70_000_000..140_000_000).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelConfig::by_name("Llama2-7B").is_some());
+        assert!(ModelConfig::by_name("llama3.1-70b").is_some());
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn linear_params_exclude_embeddings() {
+        let c = ModelConfig::llama2_7b();
+        assert!(c.linear_params() < c.total_params());
+        let embed = 2 * c.vocab * c.hidden;
+        assert!(c.total_params() - c.linear_params() >= embed);
+    }
+}

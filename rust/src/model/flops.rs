@@ -1,0 +1,110 @@
+//! Model-FLOPs accounting following Kim et al. (2025), the formula the paper
+//! uses for Tables 5 and 6: linear-layer FLOPs plus attention score/value
+//! FLOPs, *excluding* FLOPs from the attention mask (i.e. no causal
+//! discount), and excluding nonlinearities/norms.
+
+use super::config::ModelConfig;
+
+/// FLOPs of one dense linear `M×K · K×N`: 2·M·K·N.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// Total model FLOPs for a prefill of `seq` tokens (batch 1).
+///
+/// Linears: 2 · linear_params(active) · seq (+ lm_head if included).
+/// Attention: per layer, QKᵀ and PV each cost 2·S²·(heads·head_dim) = 2·S²·H.
+pub fn prefill_model_flops(cfg: &ModelConfig, seq: usize, include_lm_head: bool) -> f64 {
+    let s = seq as f64;
+    let lin = {
+        let per_layer = cfg.attn_params_per_layer() as f64
+            + cfg.active_experts as f64 * cfg.mlp_params_per_expert() as f64;
+        2.0 * cfg.layers as f64 * per_layer * s
+    };
+    let attn = 4.0 * cfg.layers as f64 * s * s * cfg.hidden as f64;
+    let head = if include_lm_head {
+        2.0 * s * cfg.hidden as f64 * cfg.vocab as f64
+    } else {
+        0.0
+    };
+    lin + attn + head
+}
+
+/// Model FLOPs of a single decode step for a batch of `batch` sequences at
+/// context length `context`.
+pub fn decode_step_model_flops(
+    cfg: &ModelConfig,
+    batch: usize,
+    context: usize,
+    include_lm_head: bool,
+) -> f64 {
+    let b = batch as f64;
+    let s = context as f64;
+    let lin = {
+        let per_layer = cfg.attn_params_per_layer() as f64
+            + cfg.active_experts as f64 * cfg.mlp_params_per_expert() as f64;
+        2.0 * cfg.layers as f64 * per_layer * b
+    };
+    // One query token attends to `context` keys: QKᵀ + PV = 4·S·H per layer
+    // per sequence.
+    let attn = 4.0 * cfg.layers as f64 * b * s * cfg.hidden as f64;
+    let head = if include_lm_head {
+        2.0 * b * cfg.hidden as f64 * cfg.vocab as f64
+    } else {
+        0.0
+    };
+    lin + attn + head
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly() {
+        let c = ModelConfig::llama31_70b();
+        let f1 = prefill_model_flops(&c, 1024, false);
+        let f2 = prefill_model_flops(&c, 2048, false);
+        assert!(f2 > 2.0 * f1); // quadratic attention term
+        assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn prefill_magnitude_llama70b() {
+        // ~2·70e9·S for linears at S=2048 → ≈ 2.8e14; attention adds ~5%.
+        let c = ModelConfig::llama31_70b();
+        let f = prefill_model_flops(&c, 2048, false);
+        assert!(f > 2.5e14 && f < 3.5e14, "{f:.3e}");
+    }
+
+    #[test]
+    fn decode_linear_in_batch() {
+        let c = ModelConfig::llama31_70b();
+        let f8 = decode_step_model_flops(&c, 8, 512, false);
+        let f16 = decode_step_model_flops(&c, 16, 512, false);
+        assert!((f16 / f8 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_grows_with_context() {
+        let c = ModelConfig::llama31_70b();
+        let a = decode_step_model_flops(&c, 8, 512, false);
+        let b = decode_step_model_flops(&c, 8, 8192, false);
+        assert!(b > a);
+        // Linear part dominates at small context: ratio far below 16×.
+        assert!(b / a < 2.0);
+    }
+
+    #[test]
+    fn lm_head_inclusion_adds_vocab_term() {
+        let c = ModelConfig::llama3_8b();
+        let without = decode_step_model_flops(&c, 1, 128, false);
+        let with = decode_step_model_flops(&c, 1, 128, true);
+        assert!((with - without - 2.0 * 4096.0 * 128256.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-model inventory of linear operations — what a quantization recipe
+//! attaches scales to (§3.3: "Quantize all linear operations ... consider
+//! omitting the first and last linear layers").
+
+use super::config::ModelConfig;
+
+/// Kind of linear op inside a transformer block (or at the edges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Embedding,
+    QProj,
+    KProj,
+    VProj,
+    OProj,
+    Gate,   // SwiGLU gate
+    Up,     // SwiGLU up
+    Down,   // SwiGLU down
+    Router, // MoE router
+    LmHead,
+}
+
+impl LayerKind {
+    /// Is this an "edge" op the recipe skips by default (§3.3 step 5)?
+    pub fn is_edge(self) -> bool {
+        matches!(self, LayerKind::Embedding | LayerKind::LmHead)
+    }
+}
+
+/// One concrete linear op: its position, kind, and GEMM geometry
+/// (out_features × in_features weight; activations are N×in).
+#[derive(Clone, Debug)]
+pub struct LinearOp {
+    pub layer_index: Option<usize>, // None for edge ops
+    pub kind: LayerKind,
+    pub in_features: usize,
+    pub out_features: usize,
+    /// Instances per layer (e.g. experts for MoE MLP projections).
+    pub instances: usize,
+}
+
+impl LinearOp {
+    pub fn weight_params(&self) -> usize {
+        self.in_features * self.out_features * self.instances
+    }
+
+    pub fn qualified_name(&self) -> String {
+        match self.layer_index {
+            Some(i) => format!("layers.{i}.{:?}", self.kind),
+            None => format!("{:?}", self.kind),
+        }
+    }
+}
+
+/// Enumerate every linear op in a model, in execution order.
+pub fn enumerate_linears(cfg: &ModelConfig) -> Vec<LinearOp> {
+    let hd = cfg.head_dim();
+    let mut ops = Vec::new();
+    ops.push(LinearOp {
+        layer_index: None,
+        kind: LayerKind::Embedding,
+        in_features: cfg.vocab,
+        out_features: cfg.hidden,
+        instances: 1,
+    });
+    for l in 0..cfg.layers {
+        let mk = |kind, inf, outf, inst| LinearOp {
+            layer_index: Some(l),
+            kind,
+            in_features: inf,
+            out_features: outf,
+            instances: inst,
+        };
+        ops.push(mk(LayerKind::QProj, cfg.hidden, cfg.heads * hd, 1));
+        ops.push(mk(LayerKind::KProj, cfg.hidden, cfg.kv_heads * hd, 1));
+        ops.push(mk(LayerKind::VProj, cfg.hidden, cfg.kv_heads * hd, 1));
+        ops.push(mk(LayerKind::OProj, cfg.heads * hd, cfg.hidden, 1));
+        if cfg.experts > 1 {
+            ops.push(mk(LayerKind::Router, cfg.hidden, cfg.experts, 1));
+        }
+        ops.push(mk(LayerKind::Gate, cfg.hidden, cfg.ffn_hidden, cfg.experts));
+        ops.push(mk(LayerKind::Up, cfg.hidden, cfg.ffn_hidden, cfg.experts));
+        ops.push(mk(LayerKind::Down, cfg.ffn_hidden, cfg.hidden, cfg.experts));
+    }
+    ops.push(LinearOp {
+        layer_index: None,
+        kind: LayerKind::LmHead,
+        in_features: cfg.hidden,
+        out_features: cfg.vocab,
+        instances: 1,
+    });
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_model_op_count() {
+        let c = ModelConfig::llama2_7b();
+        let ops = enumerate_linears(&c);
+        // embed + 32 layers × 7 ops + lm_head
+        assert_eq!(ops.len(), 2 + 32 * 7);
+    }
+
+    #[test]
+    fn moe_model_has_router_and_experts() {
+        let c = ModelConfig::mixtral_8x7b();
+        let ops = enumerate_linears(&c);
+        assert!(ops.iter().any(|o| o.kind == LayerKind::Router));
+        let gate = ops.iter().find(|o| o.kind == LayerKind::Gate).unwrap();
+        assert_eq!(gate.instances, 8);
+    }
+
+    #[test]
+    fn weight_params_sum_matches_config_accounting() {
+        for c in [
+            ModelConfig::llama2_7b(),
+            ModelConfig::llama3_70b(),
+            ModelConfig::mixtral_8x7b(),
+        ] {
+            let ops = enumerate_linears(&c);
+            let lin_sum: usize = ops
+                .iter()
+                .filter(|o| !o.kind.is_edge() && o.kind != LayerKind::Router)
+                .map(|o| o.weight_params())
+                .sum();
+            assert_eq!(lin_sum, c.linear_params(), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn edge_detection() {
+        assert!(LayerKind::Embedding.is_edge());
+        assert!(LayerKind::LmHead.is_edge());
+        assert!(!LayerKind::QProj.is_edge());
+    }
+
+    #[test]
+    fn qualified_names_unique() {
+        let c = ModelConfig::llama2_7b();
+        let ops = enumerate_linears(&c);
+        let mut names: Vec<String> = ops.iter().map(|o| o.qualified_name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), ops.len());
+    }
+
+    #[test]
+    fn gqa_kv_proj_narrower() {
+        let c = ModelConfig::llama3_8b();
+        let ops = enumerate_linears(&c);
+        let k = ops.iter().find(|o| o.kind == LayerKind::KProj).unwrap();
+        let q = ops.iter().find(|o| o.kind == LayerKind::QProj).unwrap();
+        assert_eq!(q.out_features, 4096);
+        assert_eq!(k.out_features, 8 * 128);
+    }
+}

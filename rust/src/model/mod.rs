@@ -1,0 +1,15 @@
+//! LLM model descriptions: the architecture zoo the paper evaluates
+//! (Llama2 7/13/70B, Llama3 8/70B, Llama3.1-70B, Mistral-7B, Mixtral-8x7B)
+//! plus synthetic reduced-scale analogues used for accuracy experiments,
+//! parameter / FLOPs / KV-cache accounting, and the per-layer linear-op
+//! inventory that quantization recipes attach to.
+
+pub mod config;
+pub mod flops;
+pub mod layers;
+pub mod synthetic;
+
+pub use config::{ModelConfig, ModelFamily};
+pub use flops::{decode_step_model_flops, prefill_model_flops};
+pub use layers::{LayerKind, LinearOp};
+pub use synthetic::SyntheticLm;

@@ -1,0 +1,269 @@
+//! Synthetic-statistics LMs for the accuracy experiments (Tables 2–4).
+//!
+//! We cannot run Llama2-70B here; what transfers from the paper is the
+//! *relationship* between quantization schemes and accuracy, which is a
+//! function of weight/activation statistics. This module builds stacks of
+//! quantizable linears whose statistics match the families the paper
+//! evaluates:
+//!
+//! * Llama-family: well-behaved Gaussian activations — every scaled scheme
+//!   works; unit scale degrades mildly (activations stay in E4M3 range).
+//! * Mistral/Mixtral-family: strong activation *outlier channels* (values
+//!   far beyond r_q) — unit scale clips catastrophically (the +136% / +725%
+//!   PPL rows of Table 4), while calibrated scaling stays close.
+//!
+//! Scale robustness (§4.2.1) is reproduced through width: wider layers
+//! average per-element FP8 noise over more terms (relative GEMM error
+//! ∝ 1/√C), exactly the redundancy argument the paper gives.
+
+use crate::calib::{ActObserver, ActStats};
+use crate::model::config::{ModelConfig, ModelFamily};
+use crate::quant::{QuantScheme, QuantizedLinear};
+use crate::tensor::Tensor2;
+use crate::util::rng::XorShiftRng;
+
+/// A depth-`L` stack of linears + SiLU + RMS renorm, with a classification
+/// head. All linears share one QuantScheme at eval time.
+pub struct SyntheticLm {
+    pub family: ModelFamily,
+    pub hidden: usize,
+    pub depth: usize,
+    pub classes: usize,
+    pub weights: Vec<Tensor2>, // depth × (hidden×hidden)
+    pub head: Tensor2,         // classes×hidden
+    /// Persistent outlier channel ids (empty for Llama-family).
+    outlier_channels: Vec<usize>,
+    outlier_scale: f32,
+}
+
+impl SyntheticLm {
+    /// Family statistics knobs: (fraction of outlier channels, magnitude).
+    /// Magnitudes are chosen so outlier activations land well beyond
+    /// E4M3-Gaudi2's ±240 (real Mistral-family activations reach hundreds),
+    /// with Mixtral worse than Mistral as in Table 4 (+725% vs +136% PPL).
+    fn family_knobs(family: ModelFamily) -> (f64, f32) {
+        match family {
+            ModelFamily::Mistral => (0.04, 150.0),
+            ModelFamily::Mixtral => (0.06, 320.0),
+            _ => (0.0, 1.0),
+        }
+    }
+
+    pub fn new(cfg: &ModelConfig, classes: usize, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let hidden = cfg.hidden;
+        // Fixed shallow depth: the paper's scale-robustness effect (§4.2.1)
+        // is reproduced through WIDTH (per-element FP8 noise averages over
+        // more GEMM terms); holding depth constant isolates that mechanism
+        // and keeps the eval tractable.
+        let depth = cfg.layers.min(4);
+        let (p_out, s_out) = Self::family_knobs(cfg.family);
+        let std = 1.0 / (hidden as f32).sqrt();
+        let weights = (0..depth)
+            .map(|_| Tensor2::randn(hidden, hidden, std, &mut rng))
+            .collect();
+        let head = Tensor2::randn(classes, hidden, std, &mut rng);
+        let n_out = (hidden as f64 * p_out) as usize;
+        let mut outlier_channels: Vec<usize> = Vec::new();
+        while outlier_channels.len() < n_out {
+            let c = rng.below(hidden);
+            if !outlier_channels.contains(&c) {
+                outlier_channels.push(c);
+            }
+        }
+        Self {
+            family: cfg.family,
+            hidden,
+            depth,
+            classes,
+            weights,
+            head,
+            outlier_channels,
+            outlier_scale: s_out,
+        }
+    }
+
+    /// Sample a batch of input activations with the family's statistics.
+    pub fn sample_inputs(&self, n: usize, rng: &mut XorShiftRng) -> Tensor2 {
+        let mut x = Tensor2::randn(n, self.hidden, 1.0, rng);
+        self.inject_outliers(&mut x);
+        x
+    }
+
+    fn inject_outliers(&self, x: &mut Tensor2) {
+        for r in 0..x.rows {
+            let row = x.row_mut(r);
+            for &c in &self.outlier_channels {
+                row[c] *= self.outlier_scale;
+            }
+        }
+    }
+
+    /// RMS-normalize rows by the *non-outlier* channels (so the persistent
+    /// outlier channels keep their extreme absolute magnitude through every
+    /// layer — how real Mistral-class activations behave), then re-inject
+    /// the outlier pattern.
+    fn renorm(&self, x: &mut Tensor2) {
+        for r in 0..x.rows {
+            let row = x.row_mut(r);
+            let (mut sum, mut n) = (0.0f64, 0usize);
+            for (c, v) in row.iter().enumerate() {
+                if !self.outlier_channels.contains(&c) {
+                    sum += (*v as f64) * (*v as f64);
+                    n += 1;
+                }
+            }
+            let ms = (sum / n.max(1) as f64) as f32;
+            let inv = 1.0 / (ms + 1e-6).sqrt();
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        self.inject_outliers(x);
+    }
+
+    fn silu(x: &mut Tensor2) {
+        for v in x.data.iter_mut() {
+            *v = *v / (1.0 + (-*v).exp());
+        }
+    }
+
+    /// High-precision forward → logits (N×classes).
+    pub fn forward_reference(&self, x0: &Tensor2) -> Tensor2 {
+        let mut x = x0.clone();
+        for w in &self.weights {
+            x = crate::tensor::matmul_nt(&x, w);
+            Self::silu(&mut x);
+            self.renorm(&mut x);
+        }
+        crate::tensor::matmul_nt(&x, &self.head)
+    }
+
+    /// Calibrate per-layer activation stats on a calibration batch (§3.1).
+    pub fn calibrate(&self, x0: &Tensor2) -> Vec<ActStats> {
+        let mut stats = Vec::with_capacity(self.depth + 1);
+        let mut x = x0.clone();
+        for w in &self.weights {
+            let mut obs = ActObserver::new(self.hidden);
+            obs.observe(&x);
+            stats.push(obs.finalize());
+            x = crate::tensor::matmul_nt(&x, w);
+            Self::silu(&mut x);
+            self.renorm(&mut x);
+        }
+        let mut obs = ActObserver::new(self.hidden);
+        obs.observe(&x);
+        stats.push(obs.finalize());
+        stats
+    }
+
+    /// Quantized forward under `scheme`, with per-layer calibration stats.
+    pub fn forward_quantized(
+        &self,
+        x0: &Tensor2,
+        scheme: QuantScheme,
+        stats: &[ActStats],
+    ) -> Tensor2 {
+        assert_eq!(stats.len(), self.depth + 1);
+        let mut x = x0.clone();
+        for (w, st) in self.weights.iter().zip(stats) {
+            let q = QuantizedLinear::prepare(w, Some(st), scheme);
+            x = q.forward(&x);
+            Self::silu(&mut x);
+            self.renorm(&mut x);
+        }
+        // Head stays high-precision (§3.3 step 5: skip the lm-head).
+        crate::tensor::matmul_nt(&x, &self.head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::Fp8Format;
+
+    fn lm(family: ModelFamily) -> SyntheticLm {
+        let cfg = ModelConfig::synthetic_tiny(family);
+        SyntheticLm::new(&cfg, 64, 42)
+    }
+
+    #[test]
+    fn mistral_has_outlier_channels_llama_does_not() {
+        let mut rng = XorShiftRng::new(1);
+        let m = lm(ModelFamily::Mistral);
+        let l = lm(ModelFamily::Llama2);
+        let xm = m.sample_inputs(64, &mut rng);
+        let xl = l.sample_inputs(64, &mut rng);
+        assert!(crate::tensor::abs_max(&xm) > 100.0);
+        assert!(crate::tensor::abs_max(&xl) < 10.0);
+    }
+
+    #[test]
+    fn reference_forward_finite_and_shaped() {
+        let mut rng = XorShiftRng::new(2);
+        let m = lm(ModelFamily::Mixtral);
+        let x = m.sample_inputs(8, &mut rng);
+        let z = m.forward_reference(&x);
+        assert_eq!((z.rows, z.cols), (8, 64));
+        assert!(z.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_tracks_reference_for_llama() {
+        let mut rng = XorShiftRng::new(3);
+        let m = lm(ModelFamily::Llama2);
+        let xc = m.sample_inputs(64, &mut rng);
+        let xe = m.sample_inputs(32, &mut rng);
+        let stats = m.calibrate(&xc);
+        let zr = m.forward_reference(&xe);
+        let zq =
+            m.forward_quantized(&xe, QuantScheme::per_tensor(Fp8Format::E4M3Gaudi2), &stats);
+        let rel = (zq.sub(&zr).fro_norm_sq() / zr.fro_norm_sq()).sqrt();
+        assert!(rel < 0.35, "rel err {rel}");
+    }
+
+    #[test]
+    fn unit_scale_blows_up_on_mistral_but_not_llama() {
+        // The Table 4 headline reproduced at the statistics level.
+        let mut rng = XorShiftRng::new(4);
+        let fmt = Fp8Format::E4M3Gaudi2;
+        let mut rels = std::collections::HashMap::new();
+        for fam in [ModelFamily::Llama2, ModelFamily::Mistral] {
+            let m = lm(fam);
+            let xc = m.sample_inputs(64, &mut rng);
+            let xe = m.sample_inputs(32, &mut rng);
+            let stats = m.calibrate(&xc);
+            let zr = m.forward_reference(&xe);
+            let unit = m.forward_quantized(&xe, QuantScheme::unit_scale(fmt), &stats);
+            let pt = m.forward_quantized(&xe, QuantScheme::per_tensor(fmt), &stats);
+            let rel_unit = (unit.sub(&zr).fro_norm_sq() / zr.fro_norm_sq()).sqrt();
+            let rel_pt = (pt.sub(&zr).fro_norm_sq() / zr.fro_norm_sq()).sqrt();
+            rels.insert(fam, (rel_unit, rel_pt));
+        }
+        let (lu, lp) = rels[&ModelFamily::Llama2];
+        let (mu, mp) = rels[&ModelFamily::Mistral];
+        assert!(mu > 3.0 * mp, "mistral unit {mu} vs pt {mp}");
+        assert!(lu < 3.0 * lp.max(0.05), "llama unit {lu} vs pt {lp}");
+    }
+
+    #[test]
+    fn wider_models_more_robust() {
+        // §4.2.1 via the width mechanism.
+        let mut rng = XorShiftRng::new(5);
+        let fmt = Fp8Format::E4M3Gaudi2;
+        let mut errs = Vec::new();
+        for cfg in [
+            ModelConfig::synthetic_tiny(ModelFamily::Llama2),
+            ModelConfig::synthetic_base(ModelFamily::Llama2),
+        ] {
+            let m = SyntheticLm::new(&cfg, 64, 7);
+            let xc = m.sample_inputs(64, &mut rng);
+            let xe = m.sample_inputs(32, &mut rng);
+            let stats = m.calibrate(&xc);
+            let zr = m.forward_reference(&xe);
+            let zq = m.forward_quantized(&xe, QuantScheme::per_tensor(fmt), &stats);
+            errs.push((zq.sub(&zr).fro_norm_sq() / zr.fro_norm_sq()).sqrt());
+        }
+        assert!(errs[1] < errs[0], "base {} vs tiny {}", errs[1], errs[0]);
+    }
+}

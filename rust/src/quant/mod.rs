@@ -1,0 +1,30 @@
+//! Quantization toolkit — every scaling method of paper §3.2 and the §3.3
+//! recipe.
+//!
+//! Naming follows the paper exactly:
+//! * `s_x` — activation (input) scales, per-tensor (Eq. 15) or per-sample
+//!   (Eq. 17);
+//! * `s_w` — weight scales, per-tensor (Eq. 18) or per-output-channel
+//!   (Eq. 20), optionally MSE-optimized over a scale set 𝒮 (Eqs. 22, 24);
+//! * `s_c` — common-dimension scales, unit except for SmoothQuant (Eq. 26);
+//! * `β` — the backoff factor that leaves headroom above the calibrated max;
+//! * `r_q` — the largest representable magnitude of the FP8 format.
+//!
+//! The quantized linear is Eq. 2:
+//! `X_{l+1} = S_x ( Q(S_x⁻¹ X S_c⁻¹) ⊗ Q(S_c Wᵀ S_w⁻¹) ) S_w`.
+
+pub mod recipe;
+pub mod scale;
+pub mod search;
+pub mod smoothquant;
+
+pub use recipe::{QuantScheme, QuantizedLinear, Rounding};
+pub use scale::{
+    act_scale_per_sample, act_scale_per_tensor, round_scale_pow2, weight_scale_per_channel,
+    weight_scale_per_tensor, ActScaling, WeightScaling,
+};
+pub use search::{mse_scale_per_channel, mse_scale_per_tensor, ScaleSet};
+pub use smoothquant::{smoothquant_scales, SmoothQuantResult};
+
+/// Default backoff factor β (headroom for values beyond the calibration max).
+pub const DEFAULT_BACKOFF: f32 = 1.0;

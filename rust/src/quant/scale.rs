@@ -1,0 +1,157 @@
+//! Max-abs scaling methods (paper §3.2.1–§3.2.4) and pow2 rounding (Eq. 14).
+
+use crate::fp8::Fp8Format;
+
+/// Activation scaling policy (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActScaling {
+    /// Scale factor fixed at 1 regardless of statistics (the paper's
+    /// "Unit scale" baseline in Tables 2–4).
+    Unit,
+    /// Static per-tensor scaling from calibration stats (Eq. 15).
+    PerTensorStatic { backoff: f32 },
+    /// Dynamic (JiT) per-tensor scaling from the current batch (Eq. 9a).
+    PerTensorDynamic { backoff: f32 },
+    /// Dynamic per-sample (per-token) scaling (Eq. 17; static per-sample is
+    /// impossible — §2.3.1 / Fig. 1 caption).
+    PerSampleDynamic { backoff: f32 },
+}
+
+/// Weight scaling policy (paper Fig. 2). Weights are always quantized
+/// offline (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightScaling {
+    Unit,
+    /// Per-tensor from max-abs stats (Eq. 18).
+    PerTensor,
+    /// Per-output-channel from max-abs stats (Eq. 20).
+    PerChannel,
+    /// MSE-minimizing per-tensor search (Eq. 22) over a scale set.
+    MsePerTensor(super::search::ScaleSet),
+    /// MSE-minimizing per-output-channel search (Eq. 24) over a scale set.
+    MsePerChannel(super::search::ScaleSet),
+}
+
+/// Eq. 15a: `s_x = r_x / (β·r_q)`.
+pub fn act_scale_per_tensor(r_x: f32, backoff: f32, format: Fp8Format) -> f32 {
+    sanitize(r_x / (backoff * format.r_q()))
+}
+
+/// Eq. 17a: `s_x[i] = r_x-[i] / (β·r_q)` for each sample i.
+pub fn act_scale_per_sample(r_x_rows: &[f32], backoff: f32, format: Fp8Format) -> Vec<f32> {
+    r_x_rows
+        .iter()
+        .map(|r| sanitize(r / (backoff * format.r_q())))
+        .collect()
+}
+
+/// Eq. 18a: `s_w = r_w / r_q`.
+pub fn weight_scale_per_tensor(r_w: f32, format: Fp8Format) -> f32 {
+    sanitize(r_w / format.r_q())
+}
+
+/// Eq. 20a: `s_w[k] = r_w-[k] / r_q`.
+pub fn weight_scale_per_channel(r_w_rows: &[f32], format: Fp8Format) -> Vec<f32> {
+    r_w_rows
+        .iter()
+        .map(|r| sanitize(r / format.r_q()))
+        .collect()
+}
+
+/// Eq. 14: round a scale up to the next power of two, `2^⌈log2 s⌉`.
+/// (Rounding *up* guarantees the scaled max still fits in range.)
+pub fn round_scale_pow2(s: f32) -> f32 {
+    if s <= 0.0 || !s.is_finite() {
+        return 1.0;
+    }
+    (2.0f32).powi(s.log2().ceil() as i32)
+}
+
+/// Zero / non-finite statistics degrade to the identity scale: an all-zero
+/// tensor quantizes exactly at any scale, and a poisoned statistic must not
+/// poison the weights.
+#[inline]
+fn sanitize(s: f32) -> f32 {
+    if s > 0.0 && s.is_finite() {
+        s
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{decode, encode_rne, CastMode};
+
+    #[test]
+    fn per_tensor_scale_maps_max_to_rq() {
+        let f = Fp8Format::E4M3; // r_q = 448
+        let s = act_scale_per_tensor(896.0, 1.0, f);
+        assert_eq!(s, 2.0);
+        // The scaled max hits exactly r_q → encodes to max code, no clipping.
+        let code = encode_rne(896.0 / s, f, CastMode::SatFinite);
+        assert_eq!(decode(code, f), 448.0);
+    }
+
+    #[test]
+    fn backoff_leaves_headroom() {
+        let f = Fp8Format::E4M3Gaudi2; // r_q = 240
+        let s_nb = act_scale_per_tensor(240.0, 1.0, f);
+        let s_b = act_scale_per_tensor(240.0, 0.5, f);
+        assert_eq!(s_nb, 1.0);
+        assert_eq!(s_b, 2.0); // scaled max = 120 → 2× headroom
+        assert!(s_b > s_nb);
+    }
+
+    #[test]
+    fn per_sample_scales_one_per_row() {
+        let f = Fp8Format::E4M3;
+        let rows = [448.0f32, 224.0, 0.0];
+        let s = act_scale_per_sample(&rows, 1.0, f);
+        assert_eq!(s, vec![1.0, 0.5, 1.0]); // zero row degrades to identity
+    }
+
+    #[test]
+    fn weight_scales() {
+        let f = Fp8Format::E4M3Gaudi2;
+        assert_eq!(weight_scale_per_tensor(480.0, f), 2.0);
+        assert_eq!(
+            weight_scale_per_channel(&[240.0, 120.0, 960.0], f),
+            vec![1.0, 0.5, 4.0]
+        );
+    }
+
+    #[test]
+    fn pow2_rounding_rounds_up() {
+        assert_eq!(round_scale_pow2(1.0), 1.0);
+        assert_eq!(round_scale_pow2(1.01), 2.0);
+        assert_eq!(round_scale_pow2(0.9), 1.0);
+        assert_eq!(round_scale_pow2(0.5), 0.5);
+        assert_eq!(round_scale_pow2(3.0), 4.0);
+        assert_eq!(round_scale_pow2(0.0), 1.0);
+        assert_eq!(round_scale_pow2(f32::NAN), 1.0);
+    }
+
+    #[test]
+    fn pow2_rounding_never_causes_clipping() {
+        // s_pow2 ≥ s, so max/s_pow2 ≤ r_q always.
+        let f = Fp8Format::E4M3;
+        let mut rng = crate::util::rng::XorShiftRng::new(77);
+        for _ in 0..1000 {
+            let r_x = rng.range_f32(1e-3, 1e4);
+            let s = act_scale_per_tensor(r_x, 1.0, f);
+            let sp = round_scale_pow2(s);
+            assert!(sp >= s * 0.9999);
+            assert!(r_x / sp <= f.r_q() * 1.0001, "r_x={r_x} sp={sp}");
+        }
+    }
+
+    #[test]
+    fn sanitize_handles_degenerate_stats() {
+        let f = Fp8Format::E4M3;
+        assert_eq!(act_scale_per_tensor(0.0, 1.0, f), 1.0);
+        assert_eq!(act_scale_per_tensor(f32::INFINITY, 1.0, f), 1.0);
+        assert_eq!(weight_scale_per_tensor(f32::NAN, f), 1.0);
+    }
+}

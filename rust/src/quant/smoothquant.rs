@@ -1,0 +1,208 @@
+//! SmoothQuant (paper §3.2.7, Eqs. 26–30): jointly scale activations and
+//! weights along the common (input-channel) dimension, migrating the
+//! quantization difficulty of activation-outlier channels into the weights.
+
+use crate::fp8::Fp8Format;
+use crate::quant::scale::round_scale_pow2;
+use crate::tensor::Tensor2;
+
+/// Output of the SmoothQuant scale computation.
+#[derive(Clone, Debug)]
+pub struct SmoothQuantResult {
+    /// Common-dimension scales `s_c` (length C_l). Activations are divided
+    /// by these per-channel; weights are multiplied per-input-channel.
+    pub s_c: Vec<f32>,
+    /// Per-tensor activation scale `s_x` (Eq. 26b) on the smoothed stats.
+    pub s_x: f32,
+    /// Weight scales on the smoothed weights: per-output-channel (Eq. 29b)
+    /// or per-tensor (Eq. 30b) depending on `per_channel_weights`.
+    pub s_w: Vec<f32>,
+}
+
+/// Compute SmoothQuant scales.
+///
+/// * `r_x_cols` — per-channel activation max-abs from calibration (Eq. 8b);
+/// * `w` — the weight matrix (C_{l+1} × C_l);
+/// * `alpha` — migration strength ∈ [0,1] (Eq. 26a);
+/// * `backoff` — β for the activation scale;
+/// * `per_channel_weights` — Eq. 29 (true) vs Eq. 30 (false);
+/// * `pow2` — round `s_c` entries to powers of two (Eq. 14) for cheap
+///   application.
+pub fn smoothquant_scales(
+    r_x_cols: &[f32],
+    w: &Tensor2,
+    alpha: f32,
+    backoff: f32,
+    format: Fp8Format,
+    per_channel_weights: bool,
+    pow2: bool,
+) -> SmoothQuantResult {
+    assert_eq!(r_x_cols.len(), w.cols, "channel count mismatch");
+    let r_q = format.r_q();
+
+    // Per-input-channel weight stats r_w| (Eq. 10c).
+    let r_w_cols = crate::tensor::col_abs_max(w);
+
+    // Eq. 26a: s_c[j] = r_x|[j]^α / r_w|[j]^(1-α).
+    let mut s_c: Vec<f32> = r_x_cols
+        .iter()
+        .zip(&r_w_cols)
+        .map(|(rx, rw)| {
+            let (rx, rw) = (rx.max(1e-10), rw.max(1e-10));
+            let s = rx.powf(alpha) / rw.powf(1.0 - alpha);
+            if s.is_finite() && s > 0.0 {
+                s
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    if pow2 {
+        for s in &mut s_c {
+            *s = round_scale_pow2(*s);
+        }
+    }
+
+    // Eq. 26b: s_x = max_j (r_x|[j] / s_c[j]) / (β r_q).
+    let smoothed_max = r_x_cols
+        .iter()
+        .zip(&s_c)
+        .map(|(rx, sc)| rx / sc)
+        .fold(0.0f32, f32::max);
+    let s_x = {
+        let s = smoothed_max / (backoff * r_q);
+        if s.is_finite() && s > 0.0 {
+            s
+        } else {
+            1.0
+        }
+    };
+
+    // Smoothed weights W̄ᵀ = S_c Wᵀ → rows of W scaled per *input* channel
+    // (Eq. 28), then weight scales from the updated stats.
+    let w_bar = w.scale_cols(&s_c);
+    let s_w = if per_channel_weights {
+        // Eq. 29: per-output-channel on W̄.
+        crate::tensor::row_abs_max(&w_bar)
+            .into_iter()
+            .map(|r| {
+                let s = r / r_q;
+                if s.is_finite() && s > 0.0 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    } else {
+        // Eq. 30: per-tensor on W̄.
+        let r = crate::tensor::abs_max(&w_bar);
+        let s = r / r_q;
+        vec![if s.is_finite() && s > 0.0 { s } else { 1.0 }]
+    };
+
+    SmoothQuantResult { s_c, s_x, s_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+
+    fn setup(outliers: bool) -> (Vec<f32>, Tensor2) {
+        let mut rng = XorShiftRng::new(11);
+        let x = if outliers {
+            Tensor2::randn_outlier_cols(128, 64, 1.0, 0.08, 60.0, &mut rng)
+        } else {
+            Tensor2::randn(128, 64, 1.0, &mut rng)
+        };
+        let w = Tensor2::randn(32, 64, 0.05, &mut rng);
+        (crate::tensor::col_abs_max(&x), w)
+    }
+
+    #[test]
+    fn alpha_zero_matches_weight_stats() {
+        // α=0 → s_c = 1/r_w| : all difficulty moved to activations.
+        let (rx, w) = setup(false);
+        let r = smoothquant_scales(&rx, &w, 0.0, 1.0, Fp8Format::E4M3, true, false);
+        let rw = crate::tensor::col_abs_max(&w);
+        for (s, rwj) in r.s_c.iter().zip(&rw) {
+            assert!((s - 1.0 / rwj).abs() / (1.0 / rwj) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn alpha_one_matches_act_stats() {
+        // α=1 → s_c = r_x| : all difficulty moved into weights.
+        let (rx, w) = setup(false);
+        let r = smoothquant_scales(&rx, &w, 1.0, 1.0, Fp8Format::E4M3, true, false);
+        for (s, rxj) in r.s_c.iter().zip(&rx) {
+            assert!((s - rxj).abs() / rxj < 1e-4);
+        }
+    }
+
+    #[test]
+    fn smoothing_equalizes_activation_channels() {
+        // After dividing by s_c (α=0.5), outlier channels shrink: the ratio
+        // max_channel/median_channel of smoothed stats must drop sharply.
+        let (rx, w) = setup(true);
+        let r = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, true, false);
+        let smoothed: Vec<f32> = rx.iter().zip(&r.s_c).map(|(x, s)| x / s).collect();
+        let spread = |v: &[f32]| {
+            let mut s = v.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() - 1] / s[s.len() / 2]
+        };
+        assert!(
+            spread(&smoothed) < spread(&rx) / 4.0,
+            "raw spread {} smoothed {}",
+            spread(&rx),
+            spread(&smoothed)
+        );
+    }
+
+    #[test]
+    fn transform_is_mathematically_invisible() {
+        // X·Wᵀ must be unchanged by inserting S_c⁻¹ S_c (before quantization).
+        let mut rng = XorShiftRng::new(5);
+        let x = Tensor2::randn(16, 64, 1.0, &mut rng);
+        let w = Tensor2::randn(8, 64, 0.1, &mut rng);
+        let rx = crate::tensor::col_abs_max(&x);
+        let r = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, true, false);
+        let ref_out = crate::tensor::matmul_nt(&x, &w);
+        let inv: Vec<f32> = r.s_c.iter().map(|s| 1.0 / s).collect();
+        let x_s = x.scale_cols(&inv);
+        let w_s = w.scale_cols(&r.s_c);
+        let out = crate::tensor::matmul_nt(&x_s, &w_s);
+        for (a, b) in out.data.iter().zip(&ref_out.data) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1e-3), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pow2_mode_emits_pow2_scales() {
+        let (rx, w) = setup(true);
+        let r = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, true, true);
+        for s in &r.s_c {
+            assert_eq!(s.log2().fract(), 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn per_tensor_weight_mode_returns_single_scale() {
+        let (rx, w) = setup(false);
+        let r = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, false, false);
+        assert_eq!(r.s_w.len(), 1);
+        let rc = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, true, false);
+        assert_eq!(rc.s_w.len(), w.rows);
+    }
+
+    #[test]
+    fn degenerate_stats_do_not_poison() {
+        let rx = vec![0.0f32; 8];
+        let w = Tensor2::zeros(4, 8);
+        let r = smoothquant_scales(&rx, &w, 0.5, 1.0, Fp8Format::E4M3, true, false);
+        assert!(r.s_x.is_finite() && r.s_x > 0.0);
+        assert!(r.s_c.iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+}

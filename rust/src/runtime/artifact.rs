@@ -1,0 +1,143 @@
+//! One compiled artifact: HLO text → PJRT executable, with typed I/O.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use super::Runtime;
+
+/// Host-side input tensor (f32 or i32), row-major.
+#[derive(Clone, Debug)]
+pub enum TensorIn {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    /// Rank-0 i32 (e.g. the decode position).
+    ScalarI32(i32),
+}
+
+impl TensorIn {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorIn::F32 {
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorIn::I32 {
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    /// Build the PJRT literal (host copy happens here — hot paths build
+    /// long-lived literals once, e.g. model weights).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            TensorIn::F32 { dims, data } => {
+                let d: Vec<i64> = dims.iter().map(|x| *x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+            TensorIn::I32 { dims, data } => {
+                let d: Vec<i64> = dims.iter().map(|x| *x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+            TensorIn::ScalarI32(v) => xla::Literal::from(*v),
+        })
+    }
+}
+
+/// Host-side output tensor.
+#[derive(Clone, Debug)]
+pub struct TensorOut {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A compiled HLO artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load HLO text from `path` and compile it on `rt`'s client.
+    pub fn load(rt: &Runtime, name: &str, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Self {
+            name: name.to_string(),
+            exe,
+        })
+    }
+
+    /// Execute with the given inputs; returns the flattened tuple outputs as
+    /// f32 tensors (i32/u8 outputs are converted).
+    pub fn run(&self, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals — the hot path keeps the (large)
+    /// weight literals alive across calls and only rebuilds the small
+    /// per-step inputs.
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<TensorOut>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for lit in parts {
+            outs.push(literal_to_f32(&lit)?);
+        }
+        Ok(outs)
+    }
+}
+
+fn literal_to_f32(lit: &xla::Literal) -> Result<TensorOut> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect(),
+        _ => {
+            // bf16 / u8 / pred / f64 ... — convert on the client side.
+            let conv = lit.convert(xla::ElementType::F32.primitive_type())?;
+            return literal_to_f32(&conv);
+        }
+    };
+    Ok(TensorOut { dims, data })
+}
+
+#[cfg(test)]
+mod tests {
+    // Compilation-dependent tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts` to have run).
+    use super::*;
+
+    #[test]
+    fn tensor_in_shape_checked() {
+        let t = TensorIn::f32(&[2, 3], vec![0.0; 6]);
+        matches!(t, TensorIn::F32 { .. });
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_in_shape_mismatch_panics() {
+        TensorIn::f32(&[2, 3], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,45 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod params;
+pub mod registry;
+
+pub use artifact::{Artifact, TensorIn, TensorOut};
+pub use params::{load_params_bin, ParamTensor};
+pub use registry::{ArtifactKey, ArtifactRegistry};
+
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client (one per thread — the xla crate's client type is
+/// !Send; engines created on the same thread share it).
+#[derive(Clone)]
+pub struct Runtime {
+    pub client: Arc<xla::PjRtClient>,
+}
+
+thread_local! {
+    static SHARED: std::cell::RefCell<Option<Runtime>> = const { std::cell::RefCell::new(None) };
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        if let Some(rt) = SHARED.with(|s| s.borrow().clone()) {
+            return Ok(rt);
+        }
+        let rt = Self {
+            client: Arc::new(xla::PjRtClient::cpu()?),
+        };
+        SHARED.with(|s| *s.borrow_mut() = Some(rt.clone()));
+        Ok(rt)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

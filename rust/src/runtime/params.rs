@@ -1,0 +1,153 @@
+//! Weights file format shared with `python/compile/params_io.py`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   b"GFP8PARM"
+//! u32     version (1)
+//! u32     tensor count
+//! repeat:
+//!   u16   name length, name bytes (utf-8)
+//!   u8    dtype (0 = f32, 1 = bf16-as-u16)
+//!   u8    ndim
+//!   u32×ndim  dims
+//!   data  (f32 LE or u16 LE)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+use crate::fp8::bf16::bf16_to_f32;
+
+#[derive(Clone, Debug)]
+pub struct ParamTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+pub const MAGIC: &[u8; 8] = b"GFP8PARM";
+
+/// Load every tensor, in file order (the artifact argument order).
+pub fn load_params_bin(path: &Path) -> Result<Vec<ParamTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {path:?}");
+    }
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        bail!("unsupported params version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf-8")?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let mut buf = vec![0u8; numel * 4];
+                f.read_exact(&mut buf)?;
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            }
+            1 => {
+                let mut buf = vec![0u8; numel * 2];
+                f.read_exact(&mut buf)?;
+                buf.chunks_exact(2)
+                    .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                    .collect()
+            }
+            d => bail!("unknown dtype tag {d}"),
+        };
+        out.push(ParamTensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_file(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "a": f32 [2,2]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[0u8, 2u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, -2.0, 3.5, 0.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // tensor "b": bf16 [3]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&[1u8, 1u8]).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, 0.5, -2.0] {
+            let b = crate::fp8::bf16::f32_to_bf16(v);
+            f.write_all(&b.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("gaudi_fp8_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_test_file(&p);
+        let tensors = load_params_bin(&p).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(tensors[0].name, "a");
+        assert_eq!(tensors[0].dims, vec![2, 2]);
+        assert_eq!(tensors[0].data, vec![1.0, -2.0, 3.5, 0.0]);
+        assert_eq!(tensors[1].name, "b");
+        assert_eq!(tensors[1].data, vec![1.0, 0.5, -2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("gaudi_fp8_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC....").unwrap();
+        assert!(load_params_bin(&p).is_err());
+    }
+}

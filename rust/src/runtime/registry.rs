@@ -1,0 +1,153 @@
+//! Artifact registry: lazily compile and cache executables keyed by
+//! (kind, variant, batch, seq). One compiled executable per model variant
+//! and shape bucket, as the three-layer architecture prescribes.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::artifact::Artifact;
+use super::Runtime;
+
+/// Identifies one artifact file.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// "prefill" | "decode" | "gemm" | custom.
+    pub kind: String,
+    /// Quantization variant ("bf16", "fp8_pt", ...).
+    pub variant: String,
+    pub batch: usize,
+    /// Sequence length (prefill) or cache capacity (decode); 0 if n/a.
+    pub seq: usize,
+}
+
+impl ArtifactKey {
+    pub fn prefill(variant: &str, batch: usize, seq: usize) -> Self {
+        Self {
+            kind: "prefill".into(),
+            variant: variant.into(),
+            batch,
+            seq,
+        }
+    }
+
+    pub fn decode(variant: &str, batch: usize) -> Self {
+        Self {
+            kind: "decode".into(),
+            variant: variant.into(),
+            batch,
+            seq: 0,
+        }
+    }
+
+    /// Filename convention shared with aot.py.
+    pub fn filename(&self) -> String {
+        match self.kind.as_str() {
+            "prefill" => format!(
+                "prefill_{}_b{}_s{}.hlo.txt",
+                self.variant, self.batch, self.seq
+            ),
+            "decode" => format!("decode_{}_b{}.hlo.txt", self.variant, self.batch),
+            k => format!("{}_{}.hlo.txt", k, self.variant),
+        }
+    }
+}
+
+// Thread-wide compiled-artifact cache: XLA compilation of the larger FP8
+// artifacts takes tens of seconds, and engines/tests routinely reopen the
+// same files — key by absolute path, compile once per thread. (The xla
+// crate's client/executable types are !Send, so process-wide sharing is
+// not sound; engines created on the same thread — the common case — share.)
+thread_local! {
+    static THREAD_CACHE: std::cell::RefCell<HashMap<PathBuf, std::sync::Arc<Artifact>>> =
+        std::cell::RefCell::new(HashMap::new());
+}
+
+/// Lazy-compiling artifact cache.
+pub struct ArtifactRegistry {
+    rt: Runtime,
+    dir: PathBuf,
+    cache: Mutex<HashMap<ArtifactKey, std::sync::Arc<Artifact>>>,
+}
+
+impl ArtifactRegistry {
+    pub fn new(rt: Runtime, dir: &Path) -> Self {
+        Self {
+            rt,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Paths available on disk (for listing / diagnostics).
+    pub fn available(&self) -> Vec<String> {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .filter(|n| n.ends_with(".hlo.txt"))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Get (compiling on first use) the artifact for `key`.
+    pub fn get(&self, key: &ArtifactKey) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(key) {
+            return Ok(a.clone());
+        }
+        let path = self.dir.join(key.filename());
+        if !path.exists() {
+            bail!(
+                "artifact {:?} not found at {path:?} — run `make artifacts`",
+                key
+            );
+        }
+        let canonical = path.canonicalize().unwrap_or_else(|_| path.clone());
+        let cached = THREAD_CACHE.with(|c| c.borrow().get(&canonical).cloned());
+        let art = match cached {
+            Some(a) => a,
+            None => {
+                let a =
+                    std::sync::Arc::new(Artifact::load(&self.rt, &key.filename(), &path)?);
+                THREAD_CACHE.with(|c| c.borrow_mut().insert(canonical, a.clone()));
+                a
+            }
+        };
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.clone(), art.clone());
+        Ok(art)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filename_convention() {
+        assert_eq!(
+            ArtifactKey::prefill("fp8_pt", 1, 64).filename(),
+            "prefill_fp8_pt_b1_s64.hlo.txt"
+        );
+        assert_eq!(
+            ArtifactKey::decode("bf16", 4).filename(),
+            "decode_bf16_b4.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        let reg = ArtifactRegistry::new(rt, Path::new("/nonexistent"));
+        assert!(reg.get(&ArtifactKey::decode("bf16", 1)).is_err());
+        assert!(reg.available().is_empty());
+    }
+}

@@ -1,0 +1,259 @@
+//! `repro` CLI: serve / eval / simulate / bench subcommands.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Engine, EngineConfig, SchedulePolicy};
+use crate::eval::suite::{evaluate_model, paper_schemes, EvalConfig};
+use crate::eval::tables::render_accuracy_table;
+use crate::fp8::Fp8Format;
+use crate::gaudisim::{decode_step_tflops, gemm_time_s, prefill_tflops, Device, E2eConfig, GemmConfig, ScalingKind};
+use crate::model::config::{ModelConfig, ModelFamily};
+use crate::server::workload::{WorkloadConfig, WorkloadGen};
+
+/// Parsed command line: subcommand + --key value flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("usage: repro <serve|eval|simulate|gemm|info> [--flag value ...]");
+        }
+        let mut args = Args {
+            command: argv[0].clone(),
+            flags: HashMap::new(),
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {}", argv[i]))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                args.flags.insert(k.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "simulate" => cmd_simulate(&args),
+        "gemm" => cmd_gemm(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?} (serve|eval|simulate|gemm|info)"),
+    }
+}
+
+/// Serve a synthetic workload through the full stack and report metrics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts", "artifacts"));
+    let variant = args.get("variant", "fp8_pt");
+    let mut cfg = EngineConfig::new(&dir, &variant);
+    cfg.slots = args.get_usize("slots", 8);
+    if args.get("policy", "prefill-first") == "decode-first" {
+        cfg.policy = SchedulePolicy::DecodeFirst {
+            min_decode: args.get_usize("min-decode", 2),
+        };
+    }
+    let mut engine = Engine::new(cfg)?;
+    let wl = WorkloadConfig {
+        requests: args.get_usize("requests", 16),
+        ..Default::default()
+    };
+    println!("serving {} requests (variant={variant})", wl.requests);
+    let reqs = WorkloadGen::new(wl).generate_all();
+    for r in reqs {
+        engine.submit(r);
+    }
+    let outs = engine.run_to_completion()?;
+    for o in &outs {
+        let text: String = o.tokens.iter().map(|t| *t as u8 as char).collect();
+        println!(
+            "  req {:>3}: prompt {:>3} + {:>3} tokens  ttft {:>6.1}ms  tpot {:>5.2}ms  {:?}",
+            o.id,
+            o.prompt_len,
+            o.tokens.len(),
+            o.ttft_s * 1e3,
+            o.tpot_s * 1e3,
+            text
+        );
+    }
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+/// Accuracy tables (Tables 2–4 analogues) on synthetic-statistics models.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let family = match args.get("family", "llama2").as_str() {
+        "llama2" => ModelFamily::Llama2,
+        "llama3" => ModelFamily::Llama3,
+        "mistral" => ModelFamily::Mistral,
+        "mixtral" => ModelFamily::Mixtral,
+        f => bail!("unknown family {f}"),
+    };
+    let ec = EvalConfig {
+        eval_samples: args.get_usize("samples", 512),
+        ..Default::default()
+    };
+    let schemes = paper_schemes(Fp8Format::E4M3Gaudi2);
+    for scale in ["tiny", "small", "base"] {
+        let cfg = match scale {
+            "tiny" => ModelConfig::synthetic_tiny(family),
+            "small" => ModelConfig::synthetic_small(family),
+            _ => ModelConfig::synthetic_base(family),
+        };
+        let rows = evaluate_model(&cfg, &schemes, &ec);
+        println!("{}", render_accuracy_table(&cfg.name, &rows));
+    }
+    Ok(())
+}
+
+/// Gaudi performance model queries (Tables 5–6 analogues).
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = E2eConfig::llama31_70b_paper();
+    match args.get("phase", "prefill").as_str() {
+        "prefill" => {
+            let seq = args.get_usize("seq", 2048);
+            let r = prefill_tflops(&cfg, seq);
+            println!(
+                "prefill seq={seq}: {:.1} TFLOPS, MFU {:.1}%, {:.1} ms",
+                r.tflops,
+                r.mfu * 100.0,
+                r.time_s * 1e3
+            );
+        }
+        "decode" => {
+            let b = args.get_usize("batch", 32);
+            let s = args.get_usize("seq", 2048);
+            let r = decode_step_tflops(&cfg, b, s);
+            println!(
+                "decode batch={b} seq={s}: {:.1} TFLOPS, {:.2} ms/step",
+                r.tflops,
+                r.time_s * 1e3
+            );
+        }
+        p => bail!("unknown phase {p}"),
+    }
+    Ok(())
+}
+
+/// Single-GEMM roofline query (Table 1 analogue).
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let m = args.get_usize("m", 4096);
+    let k = args.get_usize("k", m);
+    let n = args.get_usize("n", m);
+    let dev = match args.get("device", "gaudi2").as_str() {
+        "gaudi2" => Device::gaudi2(),
+        "gaudi3" => Device::gaudi3(),
+        d => bail!("unknown device {d}"),
+    };
+    for scaling in [
+        ScalingKind::PerTensorHwPow2,
+        ScalingKind::PerTensorSw,
+        ScalingKind::PerChannel,
+        ScalingKind::Bf16,
+    ] {
+        let r = gemm_time_s(&GemmConfig { m, k, n, scaling }, &dev);
+        println!(
+            "{:>28}: {:>7.1} TFLOPS  MFU {:>5.1}%  {}",
+            scaling.label(),
+            r.tflops,
+            r.mfu * 100.0,
+            if r.compute_bound { "compute-bound" } else { "memory-bound" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts", "artifacts"));
+    println!("gaudi-fp8 — FP8 inference reproduction (Intel Gaudi paper)");
+    match crate::coordinator::engine::ModelMeta::load(&dir) {
+        Ok(meta) => {
+            println!(
+                "model: vocab={} hidden={} layers={} heads={} kv_heads={} cache_t={}",
+                meta.vocab, meta.hidden, meta.layers, meta.heads, meta.kv_heads, meta.cache_t
+            );
+            println!("prefill variants: {:?}", meta.prefill_variants);
+            println!("decode  variants: {:?}", meta.decode_variants);
+        }
+        Err(e) => println!("artifacts not built: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_subcommand_and_flags() {
+        let a = Args::parse(&[
+            "serve".into(),
+            "--variant".into(),
+            "bf16".into(),
+            "--requests".into(),
+            "4".into(),
+            "--fast".into(),
+        ])
+        .unwrap();
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("variant", "x"), "bf16");
+        assert_eq!(a.get_usize("requests", 0), 4);
+        assert_eq!(a.get("fast", "false"), "true");
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn parse_rejects_bare_words() {
+        assert!(Args::parse(&["serve".into(), "oops".into()]).is_err());
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn simulate_and_gemm_run() {
+        cmd_simulate(&Args::parse(&["simulate".into(), "--phase".into(), "prefill".into()]).unwrap())
+            .unwrap();
+        cmd_simulate(&Args::parse(&["simulate".into(), "--phase".into(), "decode".into()]).unwrap())
+            .unwrap();
+        cmd_gemm(&Args::parse(&["gemm".into(), "--m".into(), "1024".into()]).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn eval_quick_runs() {
+        let args = Args::parse(&[
+            "eval".into(),
+            "--family".into(),
+            "llama2".into(),
+            "--samples".into(),
+            "32".into(),
+        ])
+        .unwrap();
+        cmd_eval(&args).unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! CLI plumbing for the `repro` binary (clap is unreachable offline; a
+//! small hand-rolled parser covers the subcommand surface).
+
+pub mod cli;
+pub mod workload;
+
+pub use cli::{run_cli, Args};
+pub use workload::{WorkloadConfig, WorkloadGen};

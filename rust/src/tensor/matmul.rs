@@ -1,0 +1,129 @@
+//! f32 matrix multiplication — the high-precision reference path.
+//!
+//! `matmul_nt` computes `X · Wᵀ` (Eq. 1) directly from the paper's layouts
+//! (X: N×C, W: C'×C) as row-dot-row, which is cache-friendly without a
+//! transpose. A blocked variant is used for larger shapes.
+
+use super::Tensor2;
+
+/// `A (m×k) · B (k×n) → (m×n)`.
+pub fn matmul(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    // Implemented via matmul_nt on Bᵀ to reuse the tuned kernel.
+    let bt = b.transpose();
+    matmul_nt(a, &bt)
+}
+
+/// `X (N×C) · Wᵀ → (N×C')` where `W` is `C'×C` — the paper's linear layer.
+/// f32 accumulation in f64 is NOT used: f32 matches the Gaudi FP32
+/// accumulator semantics.
+pub fn matmul_nt(x: &Tensor2, w: &Tensor2) -> Tensor2 {
+    assert_eq!(x.cols, w.cols, "inner dims (channels)");
+    let (n, c, k) = (x.rows, x.cols, w.rows);
+    let mut out = Tensor2::zeros(n, k);
+    // Register-blocked 1×4 over output columns; dot products over rows.
+    let kb = k / 4 * 4;
+    for i in 0..n {
+        let xi = x.row(i);
+        let orow = out.row_mut(i);
+        let mut j = 0;
+        while j < kb {
+            let (w0, w1, w2, w3) = (w.row(j), w.row(j + 1), w.row(j + 2), w.row(j + 3));
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for t in 0..c {
+                let xv = xi[t];
+                a0 += xv * w0[t];
+                a1 += xv * w1[t];
+                a2 += xv * w2[t];
+                a3 += xv * w3[t];
+            }
+            orow[j] = a0;
+            orow[j + 1] = a1;
+            orow[j + 2] = a2;
+            orow[j + 3] = a3;
+            j += 4;
+        }
+        while j < k {
+            let wj = w.row(j);
+            let mut acc = 0.0f32;
+            for t in 0..c {
+                acc += xi[t] * wj[t];
+            }
+            orow[j] = acc;
+            j += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+
+    fn naive_nt(x: &Tensor2, w: &Tensor2) -> Tensor2 {
+        let mut out = Tensor2::zeros(x.rows, w.rows);
+        for i in 0..x.rows {
+            for j in 0..w.rows {
+                let mut acc = 0.0f64;
+                for t in 0..x.cols {
+                    acc += (x.get(i, t) as f64) * (w.get(j, t) as f64);
+                }
+                out.set(i, j, acc as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn small_known_product() {
+        // X = [[1,2],[3,4]], W = [[1,1],[0,2]] → X·Wᵀ = [[3,4],[7,8]]
+        let x = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor2::from_vec(2, 2, vec![1.0, 1.0, 0.0, 2.0]);
+        let o = matmul_nt(&x, &w);
+        assert_eq!(o.data, vec![3.0, 4.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn matmul_vs_matmul_nt() {
+        let mut rng = XorShiftRng::new(6);
+        let x = Tensor2::randn(5, 8, 1.0, &mut rng);
+        let w = Tensor2::randn(7, 8, 1.0, &mut rng);
+        let a = matmul_nt(&x, &w);
+        let b = matmul(&x, &w.transpose());
+        for (p, q) in a.data.iter().zip(&b.data) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_odd_shapes() {
+        let mut rng = XorShiftRng::new(8);
+        for (n, c, k) in [(1, 1, 1), (3, 5, 7), (16, 33, 9), (8, 64, 6), (2, 7, 4)] {
+            let x = Tensor2::randn(n, c, 1.0, &mut rng);
+            let w = Tensor2::randn(k, c, 1.0, &mut rng);
+            let fast = matmul_nt(&x, &w);
+            let slow = naive_nt(&x, &w);
+            for (p, q) in fast.data.iter().zip(&slow.data) {
+                assert!((p - q).abs() <= 1e-4 * q.abs().max(1.0), "{n}x{c}x{k}: {p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_weight_is_identity() {
+        let mut rng = XorShiftRng::new(10);
+        let x = Tensor2::randn(4, 6, 1.0, &mut rng);
+        let eye = Tensor2::from_fn(6, 6, |r, c| if r == c { 1.0 } else { 0.0 });
+        let o = matmul_nt(&x, &eye);
+        assert_eq!(o.data, x.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn shape_mismatch_panics() {
+        let x = Tensor2::zeros(2, 3);
+        let w = Tensor2::zeros(2, 4);
+        matmul_nt(&x, &w);
+    }
+}

@@ -1,0 +1,240 @@
+//! Minimal dense 2-D f32 tensor.
+//!
+//! The quantization toolkit works on activations `X` of shape
+//! `(samples N × channels C)` and weights `W` of shape `(out C' × in C)`,
+//! matching the paper's notation (§3, Eq. 1). Row-major storage. Everything
+//! the paper's math needs — per-row/per-column abs-max reductions (Eqs.
+//! 8–10), element-wise row/column scaling (Eq. 6), transposed-B matmul
+//! (X·Wᵀ), Frobenius norms (Eq. 11) — lives here.
+
+mod matmul;
+pub mod stats;
+
+pub use matmul::{matmul, matmul_nt};
+
+use crate::util::rng::XorShiftRng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Gaussian tensor with given std — synthetic weights/activations.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut XorShiftRng) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.normal() * std)
+    }
+
+    /// Gaussian with heavy-tailed outlier *channels* (columns): each column
+    /// has probability `p_outlier_channel` of being scaled by
+    /// `outlier_scale`. Models the activation-outlier structure that makes
+    /// per-tensor/unit scaling fail on Mistral-class models (paper Table 4).
+    pub fn randn_outlier_cols(
+        rows: usize,
+        cols: usize,
+        std: f32,
+        p_outlier_channel: f64,
+        outlier_scale: f32,
+        rng: &mut XorShiftRng,
+    ) -> Self {
+        let col_scale: Vec<f32> = (0..cols)
+            .map(|_| {
+                if rng.next_f64() < p_outlier_channel {
+                    outlier_scale
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Self::from_fn(rows, cols, |_, c| rng.normal() * std * col_scale[c])
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Element-wise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor2 {
+        Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| f(*x)).collect(),
+        }
+    }
+
+    /// `self - other`, element-wise.
+    pub fn sub(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Multiply row `r` (all r) by `scales[r]` — `S · X` for diagonal S.
+    pub fn scale_rows(&self, scales: &[f32]) -> Tensor2 {
+        assert_eq!(scales.len(), self.rows);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let s = scales[r];
+            for v in out.row_mut(r) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    /// Multiply column `c` (all c) by `scales[c]` — `X · S` for diagonal S
+    /// (Eq. 6a: element-wise, not a matrix multiply).
+    pub fn scale_cols(&self, scales: &[f32]) -> Tensor2 {
+        assert_eq!(scales.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            for (v, s) in row.iter_mut().zip(scales) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm squared (Eq. 11).
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    /// Mean squared error vs another tensor.
+    pub fn mse(&self, other: &Tensor2) -> f64 {
+        self.sub(other).fro_norm_sq() / self.data.len() as f64
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+pub use stats::{abs_max, col_abs_max, row_abs_max};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_access() {
+        let t = Tensor2::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(t.get(1, 2), 12.0);
+        assert_eq!(t.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_shape() {
+        Tensor2::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = XorShiftRng::new(1);
+        let t = Tensor2::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().get(3, 2), t.get(2, 3));
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let t = Tensor2::from_fn(2, 2, |r, c| (1 + r * 2 + c) as f32); // [[1,2],[3,4]]
+        let rs = t.scale_rows(&[2.0, 10.0]);
+        assert_eq!(rs.data, vec![2.0, 4.0, 30.0, 40.0]);
+        let cs = t.scale_cols(&[2.0, 10.0]);
+        assert_eq!(cs.data, vec![2.0, 20.0, 6.0, 40.0]);
+    }
+
+    #[test]
+    fn scaling_inverse_recovers() {
+        let mut rng = XorShiftRng::new(2);
+        let t = Tensor2::randn(4, 6, 3.0, &mut rng);
+        let s: Vec<f32> = (0..6).map(|i| (i + 1) as f32).collect();
+        let inv: Vec<f32> = s.iter().map(|x| 1.0 / x).collect();
+        let back = t.scale_cols(&s).scale_cols(&inv);
+        for (a, b) in back.data.iter().zip(&t.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fro_and_mse() {
+        let a = Tensor2::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        assert_eq!(a.fro_norm_sq(), 9.0);
+        let b = Tensor2::from_vec(1, 3, vec![1.0, 2.0, 5.0]);
+        assert_eq!(a.mse(&b), 3.0);
+    }
+
+    #[test]
+    fn outlier_cols_have_outliers() {
+        let mut rng = XorShiftRng::new(3);
+        let t = Tensor2::randn_outlier_cols(256, 64, 1.0, 0.05, 50.0, &mut rng);
+        let col_max = stats::col_abs_max(&t);
+        let big = col_max.iter().filter(|m| **m > 20.0).count();
+        assert!(big >= 1, "expected some outlier channels");
+        let small = col_max.iter().filter(|m| **m < 10.0).count();
+        assert!(small > 48, "most channels should be ordinary");
+    }
+}

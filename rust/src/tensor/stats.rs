@@ -1,0 +1,89 @@
+//! Reductions used by calibration (paper Eqs. 8–10).
+
+use super::Tensor2;
+
+/// Per-tensor max-abs: `r_x = max |X|` (Eq. 8a / 10a).
+pub fn abs_max(t: &Tensor2) -> f32 {
+    t.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+}
+
+/// Per-row max-abs. For activations (N×C) this is the *per-sample* statistic
+/// (Eq. 9b); for weights (C'×C) it is the *per-output-channel* statistic
+/// (Eq. 10b).
+pub fn row_abs_max(t: &Tensor2) -> Vec<f32> {
+    (0..t.rows)
+        .map(|r| t.row(r).iter().fold(0.0f32, |m, x| m.max(x.abs())))
+        .collect()
+}
+
+/// Per-column max-abs. For activations this is the *per-channel* statistic
+/// (Eq. 8b); for weights the *per-input-channel* statistic (Eq. 10c).
+pub fn col_abs_max(t: &Tensor2) -> Vec<f32> {
+    let mut out = vec![0.0f32; t.cols];
+    for r in 0..t.rows {
+        for (m, x) in out.iter_mut().zip(t.row(r)) {
+            *m = m.max(x.abs());
+        }
+    }
+    out
+}
+
+/// Per-tensor mean absolute value — one of the statistics §3.1 lists.
+pub fn abs_mean(t: &Tensor2) -> f32 {
+    if t.data.is_empty() {
+        return 0.0;
+    }
+    (t.data.iter().map(|x| x.abs() as f64).sum::<f64>() / t.data.len() as f64) as f32
+}
+
+/// (min, max) — §3.1's min/max statistic.
+pub fn min_max(t: &Tensor2) -> (f32, f32) {
+    t.data.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), x| {
+        (lo.min(*x), hi.max(*x))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Tensor2 {
+        Tensor2::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5])
+    }
+
+    #[test]
+    fn abs_max_is_global() {
+        assert_eq!(abs_max(&t()), 5.0);
+    }
+
+    #[test]
+    fn row_abs_max_per_sample() {
+        assert_eq!(row_abs_max(&t()), vec![5.0, 4.0]);
+    }
+
+    #[test]
+    fn col_abs_max_per_channel() {
+        assert_eq!(col_abs_max(&t()), vec![3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn consistency_between_granularities() {
+        // max of per-row == max of per-col == per-tensor (Eqs. 8–10 coherence).
+        let mut rng = crate::util::rng::XorShiftRng::new(9);
+        let x = Tensor2::randn(17, 23, 2.0, &mut rng);
+        let rt = abs_max(&x);
+        let rows = row_abs_max(&x);
+        let cols = col_abs_max(&x);
+        let max_r = rows.iter().fold(0.0f32, |a, b| a.max(*b));
+        let max_c = cols.iter().fold(0.0f32, |a, b| a.max(*b));
+        assert_eq!(rt, max_r);
+        assert_eq!(rt, max_c);
+    }
+
+    #[test]
+    fn abs_mean_and_minmax() {
+        let x = Tensor2::from_vec(1, 4, vec![-2.0, 2.0, -2.0, 2.0]);
+        assert_eq!(abs_mean(&x), 2.0);
+        assert_eq!(min_max(&x), (-2.0, 2.0));
+    }
+}

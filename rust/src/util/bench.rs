@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Each `[[bench]]` target constructs a [`Bencher`], registers closures, and
+//! prints a fixed-format report: warmup, then `samples` timed runs, reporting
+//! median / p10 / p90 and derived throughput. Deliberately simple and
+//! deterministic in structure so `cargo bench` output is diffable.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median_ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_sample as f64
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new("bench")
+    }
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        // Allow a fast smoke mode for CI: BENCH_FAST=1 shrinks durations.
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Self {
+            warmup: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(200)
+            },
+            target_sample: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(100)
+            },
+            samples: if fast { 5 } else { 15 },
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    /// `work` is a human-readable unit count per iteration (e.g. FLOPs or
+    /// elements) used to derive throughput.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: how many iters fit in target_sample?
+        let start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            median: times[times.len() / 2],
+            p10: times[times.len() / 10],
+            p90: times[times.len() * 9 / 10],
+            iters_per_sample: iters,
+        };
+        println!(
+            "{:<52} {:>12.1} ns/iter  (p10 {:>10.1}, p90 {:>10.1}, {} iters/sample)",
+            res.name,
+            res.median_ns_per_iter(),
+            res.p10.as_nanos() as f64 / iters as f64,
+            res.p90.as_nanos() as f64 / iters as f64,
+            iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark and report throughput in `unit` (e.g. "GFLOP/s") where one
+    /// iteration performs `work_per_iter` units.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work_per_iter: f64,
+        unit: &str,
+        f: F,
+    ) {
+        let r = self.bench(name, f);
+        let per_sec = work_per_iter / (r.median_ns_per_iter() * 1e-9);
+        println!(
+            "{:<52} {:>12.3} {unit}",
+            format!("{}  [throughput]", r.name),
+            per_sec / 1e9
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// `std::hint::black_box` re-export so bench targets don't import std paths.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bencher::new("t");
+        let mut acc = 0u64;
+        b.bench("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median_ns_per_iter() >= 0.0);
+    }
+}

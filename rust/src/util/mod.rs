@@ -1,0 +1,71 @@
+//! Dependency-free utilities: deterministic RNG, a small property-testing
+//! helper (stand-in for `proptest`, which is unreachable in this offline
+//! environment), a micro-benchmark harness (stand-in for `criterion`), and a
+//! minimal JSON emitter for experiment records.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bencher;
+pub use rng::XorShiftRng;
+
+/// Format a float with engineering-style precision used across report tables.
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Render a monospace table (markdown-ish) from a header and rows.
+/// Used by every table/figure regenerator so output is uniform.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {c:<w$} |"));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &header.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&line(&sep, &widths));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "T",
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("## T"));
+        assert!(t.contains("| a   | bbbb |"));
+        assert!(t.contains("| 333 | 4    |"));
+    }
+
+    #[test]
+    fn fmt_f_precision() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+    }
+}

@@ -1,0 +1,138 @@
+//! Exhaustive and adversarial FP8 format tests — the numeric foundation
+//! everything else rests on.
+
+use gaudi_fp8::fp8::{
+    decode, encode_nearest_oracle, encode_rne, rescale_pow2, CastMode, DecodeTable, Fp8Format,
+};
+use gaudi_fp8::util::prop::interesting_f32;
+use gaudi_fp8::util::rng::XorShiftRng;
+
+/// Every f32 that is exactly half way between two representable values,
+/// plus epsilon above/below, for every format — the encoder's hardest
+/// inputs, enumerated exhaustively.
+#[test]
+fn all_neighbour_midpoints_and_offsets() {
+    for f in Fp8Format::ALL {
+        let t = DecodeTable::new(f);
+        let sp = t.sorted_positive();
+        for w in sp.windows(2) {
+            let (lo, hi) = (w[0].0, w[1].0);
+            if lo == hi {
+                continue;
+            }
+            let mid = lo + (hi - lo) / 2.0;
+            for (x, _label) in [
+                (mid, "mid"),
+                (f32::from_bits(mid.to_bits() - 1), "below"),
+                (f32::from_bits(mid.to_bits() + 1), "above"),
+            ] {
+                let fast = encode_rne(x, f, CastMode::SatFinite);
+                let slow = encode_nearest_oracle(x, &t, CastMode::SatFinite);
+                let (vf, vs) = (t.get(fast), t.get(slow));
+                assert!(
+                    vf == vs,
+                    "format {f:?} x={x} ({}): fast {vf} vs oracle {vs}",
+                    _label
+                );
+                // And negated.
+                let fast = encode_rne(-x, f, CastMode::SatFinite);
+                let slow = encode_nearest_oracle(-x, &t, CastMode::SatFinite);
+                assert_eq!(t.get(fast), t.get(slow), "format {f:?} x={}", -x);
+            }
+        }
+    }
+}
+
+/// One million random floats per format: bit-manip encoder ≡ oracle.
+/// (Scaled down in debug builds so plain `cargo test` stays fast.)
+#[test]
+fn encoder_fuzz_1m() {
+    let iters: u32 = if cfg!(debug_assertions) { 50_000 } else { 1_000_000 };
+    for f in Fp8Format::ALL {
+        let t = DecodeTable::new(f);
+        let mut rng = XorShiftRng::new(0xF0F0 + f as u64);
+        let scale = f.params().max_normal / 3.0;
+        for i in 0..iters {
+            let x = interesting_f32(&mut rng, scale);
+            for mode in [CastMode::SatFinite, CastMode::Ieee] {
+                let fast = encode_rne(x, f, mode);
+                let slow = encode_nearest_oracle(x, &t, mode);
+                let (vf, vs) = (t.get(fast), t.get(slow));
+                let same = (vf.is_nan() && vs.is_nan()) || vf == vs;
+                assert!(same, "format {f:?} mode {mode:?} i={i} x={x}: {vf} vs {vs}");
+            }
+        }
+    }
+}
+
+/// rescale_pow2 over the full (code × k) grid for all formats.
+#[test]
+fn rescale_pow2_full_grid() {
+    let ks: Vec<i32> = if cfg!(debug_assertions) {
+        vec![-40, -9, -4, -1, 0, 1, 4, 6, 40]
+    } else {
+        (-40..=40).collect()
+    };
+    for f in Fp8Format::ALL {
+        for &k in &ks {
+            for c in 0u16..=255 {
+                let c = c as u8;
+                let v = decode(c, f);
+                let fast = rescale_pow2(c, k, f);
+                if v.is_nan() {
+                    assert!(decode(fast, f).is_nan());
+                    continue;
+                }
+                if v.is_infinite() {
+                    assert_eq!(fast, c);
+                    continue;
+                }
+                let slow = encode_rne(v * (2.0f64.powi(k) as f32), f, CastMode::SatFinite);
+                let (vf, vs) = (decode(fast, f), decode(slow, f));
+                assert!(
+                    vf == vs,
+                    "format {f:?} k={k} code {c:#04x} ({v}): {vf} vs {vs}"
+                );
+            }
+        }
+    }
+}
+
+/// Monotonicity: x ≤ y ⇒ decode(encode(x)) ≤ decode(encode(y)).
+/// Rounding must never invert order — a property quantized comparisons
+/// (e.g. argmax over quantized logits) depend on.
+#[test]
+fn encode_is_monotone() {
+    for f in Fp8Format::ALL {
+        let t = DecodeTable::new(f);
+        let mut rng = XorShiftRng::new(0xACE);
+        let scale = f.params().max_normal / 2.0;
+        for _ in 0..100_000 {
+            let a = interesting_f32(&mut rng, scale);
+            let b = interesting_f32(&mut rng, scale);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let vlo = t.get(encode_rne(lo, f, CastMode::SatFinite));
+            let vhi = t.get(encode_rne(hi, f, CastMode::SatFinite));
+            assert!(vlo <= vhi, "format {f:?}: {lo} → {vlo}, {hi} → {vhi}");
+        }
+    }
+}
+
+/// The three formats' ranges nest as the paper describes.
+#[test]
+fn format_range_nesting() {
+    let g2 = Fp8Format::E4M3Gaudi2.params().max_normal;
+    let g3 = Fp8Format::E4M3.params().max_normal;
+    let e5 = Fp8Format::E5M2.params().max_normal;
+    assert_eq!(g2, 240.0);
+    assert_eq!(g3, 448.0);
+    assert_eq!(e5, 57344.0);
+    assert!(g2 < g3 && g3 < e5);
+    // Precision ordering is the inverse: E4M3 resolves 1.0's neighbourhood
+    // finer than E5M2.
+    let t4 = DecodeTable::new(Fp8Format::E4M3);
+    let t5 = DecodeTable::new(Fp8Format::E5M2);
+    let next4 = t4.get(encode_rne(1.0, Fp8Format::E4M3, CastMode::SatFinite) + 1);
+    let next5 = t5.get(encode_rne(1.0, Fp8Format::E5M2, CastMode::SatFinite) + 1);
+    assert!(next4 - 1.0 < next5 - 1.0);
+}

@@ -1,0 +1,150 @@
+//! Cross-module pipeline tests: calibration → scales → quantized GEMM →
+//! eval, exercising the §3.3 recipe end to end on the Rust side.
+
+use gaudi_fp8::calib::{ActObserver, MeasurementStore};
+use gaudi_fp8::fp8::Fp8Format;
+use gaudi_fp8::gaudisim::{Device, Generation};
+use gaudi_fp8::model::config::{ModelConfig, ModelFamily};
+use gaudi_fp8::model::layers::enumerate_linears;
+use gaudi_fp8::quant::{QuantScheme, QuantizedLinear, ScaleSet, WeightScaling};
+use gaudi_fp8::tensor::Tensor2;
+use gaudi_fp8::util::rng::XorShiftRng;
+
+/// The full §3.3 recipe: calibrate on one split, quantize, evaluate on a
+/// disjoint split, pick the fastest scheme within the accuracy budget.
+#[test]
+fn recipe_selects_scheme_within_budget() {
+    let mut rng = XorShiftRng::new(99);
+    let c = 256;
+    let w = Tensor2::randn(128, c, 0.04, &mut rng);
+    let x_cal = Tensor2::randn(64, c, 1.0, &mut rng);
+    let x_eval = Tensor2::randn(64, c, 1.0, &mut rng);
+
+    let mut obs = ActObserver::new(c);
+    obs.observe(&x_cal);
+    let stats = obs.finalize();
+
+    let fmt = Fp8Format::E4M3Gaudi2;
+    // Schemes ordered by descending modelled throughput (Table 1 ordering:
+    // HW pow2 > per-tensor SW > per-channel).
+    let candidates = [
+        ("hw_pow2", QuantScheme::per_tensor_hw(fmt)),
+        ("per_tensor", QuantScheme::per_tensor(fmt)),
+        ("per_channel", QuantScheme::per_channel(fmt)),
+    ];
+    let budget = 0.06; // relative error budget (the paper's "-1%" analogue)
+    let mut selected = None;
+    for (name, scheme) in candidates {
+        let q = QuantizedLinear::prepare(&w, Some(&stats), scheme);
+        let err = q.relative_error(&w, &x_eval);
+        if err < budget {
+            selected = Some((name, err));
+            break;
+        }
+    }
+    let (name, err) = selected.expect("no scheme met the budget");
+    // With well-behaved activations the FASTEST scheme already passes —
+    // exactly the paper's conclusion that simple per-tensor (HW) scaling
+    // suffices.
+    assert_eq!(name, "hw_pow2", "expected the fastest scheme, got {name} ({err})");
+}
+
+/// Measurement files round-trip through JSON and feed scale computation.
+#[test]
+fn measurement_store_to_scales() {
+    let mut rng = XorShiftRng::new(5);
+    let cfg = ModelConfig::synthetic_tiny(ModelFamily::Llama2);
+    let mut store = MeasurementStore::new();
+    for op in enumerate_linears(&cfg) {
+        if op.kind.is_edge() {
+            continue;
+        }
+        let x = Tensor2::randn(16, op.in_features, 1.0, &mut rng);
+        let mut obs = ActObserver::new(op.in_features);
+        obs.observe(&x);
+        store.insert(&op.qualified_name(), obs.finalize());
+    }
+    let dir = std::env::temp_dir().join("gaudi_fp8_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("meas.json");
+    store.save(&path).unwrap();
+    let loaded = MeasurementStore::load(&path).unwrap();
+    assert_eq!(store, loaded);
+    // Every entry produces a usable per-tensor scale.
+    for (_, st) in &loaded.entries {
+        let s = gaudi_fp8::quant::act_scale_per_tensor(st.r_x, 1.0, Fp8Format::E4M3Gaudi2);
+        assert!(s.is_finite() && s > 0.0);
+    }
+}
+
+/// Gaudi2 vs Gaudi3 format difference visible through the whole pipeline:
+/// activations beyond ±240 clip on Gaudi 2's E4M3 but not Gaudi 3's.
+#[test]
+fn gaudi3_range_advantage_end_to_end() {
+    let mut rng = XorShiftRng::new(17);
+    let c = 128;
+    let w = Tensor2::randn(32, c, 0.05, &mut rng);
+    // Activations with max ≈ 3.5σ·100 ≈ 350: inside E4M3's ±448, outside
+    // E4M3-Gaudi2's ±240.
+    let x = Tensor2::randn(32, c, 1.0, &mut rng).map(|v| v * 100.0);
+    let mut obs = ActObserver::new(c);
+    obs.observe(&x);
+    let stats = obs.finalize();
+
+    // UNIT scale (no rescaling): Gaudi2 clips hard, Gaudi3 less.
+    let g2 = QuantizedLinear::prepare(&w, Some(&stats), QuantScheme::unit_scale(Fp8Format::E4M3Gaudi2));
+    let g3 = QuantizedLinear::prepare(&w, Some(&stats), QuantScheme::unit_scale(Fp8Format::E4M3));
+    let (e2, e3) = (g2.relative_error(&w, &x), g3.relative_error(&w, &x));
+    assert!(e3 < e2, "gaudi3 {e3} should beat gaudi2 {e2} on 300-range acts");
+    // With calibrated per-tensor scaling both recover.
+    let g2s = QuantizedLinear::prepare(&w, Some(&stats), QuantScheme::per_tensor(Fp8Format::E4M3Gaudi2));
+    assert!(g2s.relative_error(&w, &x) < e2 / 2.0);
+}
+
+/// MSE scale search constrained to the HW-accelerated sets (§2.4): Gaudi 3's
+/// denser pow2 grid can only help.
+#[test]
+fn hw_scale_sets_gaudi3_at_least_as_good() {
+    let mut rng = XorShiftRng::new(23);
+    let w = Tensor2::randn(64, 256, 0.007, &mut rng); // small weights
+    let x = Tensor2::randn(32, 256, 1.0, &mut rng);
+    let mut obs = ActObserver::new(256);
+    obs.observe(&x);
+    let stats = obs.finalize();
+    let fmt = Fp8Format::E4M3Gaudi2;
+    let mk = |gen| QuantScheme {
+        weight: WeightScaling::MsePerTensor(ScaleSet::HwAccelerated(gen)),
+        ..QuantScheme::per_tensor(fmt)
+    };
+    let g2 = QuantizedLinear::prepare(&w, Some(&stats), mk(Generation::Gaudi2));
+    let g3 = QuantizedLinear::prepare(&w, Some(&stats), mk(Generation::Gaudi3));
+    let (e2, e3) = (g2.relative_error(&w, &x), g3.relative_error(&w, &x));
+    assert!(
+        e3 <= e2 * 1.001,
+        "gaudi3 HW set {e3} should be ≤ gaudi2 HW set {e2}"
+    );
+}
+
+/// Capacity + roofline agree with the serving layer's block accounting.
+#[test]
+fn capacity_model_consistent_with_block_allocator() {
+    use gaudi_fp8::coordinator::BlockAllocator;
+    use gaudi_fp8::gaudisim::MemoryModel;
+    let cfg = ModelConfig::llama31_70b();
+    let mm = MemoryModel::new(Device::gaudi2(), cfg.clone());
+    let kv_budget = mm.capacity_bytes() - mm.weight_bytes_fp8() - 0.5e9;
+    let alloc = BlockAllocator::from_capacity(kv_budget, cfg.kv_bytes_per_token(1), 16);
+    // Table 6 frontier: batch 16 × seq 8192 fits, batch 32 × 8192 does not.
+    let mut a = alloc.clone();
+    for _ in 0..16 {
+        a.allocate(8192).unwrap();
+    }
+    let mut b = alloc.clone();
+    let mut ok = 0;
+    for _ in 0..32 {
+        if b.allocate(8192).is_ok() {
+            ok += 1;
+        }
+    }
+    assert!(ok < 32, "32×8192 must exceed the KV budget (got {ok})");
+}

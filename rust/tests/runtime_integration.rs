@@ -1,0 +1,220 @@
+//! Integration: AOT artifacts (python/jax/pallas) executed from Rust must
+//! reproduce the python-computed expectations (artifacts/selfcheck.json)
+//! and agree with the native Rust scaled-GEMM implementation.
+//!
+//! Requires `make artifacts`; tests no-op (with a notice) when absent.
+
+use std::path::{Path, PathBuf};
+
+use gaudi_fp8::fp8::Fp8Format;
+use gaudi_fp8::gemm::{quantize_matrix, scaled_gemm, DiagScale, QuantRounding};
+use gaudi_fp8::quant::{act_scale_per_tensor, weight_scale_per_channel, weight_scale_per_tensor};
+use gaudi_fp8::runtime::{Artifact, Runtime, TensorIn};
+use gaudi_fp8::tensor::Tensor2;
+use gaudi_fp8::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn load_f32(path: &Path) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn selfcheck(dir: &Path) -> Json {
+    Json::parse(&std::fs::read_to_string(dir.join("selfcheck.json")).unwrap()).unwrap()
+}
+
+fn gemm_shape(dir: &Path) -> (usize, usize, usize) {
+    let meta = Json::parse(&std::fs::read_to_string(dir.join("meta.json")).unwrap()).unwrap();
+    let v: Vec<usize> = meta
+        .get("gemm_shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as usize)
+        .collect();
+    (v[0], v[1], v[2])
+}
+
+#[test]
+fn gemm_artifacts_match_python_selfcheck() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (m, k, n) = gemm_shape(&dir);
+    let x = load_f32(&dir.join("gemm_x.f32"));
+    let w = load_f32(&dir.join("gemm_w.f32"));
+    let check = selfcheck(&dir);
+    for variant in ["bf16", "fp8_pt", "fp8_pc", "unit"] {
+        let art = Artifact::load(
+            &rt,
+            variant,
+            &dir.join(format!("gemm_{variant}.hlo.txt")),
+        )
+        .unwrap();
+        let outs = art
+            .run(&[
+                TensorIn::f32(&[m, k], x.clone()),
+                TensorIn::f32(&[n, k], w.clone()),
+            ])
+            .unwrap();
+        let expect = check.get("gemm").unwrap().get(variant).unwrap();
+        let first16 = expect.get("first16").unwrap().as_f32_vec().unwrap();
+        let l2 = expect.get("l2").unwrap().as_f64().unwrap();
+        let got = &outs[0].data;
+        for (i, (a, b)) in got.iter().zip(&first16).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "{variant}[{i}]: rust {a} vs python {b}"
+            );
+        }
+        let got_l2 = (got.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt();
+        assert!(
+            (got_l2 - l2).abs() / l2 < 1e-5,
+            "{variant}: l2 {got_l2} vs {l2}"
+        );
+    }
+}
+
+#[test]
+fn gemm_fp8_artifact_matches_native_rust_gemm() {
+    // The same Eq. 2 computed two completely independent ways: the Pallas
+    // kernel lowered to HLO and executed by PJRT, and the native Rust
+    // gemm crate. Per-tensor dynamic scales on both sides.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (m, k, n) = gemm_shape(&dir);
+    let x = load_f32(&dir.join("gemm_x.f32"));
+    let w = load_f32(&dir.join("gemm_w.f32"));
+    let fmt = Fp8Format::E4M3Gaudi2;
+
+    let xt = Tensor2::from_vec(m, k, x.clone());
+    let wt = Tensor2::from_vec(n, k, w.clone());
+    let s_x = act_scale_per_tensor(gaudi_fp8::tensor::abs_max(&xt), 1.0, fmt);
+    // per-tensor weights
+    let s_w = weight_scale_per_tensor(gaudi_fp8::tensor::abs_max(&wt), fmt);
+    let xq = quantize_matrix(&xt, &[s_x], &[], fmt, QuantRounding::Nearest);
+    let wq = quantize_matrix(&wt, &[s_w], &[], fmt, QuantRounding::Nearest);
+    let native = scaled_gemm(
+        &xq,
+        &wq,
+        &DiagScale::Scalar(s_x),
+        &DiagScale::Scalar(s_w),
+        false,
+    );
+
+    let art = Artifact::load(&rt, "gemm_fp8_pt", &dir.join("gemm_fp8_pt.hlo.txt")).unwrap();
+    let outs = art
+        .run(&[TensorIn::f32(&[m, k], x), TensorIn::f32(&[n, k], w)])
+        .unwrap();
+    let mut max_rel = 0.0f64;
+    let scale = native
+        .data
+        .iter()
+        .fold(0.0f32, |a, b| a.max(b.abs()))
+        .max(1e-6) as f64;
+    for (a, b) in outs[0].data.iter().zip(&native.data) {
+        max_rel = max_rel.max(((a - b).abs() as f64) / scale);
+    }
+    // Same math, different accumulation tiling → tiny float divergence.
+    assert!(max_rel < 1e-5, "pallas-vs-rust max rel diff {max_rel}");
+
+    // Per-channel variant against native per-channel.
+    let s_wc = weight_scale_per_channel(&gaudi_fp8::tensor::row_abs_max(&wt), fmt);
+    let wqc = quantize_matrix(&wt, &s_wc, &[], fmt, QuantRounding::Nearest);
+    let native_pc = scaled_gemm(
+        &xq,
+        &wqc,
+        &DiagScale::Scalar(s_x),
+        &DiagScale::Vector(s_wc),
+        false,
+    );
+    let art = Artifact::load(&rt, "gemm_fp8_pc", &dir.join("gemm_fp8_pc.hlo.txt")).unwrap();
+    let x2 = load_f32(&dir.join("gemm_x.f32"));
+    let w2 = load_f32(&dir.join("gemm_w.f32"));
+    let outs = art
+        .run(&[TensorIn::f32(&[m, k], x2), TensorIn::f32(&[n, k], w2)])
+        .unwrap();
+    let mut max_rel = 0.0f64;
+    for (a, b) in outs[0].data.iter().zip(&native_pc.data) {
+        max_rel = max_rel.max(((a - b).abs() as f64) / scale);
+    }
+    assert!(max_rel < 1e-5, "pc pallas-vs-rust max rel diff {max_rel}");
+}
+
+#[test]
+fn prefill_artifacts_match_python_selfcheck() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let check = selfcheck(&dir);
+    let tokens: Vec<i32> = check
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let params = gaudi_fp8::runtime::load_params_bin(&dir.join("weights_tiny.bin")).unwrap();
+    let param_ins: Vec<TensorIn> = params
+        .iter()
+        .map(|p| TensorIn::f32(&p.dims, p.data.clone()))
+        .collect();
+
+    for variant in ["bf16", "unit", "fp8_pt", "fp8_pc", "fp8_dyn"] {
+        let art = Artifact::load(
+            &rt,
+            variant,
+            &dir.join(format!("prefill_{variant}_b1_s16.hlo.txt")),
+        )
+        .unwrap();
+        let mut ins = param_ins.clone();
+        ins.push(TensorIn::i32(&[1, tokens.len()], tokens.clone()));
+        let outs = art.run(&ins).unwrap();
+        let expect = check.get("prefill").unwrap().get(variant).unwrap();
+        let first16 = expect.get("first16").unwrap().as_f32_vec().unwrap();
+        for (i, (a, b)) in outs[0].data.iter().zip(&first16).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-4 * b.abs().max(1.0),
+                "{variant} logits[{i}]: rust {a} vs python {b}"
+            );
+        }
+        let l2 = expect.get("l2").unwrap().as_f64().unwrap();
+        let got_l2 = outs[0]
+            .data
+            .iter()
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            (got_l2 - l2).abs() / l2 < 1e-4,
+            "{variant}: l2 {got_l2} vs python {l2}"
+        );
+    }
+}
+
+#[test]
+fn quantized_variants_stay_close_to_bf16_reference() {
+    // End-to-end accuracy sanity on the REAL trained model: fp8 logits
+    // should track the bf16 logits (the paper's <1% degradation regime).
+    let Some(dir) = artifacts_dir() else { return };
+    let check = selfcheck(&dir);
+    let pre = check.get("prefill").unwrap();
+    let bf16 = pre.get("bf16").unwrap().get("l2").unwrap().as_f64().unwrap();
+    for variant in ["fp8_pt", "fp8_pc", "fp8_dyn"] {
+        let l2 = pre.get(variant).unwrap().get("l2").unwrap().as_f64().unwrap();
+        let rel = (l2 - bf16).abs() / bf16;
+        assert!(rel < 0.2, "{variant}: l2 {l2} vs bf16 {bf16} ({rel:.3})");
+    }
+}
