@@ -1,0 +1,75 @@
+//! Fig D (beyond the paper): fleet scaling — aggregate throughput and
+//! TTFT/TPOT percentiles for 1→8 simulated Gaudi 2 replicas under each
+//! routing policy, on a fixed open-loop workload per replica count.
+//!
+//! Emits one JSON row per (replicas, policy) cell, then a SHAPE check:
+//! total fleet throughput must scale ≥3× from 1 → 4 replicas.
+
+use gaudi_fp8::router::{FleetConfig, FleetRouter, RoutePolicy, SimReplica, SimReplicaConfig};
+use gaudi_fp8::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig};
+
+fn run(replicas: usize, policy: RoutePolicy, requests: usize) -> (f64, String) {
+    let mut router = FleetRouter::new(FleetConfig {
+        policy,
+        queue_capacity: 4096,
+    });
+    for i in 0..replicas {
+        router.add_replica(Box::new(
+            SimReplica::new(&format!("gaudi2-sim{i}"), SimReplicaConfig::synthetic_tiny())
+                .expect("sim replica"),
+        ));
+    }
+    let open = OpenLoopConfig {
+        workload: WorkloadConfig {
+            requests,
+            prompt_len_min: 16,
+            prompt_len_max: 256,
+            max_new_min: 16,
+            max_new_max: 16,
+            seed: 7,
+        },
+        pattern: ArrivalPattern::Burst,
+    };
+    let report = router.run_open_loop(open.generate()).expect("fleet run");
+    assert_eq!(
+        report.outputs.len(),
+        requests,
+        "lost requests at replicas={replicas} policy={}",
+        policy.label()
+    );
+    (
+        report.metrics.throughput_tok_s(),
+        report.metrics.json_row(replicas, policy.label(), requests),
+    )
+}
+
+fn main() {
+    const REQUESTS: usize = 128;
+    let policies = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstandingTokens,
+        RoutePolicy::SessionAffinity { prefix_tokens: 16 },
+    ];
+    let mut scale_1 = 0.0f64;
+    let mut scale_4 = 0.0f64;
+    for replicas in [1usize, 2, 4, 8] {
+        for policy in policies {
+            let (tput, row) = run(replicas, policy, REQUESTS);
+            println!("{row}");
+            if policy == RoutePolicy::LeastOutstandingTokens {
+                if replicas == 1 {
+                    scale_1 = tput;
+                }
+                if replicas == 4 {
+                    scale_4 = tput;
+                }
+            }
+        }
+    }
+    let ratio = if scale_1 > 0.0 { scale_4 / scale_1 } else { 0.0 };
+    println!(
+        "SHAPE: least-outstanding throughput 1→4 replicas scales {ratio:.2}x \
+         ({scale_1:.0} → {scale_4:.0} tok/s) {}",
+        if ratio >= 3.0 { "✓" } else { "✗ (expected ≥3x)" }
+    );
+}

@@ -50,6 +50,21 @@ impl AdmissionQueue {
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
+
+    /// Prompt + generation-budget tokens across everything queued — the
+    /// load signal routing policies use.
+    pub fn queued_tokens(&self) -> usize {
+        self.queue
+            .iter()
+            .map(|r| r.prompt.len() + r.max_new_tokens)
+            .sum()
+    }
+
+    /// Remove and return every queued request (used when a replica is
+    /// marked down and its backlog must be re-routed).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
 }
 
 /// One engine iteration's work: at most one prefill plus one decode group.
@@ -90,6 +105,18 @@ mod tests {
         assert!(!q.push(Request::new(2, vec![1], 1)));
         assert_eq!(q.rejected(), 1);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn queued_tokens_and_drain() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(Request::new(0, vec![1, 2, 3], 5));
+        q.push(Request::new(1, vec![1], 2));
+        assert_eq!(q.queued_tokens(), 3 + 5 + 1 + 2);
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_empty());
+        assert_eq!(q.queued_tokens(), 0);
     }
 
     #[test]

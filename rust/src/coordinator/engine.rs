@@ -23,6 +23,7 @@ use super::kvcache::KvStore;
 use super::metrics::ServeMetrics;
 use super::request::{Request, RequestId, RequestOutput};
 use super::scheduler::{SchedulePolicy, Scheduler};
+use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
 use crate::util::json::Json;
 
@@ -238,6 +239,8 @@ impl Engine {
                     tpot_s: 0.0,
                     total_s: 0.0,
                 });
+                // Counted so completion totals agree with emitted outputs.
+                self.metrics.requests_completed += 1;
                 return Ok(true);
             }
             return Ok(false);
@@ -435,6 +438,86 @@ impl Engine {
             });
             self.metrics.requests_completed += 1;
         }
+    }
+}
+
+/// The fleet router drives engines through [`ReplicaHandle`] — a narrow
+/// interface extracted from the inherent methods above, so replicas can be
+/// real PJRT engines or gaudisim-backed simulations interchangeably.
+impl ReplicaHandle for Engine {
+    fn label(&self) -> String {
+        format!("engine[{}]", self.cfg.variant)
+    }
+
+    /// Wall-clock replica: elapsed seconds since construction.
+    fn clock_s(&self) -> f64 {
+        self.metrics.started.elapsed().as_secs_f64()
+    }
+
+    fn advance_clock_to(&mut self, _t_s: f64) {
+        // Wall clocks advance themselves.
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn outstanding_tokens(&self) -> usize {
+        let resident: usize = self
+            .active
+            .values()
+            .map(|a| a.prompt_len + a.max_new_tokens.saturating_sub(a.generated.len()))
+            .sum();
+        self.queue.queued_tokens() + resident
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.cfg.queue_capacity
+    }
+
+    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
+        if self.scheduler.prefill_bucket(prompt_len).is_none() {
+            return Admission::PromptTooLong;
+        }
+        if prompt_len + max_new_tokens > self.meta.cache_t {
+            return Admission::KvWouldOom;
+        }
+        Admission::Accept
+    }
+
+    fn submit(&mut self, req: Request, _arrival_s: f64) -> bool {
+        Engine::submit(self, req)
+    }
+
+    fn step(&mut self) -> Result<bool> {
+        Engine::step(self)
+    }
+
+    fn take_finished(&mut self) -> Vec<RequestOutput> {
+        Engine::take_finished(self)
+    }
+
+    fn evict_queued(&mut self) -> Vec<Request> {
+        self.queue.drain_all()
+    }
+
+    fn abort_active(&mut self) -> Vec<RequestId> {
+        let slots: Vec<usize> = self.active.keys().copied().collect();
+        let mut ids = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let a = self.active.remove(&slot).expect("slot key just listed");
+            self.kv.free_slot(slot);
+            ids.push(a.id);
+        }
+        ids
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
     }
 }
 

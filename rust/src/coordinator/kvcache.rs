@@ -23,11 +23,32 @@ impl BlockAllocator {
     }
 
     /// Capacity sized from device HBM: bytes available for KV / bytes per
-    /// block.
-    pub fn from_capacity(kv_bytes_budget: f64, bytes_per_token: usize, block_tokens: usize) -> Self {
+    /// block. Degenerate geometry (zero-sized blocks, non-finite or
+    /// too-small budgets) is an error — a 0-block allocator would silently
+    /// reject every request.
+    pub fn from_capacity(
+        kv_bytes_budget: f64,
+        bytes_per_token: usize,
+        block_tokens: usize,
+    ) -> Result<Self> {
+        if bytes_per_token == 0 || block_tokens == 0 {
+            bail!(
+                "degenerate KV block geometry: bytes_per_token={bytes_per_token}, \
+                 block_tokens={block_tokens} (both must be > 0)"
+            );
+        }
+        if !kv_bytes_budget.is_finite() || kv_bytes_budget < 0.0 {
+            bail!("invalid KV byte budget {kv_bytes_budget}");
+        }
         let block_bytes = (bytes_per_token * block_tokens) as f64;
-        let blocks = (kv_bytes_budget / block_bytes).floor().max(0.0) as usize;
-        Self::new(blocks, block_tokens)
+        let blocks = (kv_bytes_budget / block_bytes).floor() as usize;
+        if blocks == 0 {
+            bail!(
+                "KV budget {kv_bytes_budget:.0} B below one {block_bytes:.0}-B block \
+                 ({block_tokens} tokens × {bytes_per_token} B/token) — model does not fit"
+            );
+        }
+        Ok(Self::new(blocks, block_tokens))
     }
 
     pub fn blocks_for(&self, tokens: usize) -> usize {
@@ -237,10 +258,21 @@ mod tests {
     #[test]
     fn from_capacity_sizing() {
         // Llama3.1-70B fp8 KV: 163840 B/token; 20 GB budget, 16-token blocks.
-        let a = BlockAllocator::from_capacity(20e9, 163_840, 16);
+        let a = BlockAllocator::from_capacity(20e9, 163_840, 16).unwrap();
         assert_eq!(a.total_blocks, (20e9 / (163_840.0 * 16.0)) as usize);
         // matches Table 6: batch 16 × 8192 ≈ 131k tokens needs 8192 blocks.
         assert!(a.total_blocks > 7000);
+    }
+
+    #[test]
+    fn from_capacity_rejects_degenerate_geometry() {
+        assert!(BlockAllocator::from_capacity(20e9, 0, 16).is_err());
+        assert!(BlockAllocator::from_capacity(20e9, 163_840, 0).is_err());
+        assert!(BlockAllocator::from_capacity(f64::NAN, 163_840, 16).is_err());
+        assert!(BlockAllocator::from_capacity(-1.0, 163_840, 16).is_err());
+        // Budget smaller than a single block: error, not a 0-block allocator.
+        let e = BlockAllocator::from_capacity(1000.0, 163_840, 16).unwrap_err();
+        assert!(format!("{e:#}").contains("does not fit"), "{e:#}");
     }
 
     #[test]

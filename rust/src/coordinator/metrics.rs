@@ -3,6 +3,10 @@
 
 use std::time::Instant;
 
+/// Retained samples per [`LatencyStat`] — bounds memory while keeping
+/// percentiles meaningful; shared by `record` and `merge`.
+const RESERVOIR: usize = 4096;
+
 /// Streaming latency statistic (count / mean / min / max / p50-ish via
 /// reservoir of recent values).
 #[derive(Clone, Debug)]
@@ -36,10 +40,10 @@ impl LatencyStat {
         self.sum_s += seconds;
         self.min_s = self.min_s.min(seconds);
         self.max_s = self.max_s.max(seconds);
-        if self.recent.len() < 4096 {
+        if self.recent.len() < RESERVOIR {
             self.recent.push(seconds);
         } else {
-            let i = (self.count as usize) % 4096;
+            let i = (self.count as usize) % RESERVOIR;
             self.recent[i] = seconds;
         }
     }
@@ -53,26 +57,70 @@ impl LatencyStat {
     }
 
     pub fn p50_s(&self) -> f64 {
-        if self.recent.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.recent.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[v.len() / 2]
+        self.percentile_s(0.5)
     }
 
     pub fn p95_s(&self) -> f64 {
+        self.percentile_s(0.95)
+    }
+
+    /// Arbitrary quantile over the retained samples (`q` in [0, 1],
+    /// nearest-rank on the sorted reservoir).
+    pub fn percentile_s(&self, q: f64) -> f64 {
         if self.recent.is_empty() {
             return 0.0;
         }
         let mut v = self.recent.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[(v.len() * 95 / 100).min(v.len() - 1)]
+        let idx = ((v.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.percentile_s(0.99)
+    }
+
+    /// Fold another stat into this one. Exact for count/sum/min/max; the
+    /// percentile reservoir concatenates both sides and, past the
+    /// retention cap, downsamples evenly. NOTE: chaining pairwise merges
+    /// repeatedly re-downsamples the earlier sides — merging many stats at
+    /// once should use [`LatencyStat::merge_many`], which downsamples once.
+    pub fn merge(&mut self, other: &LatencyStat) {
+        *self = LatencyStat::merge_many([&*self, other]);
+    }
+
+    /// Merge any number of stats with a single downsampling pass, so every
+    /// source's reservoir stays proportionally represented in the merged
+    /// percentiles.
+    pub fn merge_many<'a, I>(stats: I) -> LatencyStat
+    where
+        I: IntoIterator<Item = &'a LatencyStat>,
+    {
+        let mut out = LatencyStat::new();
+        let mut combined: Vec<f64> = Vec::new();
+        for s in stats {
+            out.count += s.count;
+            out.sum_s += s.sum_s;
+            if s.count > 0 {
+                out.min_s = out.min_s.min(s.min_s);
+                out.max_s = out.max_s.max(s.max_s);
+            }
+            combined.extend_from_slice(&s.recent);
+        }
+        if combined.len() > RESERVOIR {
+            let stride = combined.len() as f64 / RESERVOIR as f64;
+            out.recent = (0..RESERVOIR)
+                .map(|i| combined[(i as f64 * stride) as usize])
+                .collect();
+        } else {
+            out.recent = combined;
+        }
+        out
     }
 }
 
 /// Engine-level counters.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeMetrics {
     pub started: Instant,
     pub requests_completed: u64,
@@ -127,6 +175,32 @@ impl ServeMetrics {
         }
     }
 
+    /// Fold another engine's counters into this one. For merging a whole
+    /// fleet, prefer [`ServeMetrics::merge_many`] (single reservoir
+    /// downsampling pass).
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        *self = ServeMetrics::merge_many(&[&*self, other]);
+    }
+
+    /// Merge every replica's metrics into one fleet-level view.
+    pub fn merge_many(all: &[&ServeMetrics]) -> ServeMetrics {
+        let mut out = ServeMetrics::new();
+        for m in all {
+            out.started = out.started.min(m.started);
+            out.requests_completed += m.requests_completed;
+            out.prompt_tokens += m.prompt_tokens;
+            out.generated_tokens += m.generated_tokens;
+            out.prefill_steps += m.prefill_steps;
+            out.decode_steps += m.decode_steps;
+            out.decode_batch_sum += m.decode_batch_sum;
+        }
+        out.ttft = LatencyStat::merge_many(all.iter().map(|m| &m.ttft));
+        out.tpot = LatencyStat::merge_many(all.iter().map(|m| &m.tpot));
+        out.prefill_time = LatencyStat::merge_many(all.iter().map(|m| &m.prefill_time));
+        out.decode_time = LatencyStat::merge_many(all.iter().map(|m| &m.decode_time));
+        out
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} gen_tokens={} tok/s={:.1} ttft_mean={:.1}ms ttft_p95={:.1}ms \
@@ -167,6 +241,57 @@ mod tests {
             s.record(i as f64 / 100.0);
         }
         assert!(s.p95_s() >= 0.9);
+    }
+
+    #[test]
+    fn percentile_and_p99() {
+        let mut s = LatencyStat::new();
+        for i in 0..100 {
+            s.record((i + 1) as f64);
+        }
+        assert_eq!(s.percentile_s(0.0), 1.0);
+        assert_eq!(s.percentile_s(1.0), 100.0);
+        assert!(s.p99_s() >= 99.0);
+        assert!(LatencyStat::new().p99_s() == 0.0);
+    }
+
+    #[test]
+    fn latency_merge_is_exact_on_moments() {
+        let mut a = LatencyStat::new();
+        let mut b = LatencyStat::new();
+        for v in [0.1, 0.4] {
+            a.record(v);
+        }
+        for v in [0.2, 0.8] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert!((a.sum_s - 1.5).abs() < 1e-12);
+        assert_eq!(a.min_s, 0.1);
+        assert_eq!(a.max_s, 0.8);
+        // merging an empty stat is a no-op
+        let before = a.count;
+        a.merge(&LatencyStat::new());
+        assert_eq!(a.count, before);
+        assert_eq!(a.min_s, 0.1);
+    }
+
+    #[test]
+    fn serve_metrics_merge_sums_counters() {
+        let mut a = ServeMetrics::new();
+        a.generated_tokens = 10;
+        a.requests_completed = 1;
+        a.ttft.record(0.5);
+        let mut b = ServeMetrics::new();
+        b.generated_tokens = 20;
+        b.requests_completed = 3;
+        b.ttft.record(0.25);
+        a.merge(&b);
+        assert_eq!(a.generated_tokens, 30);
+        assert_eq!(a.requests_completed, 4);
+        assert_eq!(a.ttft.count, 2);
+        assert_eq!(a.ttft.min_s, 0.25);
     }
 
     #[test]

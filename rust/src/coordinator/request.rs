@@ -13,6 +13,10 @@ pub struct Request {
     /// Stop generation at this token (e.g. b'.' for the byte-LM demo).
     pub stop_token: Option<i32>,
     pub arrival: Instant,
+    /// Multi-turn conversation id: the fleet router's session-affinity
+    /// policy keeps every turn of a session on the replica that already
+    /// holds its KV history.
+    pub session: Option<u64>,
 }
 
 impl Request {
@@ -23,7 +27,13 @@ impl Request {
             max_new_tokens,
             stop_token: None,
             arrival: Instant::now(),
+            session: None,
         }
+    }
+
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session = Some(session);
+        self
     }
 }
 
@@ -69,6 +79,8 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt.len(), 3);
         assert!(r.stop_token.is_none());
+        assert!(r.session.is_none());
+        assert_eq!(Request::new(8, vec![1], 4).with_session(42).session, Some(42));
     }
 
     #[test]

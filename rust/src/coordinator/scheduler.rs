@@ -47,18 +47,26 @@ impl Scheduler {
     }
 
     /// Smallest compiled decode batch ≥ `active`, or the largest if the
-    /// group must be split (caller then runs multiple groups).
+    /// group must be split (caller then runs multiple groups). With no
+    /// compiled buckets at all, degrade to the exact group size instead of
+    /// panicking (shape-polymorphic backends have no bucket list).
     pub fn decode_bucket(&self, active: usize) -> usize {
         self.decode_batches
             .iter()
             .copied()
             .find(|b| *b >= active)
-            .unwrap_or_else(|| *self.decode_batches.last().unwrap())
+            .or_else(|| self.decode_batches.last().copied())
+            .unwrap_or_else(|| active.max(1))
     }
 
     /// Partition active slots into artifact-sized decode groups.
     pub fn decode_groups(&self, slots: &[usize]) -> Vec<Vec<usize>> {
-        let max_b = *self.decode_batches.last().unwrap();
+        let max_b = self
+            .decode_batches
+            .last()
+            .copied()
+            .unwrap_or_else(|| slots.len())
+            .max(1);
         let mut groups = Vec::new();
         for chunk in slots.chunks(max_b) {
             groups.push(chunk.to_vec());
@@ -149,6 +157,61 @@ mod tests {
         let s = sched(SchedulePolicy::PrefillFirst);
         let mut q = AdmissionQueue::new(8);
         q.push(Request::new(1, vec![0; 300], 4));
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan(&q, &mut kv);
+        assert!(plan.prefill.is_none());
+    }
+
+    #[test]
+    fn prompt_longer_than_every_bucket_stays_queued() {
+        // A prompt that exceeds even the largest compiled bucket must not be
+        // admitted under either interleave policy, and must not consume a
+        // KV slot.
+        for policy in [
+            SchedulePolicy::PrefillFirst,
+            SchedulePolicy::DecodeFirst { min_decode: 4 },
+        ] {
+            let s = sched(policy);
+            let mut q = AdmissionQueue::new(8);
+            q.push(Request::new(1, vec![0; 129], 4));
+            let mut kv = KvStore::new(2, 2, 160, 2, 4);
+            let plan = s.plan(&q, &mut kv);
+            assert!(plan.prefill.is_none(), "{policy:?}");
+            assert!(kv.active_slots().is_empty(), "slot leaked under {policy:?}");
+            assert_eq!(q.len(), 1, "request must remain queued");
+        }
+    }
+
+    #[test]
+    fn split_group_path_above_largest_batch() {
+        // 19 active slots with max compiled batch 8 → groups of 8, 8, 3;
+        // each group buckets to the smallest compiled batch that fits.
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let slots: Vec<usize> = (0..19).collect();
+        let groups = s.decode_groups(&slots);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].len(), 8);
+        assert_eq!(groups[1].len(), 8);
+        assert_eq!(groups[2].len(), 3);
+        assert_eq!(s.decode_bucket(groups[2].len()), 4);
+        // Slots survive the partition exactly once, in order.
+        let flat: Vec<usize> = groups.into_iter().flatten().collect();
+        assert_eq!(flat, slots);
+    }
+
+    #[test]
+    fn empty_bucket_lists_do_not_panic() {
+        let s = Scheduler::new(SchedulePolicy::PrefillFirst, vec![], vec![]);
+        assert_eq!(s.prefill_bucket(1), None);
+        assert_eq!(s.prefill_bucket(4096), None);
+        // No compiled decode buckets: degrade to the exact group size.
+        assert_eq!(s.decode_bucket(0), 1);
+        assert_eq!(s.decode_bucket(3), 3);
+        assert_eq!(s.decode_groups(&[]), Vec::<Vec<usize>>::new());
+        assert_eq!(s.decode_groups(&[7, 8, 9]), vec![vec![7, 8, 9]]);
+        // Planning with empty buckets: nothing admissible, nothing planned.
+        let mut q = AdmissionQueue::new(4);
+        q.push(Request::new(1, vec![0; 8], 4));
         let mut kv = KvStore::new(2, 2, 160, 2, 4);
         let plan = s.plan(&q, &mut kv);
         assert!(plan.prefill.is_none());

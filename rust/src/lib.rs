@@ -23,6 +23,10 @@
 //!   `python/compile/aot.py`.
 //! * [`coordinator`] — the serving layer: continuous batcher, KV-cache block
 //!   allocator, prefill/decode scheduler, metrics.
+//! * [`router`] — the fleet layer: multi-replica load balancing (replica
+//!   registry with health/drain state, routing policies, bounded admission
+//!   with typed rejects, fleet-merged metrics) over [`coordinator::Engine`]
+//!   replicas or gaudisim-backed simulated replicas.
 //! * [`eval`] — accuracy harness (perplexity, KL, top-1 agreement) emitting
 //!   the paper's Δ% tables.
 //! * [`server`] — CLI plumbing for the `repro` binary.
@@ -40,6 +44,7 @@ pub mod gaudisim;
 pub mod gemm;
 pub mod model;
 pub mod quant;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

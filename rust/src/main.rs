@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   serve     — run the serving engine on a synthetic workload (artifacts
 //!               required: `make artifacts`)
+//!   fleet     — multi-replica fleet simulation: N simulated Gaudi engines
+//!               behind the load-balancing router (no artifacts needed)
 //!   eval      — Tables 2–4 accuracy analogues on synthetic-statistics models
 //!   simulate  — Gaudi performance model queries (Tables 5–6)
 //!   gemm      — single-GEMM roofline query (Table 1)

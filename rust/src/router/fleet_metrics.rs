@@ -1,0 +1,168 @@
+//! Fleet-aggregated serving metrics: per-replica snapshots plus a merged
+//! view (TTFT/TPOT percentiles over every replica's samples, total token
+//! throughput over the fleet makespan).
+
+use super::registry::{ReplicaRegistry, ReplicaState};
+use crate::coordinator::{LatencyStat, ServeMetrics};
+
+/// One replica's end-of-run snapshot.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub id: usize,
+    pub label: String,
+    pub state: ReplicaState,
+    pub dispatched: u64,
+    pub completed: u64,
+    pub generated_tokens: u64,
+    pub clock_s: f64,
+    pub ttft: LatencyStat,
+    pub tpot: LatencyStat,
+}
+
+/// Aggregated fleet metrics for a finished (or in-progress) run.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    pub replicas: Vec<ReplicaReport>,
+    /// Every replica's counters and latency samples folded together.
+    pub merged: ServeMetrics,
+    pub rejected: usize,
+    /// Deepest the fleet backlog queue got.
+    pub queued_peak: usize,
+    /// Latest replica clock — the virtual wall time of the whole run.
+    pub makespan_s: f64,
+}
+
+impl FleetMetrics {
+    pub fn collect(registry: &ReplicaRegistry, rejected: usize, queued_peak: usize) -> Self {
+        let mut replicas = Vec::with_capacity(registry.len());
+        let mut makespan: f64 = 0.0;
+        for e in registry.entries() {
+            let m = e.handle.metrics();
+            let clock = e.handle.clock_s();
+            makespan = makespan.max(clock);
+            replicas.push(ReplicaReport {
+                id: e.id,
+                label: e.handle.label(),
+                state: e.state,
+                dispatched: e.dispatched,
+                completed: m.requests_completed,
+                generated_tokens: m.generated_tokens,
+                clock_s: clock,
+                ttft: m.ttft.clone(),
+                tpot: m.tpot.clone(),
+            });
+        }
+        // One n-way merge (not chained pairwise) so every replica's latency
+        // reservoir is proportionally represented in merged percentiles.
+        let all: Vec<&ServeMetrics> = registry.entries().iter().map(|e| e.handle.metrics()).collect();
+        let merged = ServeMetrics::merge_many(&all);
+        FleetMetrics {
+            replicas,
+            merged,
+            rejected,
+            queued_peak,
+            makespan_s: makespan,
+        }
+    }
+
+    /// Fleet token throughput over the run's (virtual) makespan.
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.merged.generated_tokens as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Human-readable per-replica + merged summary.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for r in &self.replicas {
+            s.push_str(&format!(
+                "  replica {:>2} [{}] {:?}: dispatched={} completed={} tokens={} \
+                 ttft p50={:.2}ms p99={:.2}ms clock={:.3}s\n",
+                r.id,
+                r.label,
+                r.state,
+                r.dispatched,
+                r.completed,
+                r.generated_tokens,
+                r.ttft.p50_s() * 1e3,
+                r.ttft.p99_s() * 1e3,
+                r.clock_s,
+            ));
+        }
+        s.push_str(&format!(
+            "fleet: completed={} rejected={} queued_peak={} tokens={} makespan={:.3}s \
+             throughput={:.1} tok/s ttft p50={:.2}ms p95={:.2}ms p99={:.2}ms \
+             tpot p50={:.3}ms p99={:.3}ms",
+            self.merged.requests_completed,
+            self.rejected,
+            self.queued_peak,
+            self.merged.generated_tokens,
+            self.makespan_s,
+            self.throughput_tok_s(),
+            self.merged.ttft.p50_s() * 1e3,
+            self.merged.ttft.p95_s() * 1e3,
+            self.merged.ttft.p99_s() * 1e3,
+            self.merged.tpot.p50_s() * 1e3,
+            self.merged.tpot.p99_s() * 1e3,
+        ));
+        s
+    }
+
+    /// One JSON object per (replicas, policy) cell — the fig_d bench rows.
+    pub fn json_row(&self, replicas: usize, policy: &str, requests: usize) -> String {
+        format!(
+            "{{\"fig\":\"fig_d_fleet_scaling\",\"replicas\":{},\"policy\":\"{}\",\
+             \"requests\":{},\"completed\":{},\"rejected\":{},\"generated_tokens\":{},\
+             \"makespan_s\":{:.6},\"throughput_tok_s\":{:.3},\
+             \"ttft_p50_ms\":{:.4},\"ttft_p95_ms\":{:.4},\"ttft_p99_ms\":{:.4},\
+             \"tpot_p50_ms\":{:.5},\"tpot_p95_ms\":{:.5},\"tpot_p99_ms\":{:.5}}}",
+            replicas,
+            policy,
+            requests,
+            self.merged.requests_completed,
+            self.rejected,
+            self.merged.generated_tokens,
+            self.makespan_s,
+            self.throughput_tok_s(),
+            self.merged.ttft.p50_s() * 1e3,
+            self.merged.ttft.p95_s() * 1e3,
+            self.merged.ttft.p99_s() * 1e3,
+            self.merged.tpot.p50_s() * 1e3,
+            self.merged.tpot.p95_s() * 1e3,
+            self.merged.tpot.p99_s() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn empty_registry_yields_zeroes() {
+        let reg = ReplicaRegistry::new();
+        let fm = FleetMetrics::collect(&reg, 0, 0);
+        assert!(fm.replicas.is_empty());
+        assert_eq!(fm.merged.generated_tokens, 0);
+        assert_eq!(fm.throughput_tok_s(), 0.0);
+        assert!(fm.report().contains("fleet:"));
+    }
+
+    #[test]
+    fn json_row_parses_back() {
+        let reg = ReplicaRegistry::new();
+        let fm = FleetMetrics::collect(&reg, 2, 5);
+        let row = fm.json_row(4, "least_outstanding", 64);
+        let j = Json::parse(&row).expect("bench row must be valid JSON");
+        assert_eq!(j.get("replicas").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            j.get("policy").and_then(Json::as_str),
+            Some("least_outstanding")
+        );
+        assert_eq!(j.get("rejected").and_then(Json::as_f64), Some(2.0));
+    }
+}

@@ -1,0 +1,623 @@
+//! L4 fleet router — multi-replica load balancing over engine replicas.
+//!
+//! The paper's throughput numbers (Tables 5–6) are per device; serving
+//! heavy traffic means many engine replicas behind a router. This module
+//! provides that missing layer:
+//!
+//! * [`ReplicaHandle`] — the narrow interface the router drives engines
+//!   through, extracted from [`crate::coordinator::Engine`] (which
+//!   implements it) and also implemented by [`SimReplica`], a virtual-time
+//!   replica backed by the [`crate::gaudisim`] performance model.
+//! * [`ReplicaRegistry`] — fleet membership with Healthy/Draining/Down
+//!   state.
+//! * [`RoutePolicy`] — round-robin, least-outstanding-tokens, and
+//!   session/prefix affinity.
+//! * [`FleetQueue`] — bounded fleet-level backlog with typed
+//!   [`RejectReason`]s (backpressure, fleet-wide KV OOM, oversized prompt).
+//! * [`FleetMetrics`] — per-replica and merged TTFT/TPOT percentiles and
+//!   throughput.
+//!
+//! [`FleetRouter::run_open_loop`] is a discrete-event simulation driver:
+//! replicas advance independent virtual clocks, and the router always steps
+//! the busy replica whose clock is earliest, delivering arrivals in
+//! timestamp order. With wall-clock engines the same loop degenerates to
+//! eager dispatch.
+
+pub mod fleet_metrics;
+pub mod policy;
+pub mod queue;
+pub mod registry;
+pub mod sim;
+
+pub use fleet_metrics::{FleetMetrics, ReplicaReport};
+pub use policy::{affinity_key, fnv1a, PolicyState, ReplicaView, RoutePolicy};
+pub use queue::{Admission, FleetQueue, RejectReason, TimedRequest};
+pub use registry::{ReplicaEntry, ReplicaRegistry, ReplicaState};
+pub use sim::{SimReplica, SimReplicaConfig};
+
+use anyhow::Result;
+
+use crate::coordinator::{Request, RequestId, RequestOutput, ServeMetrics};
+
+/// The narrow interface the router drives a replica through.
+///
+/// Implemented by the real [`crate::coordinator::Engine`] (wall-clock) and
+/// by [`SimReplica`] (virtual-clock). All times are seconds on the fleet
+/// clock; a wall-clock replica reports elapsed time since construction and
+/// ignores clock jumps.
+pub trait ReplicaHandle {
+    fn label(&self) -> String;
+
+    /// Current position on the fleet clock.
+    fn clock_s(&self) -> f64;
+
+    /// Jump an *idle* replica's clock forward to `t_s` (never backwards);
+    /// busy and wall-clock replicas ignore this.
+    fn advance_clock_to(&mut self, t_s: f64);
+
+    fn queued(&self) -> usize;
+
+    fn active(&self) -> usize;
+
+    fn has_work(&self) -> bool {
+        self.queued() + self.active() > 0
+    }
+
+    /// Prompt + remaining-generation tokens queued or resident — the load
+    /// signal for token-weighted balancing.
+    fn outstanding_tokens(&self) -> usize;
+
+    /// Local admission-queue bound.
+    fn queue_capacity(&self) -> usize;
+
+    /// Would a submit succeed right now? Provided: feasibility plus room
+    /// in the local queue.
+    fn can_admit_now(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
+        match self.could_ever_admit(prompt_len, max_new_tokens) {
+            Admission::Accept => {}
+            other => return other,
+        }
+        if self.queued() >= self.queue_capacity() {
+            return Admission::QueueFull;
+        }
+        Admission::Accept
+    }
+
+    /// Could this replica serve the request if it were completely idle?
+    /// (`KvWouldOom`/`PromptTooLong` here mean "never".)
+    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission;
+
+    /// Hand over a request that arrived at `arrival_s` on the fleet clock.
+    /// Virtual-clock replicas measure TTFT from `arrival_s`; wall-clock
+    /// engines ignore it and measure from the request's own creation
+    /// `Instant` (for them, dispatch is effectively immediate anyway).
+    fn submit(&mut self, req: Request, arrival_s: f64) -> bool;
+
+    /// One scheduling iteration; `Ok(false)` = nothing to do.
+    fn step(&mut self) -> Result<bool>;
+
+    fn take_finished(&mut self) -> Vec<RequestOutput>;
+
+    /// Remove and return not-yet-started requests (for re-routing when the
+    /// replica is marked down).
+    fn evict_queued(&mut self) -> Vec<Request>;
+
+    /// Abandon in-flight (already prefilled) requests, freeing their KV;
+    /// returns their ids so the router can account for the loss.
+    fn abort_active(&mut self) -> Vec<RequestId>;
+
+    fn metrics(&self) -> &ServeMetrics;
+}
+
+/// Fleet-level configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub policy: RoutePolicy,
+    /// Fleet backlog bound; beyond it requests are rejected (`QueueFull`).
+    pub queue_capacity: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            policy: RoutePolicy::LeastOutstandingTokens,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// A request the fleet refused, with the reason (the "error response").
+#[derive(Clone, Debug)]
+pub struct RejectedRequest {
+    pub id: RequestId,
+    pub reason: RejectReason,
+}
+
+/// Everything a finished [`FleetRouter::run_open_loop`] produced.
+pub struct FleetRunReport {
+    pub outputs: Vec<RequestOutput>,
+    pub rejected: Vec<RejectedRequest>,
+    pub metrics: FleetMetrics,
+}
+
+enum TryRoute {
+    Dispatched(usize),
+    NotNow,
+    Reject(RejectReason),
+}
+
+/// The fleet router: registry + policy + bounded backlog + event loop.
+pub struct FleetRouter {
+    pub registry: ReplicaRegistry,
+    policy: RoutePolicy,
+    policy_state: PolicyState,
+    queue: FleetQueue,
+    rejected: Vec<RejectedRequest>,
+}
+
+impl FleetRouter {
+    pub fn new(cfg: FleetConfig) -> Self {
+        Self {
+            registry: ReplicaRegistry::new(),
+            policy: cfg.policy,
+            policy_state: PolicyState::default(),
+            queue: FleetQueue::new(cfg.queue_capacity),
+            rejected: Vec::new(),
+        }
+    }
+
+    pub fn add_replica(&mut self, handle: Box<dyn ReplicaHandle>) -> usize {
+        self.registry.register(handle)
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn rejected(&self) -> &[RejectedRequest] {
+        &self.rejected
+    }
+
+    /// Health transition. Marking a replica `Down` evicts its queued
+    /// backlog into the fleet queue for re-routing (each evicted request
+    /// re-enters with `arrival_s` = the replica's clock at eviction, so a
+    /// virtual-clock replica's measured TTFT restarts from the failover
+    /// point; wall-clock engines keep measuring from the request's
+    /// original creation). In-flight requests cannot be migrated — their
+    /// KV lived on the dead replica — so they are reported as
+    /// `ReplicaFailed` rejections rather than silently lost.
+    pub fn set_replica_state(&mut self, id: usize, state: ReplicaState) {
+        if state == ReplicaState::Down {
+            let at = self.registry.handle(id).clock_s();
+            let evicted = self.registry.handle_mut(id).evict_queued();
+            for req in evicted {
+                self.backlog_or_reject(TimedRequest::new(req, at));
+            }
+            for lost in self.registry.handle_mut(id).abort_active() {
+                self.rejected.push(RejectedRequest {
+                    id: lost,
+                    reason: RejectReason::ReplicaFailed { replica: id },
+                });
+            }
+        }
+        self.registry.set_state(id, state);
+    }
+
+    /// Backlog the request, or reject it with `QueueFull` when the fleet
+    /// queue is at capacity.
+    fn backlog_or_reject(&mut self, tr: TimedRequest) {
+        let id = tr.req.id;
+        if self.queue.push(tr).is_some() {
+            self.rejected.push(RejectedRequest {
+                id,
+                reason: RejectReason::QueueFull {
+                    capacity: self.queue.capacity(),
+                },
+            });
+        }
+    }
+
+    pub fn drain_replica(&mut self, id: usize) {
+        self.set_replica_state(id, ReplicaState::Draining);
+    }
+
+    /// Try to place a request on a replica right now.
+    fn try_route(&mut self, tr: &TimedRequest) -> TryRoute {
+        let plen = tr.req.prompt.len();
+        let mnew = tr.req.max_new_tokens;
+        let mut views: Vec<ReplicaView> = Vec::new();
+        let mut healthy = 0usize;
+        let mut too_long = 0usize;
+        let mut oom = 0usize;
+        for e in self.registry.entries() {
+            if e.state != ReplicaState::Healthy {
+                continue;
+            }
+            healthy += 1;
+            match e.handle.could_ever_admit(plen, mnew) {
+                Admission::PromptTooLong => {
+                    too_long += 1;
+                    continue;
+                }
+                Admission::KvWouldOom => {
+                    oom += 1;
+                    continue;
+                }
+                _ => {}
+            }
+            views.push(ReplicaView {
+                id: e.id,
+                outstanding_tokens: e.handle.outstanding_tokens(),
+                admissible: e.handle.can_admit_now(plen, mnew) == Admission::Accept,
+            });
+        }
+        if healthy == 0 {
+            return TryRoute::Reject(RejectReason::NoReplicas);
+        }
+        if views.is_empty() {
+            // No healthy replica could serve this request even when idle.
+            return TryRoute::Reject(if too_long >= oom {
+                RejectReason::PromptTooLong { prompt_len: plen }
+            } else {
+                RejectReason::KvExhausted {
+                    needed_tokens: plen + mnew,
+                }
+            });
+        }
+        let n = self.registry.len();
+        match self
+            .policy
+            .pick(&mut self.policy_state, &views, n, &tr.req)
+        {
+            Some(id) => {
+                if self
+                    .registry
+                    .handle_mut(id)
+                    .submit(tr.req.clone(), tr.arrival_s)
+                {
+                    self.registry.count_dispatch(id);
+                    TryRoute::Dispatched(id)
+                } else {
+                    TryRoute::NotNow
+                }
+            }
+            None => TryRoute::NotNow,
+        }
+    }
+
+    /// Admit an arriving request: dispatch, backlog, or reject. A
+    /// non-empty backlog means older requests are still waiting, so new
+    /// arrivals join it behind them rather than overtaking (FIFO fairness;
+    /// an infeasible request is rejected when it reaches the head).
+    pub fn admit(&mut self, tr: TimedRequest) {
+        if !self.queue.is_empty() {
+            self.backlog_or_reject(tr);
+            return;
+        }
+        match self.try_route(&tr) {
+            TryRoute::Dispatched(_) => {}
+            TryRoute::Reject(reason) => self.rejected.push(RejectedRequest {
+                id: tr.req.id,
+                reason,
+            }),
+            TryRoute::NotNow => self.backlog_or_reject(tr),
+        }
+    }
+
+    /// Move backlogged requests onto replicas, FIFO, stopping at the first
+    /// that still cannot be placed (no overtaking).
+    fn drain_backlog(&mut self) {
+        while let Some(tr) = self.queue.pop() {
+            match self.try_route(&tr) {
+                TryRoute::Dispatched(_) => {}
+                TryRoute::Reject(reason) => {
+                    self.rejected.push(RejectedRequest {
+                        id: tr.req.id,
+                        reason,
+                    });
+                }
+                TryRoute::NotNow => {
+                    self.queue.push_front(tr);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Drive an open-loop workload (requests stamped with arrival times) to
+    /// completion as a discrete-event simulation: always step the busy
+    /// replica with the earliest clock; deliver arrivals in timestamp
+    /// order; re-route the backlog whenever capacity frees.
+    pub fn run_open_loop(&mut self, arrivals: Vec<TimedRequest>) -> Result<FleetRunReport> {
+        let mut arrivals: std::collections::VecDeque<TimedRequest> = {
+            let mut v = arrivals;
+            v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            v.into()
+        };
+        let mut outputs: Vec<RequestOutput> = Vec::new();
+        loop {
+            // Deliver every arrival due at or before the next fleet event.
+            if let Some((_, frontier)) = self.registry.min_busy_clock() {
+                while arrivals.front().map_or(false, |a| a.arrival_s <= frontier) {
+                    let tr = arrivals.pop_front().expect("front was checked");
+                    self.admit(tr);
+                }
+            }
+            self.drain_backlog();
+            // Step the earliest busy replica (admissions above may have
+            // created an earlier one).
+            if let Some((id, _)) = self.registry.min_busy_clock() {
+                let done = {
+                    let h = self.registry.handle_mut(id);
+                    h.step()?;
+                    h.take_finished()
+                };
+                outputs.extend(done);
+                continue;
+            }
+            // Whole fleet idle: jump to the next arrival, if any.
+            if let Some(tr) = arrivals.pop_front() {
+                self.registry.advance_idle_clocks(tr.arrival_s);
+                self.admit(tr);
+                continue;
+            }
+            // Idle, no arrivals left. Anything still backlogged faces the
+            // fleet at maximum free capacity: place it or reject it.
+            if !self.queue.is_empty() {
+                for tr in self.queue.drain_all() {
+                    match self.try_route(&tr) {
+                        TryRoute::Dispatched(_) => {}
+                        TryRoute::Reject(reason) => self.rejected.push(RejectedRequest {
+                            id: tr.req.id,
+                            reason,
+                        }),
+                        TryRoute::NotNow => self.rejected.push(RejectedRequest {
+                            id: tr.req.id,
+                            reason: RejectReason::Unroutable,
+                        }),
+                    }
+                }
+                continue;
+            }
+            break;
+        }
+        let metrics = FleetMetrics::collect(&self.registry, self.rejected.len(), self.queue.peak());
+        Ok(FleetRunReport {
+            outputs,
+            rejected: std::mem::take(&mut self.rejected),
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic fake replica: every queued request costs
+    /// `step_cost_s` of virtual time and finishes in one step.
+    struct MockReplica {
+        label: String,
+        clock: f64,
+        queue: Vec<(Request, f64)>,
+        step_cost_s: f64,
+        max_tokens: usize,
+        queue_cap: usize,
+        finished: Vec<RequestOutput>,
+        metrics: ServeMetrics,
+    }
+
+    impl MockReplica {
+        fn new(label: &str, step_cost_s: f64) -> Self {
+            Self {
+                label: label.to_string(),
+                clock: 0.0,
+                queue: Vec::new(),
+                step_cost_s,
+                max_tokens: 1_000_000,
+                queue_cap: 1_000_000,
+                finished: Vec::new(),
+                metrics: ServeMetrics::new(),
+            }
+        }
+    }
+
+    impl ReplicaHandle for MockReplica {
+        fn label(&self) -> String {
+            self.label.clone()
+        }
+        fn clock_s(&self) -> f64 {
+            self.clock
+        }
+        fn advance_clock_to(&mut self, t_s: f64) {
+            if self.queue.is_empty() {
+                self.clock = self.clock.max(t_s);
+            }
+        }
+        fn queued(&self) -> usize {
+            self.queue.len()
+        }
+        fn active(&self) -> usize {
+            0
+        }
+        fn outstanding_tokens(&self) -> usize {
+            self.queue
+                .iter()
+                .map(|(r, _)| r.prompt.len() + r.max_new_tokens)
+                .sum()
+        }
+        fn queue_capacity(&self) -> usize {
+            self.queue_cap
+        }
+        fn could_ever_admit(&self, prompt_len: usize, max_new: usize) -> Admission {
+            if prompt_len + max_new > self.max_tokens {
+                return Admission::KvWouldOom;
+            }
+            Admission::Accept
+        }
+        fn submit(&mut self, req: Request, arrival_s: f64) -> bool {
+            if self.queue.len() >= self.queue_cap {
+                return false;
+            }
+            self.queue.push((req, arrival_s));
+            true
+        }
+        fn step(&mut self) -> Result<bool> {
+            if self.queue.is_empty() {
+                return Ok(false);
+            }
+            let (req, arrival_s) = self.queue.remove(0);
+            self.clock = self.clock.max(arrival_s) + self.step_cost_s;
+            let ttft = self.clock - arrival_s;
+            self.metrics.ttft.record(ttft);
+            self.metrics.generated_tokens += req.max_new_tokens as u64;
+            self.metrics.requests_completed += 1;
+            self.finished.push(RequestOutput {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: vec![0; req.max_new_tokens],
+                ttft_s: ttft,
+                tpot_s: 0.0,
+                total_s: ttft,
+            });
+            Ok(true)
+        }
+        fn take_finished(&mut self) -> Vec<RequestOutput> {
+            std::mem::take(&mut self.finished)
+        }
+        fn evict_queued(&mut self) -> Vec<Request> {
+            self.queue.drain(..).map(|(r, _)| r).collect()
+        }
+        fn abort_active(&mut self) -> Vec<RequestId> {
+            Vec::new()
+        }
+        fn metrics(&self) -> &ServeMetrics {
+            &self.metrics
+        }
+    }
+
+    fn fleet(n: usize, policy: RoutePolicy) -> FleetRouter {
+        let mut r = FleetRouter::new(FleetConfig {
+            policy,
+            queue_capacity: 1024,
+        });
+        for i in 0..n {
+            r.add_replica(Box::new(MockReplica::new(&format!("mock{i}"), 0.1)));
+        }
+        r
+    }
+
+    fn burst(n: u64) -> Vec<TimedRequest> {
+        (0..n)
+            .map(|i| TimedRequest::new(Request::new(i, vec![1; 8], 4), 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let mut r = fleet(4, RoutePolicy::RoundRobin);
+        let report = r.run_open_loop(burst(16)).unwrap();
+        assert_eq!(report.outputs.len(), 16);
+        assert!(report.rejected.is_empty());
+        for rep in &report.metrics.replicas {
+            assert_eq!(rep.dispatched, 4, "uneven spread: {:?}", report.metrics.replicas);
+        }
+    }
+
+    #[test]
+    fn empty_fleet_rejects_everything() {
+        let mut r = fleet(0, RoutePolicy::RoundRobin);
+        let report = r.run_open_loop(burst(3)).unwrap();
+        assert!(report.outputs.is_empty());
+        assert_eq!(report.rejected.len(), 3);
+        assert!(report
+            .rejected
+            .iter()
+            .all(|x| x.reason == RejectReason::NoReplicas));
+    }
+
+    #[test]
+    fn kv_exhausted_rejected_with_reason() {
+        let mut r = FleetRouter::new(FleetConfig::default());
+        let mut m = MockReplica::new("small", 0.1);
+        m.max_tokens = 15; // burst requests need 8+4=12; the big one 20+4=24
+        r.add_replica(Box::new(m));
+        let mut arrivals = burst(2);
+        arrivals.push(TimedRequest::new(Request::new(99, vec![1; 20], 4), 0.0));
+        let report = r.run_open_loop(arrivals).unwrap();
+        assert_eq!(report.outputs.len(), 2);
+        assert_eq!(report.rejected.len(), 1);
+        assert_eq!(
+            report.rejected[0].reason,
+            RejectReason::KvExhausted { needed_tokens: 24 }
+        );
+    }
+
+    #[test]
+    fn drained_replica_gets_no_new_work_but_finishes() {
+        let mut r = fleet(2, RoutePolicy::RoundRobin);
+        // Seed replica 0 with work, then drain it.
+        r.admit(TimedRequest::new(Request::new(100, vec![1; 8], 4), 0.0));
+        assert_eq!(r.registry.dispatched(0), 1);
+        r.drain_replica(0);
+        let report = r.run_open_loop(burst(6)).unwrap();
+        // All 6 new requests went to replica 1; replica 0 finished its one.
+        assert_eq!(report.outputs.len(), 7);
+        assert_eq!(r.registry.dispatched(0), 1);
+        assert_eq!(r.registry.dispatched(1), 6);
+        assert_eq!(r.registry.state(0), ReplicaState::Draining);
+    }
+
+    #[test]
+    fn down_replica_backlog_is_rerouted() {
+        let mut r = fleet(2, RoutePolicy::RoundRobin);
+        r.admit(TimedRequest::new(Request::new(0, vec![1; 8], 4), 0.0));
+        r.admit(TimedRequest::new(Request::new(1, vec![1; 8], 4), 0.0));
+        // Both replicas hold one queued request; replica 0 dies.
+        r.set_replica_state(0, ReplicaState::Down);
+        let report = r.run_open_loop(Vec::new()).unwrap();
+        assert_eq!(report.outputs.len(), 2, "request 0 must fail over");
+        assert!(report.rejected.is_empty());
+        assert_eq!(r.registry.dispatched(1), 2);
+    }
+
+    #[test]
+    fn arrivals_respect_timestamps() {
+        let mut r = fleet(1, RoutePolicy::LeastOutstandingTokens);
+        let arrivals = vec![
+            TimedRequest::new(Request::new(0, vec![1; 8], 4), 5.0),
+            TimedRequest::new(Request::new(1, vec![1; 8], 4), 0.0),
+        ];
+        let report = r.run_open_loop(arrivals).unwrap();
+        assert_eq!(report.outputs.len(), 2);
+        // Request 1 (t=0) is served first; the fleet clock reaches at least
+        // 5.0 + one step for request 0.
+        assert!(report.metrics.makespan_s >= 5.0 + 0.1 - 1e-9);
+        let o0 = report.outputs.iter().find(|o| o.id == 0).unwrap();
+        assert!(o0.ttft_s <= 0.1 + 1e-9, "no phantom queueing: {}", o0.ttft_s);
+    }
+
+    #[test]
+    fn backlog_drains_with_backpressure() {
+        let mut r = FleetRouter::new(FleetConfig {
+            policy: RoutePolicy::LeastOutstandingTokens,
+            queue_capacity: 4,
+        });
+        let mut m = MockReplica::new("tight", 0.1);
+        m.queue_cap = 1;
+        r.add_replica(Box::new(m));
+        // 8 simultaneous arrivals: 1 dispatches, 4 backlog, 3 rejected.
+        let report = r.run_open_loop(burst(8)).unwrap();
+        assert_eq!(report.outputs.len(), 5);
+        assert_eq!(report.rejected.len(), 3);
+        assert!(report
+            .rejected
+            .iter()
+            .all(|x| matches!(x.reason, RejectReason::QueueFull { capacity: 4 })));
+        assert_eq!(report.metrics.queued_peak, 4);
+    }
+}

@@ -1,0 +1,261 @@
+//! Routing policies: which replica gets the next request.
+//!
+//! Three policies, mirroring what production LLM routers deploy:
+//!
+//! * **RoundRobin** — cycle through replicas regardless of load. Baseline;
+//!   degrades badly when request costs are skewed.
+//! * **LeastOutstandingTokens** — send to the replica with the fewest
+//!   prompt+budget tokens queued or resident. Token-weighted least-loaded,
+//!   the natural load signal for LLM serving (a 4k-token prompt is not one
+//!   unit of work).
+//! * **SessionAffinity** — hash the session id (or the prompt's first K
+//!   tokens, a prefix-cache key) to a sticky replica, so multi-turn
+//!   requests land where their KV/prefix history lives; spill to
+//!   least-outstanding when the sticky replica is full, re-pin when it has
+//!   been drained or lost.
+
+use std::collections::HashMap;
+
+use crate::coordinator::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstandingTokens,
+    SessionAffinity {
+        /// Prompt tokens hashed for the affinity key when the request
+        /// carries no explicit session id.
+        prefix_tokens: usize,
+    },
+}
+
+impl RoutePolicy {
+    /// CLI-friendly parse: "rr", "least", "affinity" (and synonyms).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" | "round_robin" => Some(RoutePolicy::RoundRobin),
+            "lot" | "least" | "least-outstanding" | "least_outstanding" => {
+                Some(RoutePolicy::LeastOutstandingTokens)
+            }
+            "affinity" | "session" | "session-affinity" | "session_affinity" => {
+                Some(RoutePolicy::SessionAffinity { prefix_tokens: 16 })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastOutstandingTokens => "least_outstanding",
+            RoutePolicy::SessionAffinity { .. } => "session_affinity",
+        }
+    }
+}
+
+/// One routable replica's load snapshot, as seen by the picker.
+#[derive(Clone, Debug)]
+pub struct ReplicaView {
+    pub id: usize,
+    pub outstanding_tokens: usize,
+    /// Whether the replica would accept a submit right now.
+    pub admissible: bool,
+}
+
+/// Mutable picker state carried across decisions.
+#[derive(Debug, Default)]
+pub struct PolicyState {
+    rr_cursor: usize,
+    affinity: HashMap<u64, usize>,
+}
+
+impl PolicyState {
+    /// Number of sessions currently pinned (diagnostics).
+    pub fn pinned_sessions(&self) -> usize {
+        self.affinity.len()
+    }
+}
+
+/// FNV-1a over the token stream — deterministic across runs (unlike
+/// `DefaultHasher` we owe reproducible routing to the benches).
+pub fn fnv1a(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The affinity key: explicit session id, else a prefix hash.
+pub fn affinity_key(req: &Request, prefix_tokens: usize) -> u64 {
+    req.session
+        .unwrap_or_else(|| fnv1a(&req.prompt[..req.prompt.len().min(prefix_tokens)]))
+}
+
+fn least_outstanding(views: &[ReplicaView]) -> Option<usize> {
+    views
+        .iter()
+        .filter(|v| v.admissible)
+        .min_by_key(|v| (v.outstanding_tokens, v.id))
+        .map(|v| v.id)
+}
+
+impl RoutePolicy {
+    /// Choose a replica id among the admissible views, or None when nothing
+    /// can take the request right now. `n_replicas` is the registry size
+    /// (round-robin cycles over ids even when some are missing from
+    /// `views`, so a drained replica does not skew the rotation).
+    pub fn pick(
+        &self,
+        state: &mut PolicyState,
+        views: &[ReplicaView],
+        n_replicas: usize,
+        req: &Request,
+    ) -> Option<usize> {
+        match *self {
+            RoutePolicy::RoundRobin => {
+                let n = n_replicas.max(1);
+                let cursor = state.rr_cursor % n;
+                let mut best: Option<(usize, usize)> = None;
+                for v in views.iter().filter(|v| v.admissible) {
+                    let key = (v.id + n - cursor) % n;
+                    if best.map_or(true, |(bk, _)| key < bk) {
+                        best = Some((key, v.id));
+                    }
+                }
+                let (_, id) = best?;
+                state.rr_cursor = (id + 1) % n;
+                Some(id)
+            }
+            RoutePolicy::LeastOutstandingTokens => least_outstanding(views),
+            RoutePolicy::SessionAffinity { prefix_tokens } => {
+                let key = affinity_key(req, prefix_tokens);
+                if let Some(&pinned) = state.affinity.get(&key) {
+                    if let Some(v) = views.iter().find(|v| v.id == pinned) {
+                        if v.admissible {
+                            return Some(pinned);
+                        }
+                        // Sticky replica is full: spill this request without
+                        // moving the session pin.
+                        return least_outstanding(views);
+                    }
+                    // Sticky replica drained or down — fall through, re-pin.
+                }
+                let id = least_outstanding(views)?;
+                state.affinity.insert(key, id);
+                Some(id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(loads: &[usize]) -> Vec<ReplicaView> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &outstanding_tokens)| ReplicaView {
+                id,
+                outstanding_tokens,
+                admissible: true,
+            })
+            .collect()
+    }
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3, 4], 8)
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(
+            RoutePolicy::parse("least"),
+            Some(RoutePolicy::LeastOutstandingTokens)
+        );
+        assert!(matches!(
+            RoutePolicy::parse("affinity"),
+            Some(RoutePolicy::SessionAffinity { .. })
+        ));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::RoundRobin.label(), "round_robin");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = RoutePolicy::RoundRobin;
+        let mut st = PolicyState::default();
+        let v = views(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|i| p.pick(&mut st, &v, 3, &req(i)).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_inadmissible() {
+        let p = RoutePolicy::RoundRobin;
+        let mut st = PolicyState::default();
+        let mut v = views(&[0, 0, 0]);
+        v[1].admissible = false;
+        let picks: Vec<usize> = (0..4).map(|i| p.pick(&mut st, &v, 3, &req(i)).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        v[0].admissible = false;
+        v[2].admissible = false;
+        assert_eq!(p.pick(&mut st, &v, 3, &req(9)), None);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_lightest() {
+        let p = RoutePolicy::LeastOutstandingTokens;
+        let mut st = PolicyState::default();
+        assert_eq!(p.pick(&mut st, &views(&[50, 10, 30]), 3, &req(0)), Some(1));
+        // Tie breaks to the lowest id.
+        assert_eq!(p.pick(&mut st, &views(&[10, 10, 30]), 3, &req(1)), Some(0));
+    }
+
+    #[test]
+    fn session_affinity_sticks_and_spills() {
+        let p = RoutePolicy::SessionAffinity { prefix_tokens: 16 };
+        let mut st = PolicyState::default();
+        let r = req(0).with_session(77);
+        // First pick goes least-outstanding and pins.
+        let mut v = views(&[50, 10, 30]);
+        assert_eq!(p.pick(&mut st, &v, 3, &r), Some(1));
+        assert_eq!(st.pinned_sessions(), 1);
+        // Stays pinned even when load shifts.
+        v = views(&[0, 100, 0]);
+        assert_eq!(p.pick(&mut st, &v, 3, &r), Some(1));
+        // Full sticky replica: spill this request, keep the pin.
+        v[1].admissible = false;
+        assert_eq!(p.pick(&mut st, &v, 3, &r), Some(0));
+        v[1].admissible = true;
+        assert_eq!(p.pick(&mut st, &v, 3, &r), Some(1));
+        // Sticky replica gone from the views (drained): re-pin elsewhere.
+        let v2 = vec![
+            ReplicaView { id: 0, outstanding_tokens: 5, admissible: true },
+            ReplicaView { id: 2, outstanding_tokens: 1, admissible: true },
+        ];
+        assert_eq!(p.pick(&mut st, &v2, 3, &r), Some(2));
+        assert_eq!(p.pick(&mut st, &v2, 3, &r), Some(2), "new pin is sticky");
+    }
+
+    #[test]
+    fn prefix_hash_groups_identical_prefixes() {
+        let p = RoutePolicy::SessionAffinity { prefix_tokens: 4 };
+        let mut st = PolicyState::default();
+        let mut a = Request::new(0, vec![9, 9, 9, 9, 1, 2], 8);
+        let mut b = Request::new(1, vec![9, 9, 9, 9, 3, 4], 8);
+        a.session = None;
+        b.session = None;
+        let v = views(&[0, 0]);
+        let pa = p.pick(&mut st, &v, 2, &a).unwrap();
+        let pb = p.pick(&mut st, &v, 2, &b).unwrap();
+        assert_eq!(pa, pb, "same 4-token prefix must share a replica");
+        assert_ne!(fnv1a(&[1, 2]), fnv1a(&[2, 1]));
+    }
+}

@@ -1,0 +1,169 @@
+//! Fleet-level admission: the bounded backlog queue in front of every
+//! replica, and the typed outcomes of an admission attempt.
+//!
+//! The router dispatches a request straight to a replica when one can take
+//! it; otherwise the request waits here. When the queue is full — or no
+//! replica could *ever* serve the request (prompt exceeds every compiled
+//! bucket, or its KV footprint exceeds every replica's whole cache) — the
+//! request is rejected with a reason instead of being silently dropped.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::Request;
+
+/// A request stamped with its arrival time on the fleet clock (seconds
+/// since the fleet epoch; virtual for simulated replicas).
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    pub req: Request,
+    pub arrival_s: f64,
+}
+
+impl TimedRequest {
+    pub fn new(req: Request, arrival_s: f64) -> Self {
+        Self { req, arrival_s }
+    }
+}
+
+/// Result of checking one replica's ability to take a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Accept,
+    /// The replica's own admission queue is at capacity.
+    QueueFull,
+    /// The request's KV footprint (prompt + generation budget) exceeds the
+    /// replica's total cache — it would OOM even on an idle replica.
+    KvWouldOom,
+    /// The prompt exceeds every compiled prefill bucket.
+    PromptTooLong,
+}
+
+/// Why the fleet refused a request (returned to the client, with detail).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Backpressure: the fleet backlog queue is at capacity.
+    QueueFull { capacity: usize },
+    /// Every replica's KV admission would OOM on this request.
+    KvExhausted { needed_tokens: usize },
+    /// The prompt exceeds every replica's compiled prefill buckets.
+    PromptTooLong { prompt_len: usize },
+    /// No healthy replica is registered.
+    NoReplicas,
+    /// The fleet went idle with this request still unplaceable (e.g. every
+    /// replica's local queue capacity is zero).
+    Unroutable,
+    /// The request was in flight on a replica that went down; its KV
+    /// history died with the replica, so it cannot be transparently
+    /// migrated.
+    ReplicaFailed { replica: usize },
+}
+
+impl RejectReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue_full",
+            RejectReason::KvExhausted { .. } => "kv_exhausted",
+            RejectReason::PromptTooLong { .. } => "prompt_too_long",
+            RejectReason::NoReplicas => "no_replicas",
+            RejectReason::Unroutable => "unroutable",
+            RejectReason::ReplicaFailed { .. } => "replica_failed",
+        }
+    }
+}
+
+/// Bounded FIFO backlog for requests no replica can take right now.
+#[derive(Debug)]
+pub struct FleetQueue {
+    q: VecDeque<TimedRequest>,
+    capacity: usize,
+    peak: usize,
+}
+
+impl FleetQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            q: VecDeque::new(),
+            capacity,
+            peak: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue; bounces the request back when full.
+    pub fn push(&mut self, tr: TimedRequest) -> Option<TimedRequest> {
+        if self.q.len() >= self.capacity {
+            return Some(tr);
+        }
+        self.q.push_back(tr);
+        self.peak = self.peak.max(self.q.len());
+        None
+    }
+
+    pub fn front(&self) -> Option<&TimedRequest> {
+        self.q.front()
+    }
+
+    pub fn pop(&mut self) -> Option<TimedRequest> {
+        self.q.pop_front()
+    }
+
+    /// Return a popped-but-unplaced request to the head. No capacity
+    /// check: it already held a slot.
+    pub fn push_front(&mut self, tr: TimedRequest) {
+        self.q.push_front(tr);
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Deepest the backlog ever got (a saturation signal for reports).
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn drain_all(&mut self) -> Vec<TimedRequest> {
+        self.q.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(id: u64) -> TimedRequest {
+        TimedRequest::new(Request::new(id, vec![1, 2], 4), id as f64)
+    }
+
+    #[test]
+    fn fifo_with_bounce_and_peak() {
+        let mut q = FleetQueue::new(2);
+        assert!(q.push(tr(0)).is_none());
+        assert!(q.push(tr(1)).is_none());
+        let bounced = q.push(tr(2));
+        assert_eq!(bounced.unwrap().req.id, 2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak(), 2);
+        assert_eq!(q.pop().unwrap().req.id, 0);
+        assert_eq!(q.front().unwrap().req.id, 1);
+        let rest = q.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert!(q.is_empty());
+        assert_eq!(q.peak(), 2, "peak survives draining");
+    }
+
+    #[test]
+    fn reject_reason_labels() {
+        assert_eq!(RejectReason::QueueFull { capacity: 8 }.label(), "queue_full");
+        assert_eq!(RejectReason::KvExhausted { needed_tokens: 9 }.label(), "kv_exhausted");
+        assert_eq!(RejectReason::PromptTooLong { prompt_len: 4 }.label(), "prompt_too_long");
+        assert_eq!(RejectReason::NoReplicas.label(), "no_replicas");
+    }
+}

@@ -1,0 +1,105 @@
+//! Replica registry: the fleet's member list with health/drain state and
+//! per-replica dispatch accounting.
+//!
+//! States follow the usual load-balancer lifecycle:
+//!
+//! * `Healthy`  — receives new work.
+//! * `Draining` — no new work, but keeps stepping until its queued and
+//!   active requests complete (graceful removal / rolling restart).
+//! * `Down`     — stepped never; its queued backlog is evicted and
+//!   re-routed by the router.
+
+use super::ReplicaHandle;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    Healthy,
+    Draining,
+    Down,
+}
+
+pub struct ReplicaEntry {
+    pub id: usize,
+    pub state: ReplicaState,
+    /// Requests this replica was handed by the router.
+    pub dispatched: u64,
+    pub handle: Box<dyn ReplicaHandle>,
+}
+
+#[derive(Default)]
+pub struct ReplicaRegistry {
+    entries: Vec<ReplicaEntry>,
+}
+
+impl ReplicaRegistry {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    pub fn register(&mut self, handle: Box<dyn ReplicaHandle>) -> usize {
+        let id = self.entries.len();
+        self.entries.push(ReplicaEntry {
+            id,
+            state: ReplicaState::Healthy,
+            dispatched: 0,
+            handle,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ReplicaEntry] {
+        &self.entries
+    }
+
+    pub fn state(&self, id: usize) -> ReplicaState {
+        self.entries[id].state
+    }
+
+    pub fn set_state(&mut self, id: usize, state: ReplicaState) {
+        self.entries[id].state = state;
+    }
+
+    pub fn handle(&self, id: usize) -> &dyn ReplicaHandle {
+        &*self.entries[id].handle
+    }
+
+    pub fn handle_mut(&mut self, id: usize) -> &mut dyn ReplicaHandle {
+        &mut *self.entries[id].handle
+    }
+
+    pub fn count_dispatch(&mut self, id: usize) {
+        self.entries[id].dispatched += 1;
+    }
+
+    pub fn dispatched(&self, id: usize) -> u64 {
+        self.entries[id].dispatched
+    }
+
+    /// The not-Down replica with work and the smallest clock — the fleet's
+    /// next discrete event.
+    pub fn min_busy_clock(&self) -> Option<(usize, f64)> {
+        self.entries
+            .iter()
+            .filter(|e| e.state != ReplicaState::Down && e.handle.has_work())
+            .map(|e| (e.id, e.handle.clock_s()))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Jump every idle (workless, not-Down) replica's clock to `t_s`, so a
+    /// quiet fleet doesn't "serve" requests before they arrive.
+    pub fn advance_idle_clocks(&mut self, t_s: f64) {
+        for e in &mut self.entries {
+            if e.state != ReplicaState::Down && !e.handle.has_work() {
+                e.handle.advance_clock_to(t_s);
+            }
+        }
+    }
+}

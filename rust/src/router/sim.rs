@@ -1,0 +1,471 @@
+//! Simulated Gaudi engine replica: the analytical performance model
+//! ([`crate::gaudisim`]) wrapped in the engine's continuous-batching
+//! discipline, advancing a **virtual clock** instead of wall time.
+//!
+//! Each replica owns its own simulated device and a [`BlockAllocator`]
+//! sized from that device's HBM minus the FP8 model weights — so fleet
+//! admission control exercises the same OOM frontier Table 6 maps. Step
+//! timing comes from [`prefill_tflops`] / [`decode_step_tflops`], which
+//! means routing experiments inherit the paper's performance shape (long
+//! prompts are expensive, decode is memory-bound) without needing the PJRT
+//! artifacts.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::{Admission, ReplicaHandle};
+use crate::coordinator::{
+    BlockAllocator, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
+};
+use crate::gaudisim::{decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel, ScalingKind};
+use crate::model::config::{ModelConfig, ModelFamily};
+
+#[derive(Clone, Debug)]
+pub struct SimReplicaConfig {
+    pub e2e: E2eConfig,
+    /// Concurrent decode slots.
+    pub slots: usize,
+    /// Local admission-queue bound (beyond it, the fleet queue holds).
+    pub queue_capacity: usize,
+    pub block_tokens: usize,
+    /// Override the HBM-derived KV block budget (tests use small values to
+    /// exercise the OOM admission path).
+    pub kv_blocks_override: Option<usize>,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+}
+
+impl SimReplicaConfig {
+    /// Fast synthetic model on a simulated Gaudi 2 — the test/bench default.
+    pub fn synthetic_tiny() -> Self {
+        Self {
+            e2e: E2eConfig {
+                model: ModelConfig::synthetic_tiny(ModelFamily::Llama3),
+                device: Device::gaudi2(),
+                scaling: ScalingKind::PerTensorHwPow2,
+                lm_head_bf16: true,
+            },
+            slots: 4,
+            queue_capacity: 256,
+            block_tokens: 16,
+            kv_blocks_override: None,
+            prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
+            decode_batches: vec![1, 2, 4, 8],
+        }
+    }
+
+    /// The paper's Llama v3.1 70B on Gaudi 2 (Tables 5/6 geometry).
+    pub fn gaudi2_llama31_70b() -> Self {
+        Self {
+            e2e: E2eConfig::llama31_70b_paper(),
+            slots: 16,
+            queue_capacity: 256,
+            block_tokens: 16,
+            kv_blocks_override: None,
+            prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
+            decode_batches: vec![1, 8, 16, 32, 64, 128],
+        }
+    }
+}
+
+struct SimActive {
+    id: RequestId,
+    prompt_len: usize,
+    max_new: usize,
+    generated: usize,
+    /// Queueing + prefill latency, computed at admission.
+    ttft_s: f64,
+    first_token_s: f64,
+    blocks: usize,
+    /// Current context length (prompt + generated), drives KV-read cost.
+    context: usize,
+}
+
+pub struct SimReplica {
+    label: String,
+    cfg: SimReplicaConfig,
+    sched: Scheduler,
+    alloc: BlockAllocator,
+    queue: VecDeque<(Request, f64)>,
+    active: Vec<SimActive>,
+    now_s: f64,
+    metrics: ServeMetrics,
+    finished: Vec<RequestOutput>,
+}
+
+impl SimReplica {
+    pub fn new(label: &str, mut cfg: SimReplicaConfig) -> Result<Self> {
+        // A 0-slot replica could accept work it can never start, wedging
+        // the fleet event loop on a busy-but-stuck replica.
+        cfg.slots = cfg.slots.max(1);
+        let alloc = match cfg.kv_blocks_override {
+            Some(blocks) => BlockAllocator::new(blocks, cfg.block_tokens),
+            None => {
+                let mm = MemoryModel::new(cfg.e2e.device, cfg.e2e.model.clone());
+                let budget = mm.capacity_bytes() - mm.weight_bytes_fp8();
+                BlockAllocator::from_capacity(
+                    budget,
+                    cfg.e2e.model.kv_bytes_per_token(1).max(1),
+                    cfg.block_tokens,
+                )?
+            }
+        };
+        let sched = Scheduler::new(
+            SchedulePolicy::PrefillFirst,
+            cfg.prefill_seqs.clone(),
+            cfg.decode_batches.clone(),
+        );
+        Ok(Self {
+            label: label.to_string(),
+            cfg,
+            sched,
+            alloc,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            now_s: 0.0,
+            metrics: ServeMetrics::new(),
+            finished: Vec::new(),
+        })
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    /// Admit at most one queued request (the engine's one-prefill-per-step
+    /// interleave). Returns whether anything happened.
+    fn admit_one_prefill(&mut self) -> bool {
+        if self.active.len() >= self.cfg.slots {
+            return false;
+        }
+        // Decide on the queue head without popping: Some(bucket) = prefill,
+        // None = unservable (drop with empty output), early-return = wait.
+        let decision: Option<usize> = match self.queue.front() {
+            None => return false,
+            Some((req, _)) => match self.sched.prefill_bucket(req.prompt.len()) {
+                None => None,
+                Some(bucket) => {
+                    let need = req.prompt.len() + req.max_new_tokens;
+                    if self.alloc.can_allocate(need) {
+                        Some(bucket)
+                    } else if self.active.is_empty()
+                        && self.alloc.free_blocks() == self.alloc.total_blocks
+                    {
+                        // Whole cache free and it still doesn't fit: this
+                        // request can never run here.
+                        None
+                    } else {
+                        // Blocks will free as active requests retire.
+                        return false;
+                    }
+                }
+            },
+        };
+        let (req, arrival_s) = self.queue.pop_front().expect("front was checked");
+        let Some(bucket) = decision else {
+            // Mirrors the engine's unservable-request path: complete with
+            // zero tokens rather than wedging the queue.
+            self.finished.push(RequestOutput {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                ttft_s: 0.0,
+                tpot_s: 0.0,
+                total_s: 0.0,
+            });
+            // Count it completed so fleet reports agree with outputs.
+            self.metrics.requests_completed += 1;
+            return true;
+        };
+        let need = req.prompt.len() + req.max_new_tokens;
+        let blocks = self.alloc.allocate(need).expect("can_allocate was checked");
+        if self.active.is_empty() {
+            // Idle replica: it was genuinely waiting for this arrival. With
+            // work in flight the clock must NOT jump to a future-stamped
+            // arrival (failover re-routes), or unrelated active requests
+            // would absorb the jump into their latencies.
+            self.now_s = self.now_s.max(arrival_s);
+        }
+        let t = prefill_tflops(&self.cfg.e2e, bucket).time_s;
+        self.now_s += t;
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_time.record(t);
+        // A future-stamped request cannot have waited a negative time.
+        let ttft = (self.now_s - arrival_s).max(t);
+        self.metrics.ttft.record(ttft);
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.metrics.generated_tokens += 1; // first token sampled at prefill
+        self.active.push(SimActive {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new_tokens.max(1),
+            generated: 1,
+            ttft_s: ttft,
+            first_token_s: self.now_s,
+            blocks,
+            context: req.prompt.len() + 1,
+        });
+        true
+    }
+
+    /// One decode step for every active request, split into compiled batch
+    /// groups like the real engine.
+    fn decode_round(&mut self) -> bool {
+        if self.active.is_empty() {
+            return false;
+        }
+        let idxs: Vec<usize> = (0..self.active.len()).collect();
+        for group in self.sched.decode_groups(&idxs) {
+            let bucket = self.sched.decode_bucket(group.len());
+            let mean_ctx = (group.iter().map(|&i| self.active[i].context).sum::<usize>()
+                / group.len())
+            .max(1);
+            let t = decode_step_tflops(&self.cfg.e2e, bucket, mean_ctx).time_s;
+            self.now_s += t;
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_batch_sum += group.len() as u64;
+            self.metrics.decode_time.record(t);
+            for &i in &group {
+                {
+                    let a = &mut self.active[i];
+                    a.generated += 1;
+                    a.context += 1;
+                }
+                self.metrics.generated_tokens += 1;
+                self.metrics.tpot.record(t);
+            }
+        }
+        true
+    }
+
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated >= self.active[i].max_new {
+                let a = self.active.swap_remove(i);
+                self.alloc.release(a.blocks);
+                let n = a.generated;
+                self.finished.push(RequestOutput {
+                    id: a.id,
+                    prompt_len: a.prompt_len,
+                    // The simulation produces timing, not text.
+                    tokens: vec![0; n],
+                    ttft_s: a.ttft_s,
+                    tpot_s: if n > 1 {
+                        (self.now_s - a.first_token_s) / (n - 1) as f64
+                    } else {
+                        0.0
+                    },
+                    total_s: a.ttft_s + (self.now_s - a.first_token_s),
+                });
+                self.metrics.requests_completed += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+impl ReplicaHandle for SimReplica {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn clock_s(&self) -> f64 {
+        self.now_s
+    }
+
+    fn advance_clock_to(&mut self, t_s: f64) {
+        if self.active.is_empty() && self.queue.is_empty() {
+            self.now_s = self.now_s.max(t_s);
+        }
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn outstanding_tokens(&self) -> usize {
+        let queued: usize = self
+            .queue
+            .iter()
+            .map(|(r, _)| r.prompt.len() + r.max_new_tokens)
+            .sum();
+        let resident: usize = self
+            .active
+            .iter()
+            .map(|a| a.prompt_len + a.max_new.saturating_sub(a.generated))
+            .sum();
+        queued + resident
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.cfg.queue_capacity
+    }
+
+    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
+        if self.sched.prefill_bucket(prompt_len).is_none() {
+            return Admission::PromptTooLong;
+        }
+        if self.alloc.blocks_for(prompt_len + max_new_tokens) > self.alloc.total_blocks {
+            return Admission::KvWouldOom;
+        }
+        Admission::Accept
+    }
+
+    fn submit(&mut self, req: Request, arrival_s: f64) -> bool {
+        if self.queue.len() >= self.cfg.queue_capacity {
+            return false;
+        }
+        self.queue.push_back((req, arrival_s));
+        true
+    }
+
+    fn step(&mut self) -> Result<bool> {
+        let mut did = self.admit_one_prefill();
+        did |= self.decode_round();
+        self.retire_finished();
+        Ok(did)
+    }
+
+    fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn evict_queued(&mut self) -> Vec<Request> {
+        self.queue.drain(..).map(|(r, _)| r).collect()
+    }
+
+    fn abort_active(&mut self) -> Vec<RequestId> {
+        let mut ids = Vec::new();
+        for a in self.active.drain(..) {
+            self.alloc.release(a.blocks);
+            ids.push(a.id);
+        }
+        ids
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replica() -> SimReplica {
+        SimReplica::new("sim0", SimReplicaConfig::synthetic_tiny()).unwrap()
+    }
+
+    #[test]
+    fn single_request_completes_with_virtual_latency() {
+        let mut r = replica();
+        assert!(r.submit(Request::new(1, vec![0; 24], 8), 0.0));
+        let mut outs = Vec::new();
+        while r.has_work() {
+            r.step().unwrap();
+            outs.extend(r.take_finished());
+        }
+        assert_eq!(outs.len(), 1);
+        let o = &outs[0];
+        assert_eq!(o.tokens.len(), 8);
+        assert!(o.ttft_s > 0.0);
+        assert!(o.total_s >= o.ttft_s);
+        assert!(r.clock_s() > 0.0);
+        assert_eq!(r.metrics().requests_completed, 1);
+        // All KV blocks returned.
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+    }
+
+    #[test]
+    fn batching_interleaves_up_to_slot_limit() {
+        let mut r = replica();
+        for i in 0..6 {
+            assert!(r.submit(Request::new(i, vec![0; 16], 8), 0.0));
+        }
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        let m = r.metrics();
+        assert_eq!(m.requests_completed, 6);
+        assert!(
+            m.mean_decode_batch() > 1.0,
+            "continuous batching never batched: {}",
+            m.mean_decode_batch()
+        );
+    }
+
+    #[test]
+    fn admission_checks_report_reasons() {
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(4); // 4 × 16 = 64 KV tokens total
+        cfg.queue_capacity = 1;
+        let mut r = SimReplica::new("tiny", cfg).unwrap();
+        assert_eq!(r.could_ever_admit(16, 8), Admission::Accept);
+        assert_eq!(r.could_ever_admit(4096, 8), Admission::PromptTooLong);
+        assert_eq!(r.could_ever_admit(60, 16), Admission::KvWouldOom);
+        assert!(r.submit(Request::new(0, vec![0; 16], 4), 0.0));
+        assert_eq!(r.can_admit_now(16, 4), Admission::QueueFull);
+        assert!(!r.submit(Request::new(1, vec![0; 16], 4), 0.0));
+    }
+
+    #[test]
+    fn oversized_request_drains_instead_of_wedging() {
+        // Submitted directly (bypassing router screening), an impossible
+        // request must complete empty rather than hang the replica.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(2);
+        let mut r = SimReplica::new("t", cfg).unwrap();
+        assert!(r.submit(Request::new(7, vec![0; 64], 64), 0.0)); // needs 8 blocks
+        let mut guard = 0;
+        while r.has_work() {
+            r.step().unwrap();
+            guard += 1;
+            assert!(guard < 100, "replica wedged on impossible request");
+        }
+        let outs = r.take_finished();
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn abort_active_frees_blocks_and_reports_ids() {
+        let mut r = replica();
+        r.submit(Request::new(5, vec![0; 16], 8), 0.0);
+        r.submit(Request::new(6, vec![0; 16], 8), 0.0);
+        r.step().unwrap(); // request 5 prefilled (one admission per step)
+        assert_eq!(r.active(), 1);
+        let total = r.allocator().total_blocks;
+        assert!(r.allocator().free_blocks() < total);
+        let lost = r.abort_active();
+        assert_eq!(lost, vec![5]);
+        assert_eq!(r.active(), 0);
+        assert_eq!(r.allocator().free_blocks(), total);
+        assert_eq!(r.queued(), 1, "queued request 6 untouched");
+    }
+
+    #[test]
+    fn idle_clock_jumps_forward_only_when_idle() {
+        let mut r = replica();
+        r.advance_clock_to(5.0);
+        assert_eq!(r.clock_s(), 5.0);
+        r.advance_clock_to(2.0);
+        assert_eq!(r.clock_s(), 5.0, "clock never goes backwards");
+        r.submit(Request::new(1, vec![0; 16], 2), 6.0);
+        r.advance_clock_to(100.0);
+        assert_eq!(r.clock_s(), 5.0, "busy replica keeps its clock");
+        // TTFT counts from the 6.0 s arrival, not from the stale clock.
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        let outs = r.take_finished();
+        assert!(outs[0].ttft_s > 0.0);
+        assert!(r.clock_s() > 6.0);
+    }
+}

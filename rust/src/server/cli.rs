@@ -1,4 +1,4 @@
-//! `repro` CLI: serve / eval / simulate / bench subcommands.
+//! `repro` CLI: serve / fleet / eval / simulate / bench subcommands.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -11,7 +11,8 @@ use crate::eval::tables::render_accuracy_table;
 use crate::fp8::Fp8Format;
 use crate::gaudisim::{decode_step_tflops, gemm_time_s, prefill_tflops, Device, E2eConfig, GemmConfig, ScalingKind};
 use crate::model::config::{ModelConfig, ModelFamily};
-use crate::server::workload::{WorkloadConfig, WorkloadGen};
+use crate::router::{FleetConfig, FleetRouter, RoutePolicy, SimReplica, SimReplicaConfig};
+use crate::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig, WorkloadGen};
 
 /// Parsed command line: subcommand + --key value flags.
 #[derive(Clone, Debug, Default)]
@@ -23,7 +24,7 @@ pub struct Args {
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         if argv.is_empty() {
-            bail!("usage: repro <serve|eval|simulate|gemm|info> [--flag value ...]");
+            bail!("usage: repro <serve|fleet|eval|simulate|gemm|info> [--flag value ...]");
         }
         let mut args = Args {
             command: argv[0].clone(),
@@ -55,17 +56,25 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
 }
 
 pub fn run_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
         "gemm" => cmd_gemm(&args),
         "info" => cmd_info(&args),
-        other => bail!("unknown command {other:?} (serve|eval|simulate|gemm|info)"),
+        other => bail!("unknown command {other:?} (serve|fleet|eval|simulate|gemm|info)"),
     }
 }
 
@@ -104,6 +113,88 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+/// Multi-replica fleet simulation: N simulated Gaudi engines behind the
+/// router, driven by an open-loop workload.
+///
+/// Flags: --replicas N, --policy rr|least|affinity, --requests N,
+/// --pattern burst|uniform|poisson|bursty, --rate REQ_PER_S, --slots N,
+/// --model tiny|small|base|llama31-70b, --prompt-min/--prompt-max TOK,
+/// --max-new TOK, --seed N, --fleet-queue N, --json.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let replicas = args.get_usize("replicas", 4).max(1);
+    let policy = RoutePolicy::parse(&args.get("policy", "least"))
+        .ok_or_else(|| anyhow::anyhow!("unknown policy (rr|least|affinity)"))?;
+    let requests = args.get_usize("requests", 64);
+    let rate = args.get_f64("rate", 64.0);
+    let pattern = ArrivalPattern::parse(&args.get("pattern", "poisson"), rate)
+        .ok_or_else(|| anyhow::anyhow!("unknown pattern (burst|uniform|poisson|bursty)"))?;
+
+    let mut sim_cfg = match args.get("model", "tiny").as_str() {
+        "tiny" => SimReplicaConfig::synthetic_tiny(),
+        "small" => {
+            let mut c = SimReplicaConfig::synthetic_tiny();
+            c.e2e.model = ModelConfig::synthetic_small(ModelFamily::Llama3);
+            c
+        }
+        "base" => {
+            let mut c = SimReplicaConfig::synthetic_tiny();
+            c.e2e.model = ModelConfig::synthetic_base(ModelFamily::Llama3);
+            c
+        }
+        "llama31-70b" => SimReplicaConfig::gaudi2_llama31_70b(),
+        m => bail!("unknown model {m} (tiny|small|base|llama31-70b)"),
+    };
+    sim_cfg.slots = args.get_usize("slots", sim_cfg.slots).max(1);
+
+    let mut router = FleetRouter::new(FleetConfig {
+        policy,
+        queue_capacity: args.get_usize("fleet-queue", 1024),
+    });
+    for i in 0..replicas {
+        router.add_replica(Box::new(SimReplica::new(
+            &format!("gaudi2-sim{i}"),
+            sim_cfg.clone(),
+        )?));
+    }
+
+    let max_new = args.get_usize("max-new", 16).max(1);
+    let prompt_min = args.get_usize("prompt-min", 16).max(1);
+    // Guard against --prompt-min > --prompt-max (WorkloadGen would
+    // underflow the range width).
+    let prompt_max = args.get_usize("prompt-max", 256).max(prompt_min);
+    let open = OpenLoopConfig {
+        workload: WorkloadConfig {
+            requests,
+            prompt_len_min: prompt_min,
+            prompt_len_max: prompt_max,
+            max_new_min: max_new,
+            max_new_max: max_new,
+            seed: args.get_usize("seed", 7) as u64,
+        },
+        pattern,
+    };
+    let json = args.get("json", "false") == "true";
+    if !json {
+        println!(
+            "fleet: {replicas} replicas, policy={}, {requests} requests ({})",
+            policy.label(),
+            args.get("pattern", "poisson")
+        );
+    }
+    let report = router.run_open_loop(open.generate())?;
+    if json {
+        // Machine-readable mode: exactly one JSON object on stdout (the
+        // row already carries the rejected count).
+        println!("{}", report.metrics.json_row(replicas, policy.label(), requests));
+    } else {
+        println!("{}", report.metrics.report());
+        for r in &report.rejected {
+            println!("  rejected req {}: {:?}", r.id, r.reason);
+        }
+    }
     Ok(())
 }
 
@@ -242,6 +333,37 @@ mod tests {
         cmd_simulate(&Args::parse(&["simulate".into(), "--phase".into(), "decode".into()]).unwrap())
             .unwrap();
         cmd_gemm(&Args::parse(&["gemm".into(), "--m".into(), "1024".into()]).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn fleet_quick_runs() {
+        // Small fleet run through the CLI path, every policy.
+        for policy in ["rr", "least", "affinity"] {
+            let args = Args::parse(&[
+                "fleet".into(),
+                "--replicas".into(),
+                "2".into(),
+                "--policy".into(),
+                policy.into(),
+                "--requests".into(),
+                "8".into(),
+                "--pattern".into(),
+                "burst".into(),
+                "--json".into(),
+            ])
+            .unwrap();
+            cmd_fleet(&args).unwrap();
+        }
+    }
+
+    #[test]
+    fn fleet_rejects_unknown_policy_and_pattern() {
+        let bad_policy =
+            Args::parse(&["fleet".into(), "--policy".into(), "zigzag".into()]).unwrap();
+        assert!(cmd_fleet(&bad_policy).is_err());
+        let bad_pattern =
+            Args::parse(&["fleet".into(), "--pattern".into(), "sawtooth".into()]).unwrap();
+        assert!(cmd_fleet(&bad_pattern).is_err());
     }
 
     #[test]

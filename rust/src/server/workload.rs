@@ -74,6 +74,78 @@ impl WorkloadGen {
     }
 }
 
+/// Arrival process for open-loop (rate-driven) workloads: the client issues
+/// requests on its own schedule regardless of server progress, which is
+/// what exposes queueing (closed-loop drivers never build a backlog).
+#[derive(Clone, Debug)]
+pub enum ArrivalPattern {
+    /// Everything at t = 0 (saturation / makespan experiments).
+    Burst,
+    /// Constant inter-arrival gap of 1/rate seconds.
+    Uniform { rate_per_s: f64 },
+    /// Poisson process: exponential inter-arrival times at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// `size` back-to-back arrivals, then a `gap_s` pause (bursty traffic).
+    Bursty { size: usize, gap_s: f64 },
+}
+
+impl ArrivalPattern {
+    pub fn parse(s: &str, rate_per_s: f64) -> Option<ArrivalPattern> {
+        match s {
+            "burst" => Some(ArrivalPattern::Burst),
+            "uniform" => Some(ArrivalPattern::Uniform { rate_per_s }),
+            "poisson" => Some(ArrivalPattern::Poisson { rate_per_s }),
+            "bursty" => Some(ArrivalPattern::Bursty {
+                size: 8,
+                gap_s: if rate_per_s > 0.0 { 8.0 / rate_per_s } else { 1.0 },
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Open-loop workload: request content from [`WorkloadGen`], arrival times
+/// from an [`ArrivalPattern`]. Deterministic per seed.
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    pub workload: WorkloadConfig,
+    pub pattern: ArrivalPattern,
+}
+
+impl OpenLoopConfig {
+    pub fn generate(&self) -> Vec<crate::router::TimedRequest> {
+        let reqs = WorkloadGen::new(self.workload.clone()).generate_all();
+        let mut rng = XorShiftRng::new(self.workload.seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(reqs.len());
+        for (i, req) in reqs.into_iter().enumerate() {
+            let arrival_s = match self.pattern {
+                ArrivalPattern::Burst => 0.0,
+                ArrivalPattern::Uniform { rate_per_s } => {
+                    if i > 0 && rate_per_s > 0.0 {
+                        t += 1.0 / rate_per_s;
+                    }
+                    t
+                }
+                ArrivalPattern::Poisson { rate_per_s } => {
+                    if i > 0 && rate_per_s > 0.0 {
+                        // Inverse-CDF exponential; clamp away from ln(0).
+                        let u = (1.0 - rng.next_f64()).max(1e-12);
+                        t += -u.ln() / rate_per_s;
+                    }
+                    t
+                }
+                ArrivalPattern::Bursty { size, gap_s } => {
+                    let burst = i / size.max(1);
+                    burst as f64 * gap_s
+                }
+            };
+            out.push(crate::router::TimedRequest::new(req, arrival_s));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +184,65 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.prompt, y.prompt);
         }
+    }
+
+    #[test]
+    fn open_loop_patterns_are_monotone_and_deterministic() {
+        let wl = WorkloadConfig {
+            requests: 24,
+            ..Default::default()
+        };
+        for pattern in [
+            ArrivalPattern::Burst,
+            ArrivalPattern::Uniform { rate_per_s: 10.0 },
+            ArrivalPattern::Poisson { rate_per_s: 10.0 },
+            ArrivalPattern::Bursty { size: 8, gap_s: 2.0 },
+        ] {
+            let cfg = OpenLoopConfig {
+                workload: wl.clone(),
+                pattern: pattern.clone(),
+            };
+            let a = cfg.generate();
+            let b = cfg.generate();
+            assert_eq!(a.len(), 24);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_s, y.arrival_s, "{pattern:?} not deterministic");
+                assert_eq!(x.req.prompt, y.req.prompt);
+            }
+            for w in a.windows(2) {
+                assert!(
+                    w[1].arrival_s >= w[0].arrival_s,
+                    "{pattern:?} arrivals must be non-decreasing"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_pattern_groups_arrivals() {
+        let cfg = OpenLoopConfig {
+            workload: WorkloadConfig {
+                requests: 16,
+                ..Default::default()
+            },
+            pattern: ArrivalPattern::Bursty { size: 8, gap_s: 3.0 },
+        };
+        let reqs = cfg.generate();
+        assert!(reqs[..8].iter().all(|r| r.arrival_s == 0.0));
+        assert!(reqs[8..].iter().all(|r| r.arrival_s == 3.0));
+    }
+
+    #[test]
+    fn uniform_rate_spacing() {
+        let cfg = OpenLoopConfig {
+            workload: WorkloadConfig {
+                requests: 4,
+                ..Default::default()
+            },
+            pattern: ArrivalPattern::Uniform { rate_per_s: 4.0 },
+        };
+        let reqs = cfg.generate();
+        let times: Vec<f64> = reqs.iter().map(|r| r.arrival_s).collect();
+        assert_eq!(times, vec![0.0, 0.25, 0.5, 0.75]);
     }
 }

@@ -1,0 +1,234 @@
+//! Integration: the fleet router over simulated Gaudi replicas.
+//!
+//! Acceptance (ISSUE 1):
+//! * a 4-replica fleet drains a 64-request open-loop workload to completion
+//!   under each routing policy with zero lost requests;
+//! * least-outstanding-tokens achieves p99 TTFT ≤ round-robin's on a skewed
+//!   bursty arrival trace;
+//! * total fleet throughput scales ≥ 3× from 1 → 4 replicas on the
+//!   synthetic model.
+
+use gaudi_fp8::coordinator::{LatencyStat, Request, RequestOutput};
+use gaudi_fp8::router::{
+    FleetConfig, FleetRouter, RejectReason, ReplicaState, RoutePolicy, SimReplica,
+    SimReplicaConfig, TimedRequest,
+};
+use gaudi_fp8::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig};
+
+fn make_fleet(replicas: usize, policy: RoutePolicy) -> FleetRouter {
+    let mut router = FleetRouter::new(FleetConfig {
+        policy,
+        queue_capacity: 4096,
+    });
+    for i in 0..replicas {
+        router.add_replica(Box::new(
+            SimReplica::new(&format!("sim{i}"), SimReplicaConfig::synthetic_tiny()).unwrap(),
+        ));
+    }
+    router
+}
+
+fn open_loop_64(pattern: ArrivalPattern) -> Vec<TimedRequest> {
+    OpenLoopConfig {
+        workload: WorkloadConfig {
+            requests: 64,
+            prompt_len_min: 16,
+            prompt_len_max: 128,
+            max_new_min: 8,
+            max_new_max: 16,
+            seed: 11,
+        },
+        pattern,
+    }
+    .generate()
+}
+
+fn all_policies() -> [RoutePolicy; 3] {
+    [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstandingTokens,
+        RoutePolicy::SessionAffinity { prefix_tokens: 16 },
+    ]
+}
+
+#[test]
+fn four_replica_fleet_drains_64_requests_under_each_policy() {
+    for policy in all_policies() {
+        for pattern in [
+            ArrivalPattern::Burst,
+            ArrivalPattern::Poisson { rate_per_s: 256.0 },
+        ] {
+            let mut router = make_fleet(4, policy);
+            let report = router.run_open_loop(open_loop_64(pattern.clone())).unwrap();
+            assert!(
+                report.rejected.is_empty(),
+                "{policy:?}/{pattern:?}: rejected {:?}",
+                report.rejected
+            );
+            assert_eq!(
+                report.outputs.len(),
+                64,
+                "{policy:?}/{pattern:?}: lost requests"
+            );
+            // Every request id exactly once — nothing lost or duplicated.
+            let mut ids: Vec<u64> = report.outputs.iter().map(|o| o.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..64).collect::<Vec<u64>>());
+            // Every output actually generated tokens.
+            assert!(report.outputs.iter().all(|o| !o.tokens.is_empty()));
+            assert_eq!(report.metrics.merged.requests_completed, 64);
+        }
+    }
+}
+
+#[test]
+fn round_robin_dispatches_evenly_on_uniform_burst() {
+    let mut router = make_fleet(4, RoutePolicy::RoundRobin);
+    let report = router.run_open_loop(open_loop_64(ArrivalPattern::Burst)).unwrap();
+    for r in &report.metrics.replicas {
+        assert_eq!(r.dispatched, 16, "round-robin must spread 64 over 4 evenly");
+    }
+}
+
+/// Skewed bursty trace: every 4th request is heavy — a 512-token prompt
+/// *and* a 64-token generation budget (8× the light requests' work, in both
+/// the time model and the outstanding-tokens load signal). Round-robin's
+/// blind rotation pins every heavy request onto one replica;
+/// least-outstanding-tokens routes around the hot spot.
+fn skewed_bursty_trace() -> Vec<TimedRequest> {
+    let mut out = Vec::new();
+    for i in 0..64u64 {
+        let (prompt_len, max_new) = if i % 4 == 0 { (512, 64) } else { (16, 8) };
+        let burst = i / 8;
+        let arrival_s = burst as f64 * 0.05;
+        out.push(TimedRequest::new(
+            Request::new(i, vec![((i % 26) as u8 + b'a') as i32; prompt_len], max_new),
+            arrival_s,
+        ));
+    }
+    out
+}
+
+fn p99_ttft(outputs: &[RequestOutput]) -> f64 {
+    let mut stat = LatencyStat::new();
+    for o in outputs {
+        stat.record(o.ttft_s);
+    }
+    stat.p99_s()
+}
+
+#[test]
+fn least_outstanding_beats_round_robin_p99_ttft_on_skewed_trace() {
+    let mut rr = make_fleet(4, RoutePolicy::RoundRobin);
+    let rr_report = rr.run_open_loop(skewed_bursty_trace()).unwrap();
+    assert_eq!(rr_report.outputs.len(), 64);
+
+    let mut lot = make_fleet(4, RoutePolicy::LeastOutstandingTokens);
+    let lot_report = lot.run_open_loop(skewed_bursty_trace()).unwrap();
+    assert_eq!(lot_report.outputs.len(), 64);
+
+    let rr_p99 = p99_ttft(&rr_report.outputs);
+    let lot_p99 = p99_ttft(&lot_report.outputs);
+    assert!(
+        lot_p99 <= rr_p99 + 1e-9,
+        "least-outstanding p99 TTFT {lot_p99:.4}s must not exceed round-robin's {rr_p99:.4}s"
+    );
+}
+
+fn saturating_burst(n: u64) -> Vec<TimedRequest> {
+    (0..n)
+        .map(|i| TimedRequest::new(Request::new(i, vec![7; 64], 16), 0.0))
+        .collect()
+}
+
+#[test]
+fn fleet_throughput_scales_3x_from_1_to_4_replicas() {
+    let mut tput = Vec::new();
+    for replicas in [1usize, 4] {
+        let mut router = make_fleet(replicas, RoutePolicy::LeastOutstandingTokens);
+        let report = router.run_open_loop(saturating_burst(64)).unwrap();
+        assert_eq!(report.outputs.len(), 64);
+        tput.push(report.metrics.throughput_tok_s());
+    }
+    assert!(
+        tput[1] >= 3.0 * tput[0],
+        "1→4 replicas must scale ≥3×: {:.1} → {:.1} tok/s",
+        tput[0],
+        tput[1]
+    );
+}
+
+#[test]
+fn session_affinity_keeps_multi_turn_sessions_on_one_replica() {
+    let mut router = make_fleet(4, RoutePolicy::SessionAffinity { prefix_tokens: 16 });
+    // 8 sessions × 4 turns, interleaved arrival order.
+    let mut arrivals = Vec::new();
+    let mut id = 0u64;
+    for turn in 0..4 {
+        for session in 0..8u64 {
+            arrivals.push(TimedRequest::new(
+                Request::new(id, vec![session as i32; 24], 8).with_session(session),
+                turn as f64 * 0.2,
+            ));
+            id += 1;
+        }
+    }
+    let report = router.run_open_loop(arrivals).unwrap();
+    assert_eq!(report.outputs.len(), 32);
+    assert!(report.rejected.is_empty());
+    // With 8 sessions pinned over 4 replicas, dispatch totals per replica
+    // must be whole sessions (multiples of 4 turns).
+    for r in &report.metrics.replicas {
+        assert_eq!(
+            r.dispatched % 4,
+            0,
+            "session split across replicas: {:?}",
+            report.metrics.replicas
+        );
+    }
+}
+
+#[test]
+fn kv_and_prompt_rejections_carry_reasons_and_nothing_is_lost() {
+    let mut cfg = SimReplicaConfig::synthetic_tiny();
+    cfg.kv_blocks_override = Some(8); // 8 × 16 = 128 KV tokens per replica
+    let mut router = FleetRouter::new(FleetConfig {
+        policy: RoutePolicy::LeastOutstandingTokens,
+        queue_capacity: 64,
+    });
+    for i in 0..2 {
+        router.add_replica(Box::new(SimReplica::new(&format!("s{i}"), cfg.clone()).unwrap()));
+    }
+    let mut arrivals = Vec::new();
+    // 6 servable requests.
+    for i in 0..6u64 {
+        arrivals.push(TimedRequest::new(Request::new(i, vec![1; 32], 8), 0.0));
+    }
+    // One whose KV footprint exceeds every replica's whole cache.
+    arrivals.push(TimedRequest::new(Request::new(100, vec![1; 120], 64), 0.0));
+    // One whose prompt exceeds every compiled bucket.
+    arrivals.push(TimedRequest::new(Request::new(101, vec![1; 5000], 8), 0.0));
+    let submitted = arrivals.len();
+    let report = router.run_open_loop(arrivals).unwrap();
+    assert_eq!(
+        report.outputs.len() + report.rejected.len(),
+        submitted,
+        "every request must be answered or rejected"
+    );
+    let kv = report.rejected.iter().find(|r| r.id == 100).unwrap();
+    assert_eq!(kv.reason, RejectReason::KvExhausted { needed_tokens: 184 });
+    let long = report.rejected.iter().find(|r| r.id == 101).unwrap();
+    assert_eq!(long.reason, RejectReason::PromptTooLong { prompt_len: 5000 });
+    assert_eq!(report.outputs.len(), 6);
+}
+
+#[test]
+fn drained_replica_finishes_without_new_work() {
+    let mut router = make_fleet(2, RoutePolicy::RoundRobin);
+    router.drain_replica(0);
+    let report = router.run_open_loop(open_loop_64(ArrivalPattern::Burst)).unwrap();
+    assert_eq!(report.outputs.len(), 64);
+    assert_eq!(router.registry.dispatched(0), 0);
+    assert_eq!(router.registry.dispatched(1), 64);
+    assert_eq!(router.registry.state(0), ReplicaState::Draining);
+}

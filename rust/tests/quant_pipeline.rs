@@ -133,7 +133,7 @@ fn capacity_model_consistent_with_block_allocator() {
     let cfg = ModelConfig::llama31_70b();
     let mm = MemoryModel::new(Device::gaudi2(), cfg.clone());
     let kv_budget = mm.capacity_bytes() - mm.weight_bytes_fp8() - 0.5e9;
-    let alloc = BlockAllocator::from_capacity(kv_budget, cfg.kv_bytes_per_token(1), 16);
+    let alloc = BlockAllocator::from_capacity(kv_budget, cfg.kv_bytes_per_token(1), 16).unwrap();
     // Table 6 frontier: batch 16 × seq 8192 fits, batch 32 × 8192 does not.
     let mut a = alloc.clone();
     for _ in 0..16 {

@@ -1,0 +1,185 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The sandboxed build cannot reach crates.io, so this path crate provides
+//! the subset of the anyhow 1.x API the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result<T, E: std::error::Error>` and
+//! `Option<T>`.
+//!
+//! Differences from real anyhow (deliberate, to stay tiny):
+//! * the error is a flattened message chain (no backtraces, no downcasting);
+//! * `Context` is not implemented for `Result<T, anyhow::Error>` — call
+//!   `.map_err(|e| e.context(...))` for that case.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A flattened error chain. `chain[0]` is the outermost (most recently
+/// attached) context; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors, like anyhow's `Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert!(format!("{e:#}").contains("missing thing"));
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let n: Option<u32> = None;
+        assert!(n.context("empty").is_err());
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero not allowed (got {})", x);
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(0).unwrap_err().to_string().contains("zero"));
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+}
