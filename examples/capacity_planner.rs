@@ -52,7 +52,7 @@ fn main() {
             render_table(
                 &format!(
                     "Capacity plan — {:?} ({} GB HBM, {} TFLOPS FP8)",
-                    dev.generation, dev.hbm_capacity_gib, dev.peak_fp8_tflops
+                    dev.generation, dev.hbm_capacity_gb, dev.peak_fp8_tflops
                 ),
                 &[
                     "model",

@@ -1,0 +1,99 @@
+//! Fig KV-dtype (beyond the paper's tables, §4.2.4's mechanism): what the
+//! KV-cache storage dtype buys at a fixed byte budget.
+//!
+//! For each dtype (f32, bf16, fp8) emits one JSON row:
+//! * `bytes_per_token` — the shared `KvLayout` accounting rate;
+//! * `max_admitted_batch` — concurrent sequences a `SimReplica`'s block
+//!   allocator admits from an equal byte budget;
+//! * `decode_readout_mse_vs_f32` — single-step attention-readout MSE of a
+//!   `KvStore` holding the same data, measured by `decode_attention_probe`
+//!   on the synthetic-tiny geometry (the pre-LM-head decode fidelity
+//!   signal; the LM head is a fixed linear map on this readout).
+//!
+//! SHAPE checks: fp8 admits ≥ 1.8× the f32 batch, with readout MSE < 1e-2.
+
+use gaudi_fp8::coordinator::KvStore;
+use gaudi_fp8::quant::KvDtype;
+use gaudi_fp8::router::{SimReplica, SimReplicaConfig};
+use gaudi_fp8::util::rng::XorShiftRng;
+
+/// Tokens one admitted request pins (prompt 256 + 16 generated).
+const SEQ_TOKENS: usize = 272;
+/// Equal KV byte budget for every dtype: 64 MiB.
+const BUDGET_BYTES: f64 = 64.0 * 1024.0 * 1024.0;
+
+fn max_admitted_batch(dtype: KvDtype) -> usize {
+    let mut cfg = SimReplicaConfig::synthetic_tiny();
+    cfg.kv_dtype = dtype;
+    cfg.kv_bytes_budget_override = Some(BUDGET_BYTES);
+    let replica = SimReplica::new("budget", cfg).expect("replica");
+    let mut alloc = replica.allocator().clone();
+    let mut batch = 0;
+    while alloc.allocate(SEQ_TOKENS).is_ok() {
+        batch += 1;
+    }
+    batch
+}
+
+/// Attention readout of a store holding `(k, v)` on synthetic-tiny
+/// geometry (4 layers, 2 kv-heads, 32 head-dim, 64-token window).
+fn probe(dtype: KvDtype, k: &[f32], v: &[f32]) -> Vec<f32> {
+    let (layers, t, kv_heads, head_dim) = (4, 64, 2, 32);
+    let mut store = KvStore::with_dtype(layers, 1, t, kv_heads, head_dim, dtype);
+    let slot = store.alloc_slot().expect("slot");
+    store.write_slot(slot, k, v, t);
+    store.decode_attention_probe(&[slot], 4242)
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+fn main() {
+    let (layers, t, kv_heads, head_dim) = (4usize, 64usize, 2usize, 32usize);
+    let n = layers * t * kv_heads * head_dim;
+    let mut rng = XorShiftRng::new(7);
+    let k: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let reference = probe(KvDtype::F32, &k, &v);
+
+    let model = SimReplicaConfig::synthetic_tiny().e2e.model;
+    let mut admitted = Vec::new();
+    let mut mses = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+        let batch = max_admitted_batch(dtype);
+        let err = mse(&reference, &probe(dtype, &k, &v));
+        admitted.push(batch);
+        mses.push(err);
+        println!(
+            "{{\"fig\":\"fig_kv_dtype\",\"kv_dtype\":\"{}\",\"bytes_per_token\":{},\
+             \"kv_budget_bytes\":{:.0},\"seq_tokens\":{},\"max_admitted_batch\":{},\
+             \"decode_readout_mse_vs_f32\":{:.3e}}}",
+            dtype.name(),
+            model.kv_layout(dtype).bytes_per_token(),
+            BUDGET_BYTES,
+            SEQ_TOKENS,
+            batch,
+            err,
+        );
+    }
+
+    let ratio = admitted[2] as f64 / admitted[0].max(1) as f64;
+    println!(
+        "SHAPE: fp8 KV admits {ratio:.2}x the f32 batch at an equal budget \
+         ({} → {}) {}",
+        admitted[0],
+        admitted[2],
+        if ratio >= 1.8 { "✓" } else { "✗ (expected ≥1.8x)" }
+    );
+    println!(
+        "SHAPE: fp8 decode readout MSE vs f32 KV = {:.3e} {}",
+        mses[2],
+        if mses[2] < 1e-2 { "✓" } else { "✗ (expected <1e-2)" }
+    );
+}

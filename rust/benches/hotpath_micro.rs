@@ -8,6 +8,7 @@ use gaudi_fp8::fp8::{
     Fp8Gemm8x8,
 };
 use gaudi_fp8::gemm::{quantize_matrix, scaled_gemm_with_table, DiagScale, QuantRounding};
+use gaudi_fp8::quant::KvDtype;
 use gaudi_fp8::tensor::{matmul_nt, Tensor2};
 use gaudi_fp8::util::rng::XorShiftRng;
 use gaudi_fp8::util::{bench::black_box, Bencher};
@@ -106,6 +107,22 @@ fn main() {
     });
     let (gk, gv, _) = kv.gather_batch(&slots);
     b.bench_throughput("kv_scatter_4slots", kv_bytes, "GB/s", || {
-        kv.scatter_batch(&slots, &gk, &gv);
+        black_box(kv.scatter_batch(&slots, &gk, &gv));
+    });
+
+    // FP8 KV store (ISSUE 2): quantize-on-scatter / dequantize-on-gather.
+    // Throughput is in logical f32 bytes so rows compare with the f32 store.
+    let mut kv8 = KvStore::with_dtype(4, 8, 160, 2, 32, KvDtype::Fp8(fmt));
+    for _ in 0..4 {
+        let s = kv8.alloc_slot().unwrap();
+        kv8.write_slot(s, &kdata, &kdata, 100);
+    }
+    let slots8 = kv8.active_slots();
+    b.bench_throughput("kv_fp8_gather_4slots", kv_bytes, "GB/s", || {
+        black_box(kv8.gather_batch(&slots8));
+    });
+    let (g8k, g8v, _) = kv8.gather_batch(&slots8);
+    b.bench_throughput("kv_fp8_scatter_4slots", kv_bytes, "GB/s", || {
+        black_box(kv8.scatter_batch(&slots8, &g8k, &g8v));
     });
 }

@@ -23,6 +23,7 @@ use super::kvcache::KvStore;
 use super::metrics::ServeMetrics;
 use super::request::{Request, RequestId, RequestOutput};
 use super::scheduler::{SchedulePolicy, Scheduler};
+use crate::quant::{KvDtype, KvLayout};
 use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
 use crate::util::json::Json;
@@ -103,6 +104,10 @@ pub struct EngineConfig {
     pub slots: usize,
     pub policy: SchedulePolicy,
     pub queue_capacity: usize,
+    /// Host KV-cache storage dtype. `F32` preserves the exact legacy
+    /// roundtrip; `Fp8` stores codes + per-(slot, layer, kv-head) scales
+    /// at 1/4 the bytes (the paper's serving configuration).
+    pub kv_dtype: KvDtype,
 }
 
 impl EngineConfig {
@@ -113,6 +118,7 @@ impl EngineConfig {
             slots: 8,
             policy: SchedulePolicy::PrefillFirst,
             queue_capacity: 256,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -164,12 +170,13 @@ impl Engine {
             .iter()
             .map(|p| TensorIn::f32(&p.dims, p.data.clone()).to_literal())
             .collect::<Result<Vec<_>>>()?;
-        let kv = KvStore::new(
+        let kv = KvStore::with_dtype(
             meta.layers,
             cfg.slots,
             meta.cache_t,
             meta.kv_heads,
             meta.head_dim(),
+            cfg.kv_dtype,
         );
         let scheduler = Scheduler::new(
             cfg.policy,
@@ -191,6 +198,12 @@ impl Engine {
             scratch_v: Vec::new(),
             scratch_bucket: 0,
         })
+    }
+
+    /// The KV accounting contract this engine's host store follows — the
+    /// same [`KvLayout`] the capacity model and fleet replicas charge.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.kv.layout()
     }
 
     /// Pre-compile the artifacts this engine will use, so TTFT/TPOT metrics
@@ -313,8 +326,10 @@ impl Engine {
             },
         );
         self.metrics.generated_tokens += 1;
-        // Immediately-finished request (max_new_tokens == 1 or stop token).
-        self.maybe_finish(slot);
+        // Immediately-finished request (max_new_tokens == 1, stop token, or
+        // a prompt that already fills the cache).
+        let kv_full = self.kv.is_full(slot);
+        self.maybe_finish(slot, kv_full);
         Ok(())
     }
 
@@ -380,7 +395,10 @@ impl Engine {
                 vr[dst..dst + ss].copy_from_slice(&outs[2].data[src..src + ss]);
             }
         }
-        self.kv.scatter_batch(group, &kr, &vr);
+        // "Sequence full" slots must finish below: the store clamps their
+        // length at cache_t, and another decode step would silently
+        // overwrite the last position.
+        let full_slots = self.kv.scatter_batch(group, &kr, &vr);
 
         let now = Instant::now();
         for (bi, &slot) in group.iter().enumerate() {
@@ -401,12 +419,12 @@ impl Engine {
         self.metrics.decode_time.record(t0.elapsed().as_secs_f64());
 
         for &slot in group {
-            self.maybe_finish(slot);
+            self.maybe_finish(slot, full_slots.contains(&slot));
         }
         Ok(())
     }
 
-    fn maybe_finish(&mut self, slot: usize) {
+    fn maybe_finish(&mut self, slot: usize, kv_full: bool) {
         let done = {
             let Some(a) = self.active.get(&slot) else {
                 return;
@@ -415,9 +433,7 @@ impl Engine {
                 .stop_token
                 .map(|s| a.generated.last() == Some(&s))
                 .unwrap_or(false);
-            let cache_full = self.kv.len(slot).unwrap_or(0) + a.generated.len()
-                >= self.meta.cache_t;
-            a.generated.len() >= a.max_new_tokens || hit_stop || cache_full
+            a.generated.len() >= a.max_new_tokens || hit_stop || kv_full
         };
         if done {
             let a = self.active.remove(&slot).unwrap();

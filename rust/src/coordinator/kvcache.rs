@@ -1,8 +1,33 @@
 //! KV-cache management: a page/block accounting allocator (the admission
 //! model behind Table 6's OOM frontier) and the slot-based host KV store
 //! the engine streams in/out of the decode artifacts.
+//!
+//! # The `KvLayout` accounting contract
+//!
+//! Every component that answers "what does a KV token cost?" derives the
+//! rate from one shared [`KvLayout`] (dtype + model geometry):
+//!
+//! * [`BlockAllocator::from_layout`] — admission control sizes its block
+//!   pool from `layout.bytes_per_token()`;
+//! * `gaudisim::MemoryModel` — the Table 6 OOM frontier charges the same
+//!   rate (FP8 KV by default, as in the paper);
+//! * `router::SimReplica` — fleet admission budgets HBM minus FP8 weights
+//!   at the same rate;
+//! * [`KvStore`] — the host store's actual allocation is exactly
+//!   `slots × layout.seq_bytes(t)`.
+//!
+//! FP8 KV stores one f32 max-abs scale per (slot, layer, kv-head) group
+//! for each of K and V. That metadata is per-*sequence*, not per-token
+//! (`layout.scale_bytes_per_seq()`, < 0.01% of any realistic sequence
+//! payload), and is charged against the fixed workspace reserve so the
+//! per-token rate — and with it the Table 6 frontier — stays exact.
 
 use anyhow::{bail, Result};
+
+use crate::fp8::bf16::{bf16_to_f32, f32_to_bf16};
+use crate::fp8::{encode_rne, CastMode, DecodeTable, Fp8Format};
+use crate::quant::{weight_scale_per_tensor, KvDtype, KvLayout};
+use crate::util::rng::XorShiftRng;
 
 /// Page-granular KV accounting (vLLM-style). Used for admission control and
 /// by the gaudisim capacity experiments; pure bookkeeping, no data.
@@ -51,6 +76,17 @@ impl BlockAllocator {
         Ok(Self::new(blocks, block_tokens))
     }
 
+    /// Capacity sized from the shared accounting contract: bytes/token
+    /// comes from the [`KvLayout`], the single source of truth also used
+    /// by `MemoryModel` and `SimReplica`.
+    pub fn from_layout(
+        kv_bytes_budget: f64,
+        layout: &KvLayout,
+        block_tokens: usize,
+    ) -> Result<Self> {
+        Self::from_capacity(kv_bytes_budget, layout.bytes_per_token(), block_tokens)
+    }
+
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
@@ -76,8 +112,20 @@ impl BlockAllocator {
         Ok(need)
     }
 
-    pub fn release(&mut self, blocks: usize) {
-        self.free_blocks = (self.free_blocks + blocks).min(self.total_blocks);
+    /// Checked release: freeing more blocks than are outstanding is a
+    /// double-release accounting bug, not a condition to clamp over —
+    /// clamping would hide the corruption until admission over-commits.
+    pub fn release(&mut self, blocks: usize) -> Result<()> {
+        if self.free_blocks + blocks > self.total_blocks {
+            bail!(
+                "KV block over-release: freeing {blocks} with {} free of {} \
+                 (double release?)",
+                self.free_blocks,
+                self.total_blocks
+            );
+        }
+        self.free_blocks += blocks;
+        Ok(())
     }
 
     pub fn utilization(&self) -> f64 {
@@ -85,33 +133,168 @@ impl BlockAllocator {
     }
 }
 
+/// Dtype-specific backing storage of a [`KvStore`]: raw values (F32/BF16)
+/// or FP8 codes plus per-(layer, slot, kv-head) max-abs scales, K and V
+/// scaled independently.
+enum KvData {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Bf16 {
+        k: Vec<u16>,
+        v: Vec<u16>,
+    },
+    Fp8 {
+        format: Fp8Format,
+        table: DecodeTable,
+        k: Vec<u8>,
+        v: Vec<u8>,
+        /// One scale per (layer, slot, kv-head), row-major in that order;
+        /// freed groups reset to 1.0.
+        k_scale: Vec<f32>,
+        v_scale: Vec<f32>,
+    },
+}
+
+/// Quantize one (T, Hkv, D) region with a fresh max-abs scale per kv-head.
+/// The scale is `maxabs / r_q` (sanitized to 1.0 for all-zero groups), so
+/// the group's max lands exactly on the largest representable magnitude.
+///
+/// Only positions `< valid_t` are scanned and encoded; the tail is zeroed.
+/// Prefill artifacts hand over bucket-padded buffers whose positions past
+/// the prompt hold real (pad-token) activations — attention masks them,
+/// but letting them into the max-abs would coarsen the valid tokens' grid.
+fn encode_region_fp8(
+    src: &[f32],
+    dst: &mut [u8],
+    scales: &mut [f32],
+    valid_t: usize,
+    t: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    format: Fp8Format,
+) {
+    for h in 0..kv_heads {
+        let mut maxabs = 0.0f32;
+        for ti in 0..valid_t {
+            let base = (ti * kv_heads + h) * head_dim;
+            for d in 0..head_dim {
+                maxabs = maxabs.max(src[base + d].abs());
+            }
+        }
+        // Clamp to the f32 normal range: a deep-subnormal group max would
+        // otherwise yield a scale whose reciprocal overflows to infinity
+        // and poisons the codes with NaN.
+        let s = weight_scale_per_tensor(maxabs, format).max(f32::MIN_POSITIVE);
+        scales[h] = s;
+        let inv = 1.0 / s;
+        for ti in 0..valid_t {
+            let base = (ti * kv_heads + h) * head_dim;
+            for d in 0..head_dim {
+                dst[base + d] = encode_rne(src[base + d] * inv, format, CastMode::SatFinite);
+            }
+        }
+        for ti in valid_t..t {
+            let base = (ti * kv_heads + h) * head_dim;
+            dst[base..base + head_dim].fill(0);
+        }
+    }
+}
+
+/// Dequantize one (T, Hkv, D) region using the per-head scales.
+fn decode_region_fp8(
+    src: &[u8],
+    dst: &mut [f32],
+    scales: &[f32],
+    table: &DecodeTable,
+    t: usize,
+    kv_heads: usize,
+    head_dim: usize,
+) {
+    for h in 0..kv_heads {
+        let s = scales[h];
+        for ti in 0..t {
+            let base = (ti * kv_heads + h) * head_dim;
+            for d in 0..head_dim {
+                dst[base + d] = table.get(src[base + d]) * s;
+            }
+        }
+    }
+}
+
 /// Host-side KV storage for `slots` concurrent sequences with capacity `t`
 /// tokens each, layout (L, slot, T, Hkv, D) matching the decode artifact.
+/// Storage is [`KvDtype`]-backed: F32 roundtrips bit-exactly, BF16 rounds
+/// to 2 B/elem, FP8 quantizes on `write_slot`/`scatter_batch` and
+/// dequantizes on `gather_batch_into` (codes + per-(slot, layer, kv-head)
+/// scales — the paper's 1 B/elem serving configuration).
 pub struct KvStore {
     pub layers: usize,
     pub slots: usize,
     pub t: usize,
     pub kv_heads: usize,
     pub head_dim: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    data: KvData,
     /// Valid tokens per slot; None = slot free.
     lens: Vec<Option<usize>>,
 }
 
 impl KvStore {
+    /// F32 store — the exact-roundtrip legacy configuration.
     pub fn new(layers: usize, slots: usize, t: usize, kv_heads: usize, head_dim: usize) -> Self {
+        Self::with_dtype(layers, slots, t, kv_heads, head_dim, KvDtype::F32)
+    }
+
+    pub fn with_dtype(
+        layers: usize,
+        slots: usize,
+        t: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        dtype: KvDtype,
+    ) -> Self {
         let n = layers * slots * t * kv_heads * head_dim;
+        let data = match dtype {
+            KvDtype::F32 => KvData::F32 {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+            },
+            KvDtype::Bf16 => KvData::Bf16 {
+                k: vec![0; n],
+                v: vec![0; n],
+            },
+            KvDtype::Fp8(format) => KvData::Fp8 {
+                format,
+                table: DecodeTable::new(format),
+                k: vec![0; n],
+                v: vec![0; n],
+                k_scale: vec![1.0; layers * slots * kv_heads],
+                v_scale: vec![1.0; layers * slots * kv_heads],
+            },
+        };
         Self {
             layers,
             slots,
             t,
             kv_heads,
             head_dim,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
+            data,
             lens: vec![None; slots],
         }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match &self.data {
+            KvData::F32 { .. } => KvDtype::F32,
+            KvData::Bf16 { .. } => KvDtype::Bf16,
+            KvData::Fp8 { format, .. } => KvDtype::Fp8(*format),
+        }
+    }
+
+    /// The accounting contract this store's storage follows.
+    pub fn layout(&self) -> KvLayout {
+        KvLayout::new(self.dtype(), self.layers, self.kv_heads, self.head_dim)
     }
 
     fn slot_stride(&self) -> usize {
@@ -122,6 +305,10 @@ impl KvStore {
         self.slots * self.slot_stride()
     }
 
+    fn scale_idx(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.slots + slot) * self.kv_heads
+    }
+
     pub fn alloc_slot(&mut self) -> Option<usize> {
         let idx = self.lens.iter().position(|l| l.is_none())?;
         self.lens[idx] = Some(0);
@@ -130,17 +317,53 @@ impl KvStore {
 
     pub fn free_slot(&mut self, slot: usize) {
         self.lens[slot] = None;
-        // Zero the slot so stale keys can never leak into a new request.
+        // Zero the slot (and reset scales) so stale keys can never leak
+        // into a new request.
         let (ls, ss) = (self.layer_stride(), self.slot_stride());
-        for l in 0..self.layers {
-            let base = l * ls + slot * ss;
-            self.k[base..base + ss].fill(0.0);
-            self.v[base..base + ss].fill(0.0);
+        let (layers, slots, hk) = (self.layers, self.slots, self.kv_heads);
+        match &mut self.data {
+            KvData::F32 { k, v } => {
+                for l in 0..layers {
+                    let base = l * ls + slot * ss;
+                    k[base..base + ss].fill(0.0);
+                    v[base..base + ss].fill(0.0);
+                }
+            }
+            KvData::Bf16 { k, v } => {
+                for l in 0..layers {
+                    let base = l * ls + slot * ss;
+                    k[base..base + ss].fill(0);
+                    v[base..base + ss].fill(0);
+                }
+            }
+            KvData::Fp8 {
+                k, v, k_scale, v_scale, ..
+            } => {
+                for l in 0..layers {
+                    let base = l * ls + slot * ss;
+                    k[base..base + ss].fill(0);
+                    v[base..base + ss].fill(0);
+                    let si = (l * slots + slot) * hk;
+                    k_scale[si..si + hk].fill(1.0);
+                    v_scale[si..si + hk].fill(1.0);
+                }
+            }
         }
     }
 
     pub fn len(&self, slot: usize) -> Option<usize> {
         self.lens[slot]
+    }
+
+    /// Token positions still writable in `slot` (None = slot free).
+    pub fn remaining(&self, slot: usize) -> Option<usize> {
+        self.lens[slot].map(|l| self.t - l)
+    }
+
+    /// An active slot whose sequence has reached cache capacity: another
+    /// decode step would have no position to write.
+    pub fn is_full(&self, slot: usize) -> bool {
+        self.lens[slot] == Some(self.t)
     }
 
     pub fn set_len(&mut self, slot: usize, len: usize) {
@@ -152,17 +375,66 @@ impl KvStore {
         (0..self.slots).filter(|s| self.lens[*s].is_some()).collect()
     }
 
-    /// Write a prefill artifact's (L, 1, T, Hkv, D) output into `slot`.
+    /// Write a prefill artifact's (L, 1, T, Hkv, D) output into `slot`,
+    /// quantizing to the store's dtype.
     pub fn write_slot(&mut self, slot: usize, k_out: &[f32], v_out: &[f32], len: usize) {
         let ss = self.slot_stride();
         assert_eq!(k_out.len(), self.layers * ss, "prefill kv size");
+        assert_eq!(v_out.len(), self.layers * ss, "prefill kv size");
         let ls = self.layer_stride();
-        for l in 0..self.layers {
-            let src = &k_out[l * ss..(l + 1) * ss];
-            let dst = l * ls + slot * ss;
-            self.k[dst..dst + ss].copy_from_slice(src);
-            let src = &v_out[l * ss..(l + 1) * ss];
-            self.v[dst..dst + ss].copy_from_slice(src);
+        let (layers, slots, t) = (self.layers, self.slots, self.t);
+        let (hk, d) = (self.kv_heads, self.head_dim);
+        match &mut self.data {
+            KvData::F32 { k, v } => {
+                for l in 0..layers {
+                    let dst = l * ls + slot * ss;
+                    k[dst..dst + ss].copy_from_slice(&k_out[l * ss..(l + 1) * ss]);
+                    v[dst..dst + ss].copy_from_slice(&v_out[l * ss..(l + 1) * ss]);
+                }
+            }
+            KvData::Bf16 { k, v } => {
+                for l in 0..layers {
+                    let dst = l * ls + slot * ss;
+                    for i in 0..ss {
+                        k[dst + i] = f32_to_bf16(k_out[l * ss + i]);
+                        v[dst + i] = f32_to_bf16(v_out[l * ss + i]);
+                    }
+                }
+            }
+            KvData::Fp8 {
+                format,
+                k,
+                v,
+                k_scale,
+                v_scale,
+                ..
+            } => {
+                let valid = len.min(t);
+                for l in 0..layers {
+                    let dst = l * ls + slot * ss;
+                    let si = (l * slots + slot) * hk;
+                    encode_region_fp8(
+                        &k_out[l * ss..(l + 1) * ss],
+                        &mut k[dst..dst + ss],
+                        &mut k_scale[si..si + hk],
+                        valid,
+                        t,
+                        hk,
+                        d,
+                        *format,
+                    );
+                    encode_region_fp8(
+                        &v_out[l * ss..(l + 1) * ss],
+                        &mut v[dst..dst + ss],
+                        &mut v_scale[si..si + hk],
+                        valid,
+                        t,
+                        hk,
+                        d,
+                        *format,
+                    );
+                }
+            }
         }
         self.set_len(slot, len);
     }
@@ -180,8 +452,11 @@ impl KvStore {
 
     /// Allocation-free gather into caller-owned buffers sized for a batch
     /// of `bucket` rows (§Perf L3: the per-step `vec!` zero-fill dominated
-    /// the gather path). Rows ≥ group.len() are left untouched — the engine
-    /// zeroes padding rows only when the bucket grows.
+    /// the gather path), dequantizing to f32 on the way out. Rows ≥
+    /// group.len() are left untouched — the engine zeroes padding rows only
+    /// when the bucket grows. An FP8 store returns zeros past each slot's
+    /// valid prefix (quantization never stored the masked pad positions);
+    /// F32/BF16 stores pass whatever was written straight through.
     pub fn gather_batch_into(
         &self,
         group: &[usize],
@@ -201,36 +476,186 @@ impl KvStore {
             for l in 0..self.layers {
                 let src = l * ls + slot * ss;
                 let dst = (l * b + bi) * ss;
-                k[dst..dst + ss].copy_from_slice(&self.k[src..src + ss]);
-                v[dst..dst + ss].copy_from_slice(&self.v[src..src + ss]);
+                match &self.data {
+                    KvData::F32 { k: ks, v: vs } => {
+                        k[dst..dst + ss].copy_from_slice(&ks[src..src + ss]);
+                        v[dst..dst + ss].copy_from_slice(&vs[src..src + ss]);
+                    }
+                    KvData::Bf16 { k: ks, v: vs } => {
+                        for i in 0..ss {
+                            k[dst + i] = bf16_to_f32(ks[src + i]);
+                            v[dst + i] = bf16_to_f32(vs[src + i]);
+                        }
+                    }
+                    KvData::Fp8 {
+                        k: ks,
+                        v: vs,
+                        k_scale,
+                        v_scale,
+                        table,
+                        ..
+                    } => {
+                        let si = self.scale_idx(l, slot);
+                        decode_region_fp8(
+                            &ks[src..src + ss],
+                            &mut k[dst..dst + ss],
+                            &k_scale[si..si + self.kv_heads],
+                            table,
+                            self.t,
+                            self.kv_heads,
+                            self.head_dim,
+                        );
+                        decode_region_fp8(
+                            &vs[src..src + ss],
+                            &mut v[dst..dst + ss],
+                            &v_scale[si..si + self.kv_heads],
+                            table,
+                            self.t,
+                            self.kv_heads,
+                            self.head_dim,
+                        );
+                    }
+                }
             }
         }
         lens.resize(b, 0);
         lens
     }
 
-    /// Scatter an updated (L, B, T, Hkv, D) batch back into the slots and
-    /// bump their lengths.
-    pub fn scatter_batch(&mut self, group: &[usize], k: &[f32], v: &[f32]) {
+    /// Scatter an updated (L, B, T, Hkv, D) batch back into the slots
+    /// (quantizing to the store's dtype) and bump their lengths.
+    ///
+    /// Returns the slots whose sequence just reached cache capacity
+    /// (`len == t`) — the "sequence full" signal. The caller must finish
+    /// those requests: a further decode step has no position to write, and
+    /// the pre-signal behavior of clamping `len` at capacity silently
+    /// overwrote the last position forever.
+    pub fn scatter_batch(&mut self, group: &[usize], k_in: &[f32], v_in: &[f32]) -> Vec<usize> {
         let b = group.len();
         let ss = self.slot_stride();
         let ls = self.layer_stride();
-        assert_eq!(k.len(), self.layers * b * ss);
+        assert_eq!(k_in.len(), self.layers * b * ss);
+        assert_eq!(v_in.len(), self.layers * b * ss);
+        let (layers, slots, t) = (self.layers, self.slots, self.t);
+        let (hk, d) = (self.kv_heads, self.head_dim);
         for (bi, &slot) in group.iter().enumerate() {
-            for l in 0..self.layers {
+            // The decode step appended one position at the old length; only
+            // that prefix carries real tokens (the tail is pad garbage the
+            // attention mask hides — it must stay out of the FP8 scales).
+            let valid = self.lens[slot].map_or(t, |l| (l + 1).min(t));
+            for l in 0..layers {
                 let dst = l * ls + slot * ss;
                 let src = (l * b + bi) * ss;
-                self.k[dst..dst + ss].copy_from_slice(&k[src..src + ss]);
-                self.v[dst..dst + ss].copy_from_slice(&v[src..src + ss]);
-            }
-            if let Some(len) = self.lens[slot] {
-                self.lens[slot] = Some((len + 1).min(self.t));
+                match &mut self.data {
+                    KvData::F32 { k, v } => {
+                        k[dst..dst + ss].copy_from_slice(&k_in[src..src + ss]);
+                        v[dst..dst + ss].copy_from_slice(&v_in[src..src + ss]);
+                    }
+                    KvData::Bf16 { k, v } => {
+                        for i in 0..ss {
+                            k[dst + i] = f32_to_bf16(k_in[src + i]);
+                            v[dst + i] = f32_to_bf16(v_in[src + i]);
+                        }
+                    }
+                    KvData::Fp8 {
+                        format,
+                        k,
+                        v,
+                        k_scale,
+                        v_scale,
+                        ..
+                    } => {
+                        let si = (l * slots + slot) * hk;
+                        encode_region_fp8(
+                            &k_in[src..src + ss],
+                            &mut k[dst..dst + ss],
+                            &mut k_scale[si..si + hk],
+                            valid,
+                            t,
+                            hk,
+                            d,
+                            *format,
+                        );
+                        encode_region_fp8(
+                            &v_in[src..src + ss],
+                            &mut v[dst..dst + ss],
+                            &mut v_scale[si..si + hk],
+                            valid,
+                            t,
+                            hk,
+                            d,
+                            *format,
+                        );
+                    }
+                }
             }
         }
+        let mut full = Vec::new();
+        for &slot in group {
+            if let Some(len) = self.lens[slot] {
+                let bumped = (len + 1).min(self.t);
+                self.lens[slot] = Some(bumped);
+                if bumped == self.t {
+                    full.push(slot);
+                }
+            }
+        }
+        full
     }
 
+    /// Exact bytes this store allocates, derived from the shared layout:
+    /// `slots × (t × bytes_per_token + scale_bytes_per_seq)`.
     pub fn kv_bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+        self.slots * self.layout().seq_bytes(self.t)
+    }
+
+    /// Single-step attention readout over the stored KV of `slots` — the
+    /// numerical-fidelity probe tests and benches use to measure what KV
+    /// quantization does to decode logits. For each (slot, layer, kv-head)
+    /// a deterministic N(0,1) query attends (scaled dot-product softmax)
+    /// over the valid positions; readouts are concatenated in
+    /// (slot, layer, head, dim) order. Two stores holding the same written
+    /// data produce comparable vectors regardless of dtype.
+    pub fn decode_attention_probe(&self, slots: &[usize], seed: u64) -> Vec<f32> {
+        let mut rng = XorShiftRng::new(seed);
+        let d = self.head_dim;
+        let ss = self.slot_stride();
+        let (k, v, lens) = self.gather_batch(slots);
+        let b = slots.len();
+        let mut out = Vec::with_capacity(b * self.layers * self.kv_heads * d);
+        for bi in 0..b {
+            let len = (lens[bi].max(1)) as usize;
+            for l in 0..self.layers {
+                let base = (l * b + bi) * ss;
+                for h in 0..self.kv_heads {
+                    let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    let mut scores = Vec::with_capacity(len);
+                    for ti in 0..len {
+                        let off = base + (ti * self.kv_heads + h) * d;
+                        let mut s = 0.0f32;
+                        for (di, qd) in q.iter().enumerate() {
+                            s += qd * k[off + di];
+                        }
+                        scores.push(s / (d as f32).sqrt());
+                    }
+                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut ws: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+                    let z: f32 = ws.iter().sum::<f32>().max(1e-30);
+                    for w in &mut ws {
+                        *w /= z;
+                    }
+                    for di in 0..d {
+                        let mut acc = 0.0f32;
+                        for (ti, w) in ws.iter().enumerate() {
+                            let off = base + (ti * self.kv_heads + h) * d;
+                            acc += w * v[off + di];
+                        }
+                        out.push(acc);
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -250,9 +675,23 @@ mod tests {
         assert_eq!(got, 3);
         assert_eq!(a.free_blocks(), 7);
         assert!(a.allocate(160).is_err());
-        a.release(3);
+        a.release(3).unwrap();
         assert_eq!(a.free_blocks(), 10);
         assert_eq!(a.utilization(), 0.0);
+    }
+
+    #[test]
+    fn release_rejects_over_release() {
+        let mut a = BlockAllocator::new(10, 16);
+        a.allocate(33).unwrap(); // 3 blocks out
+        // Double release: the second free of 3 would exceed total_blocks.
+        a.release(3).unwrap();
+        let e = a.release(3).unwrap_err();
+        assert!(format!("{e:#}").contains("over-release"), "{e:#}");
+        assert_eq!(a.free_blocks(), 10, "failed release must not corrupt state");
+        // Releasing more than ever existed errors too.
+        let mut b = BlockAllocator::new(4, 16);
+        assert!(b.release(5).is_err());
     }
 
     #[test]
@@ -262,6 +701,19 @@ mod tests {
         assert_eq!(a.total_blocks, (20e9 / (163_840.0 * 16.0)) as usize);
         // matches Table 6: batch 16 × 8192 ≈ 131k tokens needs 8192 blocks.
         assert!(a.total_blocks > 7000);
+    }
+
+    #[test]
+    fn from_layout_matches_from_capacity() {
+        // The same Llama3.1-70B geometry through the shared contract.
+        let fp8 = KvLayout::new(KvDtype::FP8_DEFAULT, 80, 8, 128);
+        let a = BlockAllocator::from_layout(20e9, &fp8, 16).unwrap();
+        let b = BlockAllocator::from_capacity(20e9, 163_840, 16).unwrap();
+        assert_eq!(a.total_blocks, b.total_blocks);
+        // f32 KV buys 4× fewer blocks from the same budget.
+        let f32_l = KvLayout::new(KvDtype::F32, 80, 8, 128);
+        let c = BlockAllocator::from_layout(20e9, &f32_l, 16).unwrap();
+        assert!(a.total_blocks / c.total_blocks >= 3);
     }
 
     #[test]
@@ -304,7 +756,8 @@ mod tests {
         assert_eq!(lens, vec![5]);
         // scatter back modified data and check the bump.
         let k2: Vec<f32> = k.iter().map(|x| x + 1.0).collect();
-        s.scatter_batch(&[slot], &k2, &v);
+        let full = s.scatter_batch(&[slot], &k2, &v);
+        assert!(full.is_empty(), "5→6 of 8 is not full");
         assert_eq!(s.len(slot), Some(6));
         let (k3, _, _) = s.gather_batch(&[slot]);
         assert_eq!(k3, k2);
@@ -336,5 +789,152 @@ mod tests {
         assert_eq!(k, vec![0.0, 0.0]);
         assert_eq!(v, vec![0.0, 0.0]);
         assert_eq!(lens, vec![0]);
+    }
+
+    #[test]
+    fn freed_slot_is_zeroed_for_code_and_scale_storage() {
+        for dtype in [
+            KvDtype::Bf16,
+            KvDtype::Fp8(Fp8Format::E4M3Gaudi2),
+            KvDtype::Fp8(Fp8Format::E4M3),
+            KvDtype::Fp8(Fp8Format::E5M2),
+        ] {
+            let mut s = KvStore::with_dtype(2, 2, 4, 2, 3, dtype);
+            let slot = s.alloc_slot().unwrap();
+            let n = 2 * 4 * 2 * 3;
+            s.write_slot(slot, &vec![123.0; n], &vec![-77.0; n], 4);
+            s.free_slot(slot);
+            let slot = s.alloc_slot().unwrap();
+            let (k, v, lens) = s.gather_batch(&[slot]);
+            assert!(k.iter().all(|x| *x == 0.0), "{dtype:?}: stale K");
+            assert!(v.iter().all(|x| *x == 0.0), "{dtype:?}: stale V");
+            assert_eq!(lens, vec![0]);
+        }
+    }
+
+    #[test]
+    fn scatter_signals_sequence_full_and_never_exceeds_capacity() {
+        let (l, slots, t, kvh, hd) = (1, 2, 4, 1, 2);
+        let mut s = KvStore::new(l, slots, t, kvh, hd);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        s.write_slot(slot, &vec![1.0; l * ss], &vec![1.0; l * ss], 3);
+        let buf = vec![2.0f32; l * ss];
+        // 3 → 4 == t: the scatter reports the sequence as full.
+        let full = s.scatter_batch(&[slot], &buf, &buf);
+        assert_eq!(full, vec![slot]);
+        assert_eq!(s.len(slot), Some(t));
+        assert!(s.is_full(slot));
+        assert_eq!(s.remaining(slot), Some(0));
+        // A further (buggy) scatter keeps signalling and never exceeds t.
+        let full = s.scatter_batch(&[slot], &buf, &buf);
+        assert_eq!(full, vec![slot]);
+        assert_eq!(s.len(slot), Some(t));
+    }
+
+    #[test]
+    fn fp8_store_quantizes_with_bounded_error() {
+        let (l, slots, t, kvh, hd) = (2, 2, 8, 2, 4);
+        let mut rng = XorShiftRng::new(3);
+        let n = l * t * kvh * hd;
+        let k_out: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let v_out: Vec<f32> = (0..n).map(|_| rng.normal() * 4.0).collect();
+        let mut s = KvStore::with_dtype(l, slots, t, kvh, hd, KvDtype::Fp8(Fp8Format::E4M3Gaudi2));
+        let slot = s.alloc_slot().unwrap();
+        s.write_slot(slot, &k_out, &v_out, t);
+        let (k, v, _) = s.gather_batch(&[slot]);
+        // E4M3 (3 mantissa bits): per-element error ≤ maxabs·2^-4.
+        let kmax = k_out.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let vmax = v_out.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for i in 0..n {
+            assert!(
+                (k[i] - k_out[i]).abs() <= kmax / 16.0 * 1.001,
+                "K[{i}]: {} vs {}",
+                k[i],
+                k_out[i]
+            );
+            assert!(
+                (v[i] - v_out[i]).abs() <= vmax / 16.0 * 1.001,
+                "V[{i}]: {} vs {}",
+                v[i],
+                v_out[i]
+            );
+        }
+        // Requantizing already-quantized data must not drift: the codes are
+        // stable (values sit on grid points, far from rounding midpoints),
+        // and only the recomputed scale may move by one f32 ulp — so a
+        // gather→scatter cycle reproduces every value to ~2^-22 relative.
+        let (k0, v0, _) = s.gather_batch(&[slot]);
+        s.scatter_batch(&[slot], &k0, &v0);
+        let (k1, v1, _) = s.gather_batch(&[slot]);
+        for (a, b) in k0.iter().zip(&k1).chain(v0.iter().zip(&v1)) {
+            assert!(
+                (a - b).abs() <= a.abs() * 3e-7,
+                "requantization drift: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_pad_positions_do_not_coarsen_scales() {
+        let (l, slots, t, kvh, hd) = (1, 1, 8, 1, 2);
+        let mut s = KvStore::with_dtype(l, slots, t, kvh, hd, KvDtype::FP8_DEFAULT);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        // Valid prefix of 2 tokens with |x| ≤ 1; the bucket-padded tail
+        // holds huge garbage (prefill computes real activations for pad
+        // tokens). A scale contaminated by the tail would flush the valid
+        // values to zero (0.25 / (1e6/240) is below E4M3's subnormals).
+        let mut k = vec![1e6f32; ss];
+        k[..4].copy_from_slice(&[0.5, -1.0, 0.25, 1.0]);
+        s.write_slot(slot, &k, &k, 2);
+        let (kg, _, _) = s.gather_batch(&[slot]);
+        for i in 0..4 {
+            assert!(
+                (kg[i] - k[i]).abs() <= 1.0 / 16.0 * 1.001,
+                "valid token quantized on a pad-coarsened grid: kg[{i}]={}",
+                kg[i]
+            );
+        }
+        // The garbage tail is zeroed, not persisted.
+        assert!(kg[4..].iter().all(|x| *x == 0.0), "{kg:?}");
+    }
+
+    #[test]
+    fn kv_bytes_derive_from_layout() {
+        let f32_s = KvStore::new(2, 3, 8, 2, 4);
+        assert_eq!(f32_s.kv_bytes(), 2 * 2 * 3 * 8 * 2 * 4 * 4);
+        assert_eq!(f32_s.kv_bytes(), 3 * f32_s.layout().seq_bytes(8));
+        let fp8_s = KvStore::with_dtype(2, 3, 8, 2, 4, KvDtype::FP8_DEFAULT);
+        // 1 B payload + 2·L·Hkv·4 B scales per slot.
+        assert_eq!(fp8_s.kv_bytes(), 3 * (8 * 2 * 2 * 2 * 4 + 2 * 2 * 2 * 4));
+        assert!(fp8_s.kv_bytes() * 3 < f32_s.kv_bytes(), "fp8 ≈ 4× smaller");
+    }
+
+    #[test]
+    fn attention_probe_close_between_f32_and_fp8() {
+        let (l, slots, t, kvh, hd) = (2, 2, 16, 2, 8);
+        let mut rng = XorShiftRng::new(11);
+        let n = l * t * kvh * hd;
+        let k_out: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let v_out: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut exact = KvStore::new(l, slots, t, kvh, hd);
+        let mut quant = KvStore::with_dtype(l, slots, t, kvh, hd, KvDtype::FP8_DEFAULT);
+        let se = exact.alloc_slot().unwrap();
+        let sq = quant.alloc_slot().unwrap();
+        exact.write_slot(se, &k_out, &v_out, t);
+        quant.write_slot(sq, &k_out, &v_out, t);
+        let pe = exact.decode_attention_probe(&[se], 99);
+        let pq = quant.decode_attention_probe(&[sq], 99);
+        assert_eq!(pe.len(), pq.len());
+        let mse: f64 = pe
+            .iter()
+            .zip(&pq)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / pe.len() as f64;
+        assert!(mse < 1e-2, "decode readout MSE {mse}");
+        // And the exact store agrees with itself bit-for-bit.
+        assert_eq!(pe, exact.decode_attention_probe(&[se], 99));
     }
 }

@@ -22,8 +22,11 @@ pub struct Device {
     pub peak_bf16_tflops: f64,
     /// HBM bandwidth (TB/s). Gaudi 2: 2.46, Gaudi 3: 3.7.
     pub hbm_bandwidth_tbps: f64,
-    /// HBM capacity (GiB). Gaudi 2: 96, Gaudi 3: 128.
-    pub hbm_capacity_gib: f64,
+    /// HBM capacity in *marketed decimal gigabytes* (1 GB = 1e9 B), the
+    /// convention the paper and vendor specs use. Gaudi 2: 96, Gaudi 3:
+    /// 128. (Formerly misnamed `hbm_capacity_gib` while every consumer
+    /// multiplied by 1e9.)
+    pub hbm_capacity_gb: f64,
     /// On-chip SRAM (MiB) — the analogue of VMEM for tiling decisions.
     pub sram_mib: f64,
     /// MME systolic-array tile (square side, elements) per engine.
@@ -42,7 +45,7 @@ impl Device {
             peak_fp8_tflops: 865.0,
             peak_bf16_tflops: 432.0,
             hbm_bandwidth_tbps: 2.46,
-            hbm_capacity_gib: 96.0,
+            hbm_capacity_gb: 96.0,
             sram_mib: 48.0,
             mme_tile: 256,
             mme_engines: 2,
@@ -56,7 +59,7 @@ impl Device {
             peak_fp8_tflops: 1835.0,
             peak_bf16_tflops: 1835.0, // Gaudi 3 MME runs BF16 at FP8 rate
             hbm_bandwidth_tbps: 3.7,
-            hbm_capacity_gib: 128.0,
+            hbm_capacity_gb: 128.0,
             sram_mib: 96.0,
             mme_tile: 256,
             mme_engines: 8,
@@ -71,8 +74,9 @@ impl Device {
         }
     }
 
+    /// Usable capacity in bytes, decimal-GB semantics matching the field.
     pub fn hbm_capacity_bytes(&self) -> f64 {
-        self.hbm_capacity_gib * 1024.0 * 1024.0 * 1024.0
+        self.hbm_capacity_gb * 1e9
     }
 }
 
@@ -84,7 +88,8 @@ mod tests {
     fn gaudi2_constants_match_paper() {
         let d = Device::gaudi2();
         assert_eq!(d.peak_fp8_tflops, 865.0); // Table 1 caption
-        assert_eq!(d.hbm_capacity_gib, 96.0);
+        assert_eq!(d.hbm_capacity_gb, 96.0);
+        assert_eq!(d.hbm_capacity_bytes(), 96e9); // marketed decimal GB
         assert_eq!(d.generation, Generation::Gaudi2);
     }
 
@@ -93,6 +98,6 @@ mod tests {
         let (g2, g3) = (Device::gaudi2(), Device::gaudi3());
         assert!(g3.peak_fp8_tflops > g2.peak_fp8_tflops);
         assert!(g3.hbm_bandwidth_tbps > g2.hbm_bandwidth_tbps);
-        assert!(g3.hbm_capacity_gib > g2.hbm_capacity_gib);
+        assert!(g3.hbm_capacity_gb > g2.hbm_capacity_gb);
     }
 }

@@ -4,9 +4,15 @@
 //! * linear weights in FP8 (1 B/param) — the paper quantizes all linears;
 //! * embedding + LM head kept in BF16 (2 B/param) — excluded from FP8
 //!   (§3.3 step 5, Table 5 caption);
-//! * KV cache in FP8 (1 B/elem) — required for the Table 6 batch grid to
-//!   fit (e.g. batch 16 × seq 8192 works on 96 GB only with FP8 KV);
+//! * KV cache at the shared [`KvLayout`] rate — FP8 (1 B/elem) by default,
+//!   required for the Table 6 batch grid to fit (e.g. batch 16 × seq 8192
+//!   works on 96 GB only with FP8 KV);
 //! * a fixed activation/workspace reserve.
+//!
+//! The KV rate is the same `KvLayout::bytes_per_token()` the coordinator's
+//! `BlockAllocator` and the fleet's `SimReplica` charge, so the capacity
+//! model, admission control, and the host store can no longer disagree
+//! about what a token costs.
 //!
 //! The paper notes: "thanks to the memory gain, we can measure Llama 70B on
 //! a single Gaudi 2, which would not be possible with BF16" — reproduced by
@@ -14,24 +20,45 @@
 
 use super::device::Device;
 use crate::model::config::ModelConfig;
+use crate::quant::{KvDtype, KvLayout};
 
 /// Fixed workspace reserve (bytes): activations, cos/sin tables, comms.
+/// FP8 KV scale metadata (per-sequence, `KvLayout::scale_bytes_per_seq`)
+/// is charged here rather than to the per-token rate.
 pub const WORKSPACE_BYTES: f64 = 0.5e9;
 
 #[derive(Clone, Debug)]
 pub struct MemoryModel {
     pub device: Device,
     pub cfg: ModelConfig,
+    /// KV-cache storage dtype. Defaults to FP8 — the paper's serving
+    /// configuration, required for the Table 6 grid to fit in 96 GB.
+    pub kv_dtype: KvDtype,
 }
 
 impl MemoryModel {
     pub fn new(device: Device, cfg: ModelConfig) -> Self {
-        Self { device, cfg }
+        Self {
+            device,
+            cfg,
+            kv_dtype: KvDtype::FP8_DEFAULT,
+        }
+    }
+
+    /// Same model/device, different KV storage dtype.
+    pub fn with_kv_dtype(mut self, kv_dtype: KvDtype) -> Self {
+        self.kv_dtype = kv_dtype;
+        self
+    }
+
+    /// The shared KV accounting contract for this (model, dtype).
+    pub fn kv_layout(&self) -> KvLayout {
+        self.cfg.kv_layout(self.kv_dtype)
     }
 
     /// Marketed capacity uses decimal GB (96 GB = 96e9 bytes).
     pub fn capacity_bytes(&self) -> f64 {
-        self.device.hbm_capacity_gib * 1e9
+        self.device.hbm_capacity_bytes()
     }
 
     /// Model weights resident in HBM under FP8 linear quantization.
@@ -46,9 +73,10 @@ impl MemoryModel {
         self.cfg.total_params() as f64 * 2.0
     }
 
-    /// KV cache bytes for `batch` sequences of length `seq` (FP8 KV).
+    /// KV cache bytes for `batch` sequences of length `seq`, at the
+    /// layout's bytes/token rate (FP8 KV by default).
     pub fn kv_bytes(&self, batch: usize, seq: usize) -> f64 {
-        (batch * seq) as f64 * self.cfg.kv_bytes_per_token(1) as f64
+        (batch * seq) as f64 * self.kv_layout().bytes_per_token() as f64
     }
 
     pub fn total_bytes_fp8(&self, batch: usize, seq: usize) -> f64 {
@@ -60,10 +88,12 @@ impl MemoryModel {
         self.total_bytes_fp8(batch, seq) <= self.capacity_bytes()
     }
 
-    /// Would the BF16 model fit (without quantization)?
+    /// Would the BF16 model fit (without quantization)? BF16 weights and a
+    /// BF16 KV cache, both rates from the shared layout contract.
     pub fn fits_bf16(&self, batch: usize, seq: usize) -> bool {
-        self.weight_bytes_bf16() + 2.0 * self.kv_bytes(batch, seq) + WORKSPACE_BYTES
-            <= self.capacity_bytes()
+        let bf16_kv = self.cfg.kv_layout(KvDtype::Bf16);
+        let kv = (batch * seq) as f64 * bf16_kv.bytes_per_token() as f64;
+        self.weight_bytes_bf16() + kv + WORKSPACE_BYTES <= self.capacity_bytes()
     }
 
     /// Largest power-of-two batch that fits at sequence length `seq`.
@@ -161,6 +191,20 @@ mod tests {
         assert_eq!(m.max_batch_pow2(4096), Some(32));
         assert_eq!(m.max_batch_pow2(2048), Some(64));
         assert_eq!(m.max_batch_pow2(1024), Some(128));
+    }
+
+    #[test]
+    fn kv_dtype_drives_the_frontier() {
+        let fp8 = mm();
+        let f32m = mm().with_kv_dtype(KvDtype::F32);
+        assert_eq!(
+            f32m.kv_layout().bytes_per_token(),
+            4 * fp8.kv_layout().bytes_per_token()
+        );
+        // The paper's headline cell (batch 16 × seq 8192) fits only with
+        // FP8 KV — with f32 KV the same workload blows the 96 GB budget.
+        assert!(fp8.fits(16, 8192));
+        assert!(!f32m.fits(16, 8192), "f32 KV must not fit Table 6's 16×8192");
     }
 
     #[test]

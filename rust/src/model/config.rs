@@ -1,5 +1,7 @@
 //! Model architecture configs (the paper's §4 evaluation zoo).
 
+use crate::quant::{KvDtype, KvLayout};
+
 /// Model family — determines activation-outlier structure in the synthetic
 /// analogues (Mistral-family models show strong outlier channels, which is
 /// why unit scaling collapses on them in Table 4).
@@ -86,6 +88,12 @@ impl ModelConfig {
     /// KV-cache bytes per token for the whole model.
     pub fn kv_bytes_per_token(&self, bytes_per_elem: usize) -> usize {
         2 * self.layers * self.kv_heads * self.head_dim() * bytes_per_elem
+    }
+
+    /// The shared KV accounting contract for this model under `dtype` —
+    /// what `BlockAllocator`, `MemoryModel`, and `SimReplica` charge.
+    pub fn kv_layout(&self, dtype: KvDtype) -> KvLayout {
+        KvLayout::new(dtype, self.layers, self.kv_heads, self.head_dim())
     }
 
     // ----- the paper's zoo -------------------------------------------------
@@ -336,6 +344,28 @@ mod tests {
         // tiny ≈ 3-12M, base ≈ 70-140M.
         assert!((2_500_000..14_000_000).contains(&t), "{t}");
         assert!((70_000_000..140_000_000).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn kv_layout_agrees_with_legacy_rate() {
+        for c in [
+            ModelConfig::llama2_7b(),
+            ModelConfig::llama31_70b(),
+            ModelConfig::synthetic_tiny(ModelFamily::Llama3),
+        ] {
+            for (dtype, elem) in [
+                (KvDtype::F32, 4usize),
+                (KvDtype::Bf16, 2),
+                (KvDtype::FP8_DEFAULT, 1),
+            ] {
+                assert_eq!(
+                    c.kv_layout(dtype).bytes_per_token(),
+                    c.kv_bytes_per_token(elem),
+                    "{} {dtype:?}",
+                    c.name
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! KV-cache dtype and layout — the single byte-accounting contract for the
+//! whole serving stack.
+//!
+//! The paper's Table 6 OOM frontier assumes the KV cache is stored in FP8
+//! (1 B/elem): "thanks to the memory gain, we can measure Llama 70B on a
+//! single Gaudi 2". Before this module existed, three components modelled
+//! what a KV token costs independently (the coordinator's host store at
+//! 4 B/elem, the gaudisim capacity model at 1 B/elem, the fleet replicas at
+//! whatever they were handed) and silently disagreed. Now every consumer —
+//! [`crate::coordinator::BlockAllocator`] (admission),
+//! `gaudisim::MemoryModel` (the Table 6 frontier), `router::SimReplica`
+//! (fleet admission), and the engine's host `KvStore` (actual storage) —
+//! derives bytes/token from one [`KvLayout`].
+
+use crate::fp8::Fp8Format;
+
+/// Storage element type of the KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvDtype {
+    /// Full-precision host storage (the legacy exact-roundtrip behavior).
+    F32,
+    /// BF16 storage: 2 B/elem, RNE-rounded, no scales needed (the KV value
+    /// range sits comfortably inside BF16's).
+    Bf16,
+    /// FP8 codes + per-(slot, layer, kv-head) max-abs f32 scales. This is
+    /// the paper's serving configuration and what the Table 6 grid needs
+    /// to fit in 96 GB.
+    Fp8(Fp8Format),
+}
+
+impl KvDtype {
+    /// The paper's serving target: Gaudi 2's E4M3 (±240).
+    pub const FP8_DEFAULT: KvDtype = KvDtype::Fp8(Fp8Format::E4M3Gaudi2);
+
+    /// Payload bytes per stored element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Bf16 => 2,
+            KvDtype::Fp8(_) => 1,
+        }
+    }
+
+    /// Short name used in CLI flags and bench JSON rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Bf16 => "bf16",
+            KvDtype::Fp8(Fp8Format::E4M3Gaudi2) => "fp8_e4m3_gaudi2",
+            KvDtype::Fp8(Fp8Format::E4M3) => "fp8_e4m3",
+            KvDtype::Fp8(Fp8Format::E5M2) => "fp8_e5m2",
+        }
+    }
+
+    /// Parse a CLI spelling. Bare `"fp8"` selects the Gaudi 2 E4M3 variant.
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "bf16" | "bfloat16" => Some(KvDtype::Bf16),
+            "fp8" | "fp8_e4m3_gaudi2" => Some(KvDtype::Fp8(Fp8Format::E4M3Gaudi2)),
+            "fp8_e4m3" => Some(KvDtype::Fp8(Fp8Format::E4M3)),
+            "fp8_e5m2" => Some(KvDtype::Fp8(Fp8Format::E5M2)),
+            _ => None,
+        }
+    }
+}
+
+/// The KV-cache accounting contract.
+///
+/// `bytes_per_token()` is the payload rate every capacity consumer charges.
+/// FP8 additionally stores one f32 max-abs scale per (layer, kv-head) group
+/// per sequence for each of K and V ([`Self::scale_bytes_per_seq`]); at
+/// well under 0.01% of any realistic sequence payload it is charged against
+/// the fixed workspace reserve rather than the per-token rate, which keeps
+/// the Table 6 frontier bit-exact and KV byte counts linear in tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub dtype: KvDtype,
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvLayout {
+    pub fn new(dtype: KvDtype, layers: usize, kv_heads: usize, head_dim: usize) -> Self {
+        Self {
+            dtype,
+            layers,
+            kv_heads,
+            head_dim,
+        }
+    }
+
+    /// K+V elements one token adds across all layers.
+    pub fn elems_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim
+    }
+
+    /// Payload bytes per token — the shared accounting rate.
+    pub fn bytes_per_token(&self) -> usize {
+        self.elems_per_token() * self.dtype.elem_bytes()
+    }
+
+    /// Per-sequence scale metadata (FP8 only): one f32 per (layer, kv-head)
+    /// group for each of K and V.
+    pub fn scale_bytes_per_seq(&self) -> usize {
+        match self.dtype {
+            KvDtype::Fp8(_) => 2 * self.layers * self.kv_heads * 4,
+            _ => 0,
+        }
+    }
+
+    /// Exact storage for one sequence of `tokens` (payload + scales).
+    pub fn seq_bytes(&self, tokens: usize) -> usize {
+        tokens * self.bytes_per_token() + self.scale_bytes_per_seq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_bytes_per_dtype() {
+        assert_eq!(KvDtype::F32.elem_bytes(), 4);
+        assert_eq!(KvDtype::Bf16.elem_bytes(), 2);
+        for f in Fp8Format::ALL {
+            assert_eq!(KvDtype::Fp8(f).elem_bytes(), 1);
+        }
+    }
+
+    #[test]
+    fn llama70b_fp8_rate_matches_table6_accounting() {
+        // 2 · 80 layers · 8 kv-heads · 128 dim · 1 B = 163840 B/token.
+        let l = KvLayout::new(KvDtype::FP8_DEFAULT, 80, 8, 128);
+        assert_eq!(l.bytes_per_token(), 163_840);
+        let f32_l = KvLayout::new(KvDtype::F32, 80, 8, 128);
+        assert_eq!(f32_l.bytes_per_token(), 4 * l.bytes_per_token());
+        let bf16_l = KvLayout::new(KvDtype::Bf16, 80, 8, 128);
+        assert_eq!(bf16_l.bytes_per_token(), 2 * l.bytes_per_token());
+    }
+
+    #[test]
+    fn scale_overhead_is_per_seq_and_negligible() {
+        let l = KvLayout::new(KvDtype::FP8_DEFAULT, 80, 8, 128);
+        assert_eq!(l.scale_bytes_per_seq(), 2 * 80 * 8 * 4);
+        assert_eq!(KvLayout::new(KvDtype::F32, 80, 8, 128).scale_bytes_per_seq(), 0);
+        // < 0.01% of a 512-token sequence's payload.
+        let payload = 512 * l.bytes_per_token();
+        assert!((l.scale_bytes_per_seq() as f64) < 1e-4 * payload as f64);
+        assert_eq!(l.seq_bytes(512), payload + l.scale_bytes_per_seq());
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for d in [
+            KvDtype::F32,
+            KvDtype::Bf16,
+            KvDtype::Fp8(Fp8Format::E4M3Gaudi2),
+            KvDtype::Fp8(Fp8Format::E4M3),
+            KvDtype::Fp8(Fp8Format::E5M2),
+        ] {
+            assert_eq!(KvDtype::parse(d.name()), Some(d), "{}", d.name());
+        }
+        assert_eq!(KvDtype::parse("fp8"), Some(KvDtype::FP8_DEFAULT));
+        assert_eq!(KvDtype::parse("FP8"), Some(KvDtype::FP8_DEFAULT));
+        assert_eq!(KvDtype::parse("int8"), None);
+    }
+}

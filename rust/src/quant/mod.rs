@@ -13,11 +13,13 @@
 //! The quantized linear is Eq. 2:
 //! `X_{l+1} = S_x ( Q(S_x⁻¹ X S_c⁻¹) ⊗ Q(S_c Wᵀ S_w⁻¹) ) S_w`.
 
+pub mod kv;
 pub mod recipe;
 pub mod scale;
 pub mod search;
 pub mod smoothquant;
 
+pub use kv::{KvDtype, KvLayout};
 pub use recipe::{QuantScheme, QuantizedLinear, Rounding};
 pub use scale::{
     act_scale_per_sample, act_scale_per_tensor, round_scale_pow2, weight_scale_per_channel,

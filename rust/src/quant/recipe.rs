@@ -9,6 +9,7 @@
 use crate::calib::ActStats;
 use crate::fp8::Fp8Format;
 use crate::gemm::{quantize_matrix, scaled_gemm, DiagScale, QMatrix, QuantRounding};
+use crate::quant::kv::KvDtype;
 use crate::quant::scale::{
     act_scale_per_sample, act_scale_per_tensor, round_scale_pow2, weight_scale_per_channel,
     weight_scale_per_tensor, ActScaling, WeightScaling,
@@ -54,6 +55,11 @@ pub struct QuantScheme {
     pub rounding: Rounding,
     /// Round GEMM output to BF16 (hardware behaviour).
     pub bf16_out: bool,
+    /// KV-cache storage dtype the recipe deploys with. The engine's
+    /// `KvStore` and the capacity model read this; the Eq. 2 linears are
+    /// unaffected. Defaults to FP8 in the scheme's format — the paper's
+    /// serving configuration (§4.2.4: 70B fits one Gaudi 2 only this way).
+    pub kv_dtype: KvDtype,
 }
 
 impl QuantScheme {
@@ -67,6 +73,7 @@ impl QuantScheme {
             pow2_scales: false,
             rounding: Rounding::Nearest,
             bf16_out: true,
+            kv_dtype: KvDtype::Fp8(format),
         }
     }
 
@@ -79,6 +86,7 @@ impl QuantScheme {
             pow2_scales: false,
             rounding: Rounding::Nearest,
             bf16_out: true,
+            kv_dtype: KvDtype::Fp8(format),
         }
     }
 
@@ -102,6 +110,12 @@ impl QuantScheme {
             smoothquant: Some(SmoothQuantCfg { alpha, pow2: false }),
             ..Self::per_channel(format)
         }
+    }
+
+    /// Same scheme, different KV-cache storage dtype.
+    pub fn with_kv_dtype(mut self, kv_dtype: KvDtype) -> Self {
+        self.kv_dtype = kv_dtype;
+        self
     }
 
     pub fn label(&self) -> String {
@@ -420,6 +434,17 @@ mod tests {
         // Paper: SR "introduces increased quantization noise".
         assert!(e_sr > e_rne * 0.9, "rne {e_rne} sr {e_sr}");
         assert!(e_sr < e_rne * 3.0, "sr noise bounded: {e_sr} vs {e_rne}");
+    }
+
+    #[test]
+    fn schemes_carry_kv_dtype() {
+        let f = Fp8Format::E4M3Gaudi2;
+        // Paper default: KV stored in the scheme's FP8 format.
+        assert_eq!(QuantScheme::per_tensor(f).kv_dtype, KvDtype::Fp8(f));
+        assert_eq!(QuantScheme::per_channel(f).kv_dtype, KvDtype::Fp8(f));
+        let hi = QuantScheme::per_tensor(f).with_kv_dtype(KvDtype::F32);
+        assert_eq!(hi.kv_dtype, KvDtype::F32);
+        assert_eq!(hi.label(), "Per Tensor Scaling"); // label unaffected
     }
 
     #[test]

@@ -60,11 +60,20 @@ pub fn weight_scale_per_channel(r_w_rows: &[f32], format: Fp8Format) -> Vec<f32>
 
 /// Eq. 14: round a scale up to the next power of two, `2^⌈log2 s⌉`.
 /// (Rounding *up* guarantees the scaled max still fits in range.)
+///
+/// The exponent is clamped to the f32 normal range [-126, 127]: `powi` of
+/// a large negative exponent computes via `1/2^|e|`, whose denominator
+/// overflows to infinity for |e| > 128 and returns 0.0 — and a zero scale
+/// poisons every downstream division. Tiny scales (< 2^-126) round up to
+/// 2^-126 (still an upper bound); huge scales (≥ 2^127) clamp down to
+/// 2^127, trading an upper-bound guarantee no f32 pow2 can provide for a
+/// finite, positive result.
 pub fn round_scale_pow2(s: f32) -> f32 {
     if s <= 0.0 || !s.is_finite() {
         return 1.0;
     }
-    (2.0f32).powi(s.log2().ceil() as i32)
+    let e = s.log2().ceil().clamp(-126.0, 127.0) as i32;
+    (2.0f32).powi(e)
 }
 
 /// Zero / non-finite statistics degrade to the identity scale: an all-zero
@@ -131,6 +140,26 @@ mod tests {
         assert_eq!(round_scale_pow2(3.0), 4.0);
         assert_eq!(round_scale_pow2(0.0), 1.0);
         assert_eq!(round_scale_pow2(f32::NAN), 1.0);
+    }
+
+    #[test]
+    fn pow2_rounding_survives_subnormal_scales() {
+        // Regression: powi(large negative exponent) underflows to 0.0 via
+        // its 1/2^|e| reciprocal; the result must stay positive and finite
+        // and remain an upper bound in the clamp range.
+        for s in [1e-40f32, 1e-44, f32::MIN_POSITIVE, 2.0f32.powi(-140)] {
+            let p = round_scale_pow2(s);
+            assert!(p > 0.0 && p.is_finite(), "s={s:e} -> {p:e}");
+            assert!(p >= s, "s={s:e} -> {p:e} not an upper bound");
+        }
+        // Huge scales clamp to the largest f32 pow2 instead of inf.
+        for s in [1e38f32, f32::MAX] {
+            let p = round_scale_pow2(s);
+            assert!(p > 0.0 && p.is_finite(), "s={s:e} -> {p:e}");
+            assert_eq!(p, 2.0f32.powi(127));
+        }
+        // In-range behavior unchanged.
+        assert_eq!(round_scale_pow2(2.0f32.powi(-100)), 2.0f32.powi(-100));
     }
 
     #[test]

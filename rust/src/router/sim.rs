@@ -20,6 +20,7 @@ use crate::coordinator::{
 };
 use crate::gaudisim::{decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel, ScalingKind};
 use crate::model::config::{ModelConfig, ModelFamily};
+use crate::quant::KvDtype;
 
 #[derive(Clone, Debug)]
 pub struct SimReplicaConfig {
@@ -29,7 +30,14 @@ pub struct SimReplicaConfig {
     /// Local admission-queue bound (beyond it, the fleet queue holds).
     pub queue_capacity: usize,
     pub block_tokens: usize,
-    /// Override the HBM-derived KV block budget (tests use small values to
+    /// KV-cache storage dtype: sets the bytes/token rate (via the shared
+    /// `KvLayout`) that sizes this replica's block pool. FP8 — the
+    /// paper's serving configuration — by default.
+    pub kv_dtype: KvDtype,
+    /// Override the HBM-derived KV byte budget (equal-budget dtype
+    /// comparisons pin this; None = device HBM minus FP8 weights).
+    pub kv_bytes_budget_override: Option<f64>,
+    /// Override the KV block budget directly (tests use small values to
     /// exercise the OOM admission path).
     pub kv_blocks_override: Option<usize>,
     pub prefill_seqs: Vec<usize>,
@@ -49,6 +57,8 @@ impl SimReplicaConfig {
             slots: 4,
             queue_capacity: 256,
             block_tokens: 16,
+            kv_dtype: KvDtype::FP8_DEFAULT,
+            kv_bytes_budget_override: None,
             kv_blocks_override: None,
             prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
             decode_batches: vec![1, 2, 4, 8],
@@ -62,6 +72,8 @@ impl SimReplicaConfig {
             slots: 16,
             queue_capacity: 256,
             block_tokens: 16,
+            kv_dtype: KvDtype::FP8_DEFAULT,
+            kv_bytes_budget_override: None,
             kv_blocks_override: None,
             prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
             decode_batches: vec![1, 8, 16, 32, 64, 128],
@@ -102,13 +114,14 @@ impl SimReplica {
         let alloc = match cfg.kv_blocks_override {
             Some(blocks) => BlockAllocator::new(blocks, cfg.block_tokens),
             None => {
-                let mm = MemoryModel::new(cfg.e2e.device, cfg.e2e.model.clone());
-                let budget = mm.capacity_bytes() - mm.weight_bytes_fp8();
-                BlockAllocator::from_capacity(
-                    budget,
-                    cfg.e2e.model.kv_bytes_per_token(1).max(1),
-                    cfg.block_tokens,
-                )?
+                // Same accounting contract as the capacity model and the
+                // engine's host store: bytes/token from the shared KvLayout.
+                let mm = MemoryModel::new(cfg.e2e.device, cfg.e2e.model.clone())
+                    .with_kv_dtype(cfg.kv_dtype);
+                let budget = cfg
+                    .kv_bytes_budget_override
+                    .unwrap_or_else(|| mm.capacity_bytes() - mm.weight_bytes_fp8());
+                BlockAllocator::from_layout(budget, &mm.kv_layout(), cfg.block_tokens)?
             }
         };
         let sched = Scheduler::new(
@@ -244,7 +257,9 @@ impl SimReplica {
         while i < self.active.len() {
             if self.active[i].generated >= self.active[i].max_new {
                 let a = self.active.swap_remove(i);
-                self.alloc.release(a.blocks);
+                self.alloc
+                    .release(a.blocks)
+                    .expect("retire releases exactly the blocks it allocated");
                 let n = a.generated;
                 self.finished.push(RequestOutput {
                     id: a.id,
@@ -344,7 +359,9 @@ impl ReplicaHandle for SimReplica {
     fn abort_active(&mut self) -> Vec<RequestId> {
         let mut ids = Vec::new();
         for a in self.active.drain(..) {
-            self.alloc.release(a.blocks);
+            self.alloc
+                .release(a.blocks)
+                .expect("abort releases exactly the blocks it allocated");
             ids.push(a.id);
         }
         ids
@@ -448,6 +465,25 @@ mod tests {
         assert_eq!(r.active(), 0);
         assert_eq!(r.allocator().free_blocks(), total);
         assert_eq!(r.queued(), 1, "queued request 6 untouched");
+    }
+
+    #[test]
+    fn fp8_kv_quadruples_block_budget_at_equal_bytes() {
+        // Same byte budget, different KV dtype: the admission model's
+        // capacity follows the shared KvLayout rate (4 B → 1 B per elem).
+        let budget = 32.0 * 1024.0 * 1024.0;
+        let mk = |dtype: KvDtype| {
+            let mut cfg = SimReplicaConfig::synthetic_tiny();
+            cfg.kv_dtype = dtype;
+            cfg.kv_bytes_budget_override = Some(budget);
+            SimReplica::new("dtype", cfg).unwrap()
+        };
+        let f32r = mk(KvDtype::F32);
+        let fp8r = mk(KvDtype::FP8_DEFAULT);
+        assert_eq!(
+            fp8r.allocator().total_blocks,
+            4 * f32r.allocator().total_blocks
+        );
     }
 
     #[test]

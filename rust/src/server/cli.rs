@@ -11,6 +11,7 @@ use crate::eval::tables::render_accuracy_table;
 use crate::fp8::Fp8Format;
 use crate::gaudisim::{decode_step_tflops, gemm_time_s, prefill_tflops, Device, E2eConfig, GemmConfig, ScalingKind};
 use crate::model::config::{ModelConfig, ModelFamily};
+use crate::quant::KvDtype;
 use crate::router::{FleetConfig, FleetRouter, RoutePolicy, SimReplica, SimReplicaConfig};
 use crate::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig, WorkloadGen};
 
@@ -65,6 +66,12 @@ impl Args {
     }
 }
 
+fn parse_kv_dtype(s: &str) -> Result<KvDtype> {
+    KvDtype::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("unknown kv dtype {s:?} (f32|bf16|fp8|fp8_e4m3|fp8_e5m2|fp8_e4m3_gaudi2)")
+    })
+}
+
 pub fn run_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
@@ -84,6 +91,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let variant = args.get("variant", "fp8_pt");
     let mut cfg = EngineConfig::new(&dir, &variant);
     cfg.slots = args.get_usize("slots", 8);
+    // Host KV store dtype; f32 is the exact-roundtrip default, fp8 serves
+    // at 1/4 the KV bytes (the paper's configuration).
+    cfg.kv_dtype = parse_kv_dtype(&args.get("kv-dtype", "f32"))?;
     if args.get("policy", "prefill-first") == "decode-first" {
         cfg.policy = SchedulePolicy::DecodeFirst {
             min_decode: args.get_usize("min-decode", 2),
@@ -121,8 +131,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 ///
 /// Flags: --replicas N, --policy rr|least|affinity, --requests N,
 /// --pattern burst|uniform|poisson|bursty, --rate REQ_PER_S, --slots N,
-/// --model tiny|small|base|llama31-70b, --prompt-min/--prompt-max TOK,
-/// --max-new TOK, --seed N, --fleet-queue N, --json.
+/// --model tiny|small|base|llama31-70b, --kv-dtype f32|bf16|fp8,
+/// --prompt-min/--prompt-max TOK, --max-new TOK, --seed N,
+/// --fleet-queue N, --json.
 fn cmd_fleet(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 4).max(1);
     let policy = RoutePolicy::parse(&args.get("policy", "least"))
@@ -148,6 +159,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         m => bail!("unknown model {m} (tiny|small|base|llama31-70b)"),
     };
     sim_cfg.slots = args.get_usize("slots", sim_cfg.slots).max(1);
+    // KV storage dtype per replica; fp8 (the paper's serving config) is
+    // the default the SimReplicaConfig constructors already carry.
+    sim_cfg.kv_dtype = parse_kv_dtype(&args.get("kv-dtype", sim_cfg.kv_dtype.name()))?;
 
     let mut router = FleetRouter::new(FleetConfig {
         policy,
@@ -354,6 +368,30 @@ mod tests {
             .unwrap();
             cmd_fleet(&args).unwrap();
         }
+    }
+
+    #[test]
+    fn kv_dtype_flag_parses_and_rejects() {
+        assert_eq!(parse_kv_dtype("f32").unwrap(), KvDtype::F32);
+        assert_eq!(parse_kv_dtype("fp8").unwrap(), KvDtype::FP8_DEFAULT);
+        assert!(parse_kv_dtype("int8").is_err());
+        // Through the fleet path end to end.
+        let args = Args::parse(&[
+            "fleet".into(),
+            "--replicas".into(),
+            "1".into(),
+            "--requests".into(),
+            "4".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--kv-dtype".into(),
+            "f32".into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_fleet(&args).unwrap();
+        let bad = Args::parse(&["fleet".into(), "--kv-dtype".into(), "int8".into()]).unwrap();
+        assert!(cmd_fleet(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Integration + property tests for the quantized KV-cache subsystem
+//! (ISSUE 2): FP8 roundtrip error bounds for every format, the
+//! freed-slot-zeroing guarantee under code+scale storage, and the shared
+//! `KvLayout` accounting contract across `BlockAllocator`, `MemoryModel`,
+//! and `SimReplica`.
+
+use gaudi_fp8::coordinator::{BlockAllocator, KvStore};
+use gaudi_fp8::fp8::Fp8Format;
+use gaudi_fp8::gaudisim::{Device, MemoryModel};
+use gaudi_fp8::model::config::ModelConfig;
+use gaudi_fp8::quant::KvDtype;
+use gaudi_fp8::router::{SimReplica, SimReplicaConfig};
+use gaudi_fp8::util::prop::forall_msg;
+use gaudi_fp8::util::rng::XorShiftRng;
+
+/// Random KV geometry + data whose per-(layer, kv-head) groups span ~12
+/// decades of magnitude (each group gets its own power-of-two level).
+#[derive(Clone, Debug)]
+struct KvCase {
+    layers: usize,
+    t: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+fn gen_case(rng: &mut XorShiftRng) -> KvCase {
+    let layers = 1 + rng.below(3);
+    let t = 1 + rng.below(8);
+    let kv_heads = 1 + rng.below(3);
+    let head_dim = 1 + rng.below(6);
+    let n = layers * t * kv_heads * head_dim;
+    let mut k = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    for buf in [&mut k, &mut v] {
+        for l in 0..layers {
+            for h in 0..kv_heads {
+                // Group magnitude level; occasionally an all-zero group.
+                let level = if rng.below(8) == 0 {
+                    0.0
+                } else {
+                    (2.0f32).powi(rng.below(41) as i32 - 20)
+                };
+                for ti in 0..t {
+                    for d in 0..head_dim {
+                        let idx = l * (t * kv_heads * head_dim)
+                            + (ti * kv_heads + h) * head_dim
+                            + d;
+                        buf[idx] = rng.normal() * level;
+                    }
+                }
+            }
+        }
+    }
+    KvCase {
+        layers,
+        t,
+        kv_heads,
+        head_dim,
+        k,
+        v,
+    }
+}
+
+/// Max-abs of one (layer, kv-head) group in a (L, T, Hkv, D) buffer.
+fn group_maxabs(buf: &[f32], c: &KvCase, l: usize, h: usize) -> f32 {
+    let mut m = 0.0f32;
+    for ti in 0..c.t {
+        for d in 0..c.head_dim {
+            let idx =
+                l * (c.t * c.kv_heads * c.head_dim) + (ti * c.kv_heads + h) * c.head_dim + d;
+            m = m.max(buf[idx].abs());
+        }
+    }
+    m
+}
+
+/// Roundtrip error of every element stays within half an ulp *at the scale
+/// group's max-abs*: with s = maxabs / r_q, the scaled grid's largest ulp
+/// is ≤ maxabs·2^-man_bits, so |deq - x| ≤ maxabs·2^-(man_bits+1) (plus a
+/// hair of f32 divide/multiply noise).
+#[test]
+fn fp8_kv_roundtrip_error_within_half_ulp_of_group_maxabs() {
+    for format in Fp8Format::ALL {
+        let half_ulp_rel = (2.0f32).powi(-(format.params().man_bits as i32 + 1));
+        forall_msg(0xC0FE + format as u64, 120, gen_case, |c| {
+            let mut store = KvStore::with_dtype(
+                c.layers,
+                2,
+                c.t,
+                c.kv_heads,
+                c.head_dim,
+                KvDtype::Fp8(format),
+            );
+            let slot = store.alloc_slot().expect("slot");
+            store.write_slot(slot, &c.k, &c.v, c.t);
+            let (k, v, _) = store.gather_batch(&[slot]);
+            for (orig, deq, name) in [(&c.k, &k, "K"), (&c.v, &v, "V")] {
+                for l in 0..c.layers {
+                    for h in 0..c.kv_heads {
+                        let maxabs = group_maxabs(orig, c, l, h);
+                        let bound = maxabs * half_ulp_rel * 1.001 + 1e-30;
+                        for ti in 0..c.t {
+                            for d in 0..c.head_dim {
+                                let idx = l * (c.t * c.kv_heads * c.head_dim)
+                                    + (ti * c.kv_heads + h) * c.head_dim
+                                    + d;
+                                let err = (deq[idx] - orig[idx]).abs();
+                                if !(err <= bound) {
+                                    return Err(format!(
+                                        "{format:?} {name}[{idx}] (l={l} h={h}): \
+                                         |{} - {}| = {err:e} > {bound:e} (maxabs {maxabs:e})",
+                                        deq[idx], orig[idx]
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// The freed-slot guarantee for code+scale storage: after free + realloc,
+/// gathers return exact zeros AND the stale scales are gone — a subsequent
+/// small-magnitude write must roundtrip within its own (small) bound, not
+/// the previous occupant's coarse grid.
+#[test]
+fn freed_slot_zeroing_resets_codes_and_scales() {
+    for format in Fp8Format::ALL {
+        let half_ulp_rel = (2.0f32).powi(-(format.params().man_bits as i32 + 1));
+        forall_msg(0xDEAD + format as u64, 60, gen_case, |c| {
+            let mut store = KvStore::with_dtype(
+                c.layers,
+                1,
+                c.t,
+                c.kv_heads,
+                c.head_dim,
+                KvDtype::Fp8(format),
+            );
+            let slot = store.alloc_slot().expect("slot");
+            // First occupant: huge magnitudes force coarse scales.
+            let big: Vec<f32> = c.k.iter().map(|x| x * 1e6 + 1e6).collect();
+            store.write_slot(slot, &big, &big, c.t);
+            store.free_slot(slot);
+            let slot = store.alloc_slot().expect("slot");
+            let (k0, v0, lens) = store.gather_batch(&[slot]);
+            if !k0.iter().all(|x| *x == 0.0) || !v0.iter().all(|x| *x == 0.0) {
+                return Err(format!("{format:?}: stale KV after free"));
+            }
+            if lens != vec![0] {
+                return Err(format!("{format:?}: stale len {lens:?}"));
+            }
+            // Second occupant: small magnitudes must get fresh scales.
+            store.write_slot(slot, &c.k, &c.v, c.t);
+            let (k1, _, _) = store.gather_batch(&[slot]);
+            for l in 0..c.layers {
+                for h in 0..c.kv_heads {
+                    let maxabs = group_maxabs(&c.k, c, l, h);
+                    let bound = maxabs * half_ulp_rel * 1.001 + 1e-30;
+                    for ti in 0..c.t {
+                        for d in 0..c.head_dim {
+                            let idx = l * (c.t * c.kv_heads * c.head_dim)
+                                + (ti * c.kv_heads + h) * c.head_dim
+                                + d;
+                            let err = (k1[idx] - c.k[idx]).abs();
+                            if !(err <= bound) {
+                                return Err(format!(
+                                    "{format:?}: stale scale leaked — err {err:e} > {bound:e}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// BF16 KV roundtrips within BF16's relative error (2^-8) — no scales
+/// involved.
+#[test]
+fn bf16_kv_roundtrip_error_bounded() {
+    forall_msg(0xBF16, 80, gen_case, |c| {
+        let mut store =
+            KvStore::with_dtype(c.layers, 1, c.t, c.kv_heads, c.head_dim, KvDtype::Bf16);
+        let slot = store.alloc_slot().expect("slot");
+        store.write_slot(slot, &c.k, &c.v, c.t);
+        let (k, _, _) = store.gather_batch(&[slot]);
+        for (i, (a, b)) in c.k.iter().zip(&k).enumerate() {
+            let tol = a.abs() * (2.0f32).powi(-8) + 1e-38;
+            if (a - b).abs() > tol {
+                return Err(format!("K[{i}]: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance: `BlockAllocator`, `MemoryModel`, and `SimReplica` all charge
+/// bytes/token from the one shared `KvLayout` — no more three-way
+/// disagreement about what a token costs.
+#[test]
+fn accounting_is_shared_across_components() {
+    let budget = 64.0 * 1024.0 * 1024.0;
+    let block_tokens = 16;
+    for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+        // The capacity model's layout…
+        let cfg = SimReplicaConfig::synthetic_tiny();
+        let model = cfg.e2e.model.clone();
+        let mm = MemoryModel::new(Device::gaudi2(), model.clone()).with_kv_dtype(dtype);
+        let layout = mm.kv_layout();
+        assert_eq!(layout, model.kv_layout(dtype));
+        assert_eq!(mm.kv_bytes(1, 1), layout.bytes_per_token() as f64);
+        // …sizes the admission allocator…
+        let alloc = BlockAllocator::from_layout(budget, &layout, block_tokens).unwrap();
+        let expect_blocks =
+            (budget / (layout.bytes_per_token() * block_tokens) as f64) as usize;
+        assert_eq!(alloc.total_blocks, expect_blocks, "{dtype:?}");
+        // …and the fleet replica's pool is the same computation.
+        let mut rcfg = cfg.clone();
+        rcfg.kv_dtype = dtype;
+        rcfg.kv_bytes_budget_override = Some(budget);
+        let replica = SimReplica::new("contract", rcfg).unwrap();
+        assert_eq!(replica.allocator().total_blocks, expect_blocks, "{dtype:?}");
+        // …while the host store allocates exactly layout.seq_bytes per slot.
+        let store = KvStore::with_dtype(
+            model.layers,
+            2,
+            32,
+            model.kv_heads,
+            model.head_dim(),
+            dtype,
+        );
+        assert_eq!(store.kv_bytes(), 2 * layout.seq_bytes(32), "{dtype:?}");
+    }
+}
+
+/// The Table 6 frontier is a property of the FP8 layout: swapping the
+/// capacity model to f32 KV collapses the paper's headline cell.
+#[test]
+fn table6_headline_cell_requires_fp8_layout() {
+    let fp8 = MemoryModel::new(Device::gaudi2(), ModelConfig::llama31_70b());
+    assert_eq!(fp8.kv_layout().bytes_per_token(), 163_840);
+    assert!(fp8.fits(16, 8192));
+    let f32m = MemoryModel::new(Device::gaudi2(), ModelConfig::llama31_70b())
+        .with_kv_dtype(KvDtype::F32);
+    assert!(!f32m.fits(16, 8192));
+}

@@ -6,7 +6,7 @@ use gaudi_fp8::fp8::Fp8Format;
 use gaudi_fp8::gaudisim::{Device, Generation};
 use gaudi_fp8::model::config::{ModelConfig, ModelFamily};
 use gaudi_fp8::model::layers::enumerate_linears;
-use gaudi_fp8::quant::{QuantScheme, QuantizedLinear, ScaleSet, WeightScaling};
+use gaudi_fp8::quant::{KvDtype, QuantScheme, QuantizedLinear, ScaleSet, WeightScaling};
 use gaudi_fp8::tensor::Tensor2;
 use gaudi_fp8::util::rng::XorShiftRng;
 
@@ -133,7 +133,10 @@ fn capacity_model_consistent_with_block_allocator() {
     let cfg = ModelConfig::llama31_70b();
     let mm = MemoryModel::new(Device::gaudi2(), cfg.clone());
     let kv_budget = mm.capacity_bytes() - mm.weight_bytes_fp8() - 0.5e9;
-    let alloc = BlockAllocator::from_capacity(kv_budget, cfg.kv_bytes_per_token(1), 16).unwrap();
+    // Both sides of the check now charge the one shared KvLayout rate.
+    let alloc =
+        BlockAllocator::from_layout(kv_budget, &cfg.kv_layout(KvDtype::FP8_DEFAULT), 16).unwrap();
+    assert_eq!(mm.kv_layout(), cfg.kv_layout(KvDtype::FP8_DEFAULT));
     // Table 6 frontier: batch 16 × seq 8192 fits, batch 32 × 8192 does not.
     let mut a = alloc.clone();
     for _ in 0..16 {

@@ -4,6 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use gaudi_fp8::coordinator::{Engine, EngineConfig, Request, SchedulePolicy};
+use gaudi_fp8::quant::KvDtype;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -104,6 +105,56 @@ fn trained_byte_lm_produces_plausible_text() {
         plausible as f64 >= 0.9 * text.len() as f64,
         "generated implausible bytes: {text:?}"
     );
+}
+
+#[test]
+fn decode_past_cache_t_finishes_request_at_capacity() {
+    // ISSUE 2 satellite: a generation budget beyond the KV window must end
+    // at cache capacity via the scatter "sequence full" signal — not pin
+    // the length and overwrite the last position forever.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(EngineConfig::new(&dir, "fp8_pt")).unwrap();
+    let cache_t = eng.meta.cache_t;
+    let p = prompt("the ");
+    let mut req = Request::new(1, p.clone(), cache_t + 64);
+    req.stop_token = None;
+    eng.submit(req);
+    let outs = eng.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    // Prefill leaves len = prompt; each decode appends one position; the
+    // request retires exactly when len reaches cache_t.
+    assert_eq!(
+        outs[0].tokens.len(),
+        cache_t - p.len() + 1,
+        "must stop exactly at cache capacity"
+    );
+}
+
+#[test]
+fn fp8_kv_engine_serves_and_agrees_with_f32_kv() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, "fp8_pt");
+    cfg.kv_dtype = KvDtype::FP8_DEFAULT;
+    let mut fp8 = Engine::new(cfg).unwrap();
+    assert_eq!(fp8.kv_layout().dtype, KvDtype::FP8_DEFAULT);
+    let mut f32e = Engine::new(EngineConfig::new(&dir, "fp8_pt")).unwrap();
+    // 4× byte saving on the host store at identical geometry.
+    assert!(fp8.kv_layout().bytes_per_token() * 4 == f32e.kv_layout().bytes_per_token());
+    for eng in [&mut fp8, &mut f32e] {
+        for i in 0..4 {
+            eng.submit(Request::new(i, prompt("hello world "), 8));
+        }
+    }
+    let a = fp8.run_to_completion().unwrap();
+    let b = f32e.run_to_completion().unwrap();
+    assert_eq!(a.len(), 4);
+    assert!(a.iter().all(|o| !o.tokens.is_empty()));
+    // The first token comes from prefill logits (before any KV dequant) and
+    // must agree bit-for-bit with the f32-KV engine.
+    for x in &a {
+        let y = b.iter().find(|o| o.id == x.id).unwrap();
+        assert_eq!(x.tokens[0], y.tokens[0]);
+    }
 }
 
 #[test]
