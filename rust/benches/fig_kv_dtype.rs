@@ -11,6 +11,10 @@
 //!   signal; the LM head is a fixed linear map on this readout).
 //!
 //! SHAPE checks: fp8 admits ≥ 1.8× the f32 batch, with readout MSE < 1e-2.
+//!
+//! `BENCH_SMOKE=1` (the CI bench-smoke job) runs a reduced-size probe
+//! (half the token window) and suppresses the human-readable SHAPE lines
+//! so stdout is pure JSON, one row per line.
 
 use gaudi_fp8::coordinator::KvStore;
 use gaudi_fp8::quant::KvDtype;
@@ -36,9 +40,9 @@ fn max_admitted_batch(dtype: KvDtype) -> usize {
 }
 
 /// Attention readout of a store holding `(k, v)` on synthetic-tiny
-/// geometry (4 layers, 2 kv-heads, 32 head-dim, 64-token window).
-fn probe(dtype: KvDtype, k: &[f32], v: &[f32]) -> Vec<f32> {
-    let (layers, t, kv_heads, head_dim) = (4, 64, 2, 32);
+/// geometry (4 layers, 2 kv-heads, 32 head-dim, `t`-token window).
+fn probe(dtype: KvDtype, t: usize, k: &[f32], v: &[f32]) -> Vec<f32> {
+    let (layers, kv_heads, head_dim) = (4, 2, 32);
     let mut store = KvStore::with_dtype(layers, 1, t, kv_heads, head_dim, dtype);
     let slot = store.alloc_slot().expect("slot");
     store.write_slot(slot, k, v, t);
@@ -55,19 +59,21 @@ fn mse(a: &[f32], b: &[f32]) -> f64 {
 }
 
 fn main() {
-    let (layers, t, kv_heads, head_dim) = (4usize, 64usize, 2usize, 32usize);
+    let smoke = matches!(std::env::var("BENCH_SMOKE").as_deref(), Ok("1"));
+    let t = if smoke { 32usize } else { 64usize };
+    let (layers, kv_heads, head_dim) = (4usize, 2usize, 32usize);
     let n = layers * t * kv_heads * head_dim;
     let mut rng = XorShiftRng::new(7);
     let k: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
     let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
-    let reference = probe(KvDtype::F32, &k, &v);
+    let reference = probe(KvDtype::F32, t, &k, &v);
 
     let model = SimReplicaConfig::synthetic_tiny().e2e.model;
     let mut admitted = Vec::new();
     let mut mses = Vec::new();
     for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
         let batch = max_admitted_batch(dtype);
-        let err = mse(&reference, &probe(dtype, &k, &v));
+        let err = mse(&reference, &probe(dtype, t, &k, &v));
         admitted.push(batch);
         mses.push(err);
         println!(
@@ -83,6 +89,9 @@ fn main() {
         );
     }
 
+    if smoke {
+        return;
+    }
     let ratio = admitted[2] as f64 / admitted[0].max(1) as f64;
     println!(
         "SHAPE: fp8 KV admits {ratio:.2}x the f32 batch at an equal budget \

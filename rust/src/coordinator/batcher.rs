@@ -21,14 +21,17 @@ impl AdmissionQueue {
         }
     }
 
-    /// Returns false (and counts a rejection) when full.
-    pub fn push(&mut self, req: Request) -> bool {
+    /// Enqueue, or hand the request back when the queue is at capacity —
+    /// the caller owns the reject path (mirroring the router's typed
+    /// rejects) instead of the request being silently dropped. A bounce
+    /// increments [`AdmissionQueue::rejected`] exactly once.
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
         if self.queue.len() >= self.capacity {
             self.rejected += 1;
-            return false;
+            return Err(req);
         }
         self.queue.push_back(req);
-        true
+        Ok(())
     }
 
     pub fn pop(&mut self) -> Option<Request> {
@@ -47,6 +50,7 @@ impl AdmissionQueue {
         self.queue.is_empty()
     }
 
+    /// Push attempts bounced off a full queue (once per attempt).
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
@@ -67,11 +71,26 @@ impl AdmissionQueue {
     }
 }
 
+/// A planned prefill admission, prefix-cache aware: the cached head of the
+/// prompt is skipped and the uncached tail is computed in fixed-size
+/// chunks interleavable with decode steps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefillPlan {
+    pub id: RequestId,
+    /// KV slot allocated for the request.
+    pub slot: usize,
+    /// Prompt tokens served from the prefix cache (block-aligned; 0 = cold).
+    pub cached_tokens: usize,
+    /// Uncached tail chunks `(start, len)` in order; empty = full hit (the
+    /// zero-tail plan: no prefill compute, only the first-token sample).
+    pub chunks: Vec<(usize, usize)>,
+}
+
 /// One engine iteration's work: at most one prefill plus one decode group.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct BatchPlan {
-    /// Request to prefill this iteration (admitted into `slot`).
-    pub prefill: Option<(RequestId, usize)>,
+    /// Request to prefill this iteration (admitted into its slot).
+    pub prefill: Option<PrefillPlan>,
     /// Slots to run one decode step for.
     pub decode_slots: Vec<usize>,
 }
@@ -90,7 +109,7 @@ mod tests {
     fn fifo_order() {
         let mut q = AdmissionQueue::new(4);
         for i in 0..3 {
-            assert!(q.push(Request::new(i, vec![1], 4)));
+            assert!(q.push(Request::new(i, vec![1], 4)).is_ok());
         }
         assert_eq!(q.pop().unwrap().id, 0);
         assert_eq!(q.pop().unwrap().id, 1);
@@ -98,20 +117,31 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_rejects_when_full() {
+    fn backpressure_returns_request_and_counts_once() {
         let mut q = AdmissionQueue::new(2);
-        assert!(q.push(Request::new(0, vec![1], 1)));
-        assert!(q.push(Request::new(1, vec![1], 1)));
-        assert!(!q.push(Request::new(2, vec![1], 1)));
+        assert!(q.push(Request::new(0, vec![1], 1)).is_ok());
+        assert!(q.push(Request::new(1, vec![1], 1)).is_ok());
+        // The rejected request comes back to the caller intact...
+        let bounced = q.push(Request::new(2, vec![1, 2, 3], 1)).unwrap_err();
+        assert_eq!(bounced.id, 2);
+        assert_eq!(bounced.prompt, vec![1, 2, 3]);
+        // ...and is counted exactly once per attempt, not twice.
         assert_eq!(q.rejected(), 1);
         assert_eq!(q.len(), 2);
+        // The caller may retry the same request later; each bounce is one
+        // count.
+        let bounced = q.push(bounced).unwrap_err();
+        assert_eq!(q.rejected(), 2);
+        let _ = q.pop();
+        assert!(q.push(bounced).is_ok(), "retry succeeds once a slot frees");
+        assert_eq!(q.rejected(), 2);
     }
 
     #[test]
     fn queued_tokens_and_drain() {
         let mut q = AdmissionQueue::new(4);
-        q.push(Request::new(0, vec![1, 2, 3], 5));
-        q.push(Request::new(1, vec![1], 2));
+        q.push(Request::new(0, vec![1, 2, 3], 5)).unwrap();
+        q.push(Request::new(1, vec![1], 2)).unwrap();
         assert_eq!(q.queued_tokens(), 3 + 5 + 1 + 2);
         let drained = q.drain_all();
         assert_eq!(drained.len(), 2);
@@ -125,6 +155,16 @@ mod tests {
         let p = BatchPlan {
             prefill: None,
             decode_slots: vec![0],
+        };
+        assert!(!p.is_idle());
+        let p = BatchPlan {
+            prefill: Some(PrefillPlan {
+                id: 1,
+                slot: 0,
+                cached_tokens: 0,
+                chunks: vec![(0, 8)],
+            }),
+            decode_slots: vec![],
         };
         assert!(!p.is_idle());
     }

@@ -1,11 +1,18 @@
 //! The serving engine: continuous-batching loop over the AOT artifacts.
 //!
 //! Each `step()`:
-//!   1. asks the [`Scheduler`] for a plan (admit-one-prefill + decode-all);
-//!   2. runs the prefill artifact for the admitted request (prompt padded
-//!      to the compiled bucket), writes its KV into the allocated slot, and
-//!      samples the first token (TTFT);
-//!   3. runs one decode step per artifact-sized group of active slots with
+//!   1. advances an in-flight chunked prefill by one chunk, if any;
+//!   2. asks the [`Scheduler`] for a plan (admit-one-prefill + decode-all);
+//!   3. on a cold admission, runs the prefill artifact for the whole
+//!      prompt (padded to the compiled bucket), writes its KV into the
+//!      allocated slot, samples the first token (TTFT), and inserts the
+//!      block-aligned prompt KV into the prefix cache;
+//!   4. on a warm admission (prefix-cache hit), materializes the cached
+//!      prefix KV into the slot and recomputes only the uncached tail —
+//!      token by token through the decode artifact (numerically the same
+//!      model as prefill, with the cached prefix as attention context) —
+//!      in `prefill_chunk`-sized chunks interleaved with decode steps;
+//!   5. runs one decode step per artifact-sized group of active slots with
 //!      per-row (ragged) positions, samples greedily, retires finished
 //!      requests.
 //!
@@ -18,15 +25,19 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::batcher::AdmissionQueue;
+use super::batcher::{AdmissionQueue, PrefillPlan};
 use super::kvcache::KvStore;
 use super::metrics::ServeMetrics;
+use super::prefix::{KvSpanSource, PrefixCache, PrefixCacheConfig};
 use super::request::{Request, RequestId, RequestOutput};
-use super::scheduler::{SchedulePolicy, Scheduler};
+use super::scheduler::{chunk_spans, SchedulePolicy, Scheduler};
 use crate::quant::{KvDtype, KvLayout};
 use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
 use crate::util::json::Json;
+
+/// Block granularity of the engine's prefix cache (tokens).
+pub const PREFIX_BLOCK_TOKENS: usize = 16;
 
 /// Parsed artifacts/meta.json.
 #[derive(Clone, Debug)]
@@ -108,6 +119,12 @@ pub struct EngineConfig {
     /// roundtrip; `Fp8` stores codes + per-(slot, layer, kv-head) scales
     /// at 1/4 the bytes (the paper's serving configuration).
     pub kv_dtype: KvDtype,
+    /// Shared-prefix KV cache byte budget (None = prefix caching off).
+    /// Charged through the same [`KvLayout`] rate as everything else.
+    pub prefix_cache_bytes: Option<f64>,
+    /// Chunked-prefill chunk size in tokens per engine step for cache-hit
+    /// tails; 0 = process the whole tail in one step.
+    pub prefill_chunk: usize,
 }
 
 impl EngineConfig {
@@ -119,19 +136,37 @@ impl EngineConfig {
             policy: SchedulePolicy::PrefillFirst,
             queue_capacity: 256,
             kv_dtype: KvDtype::F32,
+            prefix_cache_bytes: None,
+            prefill_chunk: 0,
         }
     }
 }
 
 struct ActiveRequest {
     id: RequestId,
-    prompt_len: usize,
+    prompt: Vec<i32>,
+    /// Prompt tokens pinned in the prefix cache (released at retirement).
+    cache_tokens: usize,
     max_new_tokens: usize,
     stop_token: Option<i32>,
     arrival: Instant,
     first_token_at: Option<Instant>,
     generated: Vec<i32>,
     last_token: i32,
+}
+
+/// A warm admission whose uncached tail is still being recomputed, one
+/// chunk per engine step.
+struct ChunkedPrefill {
+    req: Request,
+    slot: usize,
+    /// Pinned cached-prefix tokens (released at retirement).
+    cache_tokens: usize,
+    /// Remaining tail chunks `(start, len)` from the plan, in order; a
+    /// full hit carries one synthetic chunk recomputing the last prompt
+    /// position (its logits are the first-token sample).
+    chunks: std::collections::VecDeque<(usize, usize)>,
+    last_logits: Vec<f32>,
 }
 
 pub struct Engine {
@@ -144,6 +179,11 @@ pub struct Engine {
     queue: AdmissionQueue,
     scheduler: Scheduler,
     active: HashMap<usize, ActiveRequest>, // slot → request
+    /// Radix-tree shared-prefix cache (None = off).
+    prefix: Option<PrefixCache>,
+    /// At most one chunked prefill in flight (the one-prefill-per-step
+    /// interleave discipline).
+    chunked: Option<ChunkedPrefill>,
     pub metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
     /// Reusable decode-batch KV staging buffers (§Perf L3: avoids a
@@ -151,6 +191,11 @@ pub struct Engine {
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
     scratch_bucket: usize,
+    /// Staging for `forced_decode` (chunked prefill runs one of these per
+    /// tail token — same rationale as the decode scratch above, kept
+    /// separate because its bucket is pinned at `decode_bucket(1)`).
+    chunk_k: Vec<f32>,
+    chunk_v: Vec<f32>,
 }
 
 impl Engine {
@@ -178,6 +223,18 @@ impl Engine {
             meta.head_dim(),
             cfg.kv_dtype,
         );
+        let prefix = cfg.prefix_cache_bytes.map(|bytes| {
+            // The engine cache stores raw f32 payloads (assemble() feeds
+            // the f32 staging path), so its budget is charged at the F32
+            // rate: `--prefix-cache-mb` bounds actual host memory, not
+            // the dtype-compressed rate the slot store pays.
+            let layout = KvLayout::new(KvDtype::F32, meta.layers, meta.kv_heads, meta.head_dim());
+            PrefixCache::new(PrefixCacheConfig::from_bytes_budget(
+                layout,
+                PREFIX_BLOCK_TOKENS,
+                bytes,
+            ))
+        });
         let scheduler = Scheduler::new(
             cfg.policy,
             meta.prefill_seqs.clone(),
@@ -186,6 +243,8 @@ impl Engine {
         Ok(Self {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             active: HashMap::new(),
+            prefix,
+            chunked: None,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
             cfg,
@@ -197,6 +256,8 @@ impl Engine {
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
             scratch_bucket: 0,
+            chunk_k: Vec::new(),
+            chunk_v: Vec::new(),
         })
     }
 
@@ -204,6 +265,11 @@ impl Engine {
     /// same [`KvLayout`] the capacity model and fleet replicas charge.
     pub fn kv_layout(&self) -> KvLayout {
         self.kv.layout()
+    }
+
+    /// The engine's prefix cache, when enabled.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix.as_ref()
     }
 
     /// Pre-compile the artifacts this engine will use, so TTFT/TPOT metrics
@@ -219,12 +285,18 @@ impl Engine {
     }
 
     pub fn submit(&mut self, req: Request) -> bool {
-        self.metrics.prompt_tokens += req.prompt.len() as u64;
-        self.queue.push(req)
+        let prompt_tokens = req.prompt.len() as u64;
+        match self.queue.push(req) {
+            Ok(()) => {
+                self.metrics.prompt_tokens += prompt_tokens;
+                true
+            }
+            Err(_rejected) => false,
+        }
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queue.len() + self.active.len() + usize::from(self.chunked.is_some())
     }
 
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
@@ -233,27 +305,35 @@ impl Engine {
 
     /// One engine iteration. Returns false when there is nothing to do.
     pub fn step(&mut self) -> Result<bool> {
-        let plan = self.scheduler.plan(&self.queue, &mut self.kv);
-        if plan.is_idle() && self.queue.is_empty() {
+        let mut worked = false;
+        if self.chunked.is_some() {
+            self.advance_chunked()?;
+            worked = true;
+        }
+        let allow_admit = self.chunked.is_none();
+        let plan = self.scheduler.plan_with_prefix(
+            &self.queue,
+            &mut self.kv,
+            self.prefix.as_ref(),
+            self.cfg.prefill_chunk,
+            allow_admit,
+        );
+        if !worked && plan.is_idle() && self.queue.is_empty() {
             return Ok(false);
         }
 
-        if let Some((_, slot)) = plan.prefill {
+        if let Some(pp) = plan.prefill.clone() {
             let req = self.queue.pop().expect("planned prefill without request");
-            self.run_prefill(req, slot)?;
-        } else if plan.decode_slots.is_empty() {
+            if pp.cached_tokens > 0 {
+                self.begin_chunked_prefill(req, &pp)?;
+            } else {
+                self.run_prefill(req, pp.slot)?;
+            }
+            worked = true;
+        } else if !worked && plan.decode_slots.is_empty() {
             // Nothing active and nothing admissible (e.g. oversized prompt).
             if let Some(req) = self.queue.pop() {
-                self.finished.push(RequestOutput {
-                    id: req.id,
-                    prompt_len: req.prompt.len(),
-                    tokens: Vec::new(),
-                    ttft_s: 0.0,
-                    tpot_s: 0.0,
-                    total_s: 0.0,
-                });
-                // Counted so completion totals agree with emitted outputs.
-                self.metrics.requests_completed += 1;
+                self.finish_unservable(req);
                 return Ok(true);
             }
             return Ok(false);
@@ -282,6 +362,20 @@ impl Engine {
         self.registry.get(key)
     }
 
+    /// Complete a request that can never run here with an empty output.
+    fn finish_unservable(&mut self, req: Request) {
+        self.finished.push(RequestOutput {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            total_s: 0.0,
+        });
+        // Counted so completion totals agree with emitted outputs.
+        self.metrics.requests_completed += 1;
+    }
+
     fn run_prefill(&mut self, req: Request, slot: usize) -> Result<()> {
         let bucket = self
             .scheduler
@@ -305,6 +399,24 @@ impl Engine {
 
         self.kv
             .write_slot(slot, &outs[1].data, &outs[2].data, req.prompt.len());
+        // Share the freshly computed prompt KV: future requests with this
+        // prefix skip its prefill FLOPs and bytes entirely. The request
+        // then pins the cached span for its lifetime so LRU stays honest.
+        let mut cache_tokens = 0;
+        if let Some(p) = self.prefix.as_mut() {
+            self.metrics.prefix_misses += 1;
+            let src = KvSpanSource {
+                k: &outs[1].data,
+                v: &outs[2].data,
+                t_src: self.meta.cache_t,
+                layers: self.meta.layers,
+                kv_heads: self.meta.kv_heads,
+                head_dim: self.meta.head_dim(),
+            };
+            let rep = p.insert(&req.prompt, Some(&src));
+            self.metrics.prefix_evicted_blocks += rep.evicted_blocks as u64;
+            cache_tokens = p.acquire(&req.prompt);
+        }
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_time.record(t0.elapsed().as_secs_f64());
         let now = Instant::now();
@@ -316,7 +428,8 @@ impl Engine {
             slot,
             ActiveRequest {
                 id: req.id,
-                prompt_len: req.prompt.len(),
+                prompt: req.prompt,
+                cache_tokens,
                 max_new_tokens: req.max_new_tokens,
                 stop_token: req.stop_token,
                 arrival: req.arrival,
@@ -331,6 +444,160 @@ impl Engine {
         let kv_full = self.kv.is_full(slot);
         self.maybe_finish(slot, kv_full);
         Ok(())
+    }
+
+    /// Start a warm prefill: materialize the cached prefix into the slot;
+    /// the uncached tail is recomputed chunk-by-chunk across steps.
+    fn begin_chunked_prefill(&mut self, req: Request, pp: &PrefillPlan) -> Result<()> {
+        let prompt_len = req.prompt.len();
+        let (cached, assembled, pk, pv) = {
+            let t = self.meta.cache_t;
+            let row = self.meta.kv_heads * self.meta.head_dim();
+            let n = self.meta.layers * t * row;
+            let mut pk = vec![0.0f32; n];
+            let mut pv = vec![0.0f32; n];
+            let prefix = self.prefix.as_mut().expect("warm plan without a cache");
+            let cached = prefix.acquire(&req.prompt).min(prompt_len);
+            let ok = cached > 0 && prefix.assemble(&req.prompt, cached, t, &mut pk, &mut pv);
+            if !ok && cached > 0 {
+                prefix.release(&req.prompt, cached);
+            }
+            (cached, ok, pk, pv)
+        };
+        if !assembled {
+            // Payload missing (accounting-only insert): fall back cold
+            // (run_prefill counts the miss).
+            if self.scheduler.prefill_bucket(prompt_len).is_some() {
+                return self.run_prefill(req, pp.slot);
+            }
+            self.kv.free_slot(pp.slot);
+            self.finish_unservable(req);
+            return Ok(());
+        }
+        self.metrics.prefix_hits += 1;
+        self.metrics.prefix_hit_tokens += cached as u64;
+        // Execute the plan's chunk list (re-derived only if the cache
+        // changed between planning and admission, which a single-threaded
+        // step cannot actually produce).
+        let mut chunks: std::collections::VecDeque<(usize, usize)> =
+            if pp.cached_tokens == cached {
+                pp.chunks.iter().copied().collect()
+            } else {
+                chunk_spans(prompt_len, cached, self.cfg.prefill_chunk)
+                    .into_iter()
+                    .collect()
+            };
+        // A full hit still recomputes the last prompt position so its
+        // logits (the first-token sample) come out of the decode artifact.
+        if chunks.is_empty() {
+            chunks.push_back((prompt_len - 1, 1));
+        }
+        let start = chunks.front().expect("chunk list non-empty").0;
+        self.kv.write_slot(pp.slot, &pk, &pv, start);
+        self.chunked = Some(ChunkedPrefill {
+            req,
+            slot: pp.slot,
+            cache_tokens: cached,
+            chunks,
+            last_logits: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Advance the in-flight chunked prefill by one chunk; on the last
+    /// chunk, sample the first token and activate the request.
+    fn advance_chunked(&mut self) -> Result<()> {
+        let Some(mut cp) = self.chunked.take() else {
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        if let Some((start, len)) = cp.chunks.pop_front() {
+            for pos in start..start + len {
+                cp.last_logits = self.forced_decode(cp.slot, cp.req.prompt[pos])?;
+            }
+        }
+        self.metrics.prefill_chunks += 1;
+        self.metrics.prefill_time.record(t0.elapsed().as_secs_f64());
+        if !cp.chunks.is_empty() {
+            self.chunked = Some(cp);
+            return Ok(());
+        }
+        // Tail complete: the last forced decode's logits are the
+        // first-token distribution.
+        let first_token = argmax(&cp.last_logits);
+        self.metrics.prefill_steps += 1;
+        let now = Instant::now();
+        self.metrics
+            .ttft
+            .record(now.duration_since(cp.req.arrival).as_secs_f64());
+        self.active.insert(
+            cp.slot,
+            ActiveRequest {
+                id: cp.req.id,
+                prompt: cp.req.prompt,
+                cache_tokens: cp.cache_tokens,
+                max_new_tokens: cp.req.max_new_tokens,
+                stop_token: cp.req.stop_token,
+                arrival: cp.req.arrival,
+                first_token_at: Some(now),
+                generated: vec![first_token],
+                last_token: first_token,
+            },
+        );
+        self.metrics.generated_tokens += 1;
+        let kv_full = self.kv.is_full(cp.slot);
+        self.maybe_finish(cp.slot, kv_full);
+        Ok(())
+    }
+
+    /// One decode-artifact call for `slot` with a forced input token — the
+    /// chunked-prefill workhorse: the KV already in the slot is the
+    /// attention context and the forced token's KV is appended at the
+    /// slot's current length. Returns the logits row.
+    fn forced_decode(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        let bucket = self.scheduler.decode_bucket(1);
+        let key = ArtifactKey::decode(&self.cfg.variant, bucket);
+        let art = self.artifact(&key)?;
+        let ss = self.meta.cache_t * self.meta.kv_heads * self.meta.head_dim();
+        let n = self.meta.layers * bucket * ss;
+        // Reuse the chunk staging buffers (one forced decode per tail
+        // token — a fresh multi-MB zero-fill each would dominate).
+        if self.chunk_k.len() != n {
+            self.chunk_k.clear();
+            self.chunk_k.resize(n, 0.0);
+            self.chunk_v.clear();
+            self.chunk_v.resize(n, 0.0);
+        }
+        let lens = self
+            .kv
+            .gather_batch_into(&[slot], bucket, &mut self.chunk_k, &mut self.chunk_v);
+        let (k, v) = (self.chunk_k.clone(), self.chunk_v.clone());
+        let mut tokens = vec![0i32; bucket];
+        tokens[0] = token;
+        let kv_dims = [
+            self.meta.layers,
+            bucket,
+            self.meta.cache_t,
+            self.meta.kv_heads,
+            self.meta.head_dim(),
+        ];
+        let mut literals = self.param_literals.clone();
+        literals.push(TensorIn::i32(&[bucket], tokens).to_literal()?);
+        literals.push(TensorIn::f32(&kv_dims, k).to_literal()?);
+        literals.push(TensorIn::f32(&kv_dims, v).to_literal()?);
+        literals.push(TensorIn::i32(&[bucket], lens).to_literal()?);
+        let outs = art.run_literals(&literals)?;
+        // Scatter row 0 back; the scatter appends at the slot's length.
+        let l = self.meta.layers;
+        let (mut kr, mut vr) = (vec![0.0f32; l * ss], vec![0.0f32; l * ss]);
+        for li in 0..l {
+            let src = li * bucket * ss;
+            let dst = li * ss;
+            kr[dst..dst + ss].copy_from_slice(&outs[1].data[src..src + ss]);
+            vr[dst..dst + ss].copy_from_slice(&outs[2].data[src..src + ss]);
+        }
+        let _full = self.kv.scatter_batch(&[slot], &kr, &vr);
+        Ok(outs[0].data[..self.meta.vocab].to_vec())
     }
 
     fn run_decode_group(&mut self, group: &[usize]) -> Result<()> {
@@ -431,13 +698,17 @@ impl Engine {
             };
             let hit_stop = a
                 .stop_token
-                .map(|s| a.generated.last() == Some(&s))
-                .unwrap_or(false);
+                .is_some_and(|s| a.generated.last() == Some(&s));
             a.generated.len() >= a.max_new_tokens || hit_stop || kv_full
         };
         if done {
             let a = self.active.remove(&slot).unwrap();
             self.kv.free_slot(slot);
+            if a.cache_tokens > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&a.prompt, a.cache_tokens);
+                }
+            }
             let total = a.arrival.elapsed().as_secs_f64();
             let ttft = a
                 .first_token_at
@@ -446,7 +717,7 @@ impl Engine {
             let n = a.generated.len();
             self.finished.push(RequestOutput {
                 id: a.id,
-                prompt_len: a.prompt_len,
+                prompt_len: a.prompt.len(),
                 tokens: a.generated,
                 ttft_s: ttft,
                 tpot_s: if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 },
@@ -479,16 +750,21 @@ impl ReplicaHandle for Engine {
     }
 
     fn active(&self) -> usize {
-        self.active.len()
+        self.active.len() + usize::from(self.chunked.is_some())
     }
 
     fn outstanding_tokens(&self) -> usize {
         let resident: usize = self
             .active
             .values()
-            .map(|a| a.prompt_len + a.max_new_tokens.saturating_sub(a.generated.len()))
+            .map(|a| a.prompt.len() + a.max_new_tokens.saturating_sub(a.generated.len()))
             .sum();
-        self.queue.queued_tokens() + resident
+        let chunked: usize = self
+            .chunked
+            .as_ref()
+            .map(|cp| cp.req.prompt.len() + cp.req.max_new_tokens)
+            .unwrap_or(0);
+        self.queue.queued_tokens() + resident + chunked
     }
 
     fn queue_capacity(&self) -> usize {
@@ -503,6 +779,14 @@ impl ReplicaHandle for Engine {
             return Admission::KvWouldOom;
         }
         Admission::Accept
+    }
+
+    fn cached_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.lookup(prompt))
+    }
+
+    fn cached_prefix_bytes(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.cached_bytes())
     }
 
     fn submit(&mut self, req: Request, _arrival_s: f64) -> bool {
@@ -522,11 +806,25 @@ impl ReplicaHandle for Engine {
     }
 
     fn abort_active(&mut self) -> Vec<RequestId> {
+        let mut ids = Vec::new();
+        if let Some(cp) = self.chunked.take() {
+            if cp.cache_tokens > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&cp.req.prompt, cp.cache_tokens);
+                }
+            }
+            self.kv.free_slot(cp.slot);
+            ids.push(cp.req.id);
+        }
         let slots: Vec<usize> = self.active.keys().copied().collect();
-        let mut ids = Vec::with_capacity(slots.len());
         for slot in slots {
             let a = self.active.remove(&slot).expect("slot key just listed");
             self.kv.free_slot(slot);
+            if a.cache_tokens > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&a.prompt, a.cache_tokens);
+                }
+            }
             ids.push(a.id);
         }
         ids

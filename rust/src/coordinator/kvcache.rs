@@ -99,6 +99,25 @@ impl BlockAllocator {
         self.blocks_for(tokens) <= self.free_blocks
     }
 
+    pub fn can_allocate_blocks(&self, blocks: usize) -> bool {
+        blocks <= self.free_blocks
+    }
+
+    /// Allocate an exact block count (the prefix cache shares the pool at
+    /// block granularity, so token-rounding must happen exactly once, at
+    /// the caller).
+    pub fn allocate_blocks(&mut self, blocks: usize) -> Result<()> {
+        if blocks > self.free_blocks {
+            bail!(
+                "KV OOM: need {blocks} blocks, {} free of {}",
+                self.free_blocks,
+                self.total_blocks
+            );
+        }
+        self.free_blocks -= blocks;
+        Ok(())
+    }
+
     pub fn allocate(&mut self, tokens: usize) -> Result<usize> {
         let need = self.blocks_for(tokens);
         if need > self.free_blocks {
@@ -165,6 +184,7 @@ enum KvData {
 /// Prefill artifacts hand over bucket-padded buffers whose positions past
 /// the prompt hold real (pad-token) activations — attention masks them,
 /// but letting them into the max-abs would coarsen the valid tokens' grid.
+#[allow(clippy::too_many_arguments)]
 fn encode_region_fp8(
     src: &[f32],
     dst: &mut [u8],
@@ -678,6 +698,19 @@ mod tests {
         a.release(3).unwrap();
         assert_eq!(a.free_blocks(), 10);
         assert_eq!(a.utilization(), 0.0);
+    }
+
+    #[test]
+    fn block_granular_allocation() {
+        let mut a = BlockAllocator::new(10, 16);
+        assert!(a.can_allocate_blocks(10));
+        assert!(!a.can_allocate_blocks(11));
+        a.allocate_blocks(4).unwrap();
+        assert_eq!(a.free_blocks(), 6);
+        assert!(a.allocate_blocks(7).is_err());
+        assert_eq!(a.free_blocks(), 6, "failed allocation must not mutate");
+        a.release(4).unwrap();
+        assert_eq!(a.free_blocks(), 10);
     }
 
     #[test]

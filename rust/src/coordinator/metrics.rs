@@ -129,6 +129,17 @@ pub struct ServeMetrics {
     pub prefill_steps: u64,
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
+    /// Admissions whose prompt matched a cached prefix (> 0 tokens).
+    pub prefix_hits: u64,
+    /// Admissions that found no cached prefix (counted only when a prefix
+    /// cache is attached).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_hit_tokens: u64,
+    /// KV blocks reclaimed from the prefix cache by LRU eviction.
+    pub prefix_evicted_blocks: u64,
+    /// Chunked-prefill chunks executed (tail pieces, not whole prefills).
+    pub prefill_chunks: u64,
     pub ttft: LatencyStat,
     pub tpot: LatencyStat,
     pub prefill_time: LatencyStat,
@@ -151,6 +162,11 @@ impl ServeMetrics {
             prefill_steps: 0,
             decode_steps: 0,
             decode_batch_sum: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_hit_tokens: 0,
+            prefix_evicted_blocks: 0,
+            prefill_chunks: 0,
             ttft: LatencyStat::new(),
             tpot: LatencyStat::new(),
             prefill_time: LatencyStat::new(),
@@ -193,6 +209,11 @@ impl ServeMetrics {
             out.prefill_steps += m.prefill_steps;
             out.decode_steps += m.decode_steps;
             out.decode_batch_sum += m.decode_batch_sum;
+            out.prefix_hits += m.prefix_hits;
+            out.prefix_misses += m.prefix_misses;
+            out.prefix_hit_tokens += m.prefix_hit_tokens;
+            out.prefix_evicted_blocks += m.prefix_evicted_blocks;
+            out.prefill_chunks += m.prefill_chunks;
         }
         out.ttft = LatencyStat::merge_many(all.iter().map(|m| &m.ttft));
         out.tpot = LatencyStat::merge_many(all.iter().map(|m| &m.tpot));
@@ -201,8 +222,19 @@ impl ServeMetrics {
         out
     }
 
+    /// Fraction of prefix-cache-attached admissions that hit (0 when no
+    /// cache was in play).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} gen_tokens={} tok/s={:.1} ttft_mean={:.1}ms ttft_p95={:.1}ms \
              tpot_mean={:.2}ms decode_steps={} mean_batch={:.2}",
             self.requests_completed,
@@ -213,7 +245,16 @@ impl ServeMetrics {
             self.tpot.mean_s() * 1e3,
             self.decode_steps,
             self.mean_decode_batch()
-        )
+        );
+        if self.prefix_hits + self.prefix_misses > 0 {
+            s.push_str(&format!(
+                " prefix_hit_rate={:.2} prefix_hit_tokens={} prefix_evicted_blocks={}",
+                self.prefix_hit_rate(),
+                self.prefix_hit_tokens,
+                self.prefix_evicted_blocks
+            ));
+        }
+        s
     }
 }
 
@@ -292,6 +333,31 @@ mod tests {
         assert_eq!(a.requests_completed, 4);
         assert_eq!(a.ttft.count, 2);
         assert_eq!(a.ttft.min_s, 0.25);
+    }
+
+    #[test]
+    fn prefix_counters_merge_and_rate() {
+        let mut a = ServeMetrics::new();
+        a.prefix_hits = 3;
+        a.prefix_misses = 1;
+        a.prefix_hit_tokens = 3072;
+        a.prefill_chunks = 5;
+        let mut b = ServeMetrics::new();
+        b.prefix_hits = 1;
+        b.prefix_misses = 3;
+        b.prefix_evicted_blocks = 7;
+        a.merge(&b);
+        assert_eq!(a.prefix_hits, 4);
+        assert_eq!(a.prefix_misses, 4);
+        assert_eq!(a.prefix_hit_tokens, 3072);
+        assert_eq!(a.prefix_evicted_blocks, 7);
+        assert_eq!(a.prefill_chunks, 5);
+        assert!((a.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert!(a.report().contains("prefix_hit_rate=0.50"));
+        // No cache in play: rate 0, report stays terse.
+        let fresh = ServeMetrics::new();
+        assert_eq!(fresh.prefix_hit_rate(), 0.0);
+        assert!(!fresh.report().contains("prefix_hit_rate"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! L3 serving coordinator — the vLLM-style layer the paper's end-to-end
 //! numbers (Tables 5–6) presuppose: request admission, continuous batching
-//! with prefill/decode interleave, slot-based KV management, and metrics.
+//! with prefill/decode interleave, slot-based KV management, a radix-tree
+//! shared-prefix KV cache with chunked prefill ([`prefix`]), and metrics.
 //!
 //! Everything here is plain Rust (std threads + channels — the request path
 //! has no Python and no async runtime); the compute is the AOT artifacts
@@ -10,12 +11,14 @@ pub mod batcher;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod prefix;
 pub mod request;
 pub mod scheduler;
 
-pub use batcher::{AdmissionQueue, BatchPlan};
+pub use batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 pub use engine::{Engine, EngineConfig};
 pub use kvcache::{BlockAllocator, KvStore};
 pub use metrics::{LatencyStat, ServeMetrics};
+pub use prefix::{KvSpanSource, PrefixCache, PrefixCacheConfig, PrefixStats};
 pub use request::{Request, RequestId, RequestOutput, RequestState};
-pub use scheduler::{SchedulePolicy, Scheduler};
+pub use scheduler::{chunk_spans, warm_start_pays, SchedulePolicy, Scheduler};

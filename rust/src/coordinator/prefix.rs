@@ -1,0 +1,827 @@
+//! Shared-prefix KV cache: a radix tree over token-ID prefixes.
+//!
+//! Serving traffic is dominated by requests that share a long common prompt
+//! prefix (system prompts, few-shot preambles, multi-turn history). Without
+//! sharing, every request re-prefills and re-stores its full prompt — the
+//! prefill FLOPs and KV bytes that bound the paper's end-to-end numbers
+//! (Tables 5–6). This module caches prompt KV at *block* granularity in a
+//! radix tree so a new request pays only for its uncached tail:
+//!
+//! * **Tree shape** — every edge label is a positive multiple of
+//!   `block_tokens`; children of a node always differ somewhere inside
+//!   their first block (splits happen at block-aligned divergence points),
+//!   so at most one child can match a whole block of a probe prompt.
+//! * **Per-block refcounts** — each cached block counts the active
+//!   sequences whose acquired prefix reaches into it. Splits slice the
+//!   refcount vector along with the edge label, so pins survive tree
+//!   restructuring exactly.
+//! * **Eviction** — only refcount-0 *leaves* are evictable (an interior
+//!   node is the prefix of its children and must outlive them); victims go
+//!   LRU-first by `last_use`. A referenced block is never freed.
+//! * **Byte accounting** — capacity is expressed in blocks, converted
+//!   from/to bytes through the shared [`KvLayout`] contract
+//!   ([`PrefixCacheConfig::from_bytes_budget`], [`PrefixCache::cached_bytes`]),
+//!   so admission control charges cached prefixes at exactly the rate the
+//!   rest of the stack charges KV.
+//! * **Payloads** — nodes optionally carry the prefix's KV data
+//!   (f32, `(layers, span, kv_heads, head_dim)` row-major) so the engine
+//!   can materialize a cached prefix into a fresh slot
+//!   ([`PrefixCache::assemble`]); the simulated replicas cache accounting
+//!   only and insert without payloads.
+
+use crate::quant::KvLayout;
+
+/// Configuration for a [`PrefixCache`].
+#[derive(Clone, Debug)]
+pub struct PrefixCacheConfig {
+    /// Cache granularity in tokens; matches only whole blocks are shared.
+    pub block_tokens: usize,
+    /// Hard bound on cached blocks; inserts evict (or truncate) to fit.
+    pub max_blocks: usize,
+    /// The byte-accounting contract cached blocks are charged through.
+    pub layout: KvLayout,
+}
+
+impl PrefixCacheConfig {
+    /// Size the block budget from a byte budget at the layout's rate.
+    pub fn from_bytes_budget(layout: KvLayout, block_tokens: usize, bytes: f64) -> Self {
+        let bt = block_tokens.max(1);
+        let block_bytes = (layout.bytes_per_token() * bt).max(1) as f64;
+        let max_blocks = if bytes.is_finite() && bytes > 0.0 {
+            (bytes / block_bytes).floor() as usize
+        } else {
+            0
+        };
+        Self {
+            block_tokens: bt,
+            max_blocks,
+            layout,
+        }
+    }
+}
+
+/// Counters the cache maintains internally (callers thread hit/miss into
+/// their own `ServeMetrics` — the cache cannot tell a routing probe from an
+/// admission).
+#[derive(Clone, Debug, Default)]
+pub struct PrefixStats {
+    /// Tokens newly added to the tree by `insert`.
+    pub inserted_tokens: u64,
+    /// Evicted subtree count.
+    pub evictions: u64,
+    /// Blocks freed by eviction.
+    pub evicted_blocks: u64,
+}
+
+/// A node's KV payload: `(layers, span, kv_heads·head_dim)` row-major,
+/// `span` = edge tokens.
+#[derive(Clone)]
+struct NodeKv {
+    layers: usize,
+    /// Elements per token per layer (`kv_heads · head_dim`).
+    row: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl NodeKv {
+    fn span(&self) -> usize {
+        let per = self.layers * self.row;
+        if per == 0 {
+            0
+        } else {
+            self.k.len() / per
+        }
+    }
+
+    /// Split at token `at`: `self` keeps `[0, at)`, the tail is returned.
+    fn split_off(&mut self, at: usize) -> NodeKv {
+        let span = self.span();
+        let row = self.row;
+        let mut k_head = Vec::with_capacity(self.layers * at * row);
+        let mut v_head = Vec::with_capacity(self.layers * at * row);
+        let mut k_tail = Vec::with_capacity(self.layers * (span - at) * row);
+        let mut v_tail = Vec::with_capacity(self.layers * (span - at) * row);
+        for l in 0..self.layers {
+            let base = l * span * row;
+            let cut = base + at * row;
+            let end = base + span * row;
+            k_head.extend_from_slice(&self.k[base..cut]);
+            k_tail.extend_from_slice(&self.k[cut..end]);
+            v_head.extend_from_slice(&self.v[base..cut]);
+            v_tail.extend_from_slice(&self.v[cut..end]);
+        }
+        self.k = k_head;
+        self.v = v_head;
+        NodeKv {
+            layers: self.layers,
+            row,
+            k: k_tail,
+            v: v_tail,
+        }
+    }
+}
+
+/// Borrowed view of a prefill artifact's KV output, layout
+/// `(layers, t_src, kv_heads, head_dim)` row-major (slot dimension already
+/// selected), from which inserted nodes copy their token spans.
+pub struct KvSpanSource<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    /// Token capacity of the source buffer (the compiled bucket / cache T).
+    pub t_src: usize,
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvSpanSource<'_> {
+    fn row(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    fn copy_span(&self, start: usize, len: usize) -> NodeKv {
+        let row = self.row();
+        let mut k = Vec::with_capacity(self.layers * len * row);
+        let mut v = Vec::with_capacity(self.layers * len * row);
+        for l in 0..self.layers {
+            let base = (l * self.t_src + start) * row;
+            k.extend_from_slice(&self.k[base..base + len * row]);
+            v.extend_from_slice(&self.v[base..base + len * row]);
+        }
+        NodeKv {
+            layers: self.layers,
+            row,
+            k,
+            v,
+        }
+    }
+}
+
+struct Node {
+    /// Edge label from the parent; a positive multiple of `block_tokens`
+    /// (the root's is empty).
+    tokens: Vec<i32>,
+    /// Active sequences whose acquired prefix reaches into each block.
+    block_refs: Vec<u32>,
+    children: Vec<Node>,
+    /// LRU clock value of the last acquire touching this node.
+    last_use: u64,
+    kv: Option<NodeKv>,
+}
+
+impl Node {
+    fn evictable(&self) -> bool {
+        self.children.is_empty() && self.block_refs.iter().all(|r| *r == 0)
+    }
+}
+
+/// Result of a [`PrefixCache::insert`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InsertReport {
+    /// Tokens newly added to the tree (block-aligned; existing prefix
+    /// tokens are shared, not re-added).
+    pub new_tokens: usize,
+    /// Blocks evicted to make room (already removed from `cached_blocks`).
+    pub evicted_blocks: usize,
+}
+
+/// The radix-tree prefix cache. See the module docs for the invariants.
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    root: Node,
+    tick: u64,
+    cached_blocks: usize,
+    stats: PrefixStats,
+}
+
+/// Longest common prefix of `edge` and `rest`, floored to block alignment.
+fn aligned_lcp(bt: usize, edge: &[i32], rest: &[i32]) -> usize {
+    let lim = edge.len().min(rest.len());
+    let mut i = 0;
+    while i < lim && edge[i] == rest[i] {
+        i += 1;
+    }
+    i - i % bt
+}
+
+fn lookup_rec(node: &Node, rest: &[i32], bt: usize) -> usize {
+    for c in &node.children {
+        let a = aligned_lcp(bt, &c.tokens, rest);
+        if a == 0 {
+            continue;
+        }
+        return if a == c.tokens.len() {
+            a + lookup_rec(c, &rest[a..], bt)
+        } else {
+            a
+        };
+    }
+    0
+}
+
+/// Shared walk for acquire (`delta = +1`) and release (`delta = -1`):
+/// adjusts the per-block refcount of every block the matched prefix
+/// reaches. Returns the matched (block-aligned) token count.
+fn pin_rec(node: &mut Node, rest: &[i32], bt: usize, tick: u64, delta: i64) -> usize {
+    for c in node.children.iter_mut() {
+        let a = aligned_lcp(bt, &c.tokens, rest);
+        if a == 0 {
+            continue;
+        }
+        if delta > 0 {
+            c.last_use = tick;
+        }
+        for r in &mut c.block_refs[..a / bt] {
+            if delta > 0 {
+                *r += 1;
+            } else {
+                debug_assert!(*r > 0, "prefix release without matching acquire");
+                *r = r.saturating_sub(1);
+            }
+        }
+        return if a == c.tokens.len() {
+            a + pin_rec(c, &rest[a..], bt, tick, delta)
+        } else {
+            a
+        };
+    }
+    0
+}
+
+fn split_node(c: &mut Node, at: usize, bt: usize) {
+    debug_assert!(at % bt == 0 && at > 0 && at < c.tokens.len());
+    let tail_tokens = c.tokens.split_off(at);
+    let tail_refs = c.block_refs.split_off(at / bt);
+    let tail_kv = c.kv.as_mut().map(|kv| kv.split_off(at));
+    let tail = Node {
+        tokens: tail_tokens,
+        block_refs: tail_refs,
+        children: std::mem::take(&mut c.children),
+        last_use: c.last_use,
+        kv: tail_kv,
+    };
+    c.children.push(tail);
+}
+
+fn insert_rec(
+    node: &mut Node,
+    rest: &[i32],
+    offset: usize,
+    kv: Option<&KvSpanSource<'_>>,
+    bt: usize,
+    tick: u64,
+) -> usize {
+    if rest.is_empty() {
+        return 0;
+    }
+    let mut pick: Option<(usize, usize)> = None;
+    for (i, c) in node.children.iter().enumerate() {
+        let a = aligned_lcp(bt, &c.tokens, rest);
+        if a > 0 {
+            pick = Some((i, a));
+            break;
+        }
+    }
+    match pick {
+        None => {
+            node.children.push(Node {
+                tokens: rest.to_vec(),
+                block_refs: vec![0; rest.len() / bt],
+                children: Vec::new(),
+                last_use: tick,
+                kv: kv.map(|s| s.copy_span(offset, rest.len())),
+            });
+            rest.len()
+        }
+        Some((i, a)) => {
+            let c = &mut node.children[i];
+            c.last_use = tick;
+            if a < c.tokens.len() {
+                split_node(c, a, bt);
+            }
+            if a == rest.len() {
+                0
+            } else {
+                insert_rec(&mut node.children[i], &rest[a..], offset + a, kv, bt, tick)
+            }
+        }
+    }
+}
+
+fn assemble_rec(
+    node: &Node,
+    rest: &[i32],
+    offset: usize,
+    t: usize,
+    k_out: &mut [f32],
+    v_out: &mut [f32],
+    bt: usize,
+) -> bool {
+    if rest.is_empty() {
+        return true;
+    }
+    for c in &node.children {
+        let a = aligned_lcp(bt, &c.tokens, rest);
+        if a == 0 {
+            continue;
+        }
+        let Some(kv) = &c.kv else {
+            return false;
+        };
+        let row = kv.row;
+        let span = kv.span();
+        for l in 0..kv.layers {
+            let src = l * span * row;
+            let dst = (l * t + offset) * row;
+            k_out[dst..dst + a * row].copy_from_slice(&kv.k[src..src + a * row]);
+            v_out[dst..dst + a * row].copy_from_slice(&kv.v[src..src + a * row]);
+        }
+        return if a == c.tokens.len() {
+            assemble_rec(c, &rest[a..], offset + a, t, k_out, v_out, bt)
+        } else {
+            // `rest` continues past the block-aligned divergence point; the
+            // caller asked for exactly the acquired span, so it ends here.
+            a == rest.len()
+        };
+    }
+    false
+}
+
+fn oldest_evictable(node: &Node) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    for c in &node.children {
+        let cand = if c.evictable() {
+            Some(c.last_use)
+        } else {
+            oldest_evictable(c)
+        };
+        if let Some(t) = cand {
+            best = Some(best.map_or(t, |b| b.min(t)));
+        }
+    }
+    best
+}
+
+fn remove_evictable(node: &mut Node, target: u64) -> usize {
+    for i in 0..node.children.len() {
+        if node.children[i].evictable() && node.children[i].last_use == target {
+            let victim = node.children.remove(i);
+            return victim.block_refs.len();
+        }
+        let freed = remove_evictable(&mut node.children[i], target);
+        if freed > 0 {
+            return freed;
+        }
+    }
+    0
+}
+
+fn total_refs_rec(node: &Node) -> u64 {
+    node.block_refs.iter().map(|r| *r as u64).sum::<u64>()
+        + node.children.iter().map(total_refs_rec).sum::<u64>()
+}
+
+fn referenced_blocks_rec(node: &Node) -> usize {
+    node.block_refs.iter().filter(|r| **r > 0).count()
+        + node
+            .children
+            .iter()
+            .map(referenced_blocks_rec)
+            .sum::<usize>()
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> Self {
+        let cfg = PrefixCacheConfig {
+            block_tokens: cfg.block_tokens.max(1),
+            ..cfg
+        };
+        Self {
+            cfg,
+            root: Node {
+                tokens: Vec::new(),
+                block_refs: Vec::new(),
+                children: Vec::new(),
+                last_use: 0,
+                kv: None,
+            },
+            tick: 0,
+            cached_blocks: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.cfg.block_tokens
+    }
+
+    pub fn max_blocks(&self) -> usize {
+        self.cfg.max_blocks
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.cached_blocks
+    }
+
+    pub fn cached_tokens(&self) -> usize {
+        self.cached_blocks * self.cfg.block_tokens
+    }
+
+    /// Bytes the cached blocks represent under the shared byte contract.
+    pub fn cached_bytes(&self) -> usize {
+        self.cached_tokens() * self.cfg.layout.bytes_per_token()
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// Sum of all per-block refcounts (diagnostic / test hook).
+    pub fn total_refs(&self) -> u64 {
+        total_refs_rec(&self.root)
+    }
+
+    /// Cached blocks currently pinned by at least one active sequence.
+    pub fn referenced_blocks(&self) -> usize {
+        referenced_blocks_rec(&self.root)
+    }
+
+    fn floor_block(&self, n: usize) -> usize {
+        n - n % self.cfg.block_tokens
+    }
+
+    /// Longest cached block-aligned prefix of `prompt`, without pinning —
+    /// the routing/planning probe.
+    pub fn lookup(&self, prompt: &[i32]) -> usize {
+        lookup_rec(&self.root, prompt, self.cfg.block_tokens)
+    }
+
+    /// Match and *pin* the longest cached prefix of `prompt`: every reached
+    /// block's refcount is incremented so eviction cannot free it while the
+    /// sequence runs. Returns the matched token count; the caller must
+    /// [`PrefixCache::release`] exactly that count when the sequence
+    /// retires.
+    pub fn acquire(&mut self, prompt: &[i32]) -> usize {
+        self.tick += 1;
+        pin_rec(&mut self.root, prompt, self.cfg.block_tokens, self.tick, 1)
+    }
+
+    /// Drop the pins a matching [`PrefixCache::acquire`] took (`tokens` is
+    /// the value acquire returned).
+    pub fn release(&mut self, prompt: &[i32], tokens: usize) {
+        let take = tokens.min(prompt.len());
+        debug_assert_eq!(take % self.cfg.block_tokens, 0);
+        pin_rec(&mut self.root, &prompt[..take], self.cfg.block_tokens, self.tick, -1);
+    }
+
+    /// Cache the block-aligned prefix of `prompt`, splitting edges at
+    /// block-aligned divergence points. Newly added spans copy their KV
+    /// from `kv` when given (the engine path); `None` caches accounting
+    /// only (the simulator path). The insert is truncated (after evicting
+    /// refcount-0 LRU leaves) if the block budget cannot hold it.
+    pub fn insert(&mut self, prompt: &[i32], kv: Option<&KvSpanSource<'_>>) -> InsertReport {
+        let mut aligned = self.floor_block(prompt.len());
+        if aligned == 0 {
+            return InsertReport::default();
+        }
+        // Pin the existing matched path so making room cannot evict it.
+        let pinned = self.acquire(&prompt[..aligned]);
+        let existing = pinned;
+        let mut want = (aligned - existing) / self.cfg.block_tokens;
+        let mut evicted = 0;
+        if want > 0 {
+            let free = self.cfg.max_blocks.saturating_sub(self.cached_blocks);
+            if want > free {
+                evicted = self.evict_blocks(want - free);
+            }
+            let free = self.cfg.max_blocks.saturating_sub(self.cached_blocks);
+            if want > free {
+                // Budget cannot hold the full prefix: insert what fits.
+                want = free;
+                aligned = existing + want * self.cfg.block_tokens;
+            }
+        }
+        let added = if want == 0 {
+            0
+        } else {
+            self.tick += 1;
+            insert_rec(
+                &mut self.root,
+                &prompt[..aligned],
+                0,
+                kv,
+                self.cfg.block_tokens,
+                self.tick,
+            )
+        };
+        debug_assert_eq!(added, want * self.cfg.block_tokens);
+        self.cached_blocks += added / self.cfg.block_tokens;
+        self.stats.inserted_tokens += added as u64;
+        self.release(prompt, pinned);
+        InsertReport {
+            new_tokens: added,
+            evicted_blocks: evicted,
+        }
+    }
+
+    /// Copy the cached KV for `prompt[..tokens]` into `(layers, t, kv_heads,
+    /// head_dim)` row-major buffers (token positions `[0, tokens)`; the rest
+    /// is left untouched). Returns false when any node on the path carries
+    /// no payload — accounting-only caches cannot materialize data.
+    pub fn assemble(
+        &self,
+        prompt: &[i32],
+        tokens: usize,
+        t: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> bool {
+        let want = tokens.min(prompt.len());
+        assemble_rec(
+            &self.root,
+            &prompt[..want],
+            0,
+            t,
+            k_out,
+            v_out,
+            self.cfg.block_tokens,
+        )
+    }
+
+    /// Evict refcount-0 LRU leaf subtrees until at least `want` blocks are
+    /// freed or nothing evictable remains. Returns the blocks actually
+    /// freed (the caller returns them to its allocator when the cache
+    /// shares a block pool). Referenced blocks are never freed.
+    pub fn evict_blocks(&mut self, want: usize) -> usize {
+        let mut freed = 0;
+        while freed < want {
+            let Some(oldest) = oldest_evictable(&self.root) else {
+                break;
+            };
+            let got = remove_evictable(&mut self.root, oldest);
+            if got == 0 {
+                break;
+            }
+            freed += got;
+            self.cached_blocks -= got;
+            self.stats.evictions += 1;
+            self.stats.evicted_blocks += got as u64;
+        }
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{KvDtype, KvLayout};
+
+    fn cache(bt: usize, max_blocks: usize) -> PrefixCache {
+        let layout = KvLayout::new(KvDtype::FP8_DEFAULT, 2, 2, 4);
+        PrefixCache::new(PrefixCacheConfig {
+            block_tokens: bt,
+            max_blocks,
+            layout,
+        })
+    }
+
+    fn prompt(blocks: &[i32], bt: usize) -> Vec<i32> {
+        // One distinct token value repeated per block keeps block
+        // boundaries obvious in failures.
+        blocks.iter().flat_map(|b| vec![*b; bt]).collect()
+    }
+
+    #[test]
+    fn lookup_matches_block_aligned_prefixes_only() {
+        let mut c = cache(4, 64);
+        let p = prompt(&[1, 2, 3], 4); // 12 tokens
+        assert_eq!(c.insert(&p, None).new_tokens, 12);
+        assert_eq!(c.cached_blocks(), 3);
+        assert_eq!(c.lookup(&p), 12);
+        // Shares two whole blocks, diverges in the third.
+        let q = prompt(&[1, 2, 9], 4);
+        assert_eq!(c.lookup(&q), 8);
+        // Shares 4 whole tokens then diverges mid-block: only the aligned
+        // block counts.
+        let mut r = prompt(&[1, 1], 4);
+        r[6] = 77;
+        assert_eq!(c.lookup(&r), 4);
+        assert_eq!(c.lookup(&prompt(&[9], 4)), 0);
+        // Sub-block prompts can never match.
+        assert_eq!(c.lookup(&[1, 1]), 0);
+    }
+
+    #[test]
+    fn insert_splits_at_block_aligned_divergence() {
+        let mut c = cache(4, 64);
+        let a = prompt(&[1, 2, 3, 4], 4);
+        let b = prompt(&[1, 2, 8, 9], 4);
+        assert_eq!(c.insert(&a, None).new_tokens, 16);
+        // Only the divergent tail is new.
+        assert_eq!(c.insert(&b, None).new_tokens, 8);
+        assert_eq!(c.cached_blocks(), 6);
+        assert_eq!(c.lookup(&a), 16);
+        assert_eq!(c.lookup(&b), 16);
+        // Re-inserting is free.
+        assert_eq!(c.insert(&a, None).new_tokens, 0);
+        assert_eq!(c.cached_blocks(), 6);
+    }
+
+    #[test]
+    fn acquire_release_balance_refcounts_across_splits() {
+        let mut c = cache(4, 64);
+        let a = prompt(&[1, 2, 3, 4], 4);
+        assert_eq!(c.insert(&a, None).new_tokens, 16);
+        let got = c.acquire(&a);
+        assert_eq!(got, 16);
+        assert_eq!(c.total_refs(), 4);
+        assert_eq!(c.referenced_blocks(), 4);
+        // A divergent insert splits the pinned edge; pins must survive.
+        let b = prompt(&[1, 2, 8], 4);
+        c.insert(&b, None);
+        assert_eq!(c.total_refs(), 4, "split must preserve per-block pins");
+        let got_b = c.acquire(&b);
+        assert_eq!(got_b, 12);
+        assert_eq!(c.total_refs(), 4 + 3);
+        c.release(&b, got_b);
+        c.release(&a, got);
+        assert_eq!(c.total_refs(), 0);
+        assert_eq!(c.referenced_blocks(), 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_never_frees_referenced_blocks() {
+        let mut c = cache(4, 64);
+        let a = prompt(&[1, 2], 4);
+        let b = prompt(&[5, 6], 4);
+        c.insert(&a, None);
+        c.insert(&b, None);
+        let pinned = c.acquire(&a);
+        assert_eq!(pinned, 8);
+        // Unlimited eviction demand: only `b`'s unreferenced leaf goes.
+        let freed = c.evict_blocks(usize::MAX);
+        assert_eq!(freed, 2, "only the unpinned subtree is evictable");
+        assert_eq!(c.lookup(&a), 8, "pinned path survives");
+        assert_eq!(c.lookup(&b), 0);
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().evicted_blocks, 2);
+        c.release(&a, pinned);
+        // Now everything is evictable, leaf-first.
+        let freed = c.evict_blocks(usize::MAX);
+        assert_eq!(freed, 2);
+        assert_eq!(c.cached_blocks(), 0);
+    }
+
+    #[test]
+    fn lru_order_prefers_oldest_leaf() {
+        let mut c = cache(4, 64);
+        let a = prompt(&[1], 4);
+        let b = prompt(&[2], 4);
+        c.insert(&a, None);
+        c.insert(&b, None);
+        // Touch `a` so `b` becomes the LRU leaf.
+        let got = c.acquire(&a);
+        c.release(&a, got);
+        assert_eq!(c.evict_blocks(1), 1);
+        assert_eq!(c.lookup(&a), 4, "recently used path must survive");
+        assert_eq!(c.lookup(&b), 0, "LRU leaf evicted first");
+    }
+
+    #[test]
+    fn budget_truncates_inserts_after_eviction() {
+        let mut c = cache(4, 3); // room for 3 blocks
+        let a = prompt(&[1, 2, 3, 4], 4); // wants 4
+        let rep = c.insert(&a, None);
+        assert_eq!(rep.new_tokens, 12, "insert truncated to the budget");
+        assert_eq!(c.cached_blocks(), 3);
+        assert_eq!(c.lookup(&a), 12);
+        // A disjoint insert evicts the old path (refcount 0) to fit.
+        let b = prompt(&[7, 8], 4);
+        let rep = c.insert(&b, None);
+        assert_eq!(rep.new_tokens, 8);
+        assert!(rep.evicted_blocks >= 2);
+        assert!(c.cached_blocks() <= 3);
+    }
+
+    #[test]
+    fn payload_roundtrip_through_assemble() {
+        let (layers, kv_heads, head_dim, bt) = (2usize, 2usize, 3usize, 4usize);
+        let row = kv_heads * head_dim;
+        let t_src = 16usize;
+        // Source buffer (L, T, H, D) with position-identifying values.
+        let n = layers * t_src * row;
+        let k_src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v_src: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let src = KvSpanSource {
+            k: &k_src,
+            v: &v_src,
+            t_src,
+            layers,
+            kv_heads,
+            head_dim,
+        };
+        let mut c = cache(bt, 64);
+        let p = prompt(&[1, 2, 3], bt); // 12 tokens
+        assert_eq!(c.insert(&p, Some(&src)).new_tokens, 12);
+        // Divergent sibling forces a split of the payload-carrying edge.
+        let q = prompt(&[1, 9], bt);
+        c.insert(&q, Some(&src));
+
+        let t_dst = 20usize;
+        let mut k_out = vec![0.0f32; layers * t_dst * row];
+        let mut v_out = vec![0.0f32; layers * t_dst * row];
+        assert!(c.assemble(&p, 12, t_dst, &mut k_out, &mut v_out));
+        for l in 0..layers {
+            for tok in 0..12 {
+                for e in 0..row {
+                    let want = ((l * t_src + tok) * row + e) as f32;
+                    let got = k_out[(l * t_dst + tok) * row + e];
+                    assert_eq!(got, want, "k layer {l} tok {tok} elem {e}");
+                    assert_eq!(v_out[(l * t_dst + tok) * row + e], -want);
+                }
+            }
+        }
+        // Accounting-only nodes cannot materialize.
+        let mut c2 = cache(bt, 64);
+        c2.insert(&p, None);
+        assert!(!c2.assemble(&p, 12, t_dst, &mut k_out, &mut v_out));
+    }
+
+    #[test]
+    fn interleaved_ops_keep_refcounts_balanced() {
+        use crate::util::rng::XorShiftRng;
+        let bt = 4usize;
+        let mut c = cache(bt, 32);
+        let mut rng = XorShiftRng::new(0xC0FFEE);
+        // A small family of prompts sharing prefixes at various depths.
+        let family: Vec<Vec<i32>> = (0..8)
+            .map(|i| {
+                let mut blocks = vec![1, 2];
+                blocks.push(3 + (i % 4) as i32);
+                blocks.push(10 + i as i32);
+                prompt(&blocks, bt)
+            })
+            .collect();
+        let mut live: Vec<(usize, usize)> = Vec::new(); // (family idx, tokens)
+        for _ in 0..2000 {
+            match rng.below(4) {
+                0 => {
+                    let i = rng.below(family.len());
+                    let got = c.acquire(&family[i]);
+                    live.push((i, got));
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let (i, got) = live.swap_remove(rng.below(live.len()));
+                        c.release(&family[i], got);
+                    }
+                }
+                2 => {
+                    let i = rng.below(family.len());
+                    c.insert(&family[i], None);
+                }
+                _ => {
+                    c.evict_blocks(rng.below(4));
+                }
+            }
+            let expected: u64 = live.iter().map(|(_, t)| (t / bt) as u64).sum();
+            assert_eq!(c.total_refs(), expected, "dangling or lost refcount");
+            assert!(c.referenced_blocks() <= c.cached_blocks());
+            assert!(c.cached_blocks() <= c.max_blocks());
+            // Every live acquisition's path must still be materializable
+            // by lookup (eviction must not have freed pinned blocks).
+            for (i, t) in &live {
+                assert!(c.lookup(&family[*i]) >= *t, "pinned path evicted");
+            }
+        }
+        for (i, got) in live.drain(..) {
+            c.release(&family[i], got);
+        }
+        assert_eq!(c.total_refs(), 0);
+        // With no pins the cache must drain completely.
+        c.evict_blocks(usize::MAX);
+        assert_eq!(c.cached_blocks(), 0);
+        assert_eq!(c.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn bytes_follow_the_layout_contract() {
+        let layout = KvLayout::new(KvDtype::FP8_DEFAULT, 2, 2, 4);
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            block_tokens: 8,
+            max_blocks: 16,
+            layout,
+        });
+        let p: Vec<i32> = (0..32).collect();
+        c.insert(&p, None);
+        assert_eq!(c.cached_tokens(), 32);
+        assert_eq!(c.cached_bytes(), 32 * layout.bytes_per_token());
+        // from_bytes_budget inverts the rate.
+        let budget = (64 * layout.bytes_per_token()) as f64;
+        let cfg = PrefixCacheConfig::from_bytes_budget(layout, 8, budget);
+        assert_eq!(cfg.max_blocks, 8);
+        let cfg = PrefixCacheConfig::from_bytes_budget(layout, 8, 0.0);
+        assert_eq!(cfg.max_blocks, 0);
+    }
+}

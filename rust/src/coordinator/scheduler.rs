@@ -1,12 +1,20 @@
-//! Scheduling policy: prefill/decode interleave and shape-bucket selection.
+//! Scheduling policy: prefill/decode interleave, shape-bucket selection,
+//! and prefix-cache-aware chunked prefill planning.
 //!
 //! The AOT architecture compiles one executable per (variant, batch, seq)
 //! bucket, so the scheduler's job includes *bucketing*: choosing the
 //! smallest compiled prefill length ≥ prompt, and the smallest compiled
 //! decode batch ≥ active slots.
+//!
+//! With a [`PrefixCache`] attached, [`Scheduler::plan_with_prefix`] matches
+//! the longest cached prefix of the queue head and plans only the uncached
+//! tail, split into fixed-size chunks the engine interleaves with decode
+//! steps. A full hit produces a **zero-tail** plan: no prefill compute at
+//! all, just the first-token bootstrap.
 
-use super::batcher::{AdmissionQueue, BatchPlan};
+use super::batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 use super::kvcache::KvStore;
+use super::prefix::PrefixCache;
 
 /// Prefill/decode interleave policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,6 +25,35 @@ pub enum SchedulePolicy {
     /// Only admit when the decode group would go below `min_decode` active
     /// slots (protects TPOT under load).
     DecodeFirst { min_decode: usize },
+}
+
+/// Is a warm (cache-hit) start worth taking? The warm path recomputes the
+/// uncached tail through the decode machinery, which only beats one
+/// bucketed whole-prompt prefill when most of the prompt is cached — a
+/// one-block hit on a long prompt would make TTFT *worse*. Exception:
+/// when no compiled prefill bucket fits the prompt, the warm path is the
+/// only way to serve it at all.
+pub fn warm_start_pays(cached: usize, prompt_len: usize, cold_bucket_exists: bool) -> bool {
+    cached > 0 && (cached * 2 >= prompt_len || !cold_bucket_exists)
+}
+
+/// Fixed-size chunk spans `(start, len)` covering the uncached prefill
+/// tail `[cached, prompt_len)`. Empty for a full hit; `chunk_tokens == 0`
+/// emits the whole tail as a single chunk.
+pub fn chunk_spans(prompt_len: usize, cached: usize, chunk_tokens: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut pos = cached.min(prompt_len);
+    let step = if chunk_tokens == 0 {
+        prompt_len.saturating_sub(pos).max(1)
+    } else {
+        chunk_tokens
+    };
+    while pos < prompt_len {
+        let len = step.min(prompt_len - pos);
+        out.push((pos, len));
+        pos += len;
+    }
+    out
 }
 
 pub struct Scheduler {
@@ -74,22 +111,61 @@ impl Scheduler {
         groups
     }
 
-    /// Build the next iteration's plan.
+    /// Build the next iteration's plan (no prefix cache, single-chunk
+    /// prefills — the legacy entry point).
     pub fn plan(&self, queue: &AdmissionQueue, kv: &mut KvStore) -> BatchPlan {
+        self.plan_with_prefix(queue, kv, None, 0, true)
+    }
+
+    /// Build the next iteration's plan, prefix-cache aware.
+    ///
+    /// Admission rules: a *cold* prompt must fit a compiled prefill
+    /// bucket; a *warm* prompt (cached prefix > 0) recomputes only its
+    /// tail through the decode path, so it needs only to fit the KV
+    /// window. `allow_admit = false` suppresses admission entirely (the
+    /// engine passes this while a chunked prefill is still in flight).
+    pub fn plan_with_prefix(
+        &self,
+        queue: &AdmissionQueue,
+        kv: &mut KvStore,
+        prefix: Option<&PrefixCache>,
+        chunk_tokens: usize,
+        allow_admit: bool,
+    ) -> BatchPlan {
         let active = kv.active_slots();
         let mut plan = BatchPlan {
             prefill: None,
             decode_slots: active.clone(),
         };
-        let admit = match self.policy {
-            SchedulePolicy::PrefillFirst => true,
-            SchedulePolicy::DecodeFirst { min_decode } => active.len() < min_decode,
-        };
+        let admit = allow_admit
+            && match self.policy {
+                SchedulePolicy::PrefillFirst => true,
+                SchedulePolicy::DecodeFirst { min_decode } => active.len() < min_decode,
+            };
         if admit {
             if let Some(req) = queue.peek() {
-                if self.prefill_bucket(req.prompt.len()).is_some() {
+                let hit = prefix.map_or(0, |p| p.lookup(&req.prompt).min(req.prompt.len()));
+                let has_bucket = self.prefill_bucket(req.prompt.len()).is_some();
+                // Small hits start cold: the tail recompute would cost
+                // more than the bucketed prefill it replaces.
+                let cached = if warm_start_pays(hit, req.prompt.len(), has_bucket) {
+                    hit
+                } else {
+                    0
+                };
+                let admissible = if cached > 0 {
+                    req.prompt.len() <= kv.t
+                } else {
+                    has_bucket
+                };
+                if admissible {
                     if let Some(slot) = kv.alloc_slot() {
-                        plan.prefill = Some((req.id, slot));
+                        plan.prefill = Some(PrefillPlan {
+                            id: req.id,
+                            slot,
+                            cached_tokens: cached,
+                            chunks: chunk_spans(req.prompt.len(), cached, chunk_tokens),
+                        });
                     }
                 }
             }
@@ -101,7 +177,9 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::prefix::{PrefixCache, PrefixCacheConfig};
     use crate::coordinator::request::Request;
+    use crate::quant::{KvDtype, KvLayout};
 
     fn sched(policy: SchedulePolicy) -> Scheduler {
         Scheduler::new(policy, vec![16, 32, 64, 128], vec![1, 2, 4, 8])
@@ -128,13 +206,34 @@ mod tests {
     }
 
     #[test]
+    fn chunk_spans_cover_the_tail_exactly() {
+        assert_eq!(chunk_spans(10, 0, 0), vec![(0, 10)]);
+        assert_eq!(chunk_spans(10, 4, 0), vec![(4, 6)]);
+        assert_eq!(chunk_spans(10, 4, 3), vec![(4, 3), (7, 3)]);
+        assert_eq!(chunk_spans(11, 4, 3), vec![(4, 3), (7, 3), (10, 1)]);
+        // Full hit: the zero-tail plan.
+        assert_eq!(chunk_spans(8, 8, 4), Vec::<(usize, usize)>::new());
+        // Chunks tile the tail exactly once, in order.
+        let spans = chunk_spans(1000, 128, 96);
+        let mut pos = 128;
+        for (start, len) in &spans {
+            assert_eq!(*start, pos);
+            assert!(*len > 0 && *len <= 96);
+            pos += len;
+        }
+        assert_eq!(pos, 1000);
+    }
+
+    #[test]
     fn prefill_first_admits_when_slot_free() {
         let s = sched(SchedulePolicy::PrefillFirst);
         let mut q = AdmissionQueue::new(8);
-        q.push(Request::new(1, vec![0; 20], 4));
+        q.push(Request::new(1, vec![0; 20], 4)).unwrap();
         let mut kv = KvStore::new(2, 2, 160, 2, 4);
         let plan = s.plan(&q, &mut kv);
-        assert!(plan.prefill.is_some());
+        let pp = plan.prefill.expect("admitted");
+        assert_eq!(pp.cached_tokens, 0);
+        assert_eq!(pp.chunks, vec![(0, 20)]);
         assert!(plan.decode_slots.is_empty());
     }
 
@@ -142,7 +241,7 @@ mod tests {
     fn decode_first_defers_admission() {
         let s = sched(SchedulePolicy::DecodeFirst { min_decode: 1 });
         let mut q = AdmissionQueue::new(8);
-        q.push(Request::new(1, vec![0; 20], 4));
+        q.push(Request::new(1, vec![0; 20], 4)).unwrap();
         let mut kv = KvStore::new(2, 2, 160, 2, 4);
         // One active slot already decoding → admission deferred.
         let slot = kv.alloc_slot().unwrap();
@@ -156,7 +255,7 @@ mod tests {
     fn oversized_prompt_not_admitted() {
         let s = sched(SchedulePolicy::PrefillFirst);
         let mut q = AdmissionQueue::new(8);
-        q.push(Request::new(1, vec![0; 300], 4));
+        q.push(Request::new(1, vec![0; 300], 4)).unwrap();
         let mut kv = KvStore::new(2, 2, 160, 2, 4);
         let plan = s.plan(&q, &mut kv);
         assert!(plan.prefill.is_none());
@@ -173,7 +272,7 @@ mod tests {
         ] {
             let s = sched(policy);
             let mut q = AdmissionQueue::new(8);
-            q.push(Request::new(1, vec![0; 129], 4));
+            q.push(Request::new(1, vec![0; 129], 4)).unwrap();
             let mut kv = KvStore::new(2, 2, 160, 2, 4);
             let plan = s.plan(&q, &mut kv);
             assert!(plan.prefill.is_none(), "{policy:?}");
@@ -211,7 +310,7 @@ mod tests {
         assert_eq!(s.decode_groups(&[7, 8, 9]), vec![vec![7, 8, 9]]);
         // Planning with empty buckets: nothing admissible, nothing planned.
         let mut q = AdmissionQueue::new(4);
-        q.push(Request::new(1, vec![0; 8], 4));
+        q.push(Request::new(1, vec![0; 8], 4)).unwrap();
         let mut kv = KvStore::new(2, 2, 160, 2, 4);
         let plan = s.plan(&q, &mut kv);
         assert!(plan.prefill.is_none());
@@ -221,11 +320,110 @@ mod tests {
     fn no_slot_no_prefill() {
         let s = sched(SchedulePolicy::PrefillFirst);
         let mut q = AdmissionQueue::new(8);
-        q.push(Request::new(1, vec![0; 8], 4));
+        q.push(Request::new(1, vec![0; 8], 4)).unwrap();
         let mut kv = KvStore::new(2, 1, 160, 2, 4);
         kv.alloc_slot().unwrap(); // occupy the only slot
         let plan = s.plan(&q, &mut kv);
         assert!(plan.prefill.is_none());
         assert_eq!(plan.decode_slots.len(), 1);
+    }
+
+    fn warm_cache(prompt: &[i32]) -> PrefixCache {
+        let layout = KvLayout::new(KvDtype::FP8_DEFAULT, 2, 2, 4);
+        let mut p = PrefixCache::new(PrefixCacheConfig {
+            block_tokens: 16,
+            max_blocks: 64,
+            layout,
+        });
+        p.insert(prompt, None);
+        p
+    }
+
+    #[test]
+    fn full_hit_produces_zero_tail_plan() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let prompt = vec![7i32; 64]; // block-aligned: fully cacheable
+        let cache = warm_cache(&prompt);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, prompt, 4)).unwrap();
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q, &mut kv, Some(&cache), 16, true);
+        let pp = plan.prefill.expect("full hit must admit");
+        assert_eq!(pp.cached_tokens, 64);
+        assert!(pp.chunks.is_empty(), "full hit ⇒ zero-tail prefill plan");
+    }
+
+    #[test]
+    fn partial_hit_plans_chunked_tail_only() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let shared = vec![7i32; 64];
+        let cache = warm_cache(&shared);
+        let mut prompt = shared.clone();
+        prompt.extend_from_slice(&[9i32; 40]); // 104 total, 64 cached
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, prompt, 4)).unwrap();
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q, &mut kv, Some(&cache), 16, true);
+        let pp = plan.prefill.expect("warm prompt must admit");
+        assert_eq!(pp.cached_tokens, 64);
+        assert_eq!(pp.chunks, vec![(64, 16), (80, 16), (96, 8)]);
+    }
+
+    #[test]
+    fn warm_prompt_admits_past_the_prefill_buckets() {
+        // 160-token prompt exceeds every compiled bucket (max 128) but is
+        // fully cached: the tail goes through the decode path, so the
+        // bucket limit no longer gates admission — only the KV window does.
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let prompt = vec![3i32; 160];
+        let cache = warm_cache(&prompt);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, prompt.clone(), 4)).unwrap();
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q, &mut kv, Some(&cache), 0, true);
+        assert!(plan.prefill.is_some());
+        // But not past the KV window.
+        let mut q2 = AdmissionQueue::new(8);
+        let long = vec![3i32; 192];
+        let cache2 = warm_cache(&long);
+        q2.push(Request::new(2, long, 4)).unwrap();
+        let mut kv2 = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q2, &mut kv2, Some(&cache2), 0, true);
+        assert!(plan.prefill.is_none());
+    }
+
+    #[test]
+    fn small_hit_starts_cold() {
+        // One cached block of a 128-token prompt: recomputing a 112-token
+        // tail through the decode path costs more than one bucketed
+        // prefill, so the plan must go cold (and a half-cached prompt must
+        // still go warm).
+        assert!(!warm_start_pays(16, 128, true));
+        assert!(warm_start_pays(64, 128, true));
+        assert!(warm_start_pays(16, 128, false), "warm is the only option");
+        assert!(!warm_start_pays(0, 128, false));
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let shared = vec![7i32; 16];
+        let cache = warm_cache(&shared);
+        let mut prompt = shared;
+        prompt.extend_from_slice(&[9i32; 112]);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, prompt, 4)).unwrap();
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q, &mut kv, Some(&cache), 0, true);
+        let pp = plan.prefill.expect("cold admission");
+        assert_eq!(pp.cached_tokens, 0, "one-block hit must not go warm");
+        assert_eq!(pp.chunks, vec![(0, 128)]);
+    }
+
+    #[test]
+    fn allow_admit_false_suppresses_prefill() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        let mut q = AdmissionQueue::new(8);
+        q.push(Request::new(1, vec![0; 20], 4)).unwrap();
+        let mut kv = KvStore::new(2, 2, 160, 2, 4);
+        let plan = s.plan_with_prefix(&q, &mut kv, None, 0, false);
+        assert!(plan.prefill.is_none());
+        assert!(kv.active_slots().is_empty(), "no slot may be consumed");
     }
 }

@@ -57,12 +57,13 @@ pub struct E2eReport {
     pub mfu: f64,
 }
 
-/// Prefill one sequence of `seq` tokens (batch 1), as in Table 5.
-pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
+/// Σ linear-GEMM time for one forward pass over `rows` tokens (FP8
+/// linears via the MME model, BF16 LM head when configured) — shared by
+/// the full-prefill and chunked-prefill paths.
+fn linears_time_s(cfg: &E2eConfig, rows: usize) -> f64 {
     let dev = &cfg.device;
     let m = &cfg.model;
     let mut t = 0.0f64;
-
     for op in enumerate_linears(m) {
         match op.kind {
             LayerKind::Embedding => continue, // gather, negligible
@@ -70,7 +71,7 @@ pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
                 if cfg.lm_head_bf16 {
                     t += gemm_time_s(
                         &GemmConfig {
-                            m: seq,
+                            m: rows,
                             k: op.in_features,
                             n: op.out_features,
                             scaling: ScalingKind::Bf16,
@@ -87,7 +88,7 @@ pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
                 } else {
                     1.0
                 };
-                let rows = ((seq as f64 * share) as usize).max(1);
+                let r = ((rows as f64 * share) as usize).max(1);
                 let inst = if op.instances > 1 { m.experts } else { 1 };
                 // Router / expert GEMMs: instances that actually execute.
                 let active_inst = if op.instances > 1 {
@@ -97,7 +98,7 @@ pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
                 };
                 let one = gemm_time_s(
                     &GemmConfig {
-                        m: rows,
+                        m: r,
                         k: op.in_features,
                         n: op.out_features,
                         scaling: cfg.scaling,
@@ -108,15 +109,27 @@ pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
             }
         }
     }
+    t
+}
 
-    // Attention: QKᵀ and PV in BF16, 4·S²·hidden FLOPs per layer.
-    let attn_flops = 4.0 * (seq as f64) * (seq as f64) * m.hidden as f64;
+/// BF16 attention GEMMs + TPC softmax time for `rows` new tokens attending
+/// over a `ctx`-key context, across all layers.
+fn attn_time_s(cfg: &E2eConfig, rows: usize, ctx: usize) -> f64 {
+    let dev = &cfg.device;
+    let m = &cfg.model;
+    // QKᵀ and PV in BF16: 4·rows·ctx·hidden FLOPs per layer.
+    let attn_flops = 4.0 * (rows as f64) * (ctx as f64) * m.hidden as f64;
     let attn_rate = dev.peak_bf16_tflops * 1e12 * ATTN_BF16_EFF;
-    t += m.layers as f64 * attn_flops / attn_rate;
+    // Softmax & masking on TPC: one pass over rows·ctx·heads elements.
+    let softmax_elems = (rows as f64) * (ctx as f64) * m.heads as f64;
+    m.layers as f64 * (attn_flops / attn_rate + softmax_elems / (dev.tpc_gelems_per_s * 1e9))
+}
 
-    // Softmax & masking on TPC: one pass over S²·heads elements per layer.
-    let softmax_elems = (seq as f64) * (seq as f64) * m.heads as f64;
-    t += m.layers as f64 * softmax_elems / (dev.tpc_gelems_per_s * 1e9);
+/// Prefill one sequence of `seq` tokens (batch 1), as in Table 5.
+pub fn prefill_tflops(cfg: &E2eConfig, seq: usize) -> E2eReport {
+    let dev = &cfg.device;
+    let m = &cfg.model;
+    let t = linears_time_s(cfg, seq) + attn_time_s(cfg, seq, seq);
 
     let model_flops = prefill_model_flops(m, seq, cfg.lm_head_bf16);
     let tflops = model_flops / t / 1e12;
@@ -164,6 +177,52 @@ pub fn decode_step_tflops(cfg: &E2eConfig, batch: usize, context: usize) -> E2eR
         tflops,
         mfu: tflops / dev.peak_fp8_tflops,
     }
+}
+
+/// Chunked prefill with a shared-prefix cache: `cached` prompt tokens are
+/// skipped outright (their KV is already resident — the FLOP and HBM
+/// saving the radix cache buys), and the uncached tail is computed in
+/// `chunk_tokens`-sized pieces (0 = one chunk). Each chunk pays its linear
+/// GEMMs at M = chunk — exposing the small-M weight-reload penalty and the
+/// per-GEMM launch overhead (`mme::GEMM_LAUNCH_OVERHEAD_S`), which is why
+/// tiny chunks cost more than one big one — plus attention over the full
+/// context accumulated so far.
+///
+/// Attention is charged *causally* here (chunk rows attend only to the
+/// keys accumulated so far), while the one-shot dense prefill above pays
+/// the full masked square (`attn_time_s(S, S)`). Both are real: a dense
+/// single-pass kernel computes the masked upper triangle anyway, chunked
+/// execution never materializes it — so a many-chunk tail recovers up to
+/// ~2× of the attention time, partially offsetting the launch/small-M
+/// overheads. The single-chunk case degenerates to the same square as
+/// `prefill_tflops` by construction.
+///
+/// A full hit (`cached ≥ prompt`) costs one batch-1 decode step: the last
+/// prompt position is recomputed so its logits (the first-token sample)
+/// exist.
+pub fn chunked_prefill_time_s(
+    cfg: &E2eConfig,
+    prompt: usize,
+    cached: usize,
+    chunk_tokens: usize,
+) -> f64 {
+    let cached = cached.min(prompt);
+    if cached >= prompt {
+        return decode_step_tflops(cfg, 1, prompt.max(1)).time_s;
+    }
+    let step = if chunk_tokens == 0 {
+        prompt - cached
+    } else {
+        chunk_tokens.max(1)
+    };
+    let mut t = 0.0f64;
+    let mut pos = cached;
+    while pos < prompt {
+        let c = step.min(prompt - pos);
+        t += linears_time_s(cfg, c) + attn_time_s(cfg, c, pos + c);
+        pos += c;
+    }
+    t
 }
 
 #[cfg(test)]
@@ -279,6 +338,46 @@ mod tests {
         let d = decode_step_tflops(&cfg, 32, 2048).mfu;
         let p = prefill_tflops(&cfg, 2048).mfu;
         assert!(d < 0.5 * p, "decode {d} prefill {p}");
+    }
+
+    #[test]
+    fn chunked_prefill_single_cold_chunk_matches_full_prefill() {
+        let cfg = E2eConfig::llama31_70b_paper();
+        for seq in [1024usize, 4096] {
+            let full = prefill_tflops(&cfg, seq).time_s;
+            let chunked = chunked_prefill_time_s(&cfg, seq, 0, 0);
+            assert!(
+                (full - chunked).abs() / full < 1e-9,
+                "seq {seq}: {full} vs {chunked}"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_prefix_cuts_prefill_time() {
+        let cfg = E2eConfig::llama31_70b_paper();
+        let cold = chunked_prefill_time_s(&cfg, 4096, 0, 512);
+        let half = chunked_prefill_time_s(&cfg, 4096, 2048, 512);
+        let full = chunked_prefill_time_s(&cfg, 4096, 4096, 512);
+        assert!(half < cold, "half-cached must be cheaper: {half} vs {cold}");
+        assert!(full < half, "full hit must be cheapest: {full} vs {half}");
+        // The acceptance mechanism: a warm prompt reaches first-token ≥ 2×
+        // faster than a cold one.
+        assert!(cold / full >= 2.0, "TTFT gain {:.2}x < 2x", cold / full);
+        // Full hit = one bootstrap decode step, exactly.
+        let boot = decode_step_tflops(&cfg, 1, 4096).time_s;
+        assert!((full - boot).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_chunks_pay_launch_and_reload_overhead() {
+        use super::super::mme::GEMM_LAUNCH_OVERHEAD_S;
+        let cfg = E2eConfig::llama31_70b_paper();
+        let big = chunked_prefill_time_s(&cfg, 4096, 0, 2048);
+        let small = chunked_prefill_time_s(&cfg, 4096, 0, 128);
+        assert!(small > big, "128-token chunks must cost more than 2048");
+        // Floor: 32 chunks each pay at least one GEMM launch.
+        assert!(small >= 32.0 * GEMM_LAUNCH_OVERHEAD_S);
     }
 
     #[test]

@@ -79,6 +79,16 @@ impl MemoryModel {
         (batch * seq) as f64 * self.kv_layout().bytes_per_token() as f64
     }
 
+    /// KV bytes when the `batch` sequences share a common `shared_prefix`
+    /// stored once (the radix prefix cache): the shared prefix is charged
+    /// a single time, each sequence only its unique tail — all at the same
+    /// `KvLayout` rate.
+    pub fn kv_bytes_shared(&self, batch: usize, seq: usize, shared_prefix: usize) -> f64 {
+        let p = shared_prefix.min(seq);
+        let rate = self.kv_layout().bytes_per_token() as f64;
+        (p + batch * (seq - p)) as f64 * rate
+    }
+
     pub fn total_bytes_fp8(&self, batch: usize, seq: usize) -> f64 {
         self.weight_bytes_fp8() + self.kv_bytes(batch, seq) + WORKSPACE_BYTES
     }
@@ -96,12 +106,33 @@ impl MemoryModel {
         self.weight_bytes_bf16() + kv + WORKSPACE_BYTES <= self.capacity_bytes()
     }
 
+    /// Does the FP8 model fit when the batch shares a `shared_prefix`-token
+    /// prompt stored once? Extends the Table 6 frontier along the axis the
+    /// prefix cache opens.
+    pub fn fits_shared(&self, batch: usize, seq: usize, shared_prefix: usize) -> bool {
+        self.weight_bytes_fp8() + self.kv_bytes_shared(batch, seq, shared_prefix) + WORKSPACE_BYTES
+            <= self.capacity_bytes()
+    }
+
     /// Largest power-of-two batch that fits at sequence length `seq`.
     pub fn max_batch_pow2(&self, seq: usize) -> Option<usize> {
         let mut best = None;
         let mut b = 1usize;
         while b <= 1024 {
             if self.fits(b, seq) {
+                best = Some(b);
+            }
+            b *= 2;
+        }
+        best
+    }
+
+    /// Largest power-of-two batch that fits at `seq` with a shared prefix.
+    pub fn max_batch_pow2_shared(&self, seq: usize, shared_prefix: usize) -> Option<usize> {
+        let mut best = None;
+        let mut b = 1usize;
+        while b <= 1024 {
+            if self.fits_shared(b, seq, shared_prefix) {
                 best = Some(b);
             }
             b *= 2;
@@ -205,6 +236,26 @@ mod tests {
         // FP8 KV — with f32 KV the same workload blows the 96 GB budget.
         assert!(fp8.fits(16, 8192));
         assert!(!f32m.fits(16, 8192), "f32 KV must not fit Table 6's 16×8192");
+    }
+
+    #[test]
+    fn shared_prefix_extends_the_oom_frontier() {
+        let m = mm();
+        // No sharing: identical to the per-sequence accounting.
+        assert_eq!(m.kv_bytes_shared(16, 8192, 0), m.kv_bytes(16, 8192));
+        // Bytes saved are (batch − 1) × prefix × rate, exactly.
+        let saved = m.kv_bytes(16, 8192) - m.kv_bytes_shared(16, 8192, 1024);
+        assert_eq!(saved, 15.0 * 1024.0 * m.kv_layout().bytes_per_token() as f64);
+        // Table 6's OOM cell (32, 8192) becomes feasible once the batch
+        // shares a long prompt stored once.
+        assert!(!m.fits(32, 8192));
+        assert!(m.fits_shared(32, 8192, 6144));
+        assert!(m.max_batch_pow2_shared(8192, 6144) >= Some(32));
+        // A prefix longer than the sequence clamps.
+        assert_eq!(
+            m.kv_bytes_shared(4, 512, 9999),
+            512.0 * m.kv_layout().bytes_per_token() as f64
+        );
     }
 
     #[test]

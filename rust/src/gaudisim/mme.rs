@@ -65,6 +65,11 @@ pub struct GemmReport {
 
 /// Fixed per-GEMM launch/pipeline-fill cost (seconds).
 const T_FIXED: f64 = 8.0e-6;
+/// The launch cost, exported for the chunked-prefill model: a chunked
+/// prefill pays this once per linear per chunk, which — together with the
+/// small-M weight-reload penalty (`M_HALF` below) — is the floor on how
+/// small prefill chunks can usefully get.
+pub const GEMM_LAUNCH_OVERHEAD_S: f64 = T_FIXED;
 /// Descale-pass exposure coefficients (fraction of a full output
 /// read+write pass that escapes overlap, times spill³).
 const SW_SCALE_COEFF: f64 = 1.0;

@@ -11,6 +11,6 @@ pub mod memory;
 pub mod mme;
 
 pub use device::{Device, Generation};
-pub use e2e::{decode_step_tflops, prefill_tflops, E2eConfig};
+pub use e2e::{chunked_prefill_time_s, decode_step_tflops, prefill_tflops, E2eConfig};
 pub use memory::MemoryModel;
-pub use mme::{gemm_time_s, GemmConfig, GemmReport, ScalingKind};
+pub use mme::{gemm_time_s, GemmConfig, GemmReport, ScalingKind, GEMM_LAUNCH_OVERHEAD_S};

@@ -118,7 +118,8 @@ impl FleetMetrics {
              \"requests\":{},\"completed\":{},\"rejected\":{},\"generated_tokens\":{},\
              \"makespan_s\":{:.6},\"throughput_tok_s\":{:.3},\
              \"ttft_p50_ms\":{:.4},\"ttft_p95_ms\":{:.4},\"ttft_p99_ms\":{:.4},\
-             \"tpot_p50_ms\":{:.5},\"tpot_p95_ms\":{:.5},\"tpot_p99_ms\":{:.5}}}",
+             \"tpot_p50_ms\":{:.5},\"tpot_p95_ms\":{:.5},\"tpot_p99_ms\":{:.5},\
+             \"prefix_hits\":{},\"prefix_hit_tokens\":{}}}",
             replicas,
             policy,
             requests,
@@ -133,6 +134,8 @@ impl FleetMetrics {
             self.merged.tpot.p50_s() * 1e3,
             self.merged.tpot.p95_s() * 1e3,
             self.merged.tpot.p99_s() * 1e3,
+            self.merged.prefix_hits,
+            self.merged.prefix_hit_tokens,
         )
     }
 }

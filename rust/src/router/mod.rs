@@ -87,6 +87,19 @@ pub trait ReplicaHandle {
     /// (`KvWouldOom`/`PromptTooLong` here mean "never".)
     fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission;
 
+    /// Prompt tokens of `prompt` this replica could serve from its
+    /// shared-prefix cache — the "warmth" signal `least` routing credits.
+    /// Replicas without a cache report 0.
+    fn cached_prefix_tokens(&self, _prompt: &[i32]) -> usize {
+        0
+    }
+
+    /// Bytes currently resident in this replica's prefix cache (charged at
+    /// the shared `KvLayout` rate).
+    fn cached_prefix_bytes(&self) -> usize {
+        0
+    }
+
     /// Hand over a request that arrived at `arrival_s` on the fleet clock.
     /// Virtual-clock replicas measure TTFT from `arrival_s`; wall-clock
     /// engines ignore it and measure from the request's own creation
@@ -229,6 +242,10 @@ impl FleetRouter {
     fn try_route(&mut self, tr: &TimedRequest) -> TryRoute {
         let plen = tr.req.prompt.len();
         let mnew = tr.req.max_new_tokens;
+        // Least-outstanding (and affinity's least-outstanding spill path)
+        // read the warmth credit; round-robin discards it, so skip the
+        // per-replica radix walk there.
+        let want_warmth = !matches!(self.policy, RoutePolicy::RoundRobin);
         let mut views: Vec<ReplicaView> = Vec::new();
         let mut healthy = 0usize;
         let mut too_long = 0usize;
@@ -252,6 +269,11 @@ impl FleetRouter {
             views.push(ReplicaView {
                 id: e.id,
                 outstanding_tokens: e.handle.outstanding_tokens(),
+                cached_prefix_tokens: if want_warmth {
+                    e.handle.cached_prefix_tokens(&tr.req.prompt)
+                } else {
+                    0
+                },
                 admissible: e.handle.can_admit_now(plen, mnew) == Admission::Accept,
             });
         }
@@ -342,7 +364,7 @@ impl FleetRouter {
         loop {
             // Deliver every arrival due at or before the next fleet event.
             if let Some((_, frontier)) = self.registry.min_busy_clock() {
-                while arrivals.front().map_or(false, |a| a.arrival_s <= frontier) {
+                while arrivals.front().is_some_and(|a| a.arrival_s <= frontier) {
                     let tr = arrivals.pop_front().expect("front was checked");
                     self.admit(tr);
                 }

@@ -5,9 +5,10 @@
 //! * **RoundRobin** — cycle through replicas regardless of load. Baseline;
 //!   degrades badly when request costs are skewed.
 //! * **LeastOutstandingTokens** — send to the replica with the fewest
-//!   prompt+budget tokens queued or resident. Token-weighted least-loaded,
-//!   the natural load signal for LLM serving (a 4k-token prompt is not one
-//!   unit of work).
+//!   prompt+budget tokens queued or resident, minus the prompt tokens its
+//!   prefix cache would serve for free. Token-weighted least-loaded with a
+//!   warmth credit: the natural load signal for LLM serving (a 4k-token
+//!   prompt is not one unit of work, and a cached one is nearly none).
 //! * **SessionAffinity** — hash the session id (or the prompt's first K
 //!   tokens, a prefix-cache key) to a sticky replica, so multi-turn
 //!   requests land where their KV/prefix history lives; spill to
@@ -58,6 +59,10 @@ impl RoutePolicy {
 pub struct ReplicaView {
     pub id: usize,
     pub outstanding_tokens: usize,
+    /// Prompt tokens of the request being routed that this replica could
+    /// serve from its prefix cache ("warmth"): those tokens cost it no
+    /// prefill, so they are credited against its load.
+    pub cached_prefix_tokens: usize,
     /// Whether the replica would accept a submit right now.
     pub admissible: bool,
 }
@@ -89,17 +94,30 @@ pub fn fnv1a(tokens: &[i32]) -> u64 {
     h
 }
 
-/// The affinity key: explicit session id, else a prefix hash.
+/// The affinity key: explicit session id, else a prefix hash over the
+/// prompt's first `prefix_tokens` tokens. Set `prefix_tokens` to the
+/// prefix-cache block size (`PrefixCache::block_tokens`, 16 by default)
+/// and two prompts get the same key exactly when the radix tree would
+/// share their first block — session stickiness then lands requests where
+/// their cached prefix already lives.
 pub fn affinity_key(req: &Request, prefix_tokens: usize) -> u64 {
     req.session
         .unwrap_or_else(|| fnv1a(&req.prompt[..req.prompt.len().min(prefix_tokens)]))
+}
+
+/// Marginal cost of routing the request here: the replica's outstanding
+/// load minus the prompt tokens its prefix cache would serve for free.
+/// (The request's own work is constant across replicas, so ranking by
+/// `outstanding − cached` orders replicas by completion-time impact.)
+fn effective_load(v: &ReplicaView) -> usize {
+    v.outstanding_tokens.saturating_sub(v.cached_prefix_tokens)
 }
 
 fn least_outstanding(views: &[ReplicaView]) -> Option<usize> {
     views
         .iter()
         .filter(|v| v.admissible)
-        .min_by_key(|v| (v.outstanding_tokens, v.id))
+        .min_by_key(|v| (effective_load(v), v.id))
         .map(|v| v.id)
 }
 
@@ -122,7 +140,11 @@ impl RoutePolicy {
                 let mut best: Option<(usize, usize)> = None;
                 for v in views.iter().filter(|v| v.admissible) {
                     let key = (v.id + n - cursor) % n;
-                    if best.map_or(true, |(bk, _)| key < bk) {
+                    let better = match best {
+                        None => true,
+                        Some((bk, _)) => key < bk,
+                    };
+                    if better {
                         best = Some((key, v.id));
                     }
                 }
@@ -163,6 +185,7 @@ mod tests {
             .map(|(id, &outstanding_tokens)| ReplicaView {
                 id,
                 outstanding_tokens,
+                cached_prefix_tokens: 0,
                 admissible: true,
             })
             .collect()
@@ -219,6 +242,20 @@ mod tests {
     }
 
     #[test]
+    fn least_outstanding_credits_warm_prefix_caches() {
+        let p = RoutePolicy::LeastOutstandingTokens;
+        let mut st = PolicyState::default();
+        // Replica 2 is busier but holds 64 of the prompt's tokens warm:
+        // effective load 90 − 64 = 26 beats replica 1's 80.
+        let mut v = views(&[100, 80, 90]);
+        v[2].cached_prefix_tokens = 64;
+        assert_eq!(p.pick(&mut st, &v, 3, &req(0)), Some(2));
+        // The credit saturates: warmth beyond the load cannot go negative.
+        v[0].cached_prefix_tokens = 1_000_000;
+        assert_eq!(p.pick(&mut st, &v, 3, &req(1)), Some(0));
+    }
+
+    #[test]
     fn session_affinity_sticks_and_spills() {
         let p = RoutePolicy::SessionAffinity { prefix_tokens: 16 };
         let mut st = PolicyState::default();
@@ -237,8 +274,18 @@ mod tests {
         assert_eq!(p.pick(&mut st, &v, 3, &r), Some(1));
         // Sticky replica gone from the views (drained): re-pin elsewhere.
         let v2 = vec![
-            ReplicaView { id: 0, outstanding_tokens: 5, admissible: true },
-            ReplicaView { id: 2, outstanding_tokens: 1, admissible: true },
+            ReplicaView {
+                id: 0,
+                outstanding_tokens: 5,
+                cached_prefix_tokens: 0,
+                admissible: true,
+            },
+            ReplicaView {
+                id: 2,
+                outstanding_tokens: 1,
+                cached_prefix_tokens: 0,
+                admissible: true,
+            },
         ];
         assert_eq!(p.pick(&mut st, &v2, 3, &r), Some(2));
         assert_eq!(p.pick(&mut st, &v2, 3, &r), Some(2), "new pin is sticky");

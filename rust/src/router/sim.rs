@@ -9,18 +9,32 @@
 //! means routing experiments inherit the paper's performance shape (long
 //! prompts are expensive, decode is memory-bound) without needing the PJRT
 //! artifacts.
+//!
+//! With `prefix_cache` enabled the replica shares prompt KV through a
+//! [`PrefixCache`] drawing on the *same* block pool: admission charges
+//! only the uncached tail (plus generation budget), freshly prefilled
+//! prompts transfer their block-aligned prefix into the cache, and
+//! admission pressure evicts refcount-0 LRU subtrees back into the pool —
+//! so the byte contract stays exact end to end. Warm prompts pay the
+//! chunked-tail prefill time ([`chunked_prefill_time_s`]) instead of the
+//! full bucket.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use super::{Admission, ReplicaHandle};
 use crate::coordinator::{
-    BlockAllocator, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
+    chunk_spans, warm_start_pays, BlockAllocator, PrefixCache, PrefixCacheConfig, Request,
+    RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
 };
-use crate::gaudisim::{decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel, ScalingKind};
+use crate::gaudisim::{
+    chunked_prefill_time_s, decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel,
+    ScalingKind,
+};
 use crate::model::config::{ModelConfig, ModelFamily};
 use crate::quant::KvDtype;
+
+use super::{Admission, ReplicaHandle};
 
 #[derive(Clone, Debug)]
 pub struct SimReplicaConfig {
@@ -40,6 +54,13 @@ pub struct SimReplicaConfig {
     /// Override the KV block budget directly (tests use small values to
     /// exercise the OOM admission path).
     pub kv_blocks_override: Option<usize>,
+    /// Share prompt KV across requests through a radix prefix cache drawing
+    /// on the same block pool (off by default: cold-path behavior is then
+    /// bit-identical to the pre-cache replica).
+    pub prefix_cache: bool,
+    /// Chunked-prefill chunk size in tokens for cache-hit tails
+    /// (0 = single-chunk tail).
+    pub prefill_chunk: usize,
     pub prefill_seqs: Vec<usize>,
     pub decode_batches: Vec<usize>,
 }
@@ -60,6 +81,8 @@ impl SimReplicaConfig {
             kv_dtype: KvDtype::FP8_DEFAULT,
             kv_bytes_budget_override: None,
             kv_blocks_override: None,
+            prefix_cache: false,
+            prefill_chunk: 0,
             prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
             decode_batches: vec![1, 2, 4, 8],
         }
@@ -75,6 +98,8 @@ impl SimReplicaConfig {
             kv_dtype: KvDtype::FP8_DEFAULT,
             kv_bytes_budget_override: None,
             kv_blocks_override: None,
+            prefix_cache: false,
+            prefill_chunk: 0,
             prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
             decode_batches: vec![1, 8, 16, 32, 64, 128],
         }
@@ -83,12 +108,17 @@ impl SimReplicaConfig {
 
 struct SimActive {
     id: RequestId,
-    prompt_len: usize,
+    prompt: Vec<i32>,
+    /// Cached-prefix tokens pinned in the prefix cache for this request's
+    /// lifetime.
+    cache_tokens: usize,
     max_new: usize,
     generated: usize,
     /// Queueing + prefill latency, computed at admission.
     ttft_s: f64,
     first_token_s: f64,
+    /// Privately held blocks (tail + generation; cached-prefix blocks are
+    /// pool-charged to the cache instead).
     blocks: usize,
     /// Current context length (prompt + generated), drives KV-read cost.
     context: usize,
@@ -99,6 +129,7 @@ pub struct SimReplica {
     cfg: SimReplicaConfig,
     sched: Scheduler,
     alloc: BlockAllocator,
+    prefix: Option<PrefixCache>,
     queue: VecDeque<(Request, f64)>,
     active: Vec<SimActive>,
     now_s: f64,
@@ -124,6 +155,17 @@ impl SimReplica {
                 BlockAllocator::from_layout(budget, &mm.kv_layout(), cfg.block_tokens)?
             }
         };
+        let prefix = if cfg.prefix_cache {
+            // The cache draws on the same pool; its only budget is the
+            // pool itself (admission-pressure eviction keeps it honest).
+            Some(PrefixCache::new(PrefixCacheConfig {
+                block_tokens: cfg.block_tokens,
+                max_blocks: alloc.total_blocks,
+                layout: cfg.e2e.model.kv_layout(cfg.kv_dtype),
+            }))
+        } else {
+            None
+        };
         let sched = Scheduler::new(
             SchedulePolicy::PrefillFirst,
             cfg.prefill_seqs.clone(),
@@ -134,6 +176,7 @@ impl SimReplica {
             cfg,
             sched,
             alloc,
+            prefix,
             queue: VecDeque::new(),
             active: Vec::new(),
             now_s: 0.0,
@@ -146,53 +189,94 @@ impl SimReplica {
         &self.alloc
     }
 
+    /// The replica's prefix cache, when enabled.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix.as_ref()
+    }
+
+    /// Complete a request that can never run here with an empty output
+    /// (mirrors the engine's unservable path) rather than wedging the
+    /// queue.
+    fn finish_unservable(&mut self, req: Request) {
+        self.finished.push(RequestOutput {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            total_s: 0.0,
+        });
+        // Count it completed so fleet reports agree with outputs.
+        self.metrics.requests_completed += 1;
+    }
+
     /// Admit at most one queued request (the engine's one-prefill-per-step
     /// interleave). Returns whether anything happened.
     fn admit_one_prefill(&mut self) -> bool {
         if self.active.len() >= self.cfg.slots {
             return false;
         }
-        // Decide on the queue head without popping: Some(bucket) = prefill,
-        // None = unservable (drop with empty output), early-return = wait.
-        let decision: Option<usize> = match self.queue.front() {
-            None => return false,
-            Some((req, _)) => match self.sched.prefill_bucket(req.prompt.len()) {
-                None => None,
-                Some(bucket) => {
-                    let need = req.prompt.len() + req.max_new_tokens;
-                    if self.alloc.can_allocate(need) {
-                        Some(bucket)
-                    } else if self.active.is_empty()
-                        && self.alloc.free_blocks() == self.alloc.total_blocks
-                    {
-                        // Whole cache free and it still doesn't fit: this
-                        // request can never run here.
-                        None
-                    } else {
-                        // Blocks will free as active requests retire.
-                        return false;
-                    }
-                }
-            },
+        let Some((req, arrival_s)) = self.queue.pop_front() else {
+            return false;
         };
-        let (req, arrival_s) = self.queue.pop_front().expect("front was checked");
-        let Some(bucket) = decision else {
-            // Mirrors the engine's unservable-request path: complete with
-            // zero tokens rather than wedging the queue.
-            self.finished.push(RequestOutput {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: Vec::new(),
-                ttft_s: 0.0,
-                tpot_s: 0.0,
-                total_s: 0.0,
-            });
-            // Count it completed so fleet reports agree with outputs.
-            self.metrics.requests_completed += 1;
+        let prompt_len = req.prompt.len();
+        let bt = self.cfg.block_tokens;
+        let total_need = self.alloc.blocks_for(prompt_len + req.max_new_tokens);
+        if total_need > self.alloc.total_blocks {
+            // Even an idle replica could not hold this request (shared
+            // blocks included: every token must still be resident).
+            self.finish_unservable(req);
             return true;
+        }
+        // Pin the cached prefix first — eviction must not free it from
+        // under this request — then decide warm vs cold with the same
+        // rule the scheduler applies for the engine.
+        let mut cached = match self.prefix.as_mut() {
+            Some(p) => p.acquire(&req.prompt),
+            None => 0,
         };
-        let need = req.prompt.len() + req.max_new_tokens;
-        let blocks = self.alloc.allocate(need).expect("can_allocate was checked");
+        let bucket_opt = self.sched.prefill_bucket(prompt_len);
+        if !warm_start_pays(cached, prompt_len, bucket_opt.is_some()) {
+            if cached > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&req.prompt, cached);
+                }
+                cached = 0;
+            }
+            // Cold, and no compiled bucket fits: can never prefill here.
+            if bucket_opt.is_none() {
+                self.finish_unservable(req);
+                return true;
+            }
+        }
+        let need_blocks = total_need - cached / bt;
+        if !self.alloc.can_allocate_blocks(need_blocks) {
+            // Reclaim refcount-0 cached blocks before giving up.
+            if let Some(p) = self.prefix.as_mut() {
+                let shortfall = need_blocks - self.alloc.free_blocks();
+                let freed = p.evict_blocks(shortfall);
+                if freed > 0 {
+                    self.metrics.prefix_evicted_blocks += freed as u64;
+                    self.alloc
+                        .release(freed)
+                        .expect("evicted cache blocks return to the pool");
+                }
+            }
+        }
+        if !self.alloc.can_allocate_blocks(need_blocks) {
+            // Blocks will free as active requests retire: wait.
+            if cached > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&req.prompt, cached);
+                }
+            }
+            self.queue.push_front((req, arrival_s));
+            return false;
+        }
+        self.alloc
+            .allocate_blocks(need_blocks)
+            .expect("availability just checked");
+
         if self.active.is_empty() {
             // Idle replica: it was genuinely waiting for this arrival. With
             // work in flight the clock must NOT jump to a future-stamped
@@ -200,24 +284,67 @@ impl SimReplica {
             // would absorb the jump into their latencies.
             self.now_s = self.now_s.max(arrival_s);
         }
-        let t = prefill_tflops(&self.cfg.e2e, bucket).time_s;
+        // Cold admissions keep the legacy bucketed whole-prompt prefill
+        // cost; warm ones pay only the chunked uncached tail (or a single
+        // bootstrap decode step on a full hit).
+        let t = if cached == 0 {
+            let bucket = bucket_opt.expect("cold admission always has a bucket");
+            prefill_tflops(&self.cfg.e2e, bucket).time_s
+        } else {
+            chunked_prefill_time_s(&self.cfg.e2e, prompt_len, cached, self.cfg.prefill_chunk)
+        };
         self.now_s += t;
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_time.record(t);
+        if self.prefix.is_some() {
+            if cached > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_hit_tokens += cached as u64;
+                self.metrics.prefill_chunks +=
+                    chunk_spans(prompt_len, cached, self.cfg.prefill_chunk).len() as u64;
+            } else {
+                self.metrics.prefix_misses += 1;
+            }
+        }
         // A future-stamped request cannot have waited a negative time.
         let ttft = (self.now_s - arrival_s).max(t);
         self.metrics.ttft.record(ttft);
-        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.metrics.prompt_tokens += prompt_len as u64;
         self.metrics.generated_tokens += 1; // first token sampled at prefill
+        // Publish the freshly prefilled prompt into the shared cache: the
+        // newly cached blocks transfer from this request's private
+        // allocation to the cache (no pool delta), and the request re-pins
+        // the full cached span for its lifetime.
+        let mut cache_tokens = cached;
+        let mut private_blocks = need_blocks;
+        let mut insert_evicted = 0usize;
+        if let Some(p) = self.prefix.as_mut() {
+            let rep = p.insert(&req.prompt, None);
+            insert_evicted = rep.evicted_blocks;
+            if rep.new_tokens > 0 {
+                p.release(&req.prompt, cached);
+                cache_tokens = p.acquire(&req.prompt);
+                private_blocks -= (cache_tokens - cached) / bt;
+            }
+        }
+        if insert_evicted > 0 {
+            // Defensive: the shared-pool invariant means inserts never need
+            // room, but if one ever evicts, the blocks go back to the pool.
+            self.metrics.prefix_evicted_blocks += insert_evicted as u64;
+            self.alloc
+                .release(insert_evicted)
+                .expect("evicted cache blocks return to the pool");
+        }
         self.active.push(SimActive {
             id: req.id,
-            prompt_len: req.prompt.len(),
+            prompt: req.prompt,
+            cache_tokens,
             max_new: req.max_new_tokens.max(1),
             generated: 1,
             ttft_s: ttft,
             first_token_s: self.now_s,
-            blocks,
-            context: req.prompt.len() + 1,
+            blocks: private_blocks,
+            context: prompt_len + 1,
         });
         true
     }
@@ -260,10 +387,15 @@ impl SimReplica {
                 self.alloc
                     .release(a.blocks)
                     .expect("retire releases exactly the blocks it allocated");
+                if a.cache_tokens > 0 {
+                    if let Some(p) = self.prefix.as_mut() {
+                        p.release(&a.prompt, a.cache_tokens);
+                    }
+                }
                 let n = a.generated;
                 self.finished.push(RequestOutput {
                     id: a.id,
-                    prompt_len: a.prompt_len,
+                    prompt_len: a.prompt.len(),
                     // The simulation produces timing, not text.
                     tokens: vec![0; n],
                     ttft_s: a.ttft_s,
@@ -314,7 +446,7 @@ impl ReplicaHandle for SimReplica {
         let resident: usize = self
             .active
             .iter()
-            .map(|a| a.prompt_len + a.max_new.saturating_sub(a.generated))
+            .map(|a| a.prompt.len() + a.max_new.saturating_sub(a.generated))
             .sum();
         queued + resident
     }
@@ -331,6 +463,14 @@ impl ReplicaHandle for SimReplica {
             return Admission::KvWouldOom;
         }
         Admission::Accept
+    }
+
+    fn cached_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.lookup(prompt))
+    }
+
+    fn cached_prefix_bytes(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.cached_bytes())
     }
 
     fn submit(&mut self, req: Request, arrival_s: f64) -> bool {
@@ -362,6 +502,11 @@ impl ReplicaHandle for SimReplica {
             self.alloc
                 .release(a.blocks)
                 .expect("abort releases exactly the blocks it allocated");
+            if a.cache_tokens > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&a.prompt, a.cache_tokens);
+                }
+            }
             ids.push(a.id);
         }
         ids
@@ -503,5 +648,114 @@ mod tests {
         let outs = r.take_finished();
         assert!(outs[0].ttft_s > 0.0);
         assert!(r.clock_s() > 6.0);
+    }
+
+    #[test]
+    fn second_identical_prompt_hits_and_skips_prefill_time() {
+        // The paper-geometry replica: at 70B scale prefill FLOPs dominate
+        // (on the tiny synthetic model everything is launch-overhead-bound
+        // and a cache cannot win — the right regime to measure is the real
+        // one). A full hit pays one bootstrap decode step instead of a
+        // 1024-token bucketed prefill.
+        let mut cfg = SimReplicaConfig::gaudi2_llama31_70b();
+        cfg.prefix_cache = true;
+        let mut r = SimReplica::new("warm", cfg).unwrap();
+        let prompt = vec![3i32; 1024];
+        r.submit(Request::new(0, prompt.clone(), 4), 0.0);
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        let cold = r.take_finished().remove(0);
+        assert_eq!(r.metrics().prefix_misses, 1);
+        assert_eq!(r.cached_prefix_tokens(&prompt), 1024);
+        assert!(r.cached_prefix_bytes() > 0);
+
+        r.submit(Request::new(1, prompt.clone(), 4), r.clock_s());
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        let warm = r.take_finished().remove(0);
+        assert_eq!(r.metrics().prefix_hits, 1);
+        assert_eq!(r.metrics().prefix_hit_tokens, 1024);
+        assert!(
+            warm.ttft_s < cold.ttft_s / 2.0,
+            "warm TTFT {:.6}s must be ≥2x faster than cold {:.6}s",
+            warm.ttft_s,
+            cold.ttft_s
+        );
+        // Everything is released: only the cache still holds blocks.
+        let held = r.prefix_cache().unwrap().cached_blocks();
+        assert_eq!(
+            r.allocator().free_blocks() + held,
+            r.allocator().total_blocks
+        );
+        assert_eq!(r.prefix_cache().unwrap().total_refs(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_admits_concurrently_under_tight_budget() {
+        // Two requests sharing a 512-token prompt, under a pool that holds
+        // 48 blocks (768 tokens). Each needs blocks_for(512 + 16) = 33:
+        // without the cache the second request cannot be resident until the
+        // first retires; with it, the shared prefix is charged once and
+        // both run concurrently.
+        let mk = |prefix_cache: bool| {
+            let mut cfg = SimReplicaConfig::synthetic_tiny();
+            cfg.prefix_cache = prefix_cache;
+            cfg.kv_blocks_override = Some(48);
+            SimReplica::new("tight", cfg).unwrap()
+        };
+        let prompt = vec![9i32; 512];
+        for (with_cache, expect_concurrent) in [(false, false), (true, true)] {
+            let mut r = mk(with_cache);
+            r.submit(Request::new(0, prompt.clone(), 16), 0.0);
+            r.submit(Request::new(1, prompt.clone(), 16), 0.0);
+            r.step().unwrap();
+            assert_eq!(r.active(), 1, "first request admitted");
+            r.step().unwrap();
+            assert_eq!(
+                r.active() == 2,
+                expect_concurrent,
+                "prefix_cache={with_cache}: concurrent admission mismatch"
+            );
+            while r.has_work() {
+                r.step().unwrap();
+            }
+            assert_eq!(r.metrics().requests_completed, 2);
+            // No leaked blocks either way.
+            let held = r.prefix_cache().map_or(0, |p| p.cached_blocks());
+            assert_eq!(
+                r.allocator().free_blocks() + held,
+                r.allocator().total_blocks
+            );
+        }
+    }
+
+    #[test]
+    fn admission_pressure_evicts_unreferenced_cache_blocks() {
+        // Pool of 40 blocks. A 512-token prompt leaves 32 blocks cached
+        // after retiring; a *different* 512-token prompt then needs 33
+        // blocks cold — admission must evict the stale cached prefix to
+        // make room rather than waiting forever.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.prefix_cache = true;
+        cfg.kv_blocks_override = Some(40);
+        let mut r = SimReplica::new("evict", cfg).unwrap();
+        r.submit(Request::new(0, vec![1i32; 512], 8), 0.0);
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        assert_eq!(r.prefix_cache().unwrap().cached_blocks(), 32);
+        r.submit(Request::new(1, vec![2i32; 512], 8), 0.0);
+        while r.has_work() {
+            r.step().unwrap();
+        }
+        assert_eq!(r.metrics().requests_completed, 2);
+        assert!(r.metrics().prefix_evicted_blocks > 0, "eviction must fire");
+        let held = r.prefix_cache().unwrap().cached_blocks();
+        assert_eq!(
+            r.allocator().free_blocks() + held,
+            r.allocator().total_blocks
+        );
     }
 }

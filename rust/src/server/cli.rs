@@ -72,6 +72,15 @@ fn parse_kv_dtype(s: &str) -> Result<KvDtype> {
     })
 }
 
+/// `--prefix-cache on|off` spellings.
+fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("unknown --{flag} {other:?} (on|off)"),
+    }
+}
+
 pub fn run_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
@@ -94,6 +103,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Host KV store dtype; f32 is the exact-roundtrip default, fp8 serves
     // at 1/4 the KV bytes (the paper's configuration).
     cfg.kv_dtype = parse_kv_dtype(&args.get("kv-dtype", "f32"))?;
+    // Shared-prefix KV cache + chunked prefill (off by default).
+    if parse_on_off("prefix-cache", &args.get("prefix-cache", "off"))? {
+        cfg.prefix_cache_bytes = Some(args.get_f64("prefix-cache-mb", 64.0) * 1e6);
+    }
+    cfg.prefill_chunk = args.get_usize("prefill-chunk", 0);
     if args.get("policy", "prefill-first") == "decode-first" {
         cfg.policy = SchedulePolicy::DecodeFirst {
             min_decode: args.get_usize("min-decode", 2),
@@ -132,6 +146,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Flags: --replicas N, --policy rr|least|affinity, --requests N,
 /// --pattern burst|uniform|poisson|bursty, --rate REQ_PER_S, --slots N,
 /// --model tiny|small|base|llama31-70b, --kv-dtype f32|bf16|fp8,
+/// --prefix-cache on|off (radix shared-prefix KV cache per replica),
+/// --prefill-chunk TOK (chunked-prefill tail granularity, 0 = one chunk),
 /// --prompt-min/--prompt-max TOK, --max-new TOK, --seed N,
 /// --fleet-queue N, --json.
 fn cmd_fleet(args: &Args) -> Result<()> {
@@ -162,6 +178,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // KV storage dtype per replica; fp8 (the paper's serving config) is
     // the default the SimReplicaConfig constructors already carry.
     sim_cfg.kv_dtype = parse_kv_dtype(&args.get("kv-dtype", sim_cfg.kv_dtype.name()))?;
+    // Shared-prefix KV cache + chunked prefill per replica. The affinity
+    // policy's 16-token hash span equals the cache's block size, so sticky
+    // routing and radix lookups agree on what "same prefix" means.
+    sim_cfg.prefix_cache = parse_on_off("prefix-cache", &args.get("prefix-cache", "off"))?;
+    sim_cfg.prefill_chunk = args.get_usize("prefill-chunk", 0);
 
     let mut router = FleetRouter::new(FleetConfig {
         policy,
@@ -391,6 +412,32 @@ mod tests {
         .unwrap();
         cmd_fleet(&args).unwrap();
         let bad = Args::parse(&["fleet".into(), "--kv-dtype".into(), "int8".into()]).unwrap();
+        assert!(cmd_fleet(&bad).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_flags_parse_and_run() {
+        assert!(parse_on_off("prefix-cache", "on").unwrap());
+        assert!(!parse_on_off("prefix-cache", "off").unwrap());
+        assert!(parse_on_off("prefix-cache", "sideways").is_err());
+        // Through the fleet path end to end, chunked.
+        let args = Args::parse(&[
+            "fleet".into(),
+            "--replicas".into(),
+            "2".into(),
+            "--requests".into(),
+            "8".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--prefix-cache".into(),
+            "on".into(),
+            "--prefill-chunk".into(),
+            "32".into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_fleet(&args).unwrap();
+        let bad = Args::parse(&["fleet".into(), "--prefix-cache".into(), "maybe".into()]).unwrap();
         assert!(cmd_fleet(&bad).is_err());
     }
 
