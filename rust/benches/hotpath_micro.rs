@@ -106,7 +106,17 @@ fn main() {
         black_box(kv.gather_batch_into(&slots, slots.len(), &mut sk, &mut sv));
     });
     let (gk, gv, _) = kv.gather_batch(&slots);
-    b.bench_throughput("kv_scatter_4slots", kv_bytes, "GB/s", || {
+    // Paged scatter appends one position (hot block only): reset lengths
+    // each iter so it never saturates at capacity, and account only the
+    // hot-block span actually touched, derived from the store's own
+    // geometry so a block-size change cannot silently skew the rows.
+    let valid_in_hot_block = 100 % kv.block_tokens() + 1;
+    let hot_bytes =
+        (slots.len() * kv.layers * valid_in_hot_block * kv.kv_heads * kv.head_dim * 2 * 4) as f64;
+    b.bench_throughput("kv_scatter_4slots", hot_bytes, "GB/s", || {
+        for &s in &slots {
+            kv.set_len(s, 100);
+        }
         black_box(kv.scatter_batch(&slots, &gk, &gv));
     });
 
@@ -122,7 +132,10 @@ fn main() {
         black_box(kv8.gather_batch(&slots8));
     });
     let (g8k, g8v, _) = kv8.gather_batch(&slots8);
-    b.bench_throughput("kv_fp8_scatter_4slots", kv_bytes, "GB/s", || {
+    b.bench_throughput("kv_fp8_scatter_4slots", hot_bytes, "GB/s", || {
+        for &s in &slots8 {
+            kv8.set_len(s, 100);
+        }
         black_box(kv8.scatter_batch(&slots8, &g8k, &g8v));
     });
 }

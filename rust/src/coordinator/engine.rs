@@ -5,13 +5,17 @@
 //!   2. asks the [`Scheduler`] for a plan (admit-one-prefill + decode-all);
 //!   3. on a cold admission, runs the prefill artifact for the whole
 //!      prompt (padded to the compiled bucket), writes its KV into the
-//!      allocated slot, samples the first token (TTFT), and inserts the
-//!      block-aligned prompt KV into the prefix cache;
-//!   4. on a warm admission (prefix-cache hit), materializes the cached
-//!      prefix KV into the slot and recomputes only the uncached tail —
-//!      token by token through the decode artifact (numerically the same
-//!      model as prefill, with the cached prefix as attention context) —
-//!      in `prefill_chunk`-sized chunks interleaved with decode steps;
+//!      allocated slot's block table, samples the first token (TTFT), and
+//!      shares the block-aligned prompt KV into the prefix cache — the
+//!      cache *adopts* the slot's physical blocks (refcount, no copy);
+//!   4. on a warm admission (prefix-cache hit), **maps** the cached
+//!      physical blocks into the request's block table (the prefix is
+//!      never copied; a copy-on-write fires only if the bootstrap chunk
+//!      rewrites the tail of the last shared block) and recomputes only
+//!      the uncached tail — token by token through the decode artifact
+//!      (numerically the same model as prefill, with the cached prefix as
+//!      attention context) — in `prefill_chunk`-sized chunks interleaved
+//!      with decode steps;
 //!   5. runs one decode step per artifact-sized group of active slots with
 //!      per-row (ragged) positions, samples greedily, retires finished
 //!      requests.
@@ -28,16 +32,18 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::batcher::{AdmissionQueue, PrefillPlan};
 use super::kvcache::KvStore;
 use super::metrics::ServeMetrics;
-use super::prefix::{KvSpanSource, PrefixCache, PrefixCacheConfig};
+use super::prefix::{PrefixCache, PrefixCacheConfig};
 use super::request::{Request, RequestId, RequestOutput};
-use super::scheduler::{chunk_spans, SchedulePolicy, Scheduler};
-use crate::quant::{KvDtype, KvLayout};
+use super::scheduler::{chunk_spans, warm_admittable_without_bucket, SchedulePolicy, Scheduler};
+use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
 use crate::util::json::Json;
 
-/// Block granularity of the engine's prefix cache (tokens).
-pub const PREFIX_BLOCK_TOKENS: usize = 16;
+/// Block granularity of the engine's prefix cache and paged block pool
+/// (tokens) — one constant, shared with the whole KV subsystem, so cached
+/// prefixes and slot block tables tile identically.
+pub const PREFIX_BLOCK_TOKENS: usize = KV_BLOCK_TOKENS;
 
 /// Parsed artifacts/meta.json.
 #[derive(Clone, Debug)]
@@ -215,26 +221,28 @@ impl Engine {
             .iter()
             .map(|p| TensorIn::f32(&p.dims, p.data.clone()).to_literal())
             .collect::<Result<Vec<_>>>()?;
-        let kv = KvStore::with_dtype(
+        // The prefix cache owns blocks in the same physical pool the slot
+        // store pages, so its budget is charged at the store's dtype rate
+        // (`--prefix-cache-mb` bounds real pool bytes) and the pool is
+        // over-provisioned by exactly the cache's block budget — slots and
+        // cached prefixes can never starve each other.
+        let bt = PREFIX_BLOCK_TOKENS.min(meta.cache_t.max(1));
+        let layout = KvLayout::new(cfg.kv_dtype, meta.layers, meta.kv_heads, meta.head_dim());
+        let cache_cfg = cfg
+            .prefix_cache_bytes
+            .map(|bytes| PrefixCacheConfig::from_bytes_budget(layout, bt, bytes));
+        let cache_blocks = cache_cfg.as_ref().map_or(0, |c| c.max_blocks);
+        let kv = KvStore::with_block_tokens(
             meta.layers,
             cfg.slots,
             meta.cache_t,
             meta.kv_heads,
             meta.head_dim(),
             cfg.kv_dtype,
+            bt,
+            cache_blocks,
         );
-        let prefix = cfg.prefix_cache_bytes.map(|bytes| {
-            // The engine cache stores raw f32 payloads (assemble() feeds
-            // the f32 staging path), so its budget is charged at the F32
-            // rate: `--prefix-cache-mb` bounds actual host memory, not
-            // the dtype-compressed rate the slot store pays.
-            let layout = KvLayout::new(KvDtype::F32, meta.layers, meta.kv_heads, meta.head_dim());
-            PrefixCache::new(PrefixCacheConfig::from_bytes_budget(
-                layout,
-                PREFIX_BLOCK_TOKENS,
-                bytes,
-            ))
-        });
+        let prefix = cache_cfg.map(PrefixCache::new);
         let scheduler = Scheduler::new(
             cfg.policy,
             meta.prefill_seqs.clone(),
@@ -399,21 +407,17 @@ impl Engine {
 
         self.kv
             .write_slot(slot, &outs[1].data, &outs[2].data, req.prompt.len());
-        // Share the freshly computed prompt KV: future requests with this
-        // prefix skip its prefill FLOPs and bytes entirely. The request
-        // then pins the cached span for its lifetime so LRU stays honest.
+        // Share the freshly computed prompt KV: the cache *adopts* the
+        // slot's physical blocks (one refcount each, zero bytes copied), so
+        // future requests with this prefix skip its prefill FLOPs and map
+        // the very same HBM. The request then pins the cached span for its
+        // lifetime so LRU stays honest.
         let mut cache_tokens = 0;
-        if let Some(p) = self.prefix.as_mut() {
+        if self.prefix.is_some() {
             self.metrics.prefix_misses += 1;
-            let src = KvSpanSource {
-                k: &outs[1].data,
-                v: &outs[2].data,
-                t_src: self.meta.cache_t,
-                layers: self.meta.layers,
-                kv_heads: self.meta.kv_heads,
-                head_dim: self.meta.head_dim(),
-            };
-            let rep = p.insert(&req.prompt, Some(&src));
+            let blocks = self.kv.slot_blocks(slot);
+            let p = self.prefix.as_mut().expect("checked above");
+            let rep = p.insert_shared(&req.prompt, &blocks, self.kv.pool_mut());
             self.metrics.prefix_evicted_blocks += rep.evicted_blocks as u64;
             cache_tokens = p.acquire(&req.prompt);
         }
@@ -446,34 +450,35 @@ impl Engine {
         Ok(())
     }
 
-    /// Start a warm prefill: materialize the cached prefix into the slot;
-    /// the uncached tail is recomputed chunk-by-chunk across steps.
+    /// Start a warm prefill: map the cached prefix's physical blocks into
+    /// the slot's block table (shared, not copied — this is what makes
+    /// "N requests share a P-token prefix at P·bytes" true in HBM); the
+    /// uncached tail is recomputed chunk-by-chunk across steps.
     fn begin_chunked_prefill(&mut self, req: Request, pp: &PrefillPlan) -> Result<()> {
         let prompt_len = req.prompt.len();
-        let (cached, assembled, pk, pv) = {
-            let t = self.meta.cache_t;
-            let row = self.meta.kv_heads * self.meta.head_dim();
-            let n = self.meta.layers * t * row;
-            let mut pk = vec![0.0f32; n];
-            let mut pv = vec![0.0f32; n];
+        let (cached, blocks) = {
             let prefix = self.prefix.as_mut().expect("warm plan without a cache");
             let cached = prefix.acquire(&req.prompt).min(prompt_len);
-            let ok = cached > 0 && prefix.assemble(&req.prompt, cached, t, &mut pk, &mut pv);
-            if !ok && cached > 0 {
+            let blocks = if cached > 0 {
+                prefix.mapped_blocks(&req.prompt, cached)
+            } else {
+                None
+            };
+            if blocks.is_none() && cached > 0 {
                 prefix.release(&req.prompt, cached);
             }
-            (cached, ok, pk, pv)
+            (cached, blocks)
         };
-        if !assembled {
-            // Payload missing (accounting-only insert): fall back cold
-            // (run_prefill counts the miss).
+        let Some(blocks) = blocks else {
+            // Physical blocks missing (accounting-only insert): fall back
+            // cold (run_prefill counts the miss).
             if self.scheduler.prefill_bucket(prompt_len).is_some() {
                 return self.run_prefill(req, pp.slot);
             }
             self.kv.free_slot(pp.slot);
             self.finish_unservable(req);
             return Ok(());
-        }
+        };
         self.metrics.prefix_hits += 1;
         self.metrics.prefix_hit_tokens += cached as u64;
         // Execute the plan's chunk list (re-derived only if the cache
@@ -489,11 +494,14 @@ impl Engine {
             };
         // A full hit still recomputes the last prompt position so its
         // logits (the first-token sample) come out of the decode artifact.
+        // That write lands *inside* the last shared block — the store
+        // copy-on-writes it, so the cached original stays intact for
+        // everyone else.
         if chunks.is_empty() {
             chunks.push_back((prompt_len - 1, 1));
         }
         let start = chunks.front().expect("chunk list non-empty").0;
-        self.kv.write_slot(pp.slot, &pk, &pv, start);
+        self.kv.map_shared_prefix(pp.slot, &blocks, start);
         self.chunked = Some(ChunkedPrefill {
             req,
             slot: pp.slot,
@@ -771,8 +779,13 @@ impl ReplicaHandle for Engine {
         self.cfg.queue_capacity
     }
 
-    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
-        if self.scheduler.prefill_bucket(prompt_len).is_none() {
+    fn could_ever_admit(&self, prompt: &[i32], max_new_tokens: usize) -> Admission {
+        let prompt_len = prompt.len();
+        if self.scheduler.prefill_bucket(prompt_len).is_none()
+            && !warm_admittable_without_bucket(self.prefix.as_ref(), prompt)
+        {
+            // No compiled bucket fits a cold start and no cached prefix
+            // makes the warm chunked-tail path worthwhile.
             return Admission::PromptTooLong;
         }
         if prompt_len + max_new_tokens > self.meta.cache_t {

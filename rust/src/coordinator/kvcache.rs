@@ -1,6 +1,20 @@
-//! KV-cache management: a page/block accounting allocator (the admission
-//! model behind Table 6's OOM frontier) and the slot-based host KV store
-//! the engine streams in/out of the decode artifacts.
+//! KV-cache management: the paged physical block pool behind the host KV
+//! store (vLLM-style paged attention at the byte level), the block-table
+//! [`KvStore`] the engine streams in/out of the decode artifacts, and the
+//! bookkeeping [`BlockAllocator`] the admission model uses (Table 6's OOM
+//! frontier).
+//!
+//! # The paged layout
+//!
+//! All KV bytes live in one [`BlockPool`] of fixed 16-token blocks
+//! ([`crate::quant::KV_BLOCK_TOKENS`]); a sequence is a *block table* — an
+//! ordered list of physical block IDs — plus a valid length. Blocks are
+//! refcounted, so two sequences (or a sequence and the radix
+//! [`super::prefix::PrefixCache`]) can map the **same** physical block: a
+//! shared 6144-token prefix costs its bytes once, no matter how many
+//! concurrent requests read it. Writes never touch a block another reader
+//! can still see — [`KvStore::scatter_batch`] copy-on-writes the partially
+//! filled tail block when it is shared.
 //!
 //! # The `KvLayout` accounting contract
 //!
@@ -10,27 +24,29 @@
 //! * [`BlockAllocator::from_layout`] — admission control sizes its block
 //!   pool from `layout.bytes_per_token()`;
 //! * `gaudisim::MemoryModel` — the Table 6 OOM frontier charges the same
-//!   rate (FP8 KV by default, as in the paper);
+//!   rate (FP8 KV by default, as in the paper), block-quantized for the
+//!   shared-prefix variants;
 //! * `router::SimReplica` — fleet admission budgets HBM minus FP8 weights
 //!   at the same rate;
 //! * [`KvStore`] — the host store's actual allocation is exactly
-//!   `slots × layout.seq_bytes(t)`.
+//!   `pool blocks × layout.block_bytes(block_tokens)`.
 //!
-//! FP8 KV stores one f32 max-abs scale per (slot, layer, kv-head) group
-//! for each of K and V. That metadata is per-*sequence*, not per-token
-//! (`layout.scale_bytes_per_seq()`, < 0.01% of any realistic sequence
-//! payload), and is charged against the fixed workspace reserve so the
-//! per-token rate — and with it the Table 6 frontier — stays exact.
+//! FP8 KV stores one f32 max-abs scale per (block, layer, kv-head) group
+//! for each of K and V. That metadata is per-*block* (< 1% of a block's
+//! payload at any realistic geometry, `layout.scale_bytes_per_block()`)
+//! and is charged against the fixed workspace reserve so the per-token
+//! rate — and with it the Table 6 frontier — stays exact.
 
 use anyhow::{bail, Result};
 
 use crate::fp8::bf16::{bf16_to_f32, f32_to_bf16};
 use crate::fp8::{encode_rne, CastMode, DecodeTable, Fp8Format};
-use crate::quant::{weight_scale_per_tensor, KvDtype, KvLayout};
+use crate::quant::{weight_scale_per_tensor, KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::util::rng::XorShiftRng;
 
 /// Page-granular KV accounting (vLLM-style). Used for admission control and
-/// by the gaudisim capacity experiments; pure bookkeeping, no data.
+/// by the gaudisim capacity experiments; pure bookkeeping, no data — the
+/// data-carrying twin is [`BlockPool`].
 #[derive(Clone, Debug)]
 pub struct BlockAllocator {
     pub block_tokens: usize,
@@ -152,9 +168,12 @@ impl BlockAllocator {
     }
 }
 
-/// Dtype-specific backing storage of a [`KvStore`]: raw values (F32/BF16)
-/// or FP8 codes plus per-(layer, slot, kv-head) max-abs scales, K and V
-/// scaled independently.
+/// Identifier of one physical block in a [`BlockPool`].
+pub type BlockId = usize;
+
+/// Dtype-specific backing storage: raw values (F32/BF16) or FP8 codes plus
+/// per-(block, layer, kv-head) max-abs scales, K and V scaled
+/// independently.
 enum KvData {
     F32 {
         k: Vec<f32>,
@@ -169,8 +188,8 @@ enum KvData {
         table: DecodeTable,
         k: Vec<u8>,
         v: Vec<u8>,
-        /// One scale per (layer, slot, kv-head), row-major in that order;
-        /// freed groups reset to 1.0.
+        /// One scale per (block, layer, kv-head), row-major in that order;
+        /// freed blocks reset to 1.0.
         k_scale: Vec<f32>,
         v_scale: Vec<f32>,
     },
@@ -243,38 +262,38 @@ fn decode_region_fp8(
     }
 }
 
-/// Host-side KV storage for `slots` concurrent sequences with capacity `t`
-/// tokens each, layout (L, slot, T, Hkv, D) matching the decode artifact.
-/// Storage is [`KvDtype`]-backed: F32 roundtrips bit-exactly, BF16 rounds
-/// to 2 B/elem, FP8 quantizes on `write_slot`/`scatter_batch` and
-/// dequantizes on `gather_batch_into` (codes + per-(slot, layer, kv-head)
-/// scales — the paper's 1 B/elem serving configuration).
-pub struct KvStore {
-    pub layers: usize,
-    pub slots: usize,
-    pub t: usize,
-    pub kv_heads: usize,
-    pub head_dim: usize,
+/// The single physical KV block pool: `total_blocks` refcounted blocks of
+/// `block_tokens` tokens each, every block holding all layers' K and V for
+/// its token span — layout `(block, layer, token, kv_head, head_dim)` —
+/// in the pool's [`KvDtype`] (FP8 adds per-(block, layer, kv-head) scales).
+///
+/// The free list *is* the allocator: a block leaves it on [`Self::alloc`]
+/// (refcount 1), gains readers via [`Self::retain`], and returns —
+/// zeroed, scales reset — when [`Self::release`] drops the last reference.
+/// Sharing a prefix is `retain`; nothing is ever copied until a writer
+/// needs a block someone else can still read.
+pub struct BlockPool {
+    block_tokens: usize,
+    layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    total_blocks: usize,
     data: KvData,
-    /// Valid tokens per slot; None = slot free.
-    lens: Vec<Option<usize>>,
+    refs: Vec<u32>,
+    free: Vec<BlockId>,
 }
 
-impl KvStore {
-    /// F32 store — the exact-roundtrip legacy configuration.
-    pub fn new(layers: usize, slots: usize, t: usize, kv_heads: usize, head_dim: usize) -> Self {
-        Self::with_dtype(layers, slots, t, kv_heads, head_dim, KvDtype::F32)
-    }
-
-    pub fn with_dtype(
+impl BlockPool {
+    pub fn new(
+        total_blocks: usize,
+        block_tokens: usize,
         layers: usize,
-        slots: usize,
-        t: usize,
         kv_heads: usize,
         head_dim: usize,
         dtype: KvDtype,
     ) -> Self {
-        let n = layers * slots * t * kv_heads * head_dim;
+        assert!(block_tokens > 0, "degenerate block geometry");
+        let n = total_blocks * layers * block_tokens * kv_heads * head_dim;
         let data = match dtype {
             KvDtype::F32 => KvData::F32 {
                 k: vec![0.0; n],
@@ -289,18 +308,21 @@ impl KvStore {
                 table: DecodeTable::new(format),
                 k: vec![0; n],
                 v: vec![0; n],
-                k_scale: vec![1.0; layers * slots * kv_heads],
-                v_scale: vec![1.0; layers * slots * kv_heads],
+                k_scale: vec![1.0; total_blocks * layers * kv_heads],
+                v_scale: vec![1.0; total_blocks * layers * kv_heads],
             },
         };
         Self {
+            block_tokens,
             layers,
-            slots,
-            t,
             kv_heads,
             head_dim,
+            total_blocks,
             data,
-            lens: vec![None; slots],
+            refs: vec![0; total_blocks],
+            // Reversed so the first alloc hands out block 0 — deterministic
+            // IDs make failures readable.
+            free: (0..total_blocks).rev().collect(),
         }
     }
 
@@ -312,151 +334,464 @@ impl KvStore {
         }
     }
 
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Physically resident (allocated) blocks.
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Current reference count of `id` (0 = on the free list).
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refs[id]
+    }
+
+    fn row(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Take a block off the free list with refcount 1. `None` = pool
+    /// exhausted (callers that provisioned `slots + cache` blocks can
+    /// never see this).
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refs[id], 0, "free-listed block with live refs");
+        self.refs[id] = 1;
+        Some(id)
+    }
+
+    /// Add a reader to a live block (prefix sharing / block-table mapping).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "retain of a free block {id}");
+        self.refs[id] += 1;
+    }
+
+    /// Drop one reference; the last drop zeroes the block (codes *and*
+    /// scales — stale keys must never leak into a new occupant) and
+    /// returns it to the free list.
+    pub fn release(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "release of a free block {id} (double free?)");
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.zero_block(id);
+            self.free.push(id);
+        }
+    }
+
+    fn zero_block(&mut self, id: BlockId) {
+        let per_block = self.layers * self.block_tokens * self.row();
+        let base = id * per_block;
+        let (layers, kv_heads) = (self.layers, self.kv_heads);
+        match &mut self.data {
+            KvData::F32 { k, v } => {
+                k[base..base + per_block].fill(0.0);
+                v[base..base + per_block].fill(0.0);
+            }
+            KvData::Bf16 { k, v } => {
+                k[base..base + per_block].fill(0);
+                v[base..base + per_block].fill(0);
+            }
+            KvData::Fp8 {
+                k, v, k_scale, v_scale, ..
+            } => {
+                k[base..base + per_block].fill(0);
+                v[base..base + per_block].fill(0);
+                let si = id * layers * kv_heads;
+                k_scale[si..si + layers * kv_heads].fill(1.0);
+                v_scale[si..si + layers * kv_heads].fill(1.0);
+            }
+        }
+    }
+
+    /// Dequantize tokens `[0, count)` of block `id` into a strided f32
+    /// destination: element `(l, tok)` lands at
+    /// `base + l·layer_stride + (tok0 + tok)·row`. Covers both the
+    /// `(L, T, Hkv, D)` single-slot layout (`layer_stride = T·row`) and
+    /// the `(L, B, T, Hkv, D)` batch layout (`layer_stride = B·T·row`,
+    /// `base = bi·T·row`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_into(
+        &self,
+        id: BlockId,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        base: usize,
+        layer_stride: usize,
+        tok0: usize,
+        count: usize,
+    ) {
+        let row = self.row();
+        let bt = self.block_tokens;
+        assert!(count <= bt, "block span overflow");
+        for l in 0..self.layers {
+            let src = (id * self.layers + l) * bt * row;
+            let dst = base + l * layer_stride + tok0 * row;
+            let n = count * row;
+            match &self.data {
+                KvData::F32 { k, v } => {
+                    k_out[dst..dst + n].copy_from_slice(&k[src..src + n]);
+                    v_out[dst..dst + n].copy_from_slice(&v[src..src + n]);
+                }
+                KvData::Bf16 { k, v } => {
+                    for i in 0..n {
+                        k_out[dst + i] = bf16_to_f32(k[src + i]);
+                        v_out[dst + i] = bf16_to_f32(v[src + i]);
+                    }
+                }
+                KvData::Fp8 {
+                    k,
+                    v,
+                    k_scale,
+                    v_scale,
+                    table,
+                    ..
+                } => {
+                    let si = (id * self.layers + l) * self.kv_heads;
+                    decode_region_fp8(
+                        &k[src..src + n],
+                        &mut k_out[dst..dst + n],
+                        &k_scale[si..si + self.kv_heads],
+                        table,
+                        count,
+                        self.kv_heads,
+                        self.head_dim,
+                    );
+                    decode_region_fp8(
+                        &v[src..src + n],
+                        &mut v_out[dst..dst + n],
+                        &v_scale[si..si + self.kv_heads],
+                        table,
+                        count,
+                        self.kv_heads,
+                        self.head_dim,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Quantize tokens `[tok0, tok0 + valid)` of a strided f32 source into
+    /// block positions `[0, valid)`, zeroing the block's tail. Source
+    /// addressing mirrors [`Self::gather_into`]. FP8 recomputes the
+    /// block's per-(layer, kv-head) scales from exactly the `valid` tokens
+    /// — pad garbage can never coarsen a block's grid.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scatter_from(
+        &mut self,
+        id: BlockId,
+        k_in: &[f32],
+        v_in: &[f32],
+        base: usize,
+        layer_stride: usize,
+        tok0: usize,
+        valid: usize,
+    ) {
+        let row = self.row();
+        let bt = self.block_tokens;
+        assert!(valid <= bt, "block span overflow");
+        let (layers, kv_heads, head_dim) = (self.layers, self.kv_heads, self.head_dim);
+        for l in 0..layers {
+            let dst = (id * layers + l) * bt * row;
+            let src = base + l * layer_stride + tok0 * row;
+            let n = valid * row;
+            match &mut self.data {
+                KvData::F32 { k, v } => {
+                    k[dst..dst + n].copy_from_slice(&k_in[src..src + n]);
+                    v[dst..dst + n].copy_from_slice(&v_in[src..src + n]);
+                    k[dst + n..dst + bt * row].fill(0.0);
+                    v[dst + n..dst + bt * row].fill(0.0);
+                }
+                KvData::Bf16 { k, v } => {
+                    for i in 0..n {
+                        k[dst + i] = f32_to_bf16(k_in[src + i]);
+                        v[dst + i] = f32_to_bf16(v_in[src + i]);
+                    }
+                    k[dst + n..dst + bt * row].fill(0);
+                    v[dst + n..dst + bt * row].fill(0);
+                }
+                KvData::Fp8 {
+                    format,
+                    k,
+                    v,
+                    k_scale,
+                    v_scale,
+                    ..
+                } => {
+                    let si = (id * layers + l) * kv_heads;
+                    encode_region_fp8(
+                        &k_in[src..src + n],
+                        &mut k[dst..dst + bt * row],
+                        &mut k_scale[si..si + kv_heads],
+                        valid,
+                        bt,
+                        kv_heads,
+                        head_dim,
+                        *format,
+                    );
+                    encode_region_fp8(
+                        &v_in[src..src + n],
+                        &mut v[dst..dst + bt * row],
+                        &mut v_scale[si..si + kv_heads],
+                        valid,
+                        bt,
+                        kv_heads,
+                        head_dim,
+                        *format,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One sequence's view into the pool: its physical blocks, in token order,
+/// plus the valid length. Entries may be shared (refcount > 1) — the
+/// store copy-on-writes before any write lands in a shared block.
+struct SlotTable {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+/// Host-side paged KV storage for `slots` concurrent sequences of up to
+/// `t` tokens each. The contiguous per-slot arena is gone: all bytes live
+/// in the shared [`BlockPool`], sequences are block tables, and a prefix
+/// hit maps cached physical blocks instead of copying them. The gather /
+/// scatter API still speaks the decode artifact's dense
+/// `(L, B, T, Hkv, D)` f32 layout — paging is invisible above this line.
+///
+/// Storage is [`KvDtype`]-backed: F32 roundtrips bit-exactly, BF16 rounds
+/// to 2 B/elem, FP8 quantizes on `write_slot`/`scatter_batch` and
+/// dequantizes on `gather_batch_into` (codes + per-(block, layer, kv-head)
+/// scales — the paper's 1 B/elem serving configuration).
+pub struct KvStore {
+    pub layers: usize,
+    pub slots: usize,
+    pub t: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pool: BlockPool,
+    tables: Vec<Option<SlotTable>>,
+}
+
+impl KvStore {
+    /// F32 store — the exact-roundtrip legacy configuration.
+    pub fn new(layers: usize, slots: usize, t: usize, kv_heads: usize, head_dim: usize) -> Self {
+        Self::with_dtype(layers, slots, t, kv_heads, head_dim, KvDtype::F32)
+    }
+
+    /// Pool sized for `slots` full sequences, no extra shared-prefix
+    /// blocks, at the default block granularity (clamped to `t` so tiny
+    /// test stores do not over-provision).
+    pub fn with_dtype(
+        layers: usize,
+        slots: usize,
+        t: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        dtype: KvDtype,
+    ) -> Self {
+        let bt = KV_BLOCK_TOKENS.min(t.max(1));
+        Self::with_block_tokens(layers, slots, t, kv_heads, head_dim, dtype, bt, 0)
+    }
+
+    /// Full constructor: `extra_blocks` over-provisions the pool for
+    /// blocks owned by a co-resident prefix cache (the engine passes its
+    /// cache's block budget, so sequences and cached prefixes can never
+    /// starve each other).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_block_tokens(
+        layers: usize,
+        slots: usize,
+        t: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        dtype: KvDtype,
+        block_tokens: usize,
+        extra_blocks: usize,
+    ) -> Self {
+        let bt = block_tokens.max(1);
+        let blocks_per_seq = t.div_ceil(bt);
+        let pool = BlockPool::new(
+            slots * blocks_per_seq + extra_blocks,
+            bt,
+            layers,
+            kv_heads,
+            head_dim,
+            dtype,
+        );
+        Self {
+            layers,
+            slots,
+            t,
+            kv_heads,
+            head_dim,
+            pool,
+            tables: (0..slots).map(|_| None).collect(),
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.pool.dtype()
+    }
+
     /// The accounting contract this store's storage follows.
     pub fn layout(&self) -> KvLayout {
         KvLayout::new(self.dtype(), self.layers, self.kv_heads, self.head_dim)
     }
 
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    /// The shared physical pool (prefix caches draw on it too).
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn pool_mut(&mut self) -> &mut BlockPool {
+        &mut self.pool
+    }
+
+    fn row(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Elements of one slot's (T, Hkv, D) region per layer.
     fn slot_stride(&self) -> usize {
-        self.t * self.kv_heads * self.head_dim
-    }
-
-    fn layer_stride(&self) -> usize {
-        self.slots * self.slot_stride()
-    }
-
-    fn scale_idx(&self, layer: usize, slot: usize) -> usize {
-        (layer * self.slots + slot) * self.kv_heads
+        self.t * self.row()
     }
 
     pub fn alloc_slot(&mut self) -> Option<usize> {
-        let idx = self.lens.iter().position(|l| l.is_none())?;
-        self.lens[idx] = Some(0);
+        let idx = self.tables.iter().position(|t| t.is_none())?;
+        self.tables[idx] = Some(SlotTable {
+            blocks: Vec::new(),
+            len: 0,
+        });
         Some(idx)
     }
 
+    /// Release the slot's block references. A block drops to the free
+    /// list (zeroed) only when its *last* reader goes — blocks still
+    /// mapped by other sequences or owned by the prefix cache survive.
     pub fn free_slot(&mut self, slot: usize) {
-        self.lens[slot] = None;
-        // Zero the slot (and reset scales) so stale keys can never leak
-        // into a new request.
-        let (ls, ss) = (self.layer_stride(), self.slot_stride());
-        let (layers, slots, hk) = (self.layers, self.slots, self.kv_heads);
-        match &mut self.data {
-            KvData::F32 { k, v } => {
-                for l in 0..layers {
-                    let base = l * ls + slot * ss;
-                    k[base..base + ss].fill(0.0);
-                    v[base..base + ss].fill(0.0);
-                }
-            }
-            KvData::Bf16 { k, v } => {
-                for l in 0..layers {
-                    let base = l * ls + slot * ss;
-                    k[base..base + ss].fill(0);
-                    v[base..base + ss].fill(0);
-                }
-            }
-            KvData::Fp8 {
-                k, v, k_scale, v_scale, ..
-            } => {
-                for l in 0..layers {
-                    let base = l * ls + slot * ss;
-                    k[base..base + ss].fill(0);
-                    v[base..base + ss].fill(0);
-                    let si = (l * slots + slot) * hk;
-                    k_scale[si..si + hk].fill(1.0);
-                    v_scale[si..si + hk].fill(1.0);
-                }
+        if let Some(tab) = self.tables[slot].take() {
+            for id in tab.blocks {
+                self.pool.release(id);
             }
         }
     }
 
     pub fn len(&self, slot: usize) -> Option<usize> {
-        self.lens[slot]
+        self.tables[slot].as_ref().map(|t| t.len)
     }
 
     /// Token positions still writable in `slot` (None = slot free).
     pub fn remaining(&self, slot: usize) -> Option<usize> {
-        self.lens[slot].map(|l| self.t - l)
+        self.len(slot).map(|l| self.t - l)
     }
 
     /// An active slot whose sequence has reached cache capacity: another
     /// decode step would have no position to write.
     pub fn is_full(&self, slot: usize) -> bool {
-        self.lens[slot] == Some(self.t)
+        self.len(slot) == Some(self.t)
     }
 
     pub fn set_len(&mut self, slot: usize, len: usize) {
         assert!(len <= self.t);
-        self.lens[slot] = Some(len);
+        match self.tables[slot].as_mut() {
+            Some(tab) => tab.len = len,
+            None => {
+                self.tables[slot] = Some(SlotTable {
+                    blocks: Vec::new(),
+                    len,
+                })
+            }
+        }
     }
 
     pub fn active_slots(&self) -> Vec<usize> {
-        (0..self.slots).filter(|s| self.lens[*s].is_some()).collect()
+        (0..self.slots)
+            .filter(|s| self.tables[*s].is_some())
+            .collect()
+    }
+
+    /// The slot's physical block table (for sharing into a prefix cache).
+    pub fn slot_blocks(&self, slot: usize) -> Vec<BlockId> {
+        self.tables[slot]
+            .as_ref()
+            .map_or_else(Vec::new, |t| t.blocks.clone())
+    }
+
+    /// Can a warm admission map `cached` prefix tokens and still allocate
+    /// the private tail of a `prompt_len` prompt from the pool?
+    pub fn can_map_tail(&self, prompt_len: usize, cached: usize) -> bool {
+        let bt = self.pool.block_tokens();
+        let need = prompt_len.div_ceil(bt).saturating_sub(cached / bt);
+        need <= self.pool.free_blocks()
+    }
+
+    /// Map already-resident physical blocks (a cached prefix) into the
+    /// slot's table — sharing, not copying: each block gains a reference.
+    /// `len` is the slot's valid length after mapping (the engine sets it
+    /// to the first position its tail recompute will write, which may sit
+    /// *inside* the last shared block — the copy-on-write in
+    /// [`Self::scatter_batch`] keeps that write private).
+    pub fn map_shared_prefix(&mut self, slot: usize, blocks: &[BlockId], len: usize) {
+        assert!(len <= self.t, "mapped length exceeds the KV window");
+        assert!(
+            len <= blocks.len() * self.pool.block_tokens(),
+            "mapped length exceeds the mapped blocks"
+        );
+        for &id in blocks {
+            self.pool.retain(id);
+        }
+        let tab = self.tables[slot]
+            .as_mut()
+            .expect("map_shared_prefix into an unallocated slot");
+        assert!(tab.blocks.is_empty(), "map_shared_prefix into a written slot");
+        tab.blocks.extend_from_slice(blocks);
+        tab.len = len;
     }
 
     /// Write a prefill artifact's (L, 1, T, Hkv, D) output into `slot`,
-    /// quantizing to the store's dtype.
+    /// quantizing to the store's dtype. Replaces any previous mapping:
+    /// tokens `[0, len)` land in freshly allocated private blocks; the
+    /// bucket-padded tail past `len` is dropped (attention never reads it
+    /// and FP8 scales must not see it).
     pub fn write_slot(&mut self, slot: usize, k_out: &[f32], v_out: &[f32], len: usize) {
         let ss = self.slot_stride();
         assert_eq!(k_out.len(), self.layers * ss, "prefill kv size");
         assert_eq!(v_out.len(), self.layers * ss, "prefill kv size");
-        let ls = self.layer_stride();
-        let (layers, slots, t) = (self.layers, self.slots, self.t);
-        let (hk, d) = (self.kv_heads, self.head_dim);
-        match &mut self.data {
-            KvData::F32 { k, v } => {
-                for l in 0..layers {
-                    let dst = l * ls + slot * ss;
-                    k[dst..dst + ss].copy_from_slice(&k_out[l * ss..(l + 1) * ss]);
-                    v[dst..dst + ss].copy_from_slice(&v_out[l * ss..(l + 1) * ss]);
-                }
-            }
-            KvData::Bf16 { k, v } => {
-                for l in 0..layers {
-                    let dst = l * ls + slot * ss;
-                    for i in 0..ss {
-                        k[dst + i] = f32_to_bf16(k_out[l * ss + i]);
-                        v[dst + i] = f32_to_bf16(v_out[l * ss + i]);
-                    }
-                }
-            }
-            KvData::Fp8 {
-                format,
-                k,
-                v,
-                k_scale,
-                v_scale,
-                ..
-            } => {
-                let valid = len.min(t);
-                for l in 0..layers {
-                    let dst = l * ls + slot * ss;
-                    let si = (l * slots + slot) * hk;
-                    encode_region_fp8(
-                        &k_out[l * ss..(l + 1) * ss],
-                        &mut k[dst..dst + ss],
-                        &mut k_scale[si..si + hk],
-                        valid,
-                        t,
-                        hk,
-                        d,
-                        *format,
-                    );
-                    encode_region_fp8(
-                        &v_out[l * ss..(l + 1) * ss],
-                        &mut v[dst..dst + ss],
-                        &mut v_scale[si..si + hk],
-                        valid,
-                        t,
-                        hk,
-                        d,
-                        *format,
-                    );
-                }
+        let len = len.min(self.t);
+        if let Some(tab) = self.tables[slot].take() {
+            for id in tab.blocks {
+                self.pool.release(id);
             }
         }
-        self.set_len(slot, len);
+        let bt = self.pool.block_tokens();
+        let nblocks = len.div_ceil(bt);
+        let mut blocks = Vec::with_capacity(nblocks);
+        for b in 0..nblocks {
+            let id = self
+                .pool
+                .alloc()
+                .expect("pool provisioned for slots + prefix cache");
+            let tok0 = b * bt;
+            let valid = bt.min(len - tok0);
+            self.pool.scatter_from(id, k_out, v_out, 0, ss, tok0, valid);
+            blocks.push(id);
+        }
+        self.tables[slot] = Some(SlotTable { blocks, len });
     }
 
     /// Gather `group` slots into a contiguous (L, B, T, Hkv, D) batch
@@ -472,11 +807,11 @@ impl KvStore {
 
     /// Allocation-free gather into caller-owned buffers sized for a batch
     /// of `bucket` rows (§Perf L3: the per-step `vec!` zero-fill dominated
-    /// the gather path), dequantizing to f32 on the way out. Rows ≥
-    /// group.len() are left untouched — the engine zeroes padding rows only
-    /// when the bucket grows. An FP8 store returns zeros past each slot's
-    /// valid prefix (quantization never stored the masked pad positions);
-    /// F32/BF16 stores pass whatever was written straight through.
+    /// the gather path), walking each slot's block table and dequantizing
+    /// to f32 on the way out. Rows ≥ group.len() are left untouched — the
+    /// engine zeroes padding rows only when the bucket grows. Positions at
+    /// or past each slot's valid length come back as exact zeros (the pool
+    /// never stores masked pad positions).
     pub fn gather_batch_into(
         &self,
         group: &[usize],
@@ -486,147 +821,129 @@ impl KvStore {
     ) -> Vec<i32> {
         let b = bucket;
         assert!(group.len() <= b);
+        let row = self.row();
         let ss = self.slot_stride();
-        let ls = self.layer_stride();
         assert_eq!(k.len(), self.layers * b * ss, "k buffer size");
         assert_eq!(v.len(), self.layers * b * ss, "v buffer size");
+        let layer_stride = b * ss;
+        let bt = self.pool.block_tokens();
         let mut lens = Vec::with_capacity(b);
         for (bi, &slot) in group.iter().enumerate() {
-            lens.push(self.lens[slot].unwrap_or(0) as i32);
-            for l in 0..self.layers {
-                let src = l * ls + slot * ss;
-                let dst = (l * b + bi) * ss;
-                match &self.data {
-                    KvData::F32 { k: ks, v: vs } => {
-                        k[dst..dst + ss].copy_from_slice(&ks[src..src + ss]);
-                        v[dst..dst + ss].copy_from_slice(&vs[src..src + ss]);
-                    }
-                    KvData::Bf16 { k: ks, v: vs } => {
-                        for i in 0..ss {
-                            k[dst + i] = bf16_to_f32(ks[src + i]);
-                            v[dst + i] = bf16_to_f32(vs[src + i]);
-                        }
-                    }
-                    KvData::Fp8 {
-                        k: ks,
-                        v: vs,
-                        k_scale,
-                        v_scale,
-                        table,
-                        ..
-                    } => {
-                        let si = self.scale_idx(l, slot);
-                        decode_region_fp8(
-                            &ks[src..src + ss],
-                            &mut k[dst..dst + ss],
-                            &k_scale[si..si + self.kv_heads],
-                            table,
-                            self.t,
-                            self.kv_heads,
-                            self.head_dim,
-                        );
-                        decode_region_fp8(
-                            &vs[src..src + ss],
-                            &mut v[dst..dst + ss],
-                            &v_scale[si..si + self.kv_heads],
-                            table,
-                            self.t,
-                            self.kv_heads,
-                            self.head_dim,
-                        );
-                    }
+            let base = bi * ss;
+            let (blocks, len): (&[BlockId], usize) = match &self.tables[slot] {
+                Some(tab) => (tab.blocks.as_slice(), tab.len),
+                None => (&[], 0),
+            };
+            lens.push(len as i32);
+            let mut covered = 0usize;
+            for (bidx, &id) in blocks.iter().enumerate() {
+                let tok0 = bidx * bt;
+                if tok0 >= len {
+                    break;
                 }
+                let count = bt.min(len - tok0);
+                self.pool
+                    .gather_into(id, k, v, base, layer_stride, tok0, count);
+                covered = tok0 + count;
+            }
+            // Zero the masked region so reused scratch buffers stay
+            // deterministic (same bytes the old contiguous copy touched).
+            for l in 0..self.layers {
+                let start = base + l * layer_stride + covered * row;
+                let end = base + l * layer_stride + self.t * row;
+                k[start..end].fill(0.0);
+                v[start..end].fill(0.0);
             }
         }
         lens.resize(b, 0);
         lens
     }
 
-    /// Scatter an updated (L, B, T, Hkv, D) batch back into the slots
-    /// (quantizing to the store's dtype) and bump their lengths.
+    /// Scatter an updated (L, B, T, Hkv, D) batch back into the slots and
+    /// bump their lengths. The paged contract: only the *hot* block — the
+    /// one holding the newly appended position — is written, re-encoded
+    /// from the buffer's `[block start, len]` span (earlier blocks are
+    /// immutable history; under FP8 their write-time scales stand). A hot
+    /// block still readable by another sequence or the prefix cache is
+    /// first replaced by a private copy-on-write block, so a write can
+    /// never leak into a shared prefix.
     ///
     /// Returns the slots whose sequence just reached cache capacity
     /// (`len == t`) — the "sequence full" signal. The caller must finish
     /// those requests: a further decode step has no position to write, and
-    /// the pre-signal behavior of clamping `len` at capacity silently
-    /// overwrote the last position forever.
+    /// clamping silently overwrote the last position forever.
     pub fn scatter_batch(&mut self, group: &[usize], k_in: &[f32], v_in: &[f32]) -> Vec<usize> {
         let b = group.len();
         let ss = self.slot_stride();
-        let ls = self.layer_stride();
         assert_eq!(k_in.len(), self.layers * b * ss);
         assert_eq!(v_in.len(), self.layers * b * ss);
-        let (layers, slots, t) = (self.layers, self.slots, self.t);
-        let (hk, d) = (self.kv_heads, self.head_dim);
-        for (bi, &slot) in group.iter().enumerate() {
-            // The decode step appended one position at the old length; only
-            // that prefix carries real tokens (the tail is pad garbage the
-            // attention mask hides — it must stay out of the FP8 scales).
-            let valid = self.lens[slot].map_or(t, |l| (l + 1).min(t));
-            for l in 0..layers {
-                let dst = l * ls + slot * ss;
-                let src = (l * b + bi) * ss;
-                match &mut self.data {
-                    KvData::F32 { k, v } => {
-                        k[dst..dst + ss].copy_from_slice(&k_in[src..src + ss]);
-                        v[dst..dst + ss].copy_from_slice(&v_in[src..src + ss]);
-                    }
-                    KvData::Bf16 { k, v } => {
-                        for i in 0..ss {
-                            k[dst + i] = f32_to_bf16(k_in[src + i]);
-                            v[dst + i] = f32_to_bf16(v_in[src + i]);
-                        }
-                    }
-                    KvData::Fp8 {
-                        format,
-                        k,
-                        v,
-                        k_scale,
-                        v_scale,
-                        ..
-                    } => {
-                        let si = (l * slots + slot) * hk;
-                        encode_region_fp8(
-                            &k_in[src..src + ss],
-                            &mut k[dst..dst + ss],
-                            &mut k_scale[si..si + hk],
-                            valid,
-                            t,
-                            hk,
-                            d,
-                            *format,
-                        );
-                        encode_region_fp8(
-                            &v_in[src..src + ss],
-                            &mut v[dst..dst + ss],
-                            &mut v_scale[si..si + hk],
-                            valid,
-                            t,
-                            hk,
-                            d,
-                            *format,
-                        );
-                    }
-                }
-            }
-        }
+        let layer_stride = b * ss;
+        let bt = self.pool.block_tokens();
         let mut full = Vec::new();
-        for &slot in group {
-            if let Some(len) = self.lens[slot] {
-                let bumped = (len + 1).min(self.t);
-                self.lens[slot] = Some(bumped);
-                if bumped == self.t {
-                    full.push(slot);
-                }
+        for (bi, &slot) in group.iter().enumerate() {
+            let Some(len) = self.tables[slot].as_ref().map(|t| t.len) else {
+                continue; // inactive slot: nothing to append to
+            };
+            if len >= self.t {
+                // At capacity: no position to write; keep signalling.
+                full.push(slot);
+                continue;
+            }
+            let base = bi * ss;
+            let hb = len / bt;
+            let valid_in_block = len % bt + 1;
+            self.ensure_private_block(slot, hb);
+            let id = self.tables[slot].as_ref().expect("table checked above").blocks[hb];
+            self.pool
+                .scatter_from(id, k_in, v_in, base, layer_stride, hb * bt, valid_in_block);
+            let tab = self.tables[slot].as_mut().expect("table checked above");
+            tab.len = len + 1;
+            if tab.len == self.t {
+                full.push(slot);
             }
         }
         full
     }
 
-    /// Exact bytes this store allocates, derived from the shared layout:
-    /// `slots × (t × bytes_per_token + scale_bytes_per_seq)`.
+    /// Grow `slot`'s table to cover block index `hb` and make that entry
+    /// exclusively writable. A shared entry (refcount > 1: mapped by
+    /// another sequence and/or owned by the prefix cache) is swapped for a
+    /// fresh private block — copy-on-write; the caller rewrites the whole
+    /// valid span from its batch buffer, so no payload copy is needed.
+    fn ensure_private_block(&mut self, slot: usize, hb: usize) {
+        loop {
+            let have = self.tables[slot].as_ref().expect("active slot").blocks.len();
+            if have > hb {
+                break;
+            }
+            let id = self
+                .pool
+                .alloc()
+                .expect("pool provisioned for slots + prefix cache");
+            self.tables[slot].as_mut().expect("active slot").blocks.push(id);
+        }
+        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        if self.pool.ref_count(id) > 1 {
+            let fresh = self
+                .pool
+                .alloc()
+                .expect("pool provisioned for slots + prefix cache");
+            self.tables[slot].as_mut().expect("active slot").blocks[hb] = fresh;
+            self.pool.release(id);
+        }
+    }
+
+    /// Exact bytes this store's pool provisions:
+    /// `total blocks × layout.block_bytes(block_tokens)`.
     pub fn kv_bytes(&self) -> usize {
-        self.slots * self.layout().seq_bytes(self.t)
+        self.pool.total_blocks() * self.layout().block_bytes(self.pool.block_tokens())
+    }
+
+    /// Physical bytes currently resident (allocated blocks only) — the
+    /// number the shared-prefix capacity claims are made of: N sequences
+    /// sharing a prefix hold the prefix's blocks once.
+    pub fn resident_bytes(&self) -> usize {
+        self.pool.used_blocks() * self.layout().block_bytes(self.pool.block_tokens())
     }
 
     /// Single-step attention readout over the stored KV of `slots` — the
@@ -761,6 +1078,45 @@ mod tests {
     }
 
     #[test]
+    fn pool_alloc_retain_release_lifecycle() {
+        let mut p = BlockPool::new(4, 4, 1, 1, 2, KvDtype::F32);
+        assert_eq!(p.free_blocks(), 4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.ref_count(a), 1);
+        p.retain(a);
+        assert_eq!(p.ref_count(a), 2);
+        p.release(a);
+        assert_eq!(p.ref_count(a), 1, "one reader left: block survives");
+        assert_eq!(p.used_blocks(), 2);
+        p.release(a);
+        assert_eq!(p.ref_count(a), 0);
+        assert_eq!(p.free_blocks(), 3, "last release returns the block");
+        p.release(b);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn pool_release_of_free_block_panics() {
+        let mut p = BlockPool::new(2, 4, 1, 1, 2, KvDtype::F32);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        let mut p = BlockPool::new(1, 4, 1, 1, 2, KvDtype::F32);
+        let a = p.alloc().unwrap();
+        assert!(p.alloc().is_none());
+        p.release(a);
+        assert!(p.alloc().is_some());
+    }
+
+    #[test]
     fn slot_lifecycle() {
         let mut s = KvStore::new(2, 3, 8, 2, 4);
         let a = s.alloc_slot().unwrap();
@@ -779,21 +1135,57 @@ mod tests {
         let mut s = KvStore::new(l, slots, t, kvh, hd);
         let slot = s.alloc_slot().unwrap();
         let ss = t * kvh * hd;
+        let row = kvh * hd;
         let k_out: Vec<f32> = (0..l * ss).map(|i| i as f32).collect();
         let v_out: Vec<f32> = (0..l * ss).map(|i| -(i as f32)).collect();
         s.write_slot(slot, &k_out, &v_out, 5);
         assert_eq!(s.len(slot), Some(5));
         let (k, v, lens) = s.gather_batch(&[slot]);
-        assert_eq!(k, k_out);
-        assert_eq!(v, v_out);
         assert_eq!(lens, vec![5]);
-        // scatter back modified data and check the bump.
+        // Valid positions roundtrip bit-for-bit; the bucket-padded tail is
+        // dropped by the paged store (attention never reads it).
+        for li in 0..l {
+            let base = li * ss;
+            assert_eq!(k[base..base + 5 * row], k_out[base..base + 5 * row]);
+            assert_eq!(v[base..base + 5 * row], v_out[base..base + 5 * row]);
+            assert!(k[base + 5 * row..base + ss].iter().all(|x| *x == 0.0));
+        }
+        // Scatter appends exactly one position (the paged contract: only
+        // the hot block's valid span is rewritten from the buffer).
         let k2: Vec<f32> = k.iter().map(|x| x + 1.0).collect();
         let full = s.scatter_batch(&[slot], &k2, &v);
         assert!(full.is_empty(), "5→6 of 8 is not full");
         assert_eq!(s.len(slot), Some(6));
         let (k3, _, _) = s.gather_batch(&[slot]);
-        assert_eq!(k3, k2);
+        // t=8 < 16 ⇒ one block per slot: the whole valid span [0, 6) was
+        // re-written from the +1 buffer.
+        for li in 0..l {
+            let base = li * ss;
+            assert_eq!(k3[base..base + 6 * row], k2[base..base + 6 * row]);
+            assert!(k3[base + 6 * row..base + ss].iter().all(|x| *x == 0.0));
+        }
+    }
+
+    #[test]
+    fn multi_block_scatter_touches_only_the_hot_block() {
+        // bt = 4, len 6 → blocks [0,4) and [4,6): appending position 6
+        // re-encodes only block 1; block 0's bytes are immutable history.
+        let (l, t, kvh, hd, bt) = (1, 12, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::F32, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let k_out: Vec<f32> = (0..l * ss).map(|i| 1.0 + i as f32).collect();
+        s.write_slot(slot, &k_out, &k_out, 6);
+        // A buffer that disagrees with history everywhere: only the hot
+        // block's span [4, 7) may land.
+        let buf: Vec<f32> = vec![99.0; l * ss];
+        s.scatter_batch(&[slot], &buf, &buf);
+        assert_eq!(s.len(slot), Some(7));
+        let (k, _, _) = s.gather_batch(&[slot]);
+        let row = kvh * hd;
+        assert_eq!(k[..4 * row], k_out[..4 * row], "cold block must not move");
+        assert!(k[4 * row..7 * row].iter().all(|x| *x == 99.0));
+        assert!(k[7 * row..].iter().all(|x| *x == 0.0));
     }
 
     #[test]
@@ -807,7 +1199,8 @@ mod tests {
         s.write_slot(b, &vec![2.0; l * ss], &vec![2.5; l * ss], 2);
         let (k, _v, lens) = s.gather_batch(&[a, b]);
         // layout (L, B, T*, ...): layer0 = [a..., b...], layer1 = [a..., b...]
-        assert_eq!(k, vec![1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0, 2.0]);
+        // Slot a's second position is past its length: exact zero.
+        assert_eq!(k, vec![1.0, 0.0, 2.0, 2.0, 1.0, 0.0, 2.0, 2.0]);
         assert_eq!(lens, vec![1, 2]);
     }
 
@@ -837,6 +1230,7 @@ mod tests {
             let n = 2 * 4 * 2 * 3;
             s.write_slot(slot, &vec![123.0; n], &vec![-77.0; n], 4);
             s.free_slot(slot);
+            assert_eq!(s.pool().used_blocks(), 0, "{dtype:?}: block leak");
             let slot = s.alloc_slot().unwrap();
             let (k, v, lens) = s.gather_batch(&[slot]);
             assert!(k.iter().all(|x| *x == 0.0), "{dtype:?}: stale K");
@@ -863,6 +1257,48 @@ mod tests {
         let full = s.scatter_batch(&[slot], &buf, &buf);
         assert_eq!(full, vec![slot]);
         assert_eq!(s.len(slot), Some(t));
+    }
+
+    #[test]
+    fn shared_prefix_blocks_are_mapped_not_copied_and_cow_isolates_writes() {
+        let (l, t, kvh, hd, bt) = (1, 16, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, KvDtype::F32, bt, 0);
+        let ss = t * kvh * hd;
+        let row = kvh * hd;
+        let writer = s.alloc_slot().unwrap();
+        let k_out: Vec<f32> = (0..l * ss).map(|i| 10.0 + i as f32).collect();
+        s.write_slot(writer, &k_out, &k_out, 8); // blocks 0, 1
+        let shared = s.slot_blocks(writer);
+        assert_eq!(shared.len(), 2);
+
+        // Map both blocks into a second slot at len 7 — inside block 1,
+        // the engine's full-hit bootstrap shape.
+        let reader = s.alloc_slot().unwrap();
+        s.map_shared_prefix(reader, &shared, 7);
+        assert_eq!(s.pool().ref_count(shared[0]), 2);
+        assert_eq!(s.pool().ref_count(shared[1]), 2);
+        assert_eq!(s.pool().used_blocks(), 2, "mapping allocates nothing");
+
+        // The reader appends at position 7 → hot block 1 is shared → CoW.
+        let buf: Vec<f32> = vec![777.0; l * ss];
+        s.scatter_batch(&[reader], &buf, &buf);
+        let rblocks = s.slot_blocks(reader);
+        assert_eq!(rblocks[0], shared[0], "cold shared block still mapped");
+        assert_ne!(rblocks[1], shared[1], "hot block must be copied on write");
+        assert_eq!(s.pool().ref_count(shared[1]), 1, "writer keeps its block");
+        assert_eq!(s.pool().ref_count(rblocks[1]), 1, "copy is private");
+
+        // The writer's data is untouched; the reader sees its own write.
+        let (kw, _, _) = s.gather_batch(&[writer]);
+        assert_eq!(kw[..8 * row], k_out[..8 * row]);
+        let (kr, _, _) = s.gather_batch(&[reader]);
+        assert_eq!(kr[..4 * row], k_out[..4 * row], "block 0 still shared");
+        assert!(kr[4 * row..8 * row].iter().all(|x| *x == 777.0));
+
+        // Freeing the reader releases only its references.
+        s.free_slot(reader);
+        assert_eq!(s.pool().ref_count(shared[0]), 1);
+        assert_eq!(s.pool().used_blocks(), 2, "writer's blocks survive");
     }
 
     #[test]
@@ -893,19 +1329,13 @@ mod tests {
                 v_out[i]
             );
         }
-        // Requantizing already-quantized data must not drift: the codes are
-        // stable (values sit on grid points, far from rounding midpoints),
-        // and only the recomputed scale may move by one f32 ulp — so a
-        // gather→scatter cycle reproduces every value to ~2^-22 relative.
+        // A gather→scatter cycle at capacity is the full-signal no-write
+        // path: values reproduce exactly.
         let (k0, v0, _) = s.gather_batch(&[slot]);
         s.scatter_batch(&[slot], &k0, &v0);
         let (k1, v1, _) = s.gather_batch(&[slot]);
-        for (a, b) in k0.iter().zip(&k1).chain(v0.iter().zip(&v1)) {
-            assert!(
-                (a - b).abs() <= a.abs() * 3e-7,
-                "requantization drift: {a} vs {b}"
-            );
-        }
+        assert_eq!(k0, k1, "full-slot scatter must not rewrite history");
+        assert_eq!(v0, v1);
     }
 
     #[test]
@@ -929,19 +1359,28 @@ mod tests {
                 kg[i]
             );
         }
-        // The garbage tail is zeroed, not persisted.
+        // The garbage tail is never stored, let alone persisted.
         assert!(kg[4..].iter().all(|x| *x == 0.0), "{kg:?}");
     }
 
     #[test]
     fn kv_bytes_derive_from_layout() {
+        // t = 8 < 16 clamps the block to 8 tokens: 3 slots × 1 block each.
         let f32_s = KvStore::new(2, 3, 8, 2, 4);
-        assert_eq!(f32_s.kv_bytes(), 2 * 2 * 3 * 8 * 2 * 4 * 4);
-        assert_eq!(f32_s.kv_bytes(), 3 * f32_s.layout().seq_bytes(8));
+        let layout = f32_s.layout();
+        assert_eq!(f32_s.block_tokens(), 8);
+        assert_eq!(f32_s.kv_bytes(), 3 * layout.block_bytes(8));
+        assert_eq!(f32_s.kv_bytes(), 3 * 8 * layout.bytes_per_token());
+        assert_eq!(f32_s.resident_bytes(), 0, "nothing written yet");
         let fp8_s = KvStore::with_dtype(2, 3, 8, 2, 4, KvDtype::FP8_DEFAULT);
-        // 1 B payload + 2·L·Hkv·4 B scales per slot.
-        assert_eq!(fp8_s.kv_bytes(), 3 * (8 * 2 * 2 * 2 * 4 + 2 * 2 * 2 * 4));
+        // 1 B/elem payload + per-block (not per-slot) scale metadata.
+        assert_eq!(fp8_s.kv_bytes(), 3 * fp8_s.layout().block_bytes(8));
         assert!(fp8_s.kv_bytes() * 3 < f32_s.kv_bytes(), "fp8 ≈ 4× smaller");
+        // Residency follows allocation, not slot count.
+        let mut s = KvStore::new(1, 2, 8, 1, 2);
+        let slot = s.alloc_slot().unwrap();
+        s.write_slot(slot, &vec![1.0; 16], &vec![1.0; 16], 3);
+        assert_eq!(s.resident_bytes(), s.layout().block_bytes(8));
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! L3 serving coordinator — the vLLM-style layer the paper's end-to-end
 //! numbers (Tables 5–6) presuppose: request admission, continuous batching
-//! with prefill/decode interleave, slot-based KV management, a radix-tree
-//! shared-prefix KV cache with chunked prefill ([`prefix`]), and metrics.
+//! with prefill/decode interleave, paged KV management (one refcounted
+//! physical [`kvcache::BlockPool`] + per-sequence block tables), a
+//! radix-tree shared-prefix KV cache with chunked prefill ([`prefix`])
+//! whose hits map physical blocks instead of copying, and metrics.
 //!
 //! Everything here is plain Rust (std threads + channels — the request path
 //! has no Python and no async runtime); the compute is the AOT artifacts
@@ -17,8 +19,10 @@ pub mod scheduler;
 
 pub use batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 pub use engine::{Engine, EngineConfig};
-pub use kvcache::{BlockAllocator, KvStore};
+pub use kvcache::{BlockAllocator, BlockId, BlockPool, KvStore};
 pub use metrics::{LatencyStat, ServeMetrics};
-pub use prefix::{KvSpanSource, PrefixCache, PrefixCacheConfig, PrefixStats};
+pub use prefix::{PrefixCache, PrefixCacheConfig, PrefixStats};
 pub use request::{Request, RequestId, RequestOutput, RequestState};
-pub use scheduler::{chunk_spans, warm_start_pays, SchedulePolicy, Scheduler};
+pub use scheduler::{
+    chunk_spans, warm_admittable_without_bucket, warm_start_pays, SchedulePolicy, Scheduler,
+};

@@ -1,11 +1,15 @@
-//! Shared-prefix KV cache: a radix tree over token-ID prefixes.
+//! Shared-prefix KV cache: a radix tree over token-ID prefixes whose nodes
+//! own refcounted **physical block IDs** in the paged [`BlockPool`].
 //!
 //! Serving traffic is dominated by requests that share a long common prompt
 //! prefix (system prompts, few-shot preambles, multi-turn history). Without
 //! sharing, every request re-prefills and re-stores its full prompt — the
 //! prefill FLOPs and KV bytes that bound the paper's end-to-end numbers
 //! (Tables 5–6). This module caches prompt KV at *block* granularity in a
-//! radix tree so a new request pays only for its uncached tail:
+//! radix tree so a new request pays only for its uncached tail — and since
+//! PR 4, a hit **maps** the cached physical blocks into the request's block
+//! table instead of copying an assembled prefix into a private slot: N
+//! concurrent requests sharing a P-token prompt hold P tokens of HBM once.
 //!
 //! * **Tree shape** — every edge label is a positive multiple of
 //!   `block_tokens`; children of a node always differ somewhere inside
@@ -17,18 +21,21 @@
 //!   restructuring exactly.
 //! * **Eviction** — only refcount-0 *leaves* are evictable (an interior
 //!   node is the prefix of its children and must outlive them); victims go
-//!   LRU-first by `last_use`. A referenced block is never freed.
+//!   LRU-first by `last_use`. A referenced block is never freed. Evicting
+//!   a physical-backed node releases its block IDs back to the pool
+//!   ([`PrefixCache::evict_blocks_pooled`]).
 //! * **Byte accounting** — capacity is expressed in blocks, converted
 //!   from/to bytes through the shared [`KvLayout`] contract
 //!   ([`PrefixCacheConfig::from_bytes_budget`], [`PrefixCache::cached_bytes`]),
 //!   so admission control charges cached prefixes at exactly the rate the
 //!   rest of the stack charges KV.
-//! * **Payloads** — nodes optionally carry the prefix's KV data
-//!   (f32, `(layers, span, kv_heads, head_dim)` row-major) so the engine
-//!   can materialize a cached prefix into a fresh slot
-//!   ([`PrefixCache::assemble`]); the simulated replicas cache accounting
-//!   only and insert without payloads.
+//! * **Physical payloads** — engine-side caches adopt the freshly
+//!   prefilled slot's blocks via [`PrefixCache::insert_shared`] (one
+//!   `retain` per block — no bytes move) and hand hits out through
+//!   [`PrefixCache::mapped_blocks`]. The simulated replicas cache
+//!   accounting only ([`PrefixCache::insert`], no block IDs).
 
+use super::kvcache::{BlockId, BlockPool};
 use crate::quant::KvLayout;
 
 /// Configuration for a [`PrefixCache`].
@@ -73,91 +80,6 @@ pub struct PrefixStats {
     pub evicted_blocks: u64,
 }
 
-/// A node's KV payload: `(layers, span, kv_heads·head_dim)` row-major,
-/// `span` = edge tokens.
-#[derive(Clone)]
-struct NodeKv {
-    layers: usize,
-    /// Elements per token per layer (`kv_heads · head_dim`).
-    row: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
-
-impl NodeKv {
-    fn span(&self) -> usize {
-        let per = self.layers * self.row;
-        if per == 0 {
-            0
-        } else {
-            self.k.len() / per
-        }
-    }
-
-    /// Split at token `at`: `self` keeps `[0, at)`, the tail is returned.
-    fn split_off(&mut self, at: usize) -> NodeKv {
-        let span = self.span();
-        let row = self.row;
-        let mut k_head = Vec::with_capacity(self.layers * at * row);
-        let mut v_head = Vec::with_capacity(self.layers * at * row);
-        let mut k_tail = Vec::with_capacity(self.layers * (span - at) * row);
-        let mut v_tail = Vec::with_capacity(self.layers * (span - at) * row);
-        for l in 0..self.layers {
-            let base = l * span * row;
-            let cut = base + at * row;
-            let end = base + span * row;
-            k_head.extend_from_slice(&self.k[base..cut]);
-            k_tail.extend_from_slice(&self.k[cut..end]);
-            v_head.extend_from_slice(&self.v[base..cut]);
-            v_tail.extend_from_slice(&self.v[cut..end]);
-        }
-        self.k = k_head;
-        self.v = v_head;
-        NodeKv {
-            layers: self.layers,
-            row,
-            k: k_tail,
-            v: v_tail,
-        }
-    }
-}
-
-/// Borrowed view of a prefill artifact's KV output, layout
-/// `(layers, t_src, kv_heads, head_dim)` row-major (slot dimension already
-/// selected), from which inserted nodes copy their token spans.
-pub struct KvSpanSource<'a> {
-    pub k: &'a [f32],
-    pub v: &'a [f32],
-    /// Token capacity of the source buffer (the compiled bucket / cache T).
-    pub t_src: usize,
-    pub layers: usize,
-    pub kv_heads: usize,
-    pub head_dim: usize,
-}
-
-impl KvSpanSource<'_> {
-    fn row(&self) -> usize {
-        self.kv_heads * self.head_dim
-    }
-
-    fn copy_span(&self, start: usize, len: usize) -> NodeKv {
-        let row = self.row();
-        let mut k = Vec::with_capacity(self.layers * len * row);
-        let mut v = Vec::with_capacity(self.layers * len * row);
-        for l in 0..self.layers {
-            let base = (l * self.t_src + start) * row;
-            k.extend_from_slice(&self.k[base..base + len * row]);
-            v.extend_from_slice(&self.v[base..base + len * row]);
-        }
-        NodeKv {
-            layers: self.layers,
-            row,
-            k,
-            v,
-        }
-    }
-}
-
 struct Node {
     /// Edge label from the parent; a positive multiple of `block_tokens`
     /// (the root's is empty).
@@ -167,7 +89,10 @@ struct Node {
     children: Vec<Node>,
     /// LRU clock value of the last acquire touching this node.
     last_use: u64,
-    kv: Option<NodeKv>,
+    /// Physical pool blocks backing this edge, one per block of the label
+    /// (`None` = accounting-only, the simulator path). The cache holds one
+    /// pool reference per ID; eviction releases them.
+    phys: Option<Vec<BlockId>>,
 }
 
 impl Node {
@@ -176,13 +101,14 @@ impl Node {
     }
 }
 
-/// Result of a [`PrefixCache::insert`].
+/// Result of a [`PrefixCache::insert`] / [`PrefixCache::insert_shared`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct InsertReport {
     /// Tokens newly added to the tree (block-aligned; existing prefix
     /// tokens are shared, not re-added).
     pub new_tokens: usize,
-    /// Blocks evicted to make room (already removed from `cached_blocks`).
+    /// Blocks evicted to make room (already removed from `cached_blocks`;
+    /// on the pooled path their IDs are already back in the pool).
     pub evicted_blocks: usize,
 }
 
@@ -253,22 +179,28 @@ fn split_node(c: &mut Node, at: usize, bt: usize) {
     debug_assert!(at % bt == 0 && at > 0 && at < c.tokens.len());
     let tail_tokens = c.tokens.split_off(at);
     let tail_refs = c.block_refs.split_off(at / bt);
-    let tail_kv = c.kv.as_mut().map(|kv| kv.split_off(at));
+    // The physical IDs slice exactly like the refcounts: a split moves
+    // block ownership, never a byte of payload.
+    let tail_phys = c.phys.as_mut().map(|ids| ids.split_off(at / bt));
     let tail = Node {
         tokens: tail_tokens,
         block_refs: tail_refs,
         children: std::mem::take(&mut c.children),
         last_use: c.last_use,
-        kv: tail_kv,
+        phys: tail_phys,
     };
     c.children.push(tail);
 }
 
+/// Insert walk. `phys`/`pool` are both `Some` on the engine path: newly
+/// created nodes adopt `phys[offset/bt ..]` (one `pool.retain` per adopted
+/// ID) — and both `None` on the accounting path.
 fn insert_rec(
     node: &mut Node,
     rest: &[i32],
     offset: usize,
-    kv: Option<&KvSpanSource<'_>>,
+    phys: Option<&[BlockId]>,
+    pool: &mut Option<&mut BlockPool>,
     bt: usize,
     tick: u64,
 ) -> usize {
@@ -285,12 +217,21 @@ fn insert_rec(
     }
     match pick {
         None => {
+            let node_phys = phys.map(|ids| {
+                let span = &ids[offset / bt..(offset + rest.len()) / bt];
+                if let Some(p) = pool.as_mut() {
+                    for &id in span {
+                        p.retain(id);
+                    }
+                }
+                span.to_vec()
+            });
             node.children.push(Node {
                 tokens: rest.to_vec(),
                 block_refs: vec![0; rest.len() / bt],
                 children: Vec::new(),
                 last_use: tick,
-                kv: kv.map(|s| s.copy_span(offset, rest.len())),
+                phys: node_phys,
             });
             rest.len()
         }
@@ -303,21 +244,15 @@ fn insert_rec(
             if a == rest.len() {
                 0
             } else {
-                insert_rec(&mut node.children[i], &rest[a..], offset + a, kv, bt, tick)
+                insert_rec(&mut node.children[i], &rest[a..], offset + a, phys, pool, bt, tick)
             }
         }
     }
 }
 
-fn assemble_rec(
-    node: &Node,
-    rest: &[i32],
-    offset: usize,
-    t: usize,
-    k_out: &mut [f32],
-    v_out: &mut [f32],
-    bt: usize,
-) -> bool {
+/// Collect the physical IDs along the matched path of `rest` into `out`.
+/// Returns false when any node on the path is accounting-only.
+fn mapped_rec(node: &Node, rest: &[i32], bt: usize, out: &mut Vec<BlockId>) -> bool {
     if rest.is_empty() {
         return true;
     }
@@ -326,19 +261,12 @@ fn assemble_rec(
         if a == 0 {
             continue;
         }
-        let Some(kv) = &c.kv else {
+        let Some(ids) = &c.phys else {
             return false;
         };
-        let row = kv.row;
-        let span = kv.span();
-        for l in 0..kv.layers {
-            let src = l * span * row;
-            let dst = (l * t + offset) * row;
-            k_out[dst..dst + a * row].copy_from_slice(&kv.k[src..src + a * row]);
-            v_out[dst..dst + a * row].copy_from_slice(&kv.v[src..src + a * row]);
-        }
+        out.extend_from_slice(&ids[..a / bt]);
         return if a == c.tokens.len() {
-            assemble_rec(c, &rest[a..], offset + a, t, k_out, v_out, bt)
+            mapped_rec(c, &rest[a..], bt, out)
         } else {
             // `rest` continues past the block-aligned divergence point; the
             // caller asked for exactly the acquired span, so it ends here.
@@ -363,18 +291,17 @@ fn oldest_evictable(node: &Node) -> Option<u64> {
     best
 }
 
-fn remove_evictable(node: &mut Node, target: u64) -> usize {
+/// Detach and return the evictable leaf whose `last_use` equals `target`.
+fn remove_evictable(node: &mut Node, target: u64) -> Option<Node> {
     for i in 0..node.children.len() {
         if node.children[i].evictable() && node.children[i].last_use == target {
-            let victim = node.children.remove(i);
-            return victim.block_refs.len();
+            return Some(node.children.remove(i));
         }
-        let freed = remove_evictable(&mut node.children[i], target);
-        if freed > 0 {
-            return freed;
+        if let Some(victim) = remove_evictable(&mut node.children[i], target) {
+            return Some(victim);
         }
     }
-    0
+    None
 }
 
 fn total_refs_rec(node: &Node) -> u64 {
@@ -391,6 +318,15 @@ fn referenced_blocks_rec(node: &Node) -> usize {
             .sum::<usize>()
 }
 
+fn owned_blocks_rec(node: &Node, out: &mut Vec<BlockId>) {
+    if let Some(ids) = &node.phys {
+        out.extend_from_slice(ids);
+    }
+    for c in &node.children {
+        owned_blocks_rec(c, out);
+    }
+}
+
 impl PrefixCache {
     pub fn new(cfg: PrefixCacheConfig) -> Self {
         let cfg = PrefixCacheConfig {
@@ -404,7 +340,7 @@ impl PrefixCache {
                 block_refs: Vec::new(),
                 children: Vec::new(),
                 last_use: 0,
-                kv: None,
+                phys: None,
             },
             tick: 0,
             cached_blocks: 0,
@@ -447,6 +383,15 @@ impl PrefixCache {
         referenced_blocks_rec(&self.root)
     }
 
+    /// Every physical block ID the tree currently owns (diagnostic / test
+    /// hook — the pool-accounting invariant `free + mapped + cache-owned =
+    /// capacity` is checked against this set).
+    pub fn owned_blocks(&self) -> Vec<BlockId> {
+        let mut out = Vec::with_capacity(self.cached_blocks);
+        owned_blocks_rec(&self.root, &mut out);
+        out
+    }
+
     fn floor_block(&self, n: usize) -> usize {
         n - n % self.cfg.block_tokens
     }
@@ -475,12 +420,39 @@ impl PrefixCache {
         pin_rec(&mut self.root, &prompt[..take], self.cfg.block_tokens, self.tick, -1);
     }
 
-    /// Cache the block-aligned prefix of `prompt`, splitting edges at
-    /// block-aligned divergence points. Newly added spans copy their KV
-    /// from `kv` when given (the engine path); `None` caches accounting
-    /// only (the simulator path). The insert is truncated (after evicting
-    /// refcount-0 LRU leaves) if the block budget cannot hold it.
-    pub fn insert(&mut self, prompt: &[i32], kv: Option<&KvSpanSource<'_>>) -> InsertReport {
+    /// Cache the block-aligned prefix of `prompt`, accounting only (the
+    /// simulator path — no physical blocks). The insert is truncated
+    /// (after evicting refcount-0 LRU leaves) if the budget cannot hold it.
+    pub fn insert(&mut self, prompt: &[i32]) -> InsertReport {
+        self.insert_impl(prompt, None, None)
+    }
+
+    /// Cache the block-aligned prefix of `prompt` by **adopting** the
+    /// prompt's physical blocks: `blocks[i]` backs tokens
+    /// `[i·bt, (i+1)·bt)` (the writing slot's block table). Every newly
+    /// cached span retains its IDs in `pool` — no payload is copied — and
+    /// any blocks evicted to make room are released back to `pool`.
+    pub fn insert_shared(
+        &mut self,
+        prompt: &[i32],
+        blocks: &[BlockId],
+        pool: &mut BlockPool,
+    ) -> InsertReport {
+        let aligned = self.floor_block(prompt.len());
+        assert!(
+            blocks.len() * self.cfg.block_tokens >= aligned,
+            "insert_shared: {} blocks cannot back a {aligned}-token prefix",
+            blocks.len()
+        );
+        self.insert_impl(prompt, Some(blocks), Some(pool))
+    }
+
+    fn insert_impl(
+        &mut self,
+        prompt: &[i32],
+        phys: Option<&[BlockId]>,
+        mut pool: Option<&mut BlockPool>,
+    ) -> InsertReport {
         let mut aligned = self.floor_block(prompt.len());
         if aligned == 0 {
             return InsertReport::default();
@@ -493,7 +465,7 @@ impl PrefixCache {
         if want > 0 {
             let free = self.cfg.max_blocks.saturating_sub(self.cached_blocks);
             if want > free {
-                evicted = self.evict_blocks(want - free);
+                evicted = self.evict_impl(want - free, pool.as_deref_mut());
             }
             let free = self.cfg.max_blocks.saturating_sub(self.cached_blocks);
             if want > free {
@@ -510,7 +482,8 @@ impl PrefixCache {
                 &mut self.root,
                 &prompt[..aligned],
                 0,
-                kv,
+                phys,
+                &mut pool,
                 self.cfg.block_tokens,
                 self.tick,
             )
@@ -525,41 +498,59 @@ impl PrefixCache {
         }
     }
 
-    /// Copy the cached KV for `prompt[..tokens]` into `(layers, t, kv_heads,
-    /// head_dim)` row-major buffers (token positions `[0, tokens)`; the rest
-    /// is left untouched). Returns false when any node on the path carries
-    /// no payload — accounting-only caches cannot materialize data.
-    pub fn assemble(
-        &self,
-        prompt: &[i32],
-        tokens: usize,
-        t: usize,
-        k_out: &mut [f32],
-        v_out: &mut [f32],
-    ) -> bool {
+    /// The physical block IDs backing `prompt[..tokens]`, in token order —
+    /// what a hit maps into the requesting sequence's block table (the
+    /// caller retains them via `KvStore::map_shared_prefix`). Returns
+    /// `None` when any node on the path is accounting-only: a cache
+    /// without physical payloads cannot materialize data.
+    pub fn mapped_blocks(&self, prompt: &[i32], tokens: usize) -> Option<Vec<BlockId>> {
         let want = tokens.min(prompt.len());
-        assemble_rec(
-            &self.root,
-            &prompt[..want],
-            0,
-            t,
-            k_out,
-            v_out,
-            self.cfg.block_tokens,
-        )
+        let mut out = Vec::with_capacity(want / self.cfg.block_tokens);
+        if mapped_rec(&self.root, &prompt[..want], self.cfg.block_tokens, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
     }
 
     /// Evict refcount-0 LRU leaf subtrees until at least `want` blocks are
-    /// freed or nothing evictable remains. Returns the blocks actually
-    /// freed (the caller returns them to its allocator when the cache
-    /// shares a block pool). Referenced blocks are never freed.
+    /// freed or nothing evictable remains (accounting caches only —
+    /// physical-backed trees must use [`Self::evict_blocks_pooled`] or the
+    /// freed IDs would leak). Returns the blocks actually freed.
     pub fn evict_blocks(&mut self, want: usize) -> usize {
+        self.evict_impl(want, None)
+    }
+
+    /// Like [`Self::evict_blocks`], releasing every evicted node's
+    /// physical blocks back to `pool` (they hit the free list — zeroed —
+    /// unless a still-running sequence has them mapped).
+    pub fn evict_blocks_pooled(&mut self, want: usize, pool: &mut BlockPool) -> usize {
+        self.evict_impl(want, Some(pool))
+    }
+
+    fn evict_impl(&mut self, want: usize, mut pool: Option<&mut BlockPool>) -> usize {
         let mut freed = 0;
         while freed < want {
             let Some(oldest) = oldest_evictable(&self.root) else {
                 break;
             };
-            let got = remove_evictable(&mut self.root, oldest);
+            let Some(victim) = remove_evictable(&mut self.root, oldest) else {
+                break;
+            };
+            let got = victim.block_refs.len();
+            if let Some(ids) = &victim.phys {
+                match pool.as_mut() {
+                    Some(p) => {
+                        for &id in ids {
+                            p.release(id);
+                        }
+                    }
+                    None => debug_assert!(
+                        ids.is_empty(),
+                        "evicting physical blocks without a pool leaks them"
+                    ),
+                }
+            }
             if got == 0 {
                 break;
             }
@@ -592,11 +583,19 @@ mod tests {
         blocks.iter().flat_map(|b| vec![*b; bt]).collect()
     }
 
+    /// A pool plus `n` pre-allocated blocks to adopt (the shape a freshly
+    /// prefilled slot's table has).
+    fn pool_with_blocks(n: usize, bt: usize) -> (BlockPool, Vec<BlockId>) {
+        let mut pool = BlockPool::new(n + 8, bt, 1, 1, 2, KvDtype::F32);
+        let ids: Vec<BlockId> = (0..n).map(|_| pool.alloc().unwrap()).collect();
+        (pool, ids)
+    }
+
     #[test]
     fn lookup_matches_block_aligned_prefixes_only() {
         let mut c = cache(4, 64);
         let p = prompt(&[1, 2, 3], 4); // 12 tokens
-        assert_eq!(c.insert(&p, None).new_tokens, 12);
+        assert_eq!(c.insert(&p).new_tokens, 12);
         assert_eq!(c.cached_blocks(), 3);
         assert_eq!(c.lookup(&p), 12);
         // Shares two whole blocks, diverges in the third.
@@ -617,14 +616,14 @@ mod tests {
         let mut c = cache(4, 64);
         let a = prompt(&[1, 2, 3, 4], 4);
         let b = prompt(&[1, 2, 8, 9], 4);
-        assert_eq!(c.insert(&a, None).new_tokens, 16);
+        assert_eq!(c.insert(&a).new_tokens, 16);
         // Only the divergent tail is new.
-        assert_eq!(c.insert(&b, None).new_tokens, 8);
+        assert_eq!(c.insert(&b).new_tokens, 8);
         assert_eq!(c.cached_blocks(), 6);
         assert_eq!(c.lookup(&a), 16);
         assert_eq!(c.lookup(&b), 16);
         // Re-inserting is free.
-        assert_eq!(c.insert(&a, None).new_tokens, 0);
+        assert_eq!(c.insert(&a).new_tokens, 0);
         assert_eq!(c.cached_blocks(), 6);
     }
 
@@ -632,14 +631,14 @@ mod tests {
     fn acquire_release_balance_refcounts_across_splits() {
         let mut c = cache(4, 64);
         let a = prompt(&[1, 2, 3, 4], 4);
-        assert_eq!(c.insert(&a, None).new_tokens, 16);
+        assert_eq!(c.insert(&a).new_tokens, 16);
         let got = c.acquire(&a);
         assert_eq!(got, 16);
         assert_eq!(c.total_refs(), 4);
         assert_eq!(c.referenced_blocks(), 4);
         // A divergent insert splits the pinned edge; pins must survive.
         let b = prompt(&[1, 2, 8], 4);
-        c.insert(&b, None);
+        c.insert(&b);
         assert_eq!(c.total_refs(), 4, "split must preserve per-block pins");
         let got_b = c.acquire(&b);
         assert_eq!(got_b, 12);
@@ -655,8 +654,8 @@ mod tests {
         let mut c = cache(4, 64);
         let a = prompt(&[1, 2], 4);
         let b = prompt(&[5, 6], 4);
-        c.insert(&a, None);
-        c.insert(&b, None);
+        c.insert(&a);
+        c.insert(&b);
         let pinned = c.acquire(&a);
         assert_eq!(pinned, 8);
         // Unlimited eviction demand: only `b`'s unreferenced leaf goes.
@@ -678,8 +677,8 @@ mod tests {
         let mut c = cache(4, 64);
         let a = prompt(&[1], 4);
         let b = prompt(&[2], 4);
-        c.insert(&a, None);
-        c.insert(&b, None);
+        c.insert(&a);
+        c.insert(&b);
         // Touch `a` so `b` becomes the LRU leaf.
         let got = c.acquire(&a);
         c.release(&a, got);
@@ -692,60 +691,78 @@ mod tests {
     fn budget_truncates_inserts_after_eviction() {
         let mut c = cache(4, 3); // room for 3 blocks
         let a = prompt(&[1, 2, 3, 4], 4); // wants 4
-        let rep = c.insert(&a, None);
+        let rep = c.insert(&a);
         assert_eq!(rep.new_tokens, 12, "insert truncated to the budget");
         assert_eq!(c.cached_blocks(), 3);
         assert_eq!(c.lookup(&a), 12);
         // A disjoint insert evicts the old path (refcount 0) to fit.
         let b = prompt(&[7, 8], 4);
-        let rep = c.insert(&b, None);
+        let rep = c.insert(&b);
         assert_eq!(rep.new_tokens, 8);
         assert!(rep.evicted_blocks >= 2);
         assert!(c.cached_blocks() <= 3);
     }
 
     #[test]
-    fn payload_roundtrip_through_assemble() {
-        let (layers, kv_heads, head_dim, bt) = (2usize, 2usize, 3usize, 4usize);
-        let row = kv_heads * head_dim;
-        let t_src = 16usize;
-        // Source buffer (L, T, H, D) with position-identifying values.
-        let n = layers * t_src * row;
-        let k_src: Vec<f32> = (0..n).map(|i| i as f32).collect();
-        let v_src: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
-        let src = KvSpanSource {
-            k: &k_src,
-            v: &v_src,
-            t_src,
-            layers,
-            kv_heads,
-            head_dim,
-        };
+    fn shared_insert_adopts_blocks_and_mapped_blocks_survive_splits() {
+        let bt = 4usize;
         let mut c = cache(bt, 64);
-        let p = prompt(&[1, 2, 3], bt); // 12 tokens
-        assert_eq!(c.insert(&p, Some(&src)).new_tokens, 12);
-        // Divergent sibling forces a split of the payload-carrying edge.
-        let q = prompt(&[1, 9], bt);
-        c.insert(&q, Some(&src));
-
-        let t_dst = 20usize;
-        let mut k_out = vec![0.0f32; layers * t_dst * row];
-        let mut v_out = vec![0.0f32; layers * t_dst * row];
-        assert!(c.assemble(&p, 12, t_dst, &mut k_out, &mut v_out));
-        for l in 0..layers {
-            for tok in 0..12 {
-                for e in 0..row {
-                    let want = ((l * t_src + tok) * row + e) as f32;
-                    let got = k_out[(l * t_dst + tok) * row + e];
-                    assert_eq!(got, want, "k layer {l} tok {tok} elem {e}");
-                    assert_eq!(v_out[(l * t_dst + tok) * row + e], -want);
-                }
-            }
+        let p = prompt(&[1, 2, 3], bt); // 12 tokens, 3 blocks
+        let (mut pool, ids) = pool_with_blocks(3, bt);
+        assert_eq!(c.insert_shared(&p, &ids, &mut pool).new_tokens, 12);
+        // Adoption = one retain per block, zero copies.
+        for &id in &ids {
+            assert_eq!(pool.ref_count(id), 2, "cache must co-own block {id}");
         }
-        // Accounting-only nodes cannot materialize.
+        assert_eq!(c.mapped_blocks(&p, 12), Some(ids.clone()));
+        // Partial span maps the matching prefix of IDs.
+        assert_eq!(c.mapped_blocks(&p, 8), Some(ids[..2].to_vec()));
+
+        // A divergent sibling forces a split of the ID-carrying edge; the
+        // ID vector slices with the refcounts.
+        let q = prompt(&[1, 9], bt);
+        let qids = vec![pool.alloc().unwrap(), pool.alloc().unwrap()];
+        assert_eq!(c.insert_shared(&q, &qids, &mut pool).new_tokens, 4);
+        assert_eq!(c.mapped_blocks(&p, 12), Some(ids.clone()), "split kept IDs");
+        assert_eq!(c.mapped_blocks(&q, 8), Some(vec![ids[0], qids[1]]));
+
+        // Accounting-only trees cannot map.
         let mut c2 = cache(bt, 64);
-        c2.insert(&p, None);
-        assert!(!c2.assemble(&p, 12, t_dst, &mut k_out, &mut v_out));
+        c2.insert(&p);
+        assert_eq!(c2.mapped_blocks(&p, 12), None);
+        // Releasing the writer's references leaves the cache as the owner.
+        for &id in &ids {
+            pool.release(id);
+            assert_eq!(pool.ref_count(id), 1);
+        }
+    }
+
+    #[test]
+    fn pooled_eviction_releases_adopted_blocks() {
+        let bt = 4usize;
+        let mut c = cache(bt, 64);
+        let p = prompt(&[1, 2], bt);
+        let (mut pool, ids) = pool_with_blocks(2, bt);
+        c.insert_shared(&p, &ids, &mut pool);
+        // The writer retires: only the cache owns the blocks now.
+        for &id in &ids {
+            pool.release(id);
+        }
+        assert_eq!(pool.used_blocks(), 2);
+        // Pinned prefixes are never evicted — and their blocks stay.
+        let pinned = c.acquire(&p);
+        assert_eq!(c.evict_blocks_pooled(usize::MAX, &mut pool), 0);
+        assert_eq!(pool.used_blocks(), 2);
+        c.release(&p, pinned);
+        // Unpinned: eviction frees the subtree and the pool gets the
+        // blocks back (zeroed, refcount 0).
+        let freed = c.evict_blocks_pooled(usize::MAX, &mut pool);
+        assert_eq!(freed, 2);
+        assert_eq!(c.cached_blocks(), 0);
+        assert_eq!(pool.used_blocks(), 0);
+        for &id in &ids {
+            assert_eq!(pool.ref_count(id), 0);
+        }
     }
 
     #[test]
@@ -779,7 +796,7 @@ mod tests {
                 }
                 2 => {
                     let i = rng.below(family.len());
-                    c.insert(&family[i], None);
+                    c.insert(&family[i]);
                 }
                 _ => {
                     c.evict_blocks(rng.below(4));
@@ -814,7 +831,7 @@ mod tests {
             layout,
         });
         let p: Vec<i32> = (0..32).collect();
-        c.insert(&p, None);
+        c.insert(&p);
         assert_eq!(c.cached_tokens(), 32);
         assert_eq!(c.cached_bytes(), 32 * layout.bytes_per_token());
         // from_bytes_budget inverts the rate.

@@ -37,6 +37,23 @@ pub fn warm_start_pays(cached: usize, prompt_len: usize, cold_bucket_exists: boo
     cached > 0 && (cached * 2 >= prompt_len || !cold_bucket_exists)
 }
 
+/// Router-level screening for a prompt that fits **no** compiled prefill
+/// bucket: admissible only when a cached prefix makes the warm chunked
+/// tail worthwhile (`warm_start_pays` with no cold option). Shared by
+/// `Engine::could_ever_admit` and `SimReplica::could_ever_admit` so the
+/// two stay in lockstep with the scheduler's own warm gate.
+///
+/// The lookup is deliberately *unpinned* — screening must not hold cache
+/// blocks for requests that may never arrive. The race is accepted: if
+/// the prefix is evicted between screening and admission, the replica
+/// completes the request unservable (empty output, counted) through the
+/// same path that has always handled requests that become impossible
+/// after queueing, rather than wedging.
+pub fn warm_admittable_without_bucket(prefix: Option<&PrefixCache>, prompt: &[i32]) -> bool {
+    let cached = prefix.map_or(0, |p| p.lookup(prompt).min(prompt.len()));
+    warm_start_pays(cached, prompt.len(), false)
+}
+
 /// Fixed-size chunk spans `(start, len)` covering the uncached prefill
 /// tail `[cached, prompt_len)`. Empty for a full hit; `chunk_tokens == 0`
 /// emits the whole tail as a single chunk.
@@ -153,10 +170,14 @@ impl Scheduler {
                 } else {
                     0
                 };
+                // Admission is physical: beyond the bucket/window checks,
+                // the paged pool must actually hold the prompt's *private*
+                // blocks (a warm prompt's cached prefix is mapped, not
+                // allocated, so only the uncached tail counts).
                 let admissible = if cached > 0 {
-                    req.prompt.len() <= kv.t
+                    req.prompt.len() <= kv.t && kv.can_map_tail(req.prompt.len(), cached)
                 } else {
-                    has_bucket
+                    has_bucket && kv.can_map_tail(req.prompt.len(), 0)
                 };
                 if admissible {
                     if let Some(slot) = kv.alloc_slot() {
@@ -335,7 +356,7 @@ mod tests {
             max_blocks: 64,
             layout,
         });
-        p.insert(prompt, None);
+        p.insert(prompt);
         p
     }
 

@@ -20,7 +20,7 @@
 
 use super::device::Device;
 use crate::model::config::ModelConfig;
-use crate::quant::{KvDtype, KvLayout};
+use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 
 /// Fixed workspace reserve (bytes): activations, cos/sin tables, comms.
 /// FP8 KV scale metadata (per-sequence, `KvLayout::scale_bytes_per_seq`)
@@ -80,13 +80,18 @@ impl MemoryModel {
     }
 
     /// KV bytes when the `batch` sequences share a common `shared_prefix`
-    /// stored once (the radix prefix cache): the shared prefix is charged
-    /// a single time, each sequence only its unique tail — all at the same
+    /// stored once in the paged pool — **physical** block accounting, not
+    /// logical tokens: the shareable prefix is floored to whole
+    /// [`KV_BLOCK_TOKENS`]-token blocks (exactly what the radix cache can
+    /// map) and charged a single time; each sequence's private tail is
+    /// rounded *up* to the blocks it actually occupies — all at the same
     /// `KvLayout` rate.
     pub fn kv_bytes_shared(&self, batch: usize, seq: usize, shared_prefix: usize) -> f64 {
-        let p = shared_prefix.min(seq);
-        let rate = self.kv_layout().bytes_per_token() as f64;
-        (p + batch * (seq - p)) as f64 * rate
+        let bt = KV_BLOCK_TOKENS;
+        let p_blocks = shared_prefix.min(seq) / bt;
+        let tail_blocks = (seq - p_blocks * bt).div_ceil(bt);
+        let block_bytes = (bt * self.kv_layout().bytes_per_token()) as f64;
+        (p_blocks + batch * tail_blocks) as f64 * block_bytes
     }
 
     pub fn total_bytes_fp8(&self, batch: usize, seq: usize) -> f64 {
@@ -255,6 +260,16 @@ mod tests {
         assert_eq!(
             m.kv_bytes_shared(4, 512, 9999),
             512.0 * m.kv_layout().bytes_per_token() as f64
+        );
+        // Physical, not logical: a mid-block prefix shares only its
+        // block-aligned part, and private tails round up to whole blocks —
+        // the same arithmetic the paged pool actually performs.
+        let rate = m.kv_layout().bytes_per_token() as f64;
+        let bt = crate::quant::KV_BLOCK_TOKENS as f64;
+        assert_eq!(
+            m.kv_bytes_shared(2, 100, 30),
+            (1.0 + 2.0 * 6.0) * bt * rate,
+            "30-token prefix shares 1 block; 84-token tails occupy 6 blocks each"
         );
     }
 

@@ -14,6 +14,13 @@
 
 use crate::fp8::Fp8Format;
 
+/// Physical paging granularity of the KV subsystem, in tokens per block.
+/// One constant feeds every consumer — the paged `KvStore` pool, the radix
+/// `PrefixCache` (prefixes are shared at whole-block granularity), and the
+/// block-quantized capacity model — so "a block" can never mean two
+/// different things on two sides of an interface.
+pub const KV_BLOCK_TOKENS: usize = 16;
+
 /// Storage element type of the KV cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KvDtype {
@@ -114,6 +121,21 @@ impl KvLayout {
     pub fn seq_bytes(&self, tokens: usize) -> usize {
         tokens * self.bytes_per_token() + self.scale_bytes_per_seq()
     }
+
+    /// Per-block FP8 scale metadata in the paged pool: one f32 per
+    /// (layer, kv-head) group for each of K and V, per physical block.
+    pub fn scale_bytes_per_block(&self) -> usize {
+        match self.dtype {
+            KvDtype::Fp8(_) => 2 * self.layers * self.kv_heads * 4,
+            _ => 0,
+        }
+    }
+
+    /// Exact bytes of one physical pool block of `block_tokens` tokens
+    /// (payload + block-granular scales).
+    pub fn block_bytes(&self, block_tokens: usize) -> usize {
+        block_tokens * self.bytes_per_token() + self.scale_bytes_per_block()
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +171,25 @@ mod tests {
         let payload = 512 * l.bytes_per_token();
         assert!((l.scale_bytes_per_seq() as f64) < 1e-4 * payload as f64);
         assert_eq!(l.seq_bytes(512), payload + l.scale_bytes_per_seq());
+    }
+
+    #[test]
+    fn block_bytes_cover_payload_plus_block_scales() {
+        let l = KvLayout::new(KvDtype::FP8_DEFAULT, 80, 8, 128);
+        assert_eq!(l.scale_bytes_per_block(), 2 * 80 * 8 * 4);
+        assert_eq!(
+            l.block_bytes(KV_BLOCK_TOKENS),
+            KV_BLOCK_TOKENS * l.bytes_per_token() + l.scale_bytes_per_block()
+        );
+        // Per-block scale metadata stays far below 1% of a 16-token
+        // 70B-geometry block's payload.
+        assert!(
+            (l.scale_bytes_per_block() as f64)
+                < 0.01 * (KV_BLOCK_TOKENS * l.bytes_per_token()) as f64
+        );
+        // Scale-free dtypes pay payload only.
+        let f = KvLayout::new(KvDtype::F32, 80, 8, 128);
+        assert_eq!(f.block_bytes(16), 16 * f.bytes_per_token());
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod scale;
 pub mod search;
 pub mod smoothquant;
 
-pub use kv::{KvDtype, KvLayout};
+pub use kv::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 pub use recipe::{QuantScheme, QuantizedLinear, Rounding};
 pub use scale::{
     act_scale_per_sample, act_scale_per_tensor, round_scale_pow2, weight_scale_per_channel,

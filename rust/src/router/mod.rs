@@ -72,8 +72,8 @@ pub trait ReplicaHandle {
 
     /// Would a submit succeed right now? Provided: feasibility plus room
     /// in the local queue.
-    fn can_admit_now(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
-        match self.could_ever_admit(prompt_len, max_new_tokens) {
+    fn can_admit_now(&self, prompt: &[i32], max_new_tokens: usize) -> Admission {
+        match self.could_ever_admit(prompt, max_new_tokens) {
             Admission::Accept => {}
             other => return other,
         }
@@ -84,8 +84,12 @@ pub trait ReplicaHandle {
     }
 
     /// Could this replica serve the request if it were completely idle?
-    /// (`KvWouldOom`/`PromptTooLong` here mean "never".)
-    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission;
+    /// (`KvWouldOom`/`PromptTooLong` here mean "never".) Takes the prompt
+    /// itself, not just its length: prefix-aware replicas screen warm
+    /// prompts against only their uncached tail, so a prompt longer than
+    /// every compiled prefill bucket is still routable to a replica whose
+    /// cache holds its prefix.
+    fn could_ever_admit(&self, prompt: &[i32], max_new_tokens: usize) -> Admission;
 
     /// Prompt tokens of `prompt` this replica could serve from its
     /// shared-prefix cache — the "warmth" signal `least` routing credits.
@@ -255,7 +259,7 @@ impl FleetRouter {
                 continue;
             }
             healthy += 1;
-            match e.handle.could_ever_admit(plen, mnew) {
+            match e.handle.could_ever_admit(&tr.req.prompt, mnew) {
                 Admission::PromptTooLong => {
                     too_long += 1;
                     continue;
@@ -274,7 +278,7 @@ impl FleetRouter {
                 } else {
                     0
                 },
-                admissible: e.handle.can_admit_now(plen, mnew) == Admission::Accept,
+                admissible: e.handle.can_admit_now(&tr.req.prompt, mnew) == Admission::Accept,
             });
         }
         if healthy == 0 {
@@ -475,8 +479,8 @@ mod tests {
         fn queue_capacity(&self) -> usize {
             self.queue_cap
         }
-        fn could_ever_admit(&self, prompt_len: usize, max_new: usize) -> Admission {
-            if prompt_len + max_new > self.max_tokens {
+        fn could_ever_admit(&self, prompt: &[i32], max_new: usize) -> Admission {
+            if prompt.len() + max_new > self.max_tokens {
                 return Admission::KvWouldOom;
             }
             Admission::Accept

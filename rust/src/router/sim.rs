@@ -24,8 +24,8 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::coordinator::{
-    chunk_spans, warm_start_pays, BlockAllocator, PrefixCache, PrefixCacheConfig, Request,
-    RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
+    chunk_spans, warm_admittable_without_bucket, warm_start_pays, BlockAllocator, PrefixCache,
+    PrefixCacheConfig, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
 };
 use crate::gaudisim::{
     chunked_prefill_time_s, decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel,
@@ -319,7 +319,7 @@ impl SimReplica {
         let mut private_blocks = need_blocks;
         let mut insert_evicted = 0usize;
         if let Some(p) = self.prefix.as_mut() {
-            let rep = p.insert(&req.prompt, None);
+            let rep = p.insert(&req.prompt);
             insert_evicted = rep.evicted_blocks;
             if rep.new_tokens > 0 {
                 p.release(&req.prompt, cached);
@@ -455,10 +455,21 @@ impl ReplicaHandle for SimReplica {
         self.cfg.queue_capacity
     }
 
-    fn could_ever_admit(&self, prompt_len: usize, max_new_tokens: usize) -> Admission {
-        if self.sched.prefill_bucket(prompt_len).is_none() {
+    fn could_ever_admit(&self, prompt: &[i32], max_new_tokens: usize) -> Admission {
+        let prompt_len = prompt.len();
+        // Cold starts need a compiled bucket — but a warm prompt whose
+        // resident prefix makes the chunked tail worthwhile is served
+        // through the decode path and is not bucket-bound. (Screening the
+        // warm prompt cold was the ROADMAP's prefix-blindness bug: the
+        // router rejected `PromptTooLong` what the replica would happily
+        // admit.)
+        if self.sched.prefill_bucket(prompt_len).is_none()
+            && !warm_admittable_without_bucket(self.prefix.as_ref(), prompt)
+        {
             return Admission::PromptTooLong;
         }
+        // Every token must still be resident while the request runs —
+        // sharing saves bytes across *concurrent* requests, not within one.
         if self.alloc.blocks_for(prompt_len + max_new_tokens) > self.alloc.total_blocks {
             return Admission::KvWouldOom;
         }
@@ -569,11 +580,11 @@ mod tests {
         cfg.kv_blocks_override = Some(4); // 4 × 16 = 64 KV tokens total
         cfg.queue_capacity = 1;
         let mut r = SimReplica::new("tiny", cfg).unwrap();
-        assert_eq!(r.could_ever_admit(16, 8), Admission::Accept);
-        assert_eq!(r.could_ever_admit(4096, 8), Admission::PromptTooLong);
-        assert_eq!(r.could_ever_admit(60, 16), Admission::KvWouldOom);
+        assert_eq!(r.could_ever_admit(&[0; 16], 8), Admission::Accept);
+        assert_eq!(r.could_ever_admit(&[0; 4096], 8), Admission::PromptTooLong);
+        assert_eq!(r.could_ever_admit(&[0; 60], 16), Admission::KvWouldOom);
         assert!(r.submit(Request::new(0, vec![0; 16], 4), 0.0));
-        assert_eq!(r.can_admit_now(16, 4), Admission::QueueFull);
+        assert_eq!(r.can_admit_now(&[0; 16], 4), Admission::QueueFull);
         assert!(!r.submit(Request::new(1, vec![0; 16], 4), 0.0));
     }
 

@@ -17,7 +17,7 @@
 use gaudi_fp8::coordinator::{KvStore, LatencyStat, Request, RequestOutput};
 use gaudi_fp8::quant::KvDtype;
 use gaudi_fp8::router::{
-    FleetConfig, FleetRouter, RejectReason, ReplicaState, RoutePolicy, SimReplica,
+    FleetConfig, FleetRouter, RejectReason, ReplicaHandle, ReplicaState, RoutePolicy, SimReplica,
     SimReplicaConfig, TimedRequest,
 };
 use gaudi_fp8::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig};
@@ -334,4 +334,66 @@ fn drained_replica_finishes_without_new_work() {
     assert_eq!(router.registry.dispatched(0), 0);
     assert_eq!(router.registry.dispatched(1), 64);
     assert_eq!(router.registry.state(0), ReplicaState::Draining);
+}
+
+/// ISSUE 4: prefix-aware fleet admission. A prompt longer than every
+/// compiled prefill bucket used to be screened *cold* by
+/// `could_ever_admit` and rejected `PromptTooLong` — even when a replica
+/// held its prefix and would happily serve the tail through the chunked
+/// decode path. A cold fleet must still reject it; a warm fleet must admit
+/// and complete it.
+#[test]
+fn warm_prompt_rejected_cold_is_admitted_when_prefix_is_resident() {
+    let mut cfg = SimReplicaConfig::synthetic_tiny();
+    cfg.prefix_cache = true;
+    cfg.prefill_seqs = vec![16, 32, 64, 128]; // 160-token prompt fits no bucket
+    let long_prompt = vec![4i32; 160];
+
+    // Cold: typed PromptTooLong reject at the router.
+    let mut router = FleetRouter::new(FleetConfig {
+        policy: RoutePolicy::LeastOutstandingTokens,
+        queue_capacity: 64,
+    });
+    router.add_replica(Box::new(SimReplica::new("cold", cfg.clone()).unwrap()));
+    let report = router
+        .run_open_loop(vec![TimedRequest::new(
+            Request::new(0, long_prompt.clone(), 8),
+            0.0,
+        )])
+        .unwrap();
+    assert!(report.outputs.is_empty());
+    assert_eq!(report.rejected.len(), 1);
+    assert!(
+        matches!(
+            report.rejected[0].reason,
+            RejectReason::PromptTooLong { prompt_len: 160 }
+        ),
+        "{:?}",
+        report.rejected[0].reason
+    );
+
+    // Warm: first serve the 128-token prefix (fits a bucket) so the cache
+    // holds it, then the same long prompt routes, admits warm, and
+    // completes via the chunked tail.
+    let mut router = FleetRouter::new(FleetConfig {
+        policy: RoutePolicy::LeastOutstandingTokens,
+        queue_capacity: 64,
+    });
+    router.add_replica(Box::new(SimReplica::new("warm", cfg).unwrap()));
+    let arrivals = vec![
+        TimedRequest::new(Request::new(0, long_prompt[..128].to_vec(), 8), 0.0),
+        // Arrives long after the warmer finished: the cache is resident
+        // when the router screens it.
+        TimedRequest::new(Request::new(1, long_prompt.clone(), 8), 1000.0),
+    ];
+    let report = router.run_open_loop(arrivals).unwrap();
+    assert!(report.rejected.is_empty(), "{:?}", report.rejected);
+    assert_eq!(report.outputs.len(), 2);
+    let long = report.outputs.iter().find(|o| o.id == 1).unwrap();
+    assert_eq!(long.prompt_len, 160);
+    assert_eq!(long.tokens.len(), 8, "warm admission must serve fully");
+    assert!(report.metrics.merged.prefix_hits >= 1);
+    // Serving the long prompt published its own tail too: the replica's
+    // warmth signal now covers the whole prompt.
+    assert!(router.registry.handle(0).cached_prefix_tokens(&long_prompt) >= 128);
 }

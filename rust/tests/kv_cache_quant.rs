@@ -227,7 +227,9 @@ fn accounting_is_shared_across_components() {
         rcfg.kv_bytes_budget_override = Some(budget);
         let replica = SimReplica::new("contract", rcfg).unwrap();
         assert_eq!(replica.allocator().total_blocks, expect_blocks, "{dtype:?}");
-        // …while the host store allocates exactly layout.seq_bytes per slot.
+        // …while the host store provisions exactly block_bytes per pool
+        // block (paged: per-slot arenas became 16-token physical blocks
+        // with block-granular FP8 scale metadata).
         let store = KvStore::with_dtype(
             model.layers,
             2,
@@ -236,7 +238,19 @@ fn accounting_is_shared_across_components() {
             model.head_dim(),
             dtype,
         );
-        assert_eq!(store.kv_bytes(), 2 * layout.seq_bytes(32), "{dtype:?}");
+        let bt = store.block_tokens();
+        let blocks_per_seq = 32usize.div_ceil(bt);
+        assert_eq!(
+            store.kv_bytes(),
+            2 * blocks_per_seq * layout.block_bytes(bt),
+            "{dtype:?}"
+        );
+        // The payload rate is still the shared bytes/token contract.
+        assert_eq!(
+            store.kv_bytes() - 2 * blocks_per_seq * layout.scale_bytes_per_block(),
+            2 * 32 * layout.bytes_per_token(),
+            "{dtype:?}"
+        );
     }
 }
 

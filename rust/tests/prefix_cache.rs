@@ -42,7 +42,7 @@ fn full_hit_prompt_produces_zero_tail_plan() {
     );
     let prompt = vec![42i32; 128];
     let mut pc = cache(16, 64);
-    pc.insert(&prompt, None);
+    pc.insert(&prompt);
 
     let mut q = AdmissionQueue::new(8);
     q.push(Request::new(1, prompt.clone(), 8)).unwrap();
@@ -100,7 +100,7 @@ fn interleaved_ops_never_dangle_refcounts_or_free_pinned_blocks() {
             }
             3 => {
                 let i = rng.below(family.len());
-                pc.insert(&family[i], None);
+                pc.insert(&family[i]);
             }
             _ => {
                 pc.evict_blocks(1 + rng.below(8));
@@ -130,8 +130,8 @@ fn eviction_never_frees_blocks_referenced_by_an_active_sequence() {
     let mut pc = cache(16, 64);
     let hot = vec![1i32; 64];
     let cold = vec![2i32; 64];
-    pc.insert(&hot, None);
-    pc.insert(&cold, None);
+    pc.insert(&hot);
+    pc.insert(&cold);
     let pinned = pc.acquire(&hot);
     assert_eq!(pinned, 64);
     // Demand far exceeds what is evictable; only the cold path may go.
