@@ -32,6 +32,14 @@ PREFILL_VARIANTS = ("bf16", "unit", "fp8_pt", "fp8_pc", "fp8_dyn")
 DECODE_VARIANTS = ("bf16", "fp8_pt", "fp8_pc")
 GEMM_SHAPE = (64, 256, 256)  # (M, K, N) operator artifact
 
+# Paged decode ABI (ISSUE 5): block granularity mirrors the Rust
+# `quant::KV_BLOCK_TOKENS`, and the compiled pool holds the largest decode
+# batch's full windows twice over — headroom for the engine's prefix-cache
+# over-provisioning (the engine validates its pool fits at startup).
+PAGED_BLOCK_TOKENS = 16
+PAGED_MAX_BLOCKS_PER_SEQ = -(-CACHE_T // PAGED_BLOCK_TOKENS)
+PAGED_POOL_BLOCKS = 2 * max(DECODE_BATCHES) * PAGED_MAX_BLOCKS_PER_SEQ
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -71,6 +79,35 @@ def lower_decode(cfg, names, qc, batch):
         jax.ShapeDtypeStruct(kv_shape, jnp.float32),
         jax.ShapeDtypeStruct(kv_shape, jnp.float32),
         jax.ShapeDtypeStruct((batch,), jnp.int32),  # per-row positions
+    )
+
+
+def lower_decode_paged(cfg, names, qc, batch):
+    """Block-table-native decode: the artifact takes the physical block
+    pool plus per-row block tables/lengths and returns logits + only the
+    appended token's KV — no dense (L, B, T, ...) cache round-trip."""
+    pool_shape = (
+        PAGED_POOL_BLOCKS,
+        cfg.layers,
+        PAGED_BLOCK_TOKENS,
+        cfg.kv_heads,
+        cfg.head_dim,
+    )
+
+    def fn(params_list, token, k_pool, v_pool, tables, lens):
+        params = dict(zip(names, params_list))
+        return M.decode_step_paged(params, token, k_pool, v_pool, tables, lens, cfg, qc)
+
+    spec_params = [
+        jax.ShapeDtypeStruct(M.param_shape(cfg, n), jnp.float32) for n in names
+    ]
+    return jax.jit(fn).lower(
+        spec_params,
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(pool_shape, jnp.float32),
+        jax.ShapeDtypeStruct(pool_shape, jnp.float32),
+        jax.ShapeDtypeStruct((batch, PAGED_MAX_BLOCKS_PER_SEQ), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # per-row valid lengths
     )
 
 
@@ -179,6 +216,10 @@ def main():
         qc = M.make_quant_config(variant, scales)
         for batch in DECODE_BATCHES:
             emit(f"decode_{variant}_b{batch}.hlo.txt", lower_decode(cfg, names, qc, batch))
+            emit(
+                f"decode_paged_{variant}_b{batch}.hlo.txt",
+                lower_decode_paged(cfg, names, qc, batch),
+            )
 
     m, k, n = GEMM_SHAPE
     for variant in ("bf16", "fp8_pt", "fp8_pc", "unit"):
@@ -229,6 +270,8 @@ def main():
         "param_order": names,
         "param_shapes": {n_: list(M.param_shape(cfg, n_)) for n_ in names},
         "cache_t": CACHE_T,
+        "paged_block_tokens": PAGED_BLOCK_TOKENS,
+        "paged_pool_blocks": PAGED_POOL_BLOCKS,
         "prefill_seqs": list(PREFILL_SEQS),
         "decode_batches": list(DECODE_BATCHES),
         "prefill_variants": list(PREFILL_VARIANTS),

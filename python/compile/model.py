@@ -326,6 +326,56 @@ def decode_step(params, token, k_cache, v_cache, pos, cfg: ModelConfig, qc: Quan
     return logits, k_cache, v_cache
 
 
+def decode_step_paged(params, token, k_pool, v_pool, tables, lens, cfg: ModelConfig, qc: QuantConfig):
+    """Block-table-native decode step (vLLM-style paged-attention ABI).
+
+    token: (B,) int32; k_pool/v_pool: (NB, L, BT, Hkv, D) f32 — the shared
+    physical block pool, device-resident between steps; tables: (B, MB)
+    int32 per-row block tables (entries past the live range may repeat a
+    pad id — the validity mask hides them); lens: (B,) int32 valid counts.
+
+    Returns (logits (B, V), new_k (L, B, 1, Hkv, D), new_v): only the
+    appended token's KV leaves the graph — the host quantizes it into the
+    row's hot block, so the dense cache round-trip of `decode_step` is
+    gone and per-step KV traffic is the live block bytes.
+
+    Block gathers use one-hot matmuls (gather-free: the artifact-executing
+    XLA 0.5.1 mis-executes jax-0.8 gather/scatter ops); a real Gaudi
+    paged-attention kernel instead walks the tables and reads the pool in
+    place, dequantizing FP8 blocks on read.
+    """
+    b = token.shape[0]
+    nb, l_, bt, hkv, d = k_pool.shape
+    mb = tables.shape[1]
+    t = mb * bt
+    onehot = jax.nn.one_hot(tables, nb, dtype=jnp.float32)  # (B, MB, NB)
+    kf = k_pool.reshape(nb, l_ * bt * hkv * d)
+    vf = v_pool.reshape(nb, l_ * bt * hkv * d)
+    kg = (onehot.reshape(b * mb, nb) @ kf).reshape(b, mb, l_, bt, hkv, d)
+    vg = (onehot.reshape(b * mb, nb) @ vf).reshape(b, mb, l_, bt, hkv, d)
+    # (B, MB, L, BT, Hkv, D) → (L, B, MB·BT, Hkv, D) per-layer context.
+    kg = jnp.transpose(kg, (2, 0, 1, 3, 4, 5)).reshape(l_, b, t, hkv, d)
+    vg = jnp.transpose(vg, (2, 0, 1, 3, 4, 5)).reshape(l_, b, t, hkv, d)
+
+    x = embed_lookup(params["embed"], token[:, None])  # (B, 1, H)
+    positions = lens[:, None].astype(jnp.int32)  # (B, 1)
+    idx = jnp.arange(t)
+    # Keys: T pooled positions (valid where pos < lens[b]) + self.
+    valid = (idx[None, :] < lens[:, None])[:, None, None, :]  # (B,1,1,T)
+    mask = jnp.concatenate([valid, jnp.ones((b, 1, 1, 1), bool)], axis=-1)
+    new_k, new_v = [], []
+    for i in range(cfg.layers):
+        kv_prev = (kg[i], vg[i])
+        x, kv = block(x, params, i, cfg, qc, positions, kv_prev, mask)
+        new_k.append(kv[0])
+        new_v.append(kv[1])
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].T)[:, 0, :]
+    nk = jnp.stack(new_k, 0)  # (L, B, 1, Hkv, D)
+    nv = jnp.stack(new_v, 0)
+    return logits, nk, nv
+
+
 def kv_cache_shape(cfg: ModelConfig, batch: int, max_seq: Optional[int] = None):
     t = max_seq or cfg.max_seq
     return (cfg.layers, batch, t, cfg.kv_heads, cfg.head_dim)

@@ -2,8 +2,17 @@
 //! length (finer sweep than Table 5) and decode TFLOPS vs batch at several
 //! context lengths (finer than Table 6), with BF16-peak and FP8-peak
 //! reference lines; plus the Gaudi 2 vs Gaudi 3 projection.
+//!
+//! Decode rows price the block-table-native path (ISSUE 5):
+//! [`decode_step_tflops`] charges each row's live 16-token blocks plus a
+//! per-block launch floor. Figure C4 sets that against the dense-copy
+//! reference (every bucket row padded to the full window) — the cost of
+//! the per-step densify the paged engine deleted.
 
-use gaudi_fp8::gaudisim::{decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel};
+use gaudi_fp8::gaudisim::{
+    attn_time_s_dense_copy, attn_time_s_paged, decode_step_tflops, decode_step_tflops_dense,
+    prefill_tflops, Device, E2eConfig, MemoryModel,
+};
 use gaudi_fp8::model::config::ModelConfig;
 
 fn main() {
@@ -27,6 +36,21 @@ fn main() {
             let fits = mm.fits(batch, context);
             let r = decode_step_tflops(&cfg, batch, context);
             println!("{context},{batch},{:.1},{}", r.tflops, fits);
+        }
+    }
+
+    println!("\n# Figure C4 (CSV): paged vs dense-copy decode at an 8192 window");
+    println!("context,batch,paged_tflops,dense_tflops,paged_attn_ms,dense_attn_ms");
+    for context in [512usize, 2048, 8192] {
+        for batch in [8usize, 32, 128] {
+            let p = decode_step_tflops(&cfg, batch, context);
+            let d = decode_step_tflops_dense(&cfg, batch, context, 8192);
+            let pa = attn_time_s_paged(&cfg, &vec![context; batch]) * 1e3;
+            let da = attn_time_s_dense_copy(&cfg, batch, 8192) * 1e3;
+            println!(
+                "{context},{batch},{:.1},{:.1},{pa:.3},{da:.3}",
+                p.tflops, d.tflops
+            );
         }
     }
 

@@ -1,19 +1,37 @@
 //! Hot-path micro-benchmarks — the §Perf targets: FP8 encode/decode, the
 //! emulated scaled GEMM, KV gather/scatter, and the batcher admission path.
 //! Run before/after each optimization; results recorded in EXPERIMENTS.md.
+//!
+//! ISSUE 5 adds `kind:"paged_decode"` JSON rows (one per line, the only
+//! stdout under `BENCH_SMOKE=1`): paged append + per-slot block-table
+//! reads vs the old dense gather/scatter at B ∈ {8, 32} × ctx ∈ {1k, 4k}
+//! inside a 4k window. Each row's measured bytes-moved ratio is asserted
+//! to match the gaudisim paged/dense pricing split
+//! (`kv_read_bytes_dense / kv_read_bytes_paged`) exactly — the model and
+//! the host store charge the same geometry.
 
 use gaudi_fp8::coordinator::KvStore;
 use gaudi_fp8::fp8::{
     decode, encode_rne, encode_stochastic, rescale_pow2, CastMode, DecodeTable, Fp8Format,
     Fp8Gemm8x8,
 };
+use gaudi_fp8::gaudisim::{kv_read_bytes_dense, kv_read_bytes_paged};
 use gaudi_fp8::gemm::{quantize_matrix, scaled_gemm_with_table, DiagScale, QuantRounding};
+use gaudi_fp8::model::config::ModelConfig;
 use gaudi_fp8::quant::KvDtype;
 use gaudi_fp8::tensor::{matmul_nt, Tensor2};
 use gaudi_fp8::util::rng::XorShiftRng;
 use gaudi_fp8::util::{bench::black_box, Bencher};
 
 fn main() {
+    let smoke = matches!(std::env::var("BENCH_SMOKE").as_deref(), Ok("1"));
+    if !smoke {
+        timed_micro();
+    }
+    paged_decode_rows(smoke);
+}
+
+fn timed_micro() {
     let mut b = Bencher::new("hotpath");
     let fmt = Fp8Format::E4M3Gaudi2;
     let mut rng = XorShiftRng::new(9);
@@ -137,5 +155,106 @@ fn main() {
             kv8.set_len(s, 100);
         }
         black_box(kv8.scatter_batch(&slots8, &g8k, &g8v));
+    });
+}
+
+/// Build a `b`-slot f32 store in a `window`-token window, every slot
+/// written to `ctx` valid tokens. Returns (store, active slots).
+fn paged_store(
+    layers: usize,
+    kvh: usize,
+    hd: usize,
+    window: usize,
+    bt: usize,
+    b: usize,
+    ctx: usize,
+) -> (KvStore, Vec<usize>) {
+    let row = kvh * hd;
+    let mut kv = KvStore::with_block_tokens(layers, b, window, kvh, hd, KvDtype::F32, bt, 0);
+    let mut buf = vec![0.0f32; layers * window * row];
+    for (i, x) in buf.iter_mut().enumerate() {
+        *x = (i % 97) as f32 * 0.03125 - 1.5;
+    }
+    let mut group = Vec::new();
+    for _ in 0..b {
+        let s = kv.alloc_slot().expect("slot");
+        kv.write_slot(s, &buf, &buf, ctx);
+        group.push(s);
+    }
+    (kv, group)
+}
+
+/// ISSUE 5: paged append + per-slot block-table reads vs dense
+/// gather/scatter — JSON bytes rows for every (B, ctx) cell, plus timed
+/// throughput rows for the (8, 1k) cell outside smoke mode.
+fn paged_decode_rows(smoke: bool) {
+    let (layers, kvh, hd, window, bt) = (2usize, 2usize, 16usize, 4096usize, 16usize);
+    let row = kvh * hd;
+    // Any model geometry works for the pricing split: the dense/paged
+    // ratio is pure (bucket·window)/(Σ live-block tokens) — rates cancel.
+    let model = ModelConfig::llama31_70b();
+    for &(b, ctx) in &[(8usize, 1024usize), (8, 4096), (32, 1024), (32, 4096)] {
+        let (kv, group) = paged_store(layers, kvh, hd, window, bt, b, ctx);
+        // Measured paged bytes: one decode step's per-slot reads, off the
+        // pool's own instrumentation.
+        kv.pool().reset_bytes_read();
+        black_box(kv.decode_attention_probe(&group, 11));
+        let paged_bytes = kv.pool().bytes_read() as f64;
+        // Dense staging bytes: the (L, B, window, Hkv·D) K+V f32 pair the
+        // pre-paged engine materialized every step.
+        let dense_bytes = (2 * layers * b * window * row * 4) as f64;
+        let measured_ratio = dense_bytes / paged_bytes;
+        let ctxs = vec![ctx; b];
+        let model_ratio =
+            kv_read_bytes_dense(&model, b, window) / kv_read_bytes_paged(&model, &ctxs);
+        assert!(
+            (measured_ratio / model_ratio - 1.0).abs() < 1e-9,
+            "bytes ratio drifted from the gaudisim pricing split: \
+             measured {measured_ratio} vs model {model_ratio} at (b={b}, ctx={ctx})"
+        );
+        println!(
+            "{{\"bench\":\"hotpath_micro\",\"kind\":\"paged_decode\",\"b\":{b},\
+             \"ctx\":{ctx},\"window\":{window},\"paged_bytes\":{paged_bytes:.0},\
+             \"dense_bytes\":{dense_bytes:.0},\"measured_ratio\":{measured_ratio:.6},\
+             \"model_ratio\":{model_ratio:.6}}}"
+        );
+    }
+    if smoke {
+        return;
+    }
+
+    // Timed comparison at (8, 1k): the paged read + append hot path vs the
+    // dense gather + scatter it replaced.
+    let mut bench = Bencher::new("hotpath");
+    let (b, ctx) = (8usize, 1024usize);
+    let (mut kv, group) = paged_store(layers, kvh, hd, window, bt, b, ctx);
+    let live_bytes = (b * ctx.div_ceil(bt) * bt * 2 * layers * row * 4) as f64;
+    bench.bench_throughput("kv_paged_read_8x1k", live_bytes, "GB/s", || {
+        black_box(kv.decode_attention_probe(&group, 11));
+    });
+    let ss = window * row;
+    let dense_bytes = (2 * layers * b * window * row * 4) as f64;
+    let mut sk = vec![0.0f32; layers * b * ss];
+    let mut sv = vec![0.0f32; layers * b * ss];
+    bench.bench_throughput("kv_dense_gather_8x1k", dense_bytes, "GB/s", || {
+        black_box(kv.gather_batch_into(&group, b, &mut sk, &mut sv));
+    });
+    let token_bytes = (b * 2 * layers * row * 4) as f64;
+    let kr = vec![0.123f32; layers * row];
+    bench.bench_throughput("kv_append_token_8x1k", token_bytes, "GB/s", || {
+        for &s in &group {
+            kv.set_len(s, ctx);
+        }
+        for &s in &group {
+            black_box(kv.append_token(s, &kr, &kr));
+        }
+    });
+    let (gk, gv, _) = kv.gather_batch(&group);
+    let hot_bytes = (b * 2 * layers * row * 4) as f64; // ctx % bt == 0 → 1 valid token
+    bench.bench_throughput("kv_dense_scatter_8x1k", hot_bytes, "GB/s", || {
+        for &s in &group {
+            kv.set_len(s, ctx);
+        }
+        black_box(kv.scatter_batch(&group, &gk, &gv));
     });
 }

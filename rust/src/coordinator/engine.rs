@@ -22,6 +22,33 @@
 //!
 //! All compute is the PJRT executables; the engine only moves bytes and
 //! makes decisions — the "Python never on the request path" invariant.
+//!
+//! # Block-table-native decode (ISSUE 5)
+//!
+//! The decode and chunked-prefill hot paths no longer densify the KV
+//! cache. The old loop gathered every slot's block table into a dense
+//! `(L, B, cache_t, Hkv, D)` scratch pair, handed that to the decode
+//! artifact, and scattered the whole buffer back — per-step traffic
+//! proportional to `bucket × cache_t` regardless of live context. Now:
+//!
+//! * the engine hands the **paged decode artifact**
+//!   (`decode_paged_<variant>_b<B>.hlo.txt`, lowered by
+//!   `python/compile/aot.py::lower_decode_paged`) per-row block tables and
+//!   lengths that reference the pool *in place* — the kernel walks the
+//!   tables and dequantizes blocks on read, vLLM-style;
+//! * the artifact returns logits plus only the **appended token's** KV
+//!   `(L, B, 1, Hkv, D)`, which [`KvStore::append_token`] quantizes into
+//!   each row's hot block (copy-on-write preserved) — the full dense
+//!   scatter is gone;
+//! * on real hardware the pool is device-resident and donated between
+//!   steps; the PJRT-CPU stub runner exports exactly the group's blocks
+//!   instead (`BlockPool::export_f32_blocks_into`, persistent and
+//!   incrementally updated), still with no per-sequence window or bucket
+//!   padding.
+//!
+//! The pre-paged dense staging survives only behind the
+//! `dense-decode-ref` cargo feature ([`Engine::run_decode_group_dense`])
+//! as the reference implementation for paged-vs-dense roundtrip tests.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -30,7 +57,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{AdmissionQueue, PrefillPlan};
-use super::kvcache::KvStore;
+use super::kvcache::{AppendOutcome, KvStore};
 use super::metrics::ServeMetrics;
 use super::prefix::{PrefixCache, PrefixCacheConfig};
 use super::request::{Request, RequestId, RequestOutput};
@@ -58,6 +85,11 @@ pub struct ModelMeta {
     pub decode_batches: Vec<usize>,
     pub prefill_variants: Vec<String>,
     pub decode_variants: Vec<String>,
+    /// Pool capacity the paged decode artifacts were compiled for
+    /// (`None` = legacy dense-only artifact set).
+    pub paged_pool_blocks: Option<usize>,
+    /// Block granularity the paged artifacts were compiled for.
+    pub paged_block_tokens: usize,
 }
 
 impl ModelMeta {
@@ -107,6 +139,15 @@ impl ModelMeta {
             decode_batches: get_list("decode_batches")?,
             prefill_variants: get_strs("prefill_variants"),
             decode_variants: get_strs("decode_variants"),
+            paged_pool_blocks: j
+                .get("paged_pool_blocks")
+                .and_then(Json::as_f64)
+                .map(|v| v as usize),
+            paged_block_tokens: j
+                .get("paged_block_tokens")
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .unwrap_or(KV_BLOCK_TOKENS),
         })
     }
 }
@@ -131,6 +172,12 @@ pub struct EngineConfig {
     /// Chunked-prefill chunk size in tokens per engine step for cache-hit
     /// tails; 0 = process the whole tail in one step.
     pub prefill_chunk: usize,
+    /// Route decode groups through the dense reference implementation
+    /// ([`Engine::run_decode_group_dense`]) instead of the paged path —
+    /// the paged-vs-dense roundtrip switch, compiled only with the
+    /// `dense-decode-ref` feature.
+    #[cfg(feature = "dense-decode-ref")]
+    pub use_dense_decode: bool,
 }
 
 impl EngineConfig {
@@ -144,6 +191,8 @@ impl EngineConfig {
             kv_dtype: KvDtype::F32,
             prefix_cache_bytes: None,
             prefill_chunk: 0,
+            #[cfg(feature = "dense-decode-ref")]
+            use_dense_decode: false,
         }
     }
 }
@@ -192,16 +241,20 @@ pub struct Engine {
     chunked: Option<ChunkedPrefill>,
     pub metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
-    /// Reusable decode-batch KV staging buffers (§Perf L3: avoids a
-    /// multi-MB alloc + zero-fill per decode step).
-    scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
-    scratch_bucket: usize,
-    /// Staging for `forced_decode` (chunked prefill runs one of these per
-    /// tail token — same rationale as the decode scratch above, kept
-    /// separate because its bucket is pinned at `decode_bucket(1)`).
-    chunk_k: Vec<f32>,
-    chunk_v: Vec<f32>,
+    // The dense scratch pairs (`scratch_k`/`scratch_v`/`chunk_k`/`chunk_v`)
+    // that staged every decode step's bucket-padded (L, B, cache_t, …)
+    // gather are gone — the paged path reads block tables in place and
+    // appends one token. What remains is the CPU-stub runner's pool
+    // export (on device the pool is donated, not exported), kept
+    // persistent and updated incrementally: each step zeroes only the
+    // regions `pool_exported` lists and rewrites only the new group's
+    // blocks — work proportional to the group, never to the pool.
+    /// Persistent paged pool export pair, sized to the compiled pool.
+    pool_export_k: Vec<f32>,
+    pool_export_v: Vec<f32>,
+    /// Blocks currently materialized in the export pair (zeroed before
+    /// the next export).
+    pool_exported: Vec<usize>,
 }
 
 impl Engine {
@@ -243,6 +296,27 @@ impl Engine {
             cache_blocks,
         );
         let prefix = cache_cfg.map(PrefixCache::new);
+        // Paged artifacts compile a fixed pool shape: the engine's pool
+        // must tile identically and fit inside it (the export is padded up
+        // to the compiled block count).
+        if let Some(nb) = meta.paged_pool_blocks {
+            if kv.block_tokens() != meta.paged_block_tokens {
+                bail!(
+                    "engine block size {} ≠ compiled paged block size {} — \
+                     regenerate artifacts with `make artifacts`",
+                    kv.block_tokens(),
+                    meta.paged_block_tokens
+                );
+            }
+            if kv.pool().total_blocks() > nb {
+                bail!(
+                    "engine pool of {} blocks exceeds the compiled paged-artifact \
+                     pool of {nb} — lower --slots / --prefix-cache-mb or recompile \
+                     the artifacts with a larger pool",
+                    kv.pool().total_blocks()
+                );
+            }
+        }
         let scheduler = Scheduler::new(
             cfg.policy,
             meta.prefill_seqs.clone(),
@@ -261,11 +335,9 @@ impl Engine {
             param_literals,
             kv,
             scheduler,
-            scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
-            scratch_bucket: 0,
-            chunk_k: Vec::new(),
-            chunk_v: Vec::new(),
+            pool_export_k: Vec::new(),
+            pool_export_v: Vec::new(),
+            pool_exported: Vec::new(),
         })
     }
 
@@ -283,8 +355,21 @@ impl Engine {
     /// Pre-compile the artifacts this engine will use, so TTFT/TPOT metrics
     /// measure service latency rather than first-use XLA compilation.
     pub fn warmup(&mut self) -> Result<()> {
+        let paged = self.meta.paged_pool_blocks.is_some();
         for &b in &self.meta.decode_batches.clone() {
-            self.artifact(&ArtifactKey::decode(&self.cfg.variant, b))?;
+            let key = if paged {
+                ArtifactKey::decode_paged(&self.cfg.variant, b)
+            } else {
+                ArtifactKey::decode(&self.cfg.variant, b)
+            };
+            self.artifact(&key)?;
+            // The dense-reference switch decodes through the legacy dense
+            // artifacts: warm those too, or the A/B comparison's first
+            // step would absorb an XLA compilation.
+            #[cfg(feature = "dense-decode-ref")]
+            if self.cfg.use_dense_decode && paged {
+                self.artifact(&ArtifactKey::decode(&self.cfg.variant, b))?;
+            }
         }
         for &s in &self.meta.prefill_seqs.clone() {
             self.artifact(&ArtifactKey::prefill(&self.cfg.variant, 1, s))?;
@@ -558,28 +643,130 @@ impl Engine {
         Ok(())
     }
 
-    /// One decode-artifact call for `slot` with a forced input token — the
-    /// chunked-prefill workhorse: the KV already in the slot is the
-    /// attention context and the forced token's KV is appended at the
-    /// slot's current length. Returns the logits row.
+    /// One paged decode-artifact call for `rows` of (slot, input token).
+    ///
+    /// The KV side is block-table-native: per-row block tables + lengths
+    /// reference the pool in place — no dense `(L, B, cache_t, …)`
+    /// staging, no zero-fill, no bucket padding of the context. The
+    /// artifact returns logits plus only the appended token's KV, which
+    /// [`KvStore::append_token`] quantizes into each row's hot block
+    /// (copy-on-write preserved). Returns (logits rows, full slots).
+    fn paged_decode_forward(&mut self, rows: &[(usize, i32)]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let Some(pool_blocks) = self.meta.paged_pool_blocks else {
+            bail!(
+                "artifacts at {:?} predate the paged decode ABI — regenerate them \
+                 with `make artifacts` (or build with `--features dense-decode-ref` \
+                 and drive the dense reference path explicitly)",
+                self.cfg.artifacts_dir
+            );
+        };
+        let bucket = self.scheduler.decode_bucket(rows.len());
+        let key = ArtifactKey::decode_paged(&self.cfg.variant, bucket);
+        let art = self.artifact(&key)?;
+        let bt = self.kv.block_tokens();
+        let mb = self.meta.cache_t.div_ceil(bt);
+        let mut tokens = vec![0i32; bucket];
+        let mut tables = vec![0i32; bucket * mb];
+        let mut lens = vec![0i32; bucket];
+        let mut group_blocks = Vec::new();
+        for (bi, &(slot, tok)) in rows.iter().enumerate() {
+            tokens[bi] = tok;
+            lens[bi] = self.kv.len(slot).unwrap_or(0) as i32;
+            for (j, id) in self.kv.slot_blocks(slot).iter().take(mb).enumerate() {
+                tables[bi * mb + j] = *id as i32;
+                group_blocks.push(*id);
+            }
+        }
+        // On device the pool stays resident and is donated between steps;
+        // the PJRT-CPU stub runner maintains a persistent export pair and
+        // updates it incrementally: zero last step's block regions, write
+        // only this group's blocks (shared prefix blocks once, everything
+        // else zero — the artifact's table gathers never read it).
+        let per_block = self.meta.layers * bt * self.meta.kv_heads * self.meta.head_dim();
+        let mut pk = std::mem::take(&mut self.pool_export_k);
+        let mut pv = std::mem::take(&mut self.pool_export_v);
+        let n = pool_blocks * per_block;
+        if pk.len() != n {
+            pk = vec![0.0; n];
+            pv = vec![0.0; n];
+            self.pool_exported.clear();
+        }
+        for &id in &self.pool_exported {
+            let at = id * per_block;
+            pk[at..at + per_block].fill(0.0);
+            pv[at..at + per_block].fill(0.0);
+        }
+        self.pool_exported = self
+            .kv
+            .pool()
+            .export_f32_blocks_into(&group_blocks, &mut pk, &mut pv);
+        let pool_dims = [
+            pool_blocks,
+            self.meta.layers,
+            bt,
+            self.meta.kv_heads,
+            self.meta.head_dim(),
+        ];
+        let mut literals = self.param_literals.clone();
+        literals.push(TensorIn::i32(&[bucket], tokens).to_literal()?);
+        // Pool literals straight from the persistent buffers: exactly one
+        // host copy into each literal, no intermediate clone.
+        let pool_dims_i64: Vec<i64> = pool_dims.iter().map(|x| *x as i64).collect();
+        literals.push(xla::Literal::vec1(&pk).reshape(&pool_dims_i64)?);
+        literals.push(xla::Literal::vec1(&pv).reshape(&pool_dims_i64)?);
+        self.pool_export_k = pk;
+        self.pool_export_v = pv;
+        literals.push(TensorIn::i32(&[bucket, mb], tables).to_literal()?);
+        literals.push(TensorIn::i32(&[bucket], lens).to_literal()?);
+        let mut outs = art.run_literals(&literals)?;
+
+        // outputs: logits (B, V), new_k (L, B, 1, Hkv, D), new_v.
+        let l = self.meta.layers;
+        let row = self.meta.kv_heads * self.meta.head_dim();
+        let mut full = Vec::new();
+        let (mut kr, mut vr) = (vec![0.0f32; l * row], vec![0.0f32; l * row]);
+        for (bi, &(slot, _)) in rows.iter().enumerate() {
+            for li in 0..l {
+                let src = (li * bucket + bi) * row;
+                kr[li * row..(li + 1) * row].copy_from_slice(&outs[1].data[src..src + row]);
+                vr[li * row..(li + 1) * row].copy_from_slice(&outs[2].data[src..src + row]);
+            }
+            match self.kv.append_token(slot, &kr, &vr) {
+                AppendOutcome::Appended => {}
+                // Both must finish below: another decode step would have no
+                // position to write.
+                AppendOutcome::Full | AppendOutcome::AtCapacity => full.push(slot),
+            }
+        }
+        Ok((std::mem::take(&mut outs[0].data), full))
+    }
+
+    /// One decode call for `slot` with a forced input token — the
+    /// chunked-prefill workhorse: the KV already mapped in the slot's
+    /// block table is the attention context and the forced token's KV is
+    /// appended at the slot's current length. Returns the logits row.
     fn forced_decode(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        #[cfg(feature = "dense-decode-ref")]
+        if self.cfg.use_dense_decode {
+            return self.forced_decode_dense(slot, token);
+        }
+        let (logits, _full) = self.paged_decode_forward(&[(slot, token)])?;
+        Ok(logits[..self.meta.vocab].to_vec())
+    }
+
+    /// The pre-paged dense `forced_decode` — reference implementation for
+    /// the `use_dense_decode` switch, so warm (chunked-prefill) requests
+    /// stay on the dense artifacts end to end during A/B comparisons.
+    #[cfg(feature = "dense-decode-ref")]
+    fn forced_decode_dense(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
         let bucket = self.scheduler.decode_bucket(1);
         let key = ArtifactKey::decode(&self.cfg.variant, bucket);
         let art = self.artifact(&key)?;
         let ss = self.meta.cache_t * self.meta.kv_heads * self.meta.head_dim();
         let n = self.meta.layers * bucket * ss;
-        // Reuse the chunk staging buffers (one forced decode per tail
-        // token — a fresh multi-MB zero-fill each would dominate).
-        if self.chunk_k.len() != n {
-            self.chunk_k.clear();
-            self.chunk_k.resize(n, 0.0);
-            self.chunk_v.clear();
-            self.chunk_v.resize(n, 0.0);
-        }
-        let lens = self
-            .kv
-            .gather_batch_into(&[slot], bucket, &mut self.chunk_k, &mut self.chunk_v);
-        let (k, v) = (self.chunk_k.clone(), self.chunk_v.clone());
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let lens = self.kv.gather_batch_into(&[slot], bucket, &mut k, &mut v);
         let mut tokens = vec![0i32; bucket];
         tokens[0] = token;
         let kv_dims = [
@@ -612,33 +799,68 @@ impl Engine {
         if group.is_empty() {
             return Ok(());
         }
+        #[cfg(feature = "dense-decode-ref")]
+        if self.cfg.use_dense_decode {
+            return self.run_decode_group_dense(group);
+        }
+        let t0 = Instant::now();
+        let rows: Vec<(usize, i32)> = group
+            .iter()
+            .map(|s| (*s, self.active[s].last_token))
+            .collect();
+        // "Sequence full" slots must finish below: the store clamps their
+        // length at cache_t, and another decode step would silently
+        // overwrite the last position.
+        let (logits, full_slots) = self.paged_decode_forward(&rows)?;
+
+        let vsz = self.meta.vocab;
+        let now = Instant::now();
+        for (bi, &slot) in group.iter().enumerate() {
+            let row = &logits[bi * vsz..(bi + 1) * vsz];
+            let tok = argmax(row);
+            let a = self.active.get_mut(&slot).unwrap();
+            a.generated.push(tok);
+            a.last_token = tok;
+            if let Some(ft) = a.first_token_at {
+                self.metrics
+                    .tpot
+                    .record(now.duration_since(ft).as_secs_f64() / a.generated.len().max(1) as f64);
+            }
+        }
+        self.metrics.generated_tokens += group.len() as u64;
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_batch_sum += group.len() as u64;
+        self.metrics.decode_time.record(t0.elapsed().as_secs_f64());
+
+        for &slot in group {
+            self.maybe_finish(slot, full_slots.contains(&slot));
+        }
+        Ok(())
+    }
+
+    /// The pre-paged dense decode step — **reference implementation only**,
+    /// kept for paged-vs-dense roundtrip tests against real artifacts:
+    /// gathers the group into a dense `(L, B, cache_t, …)` pair, runs the
+    /// legacy dense decode artifact, and scatters the whole buffer back.
+    /// Allocates its staging locally (the persistent scratch this used to
+    /// justify is gone from the hot path).
+    #[cfg(feature = "dense-decode-ref")]
+    pub fn run_decode_group_dense(&mut self, group: &[usize]) -> Result<()> {
+        if group.is_empty() {
+            return Ok(());
+        }
         let bucket = self.scheduler.decode_bucket(group.len());
         let key = ArtifactKey::decode(&self.cfg.variant, bucket);
         let art = self.artifact(&key)?;
         let t0 = Instant::now();
 
         let ss = self.meta.cache_t * self.meta.kv_heads * self.meta.head_dim();
-        // Stage the batch in reusable scratch (padding rows beyond the group
-        // carry stale-but-masked data; pos=0 hides them from attention and
-        // their outputs are never scattered back).
         let need = self.meta.layers * bucket * ss;
-        if self.scratch_bucket != bucket {
-            self.scratch_k.clear();
-            self.scratch_k.resize(need, 0.0);
-            self.scratch_v.clear();
-            self.scratch_v.resize(need, 0.0);
-            self.scratch_bucket = bucket;
-        }
-        let lens = self
-            .kv
-            .gather_batch_into(group, bucket, &mut self.scratch_k, &mut self.scratch_v);
-        // One unavoidable copy into the PJRT literal; the scratch persists.
-        let (k, v) = (self.scratch_k.clone(), self.scratch_v.clone());
+        let mut k = vec![0.0f32; need];
+        let mut v = vec![0.0f32; need];
+        let lens = self.kv.gather_batch_into(group, bucket, &mut k, &mut v);
         let tokens: Vec<i32> = {
-            let mut t: Vec<i32> = group
-                .iter()
-                .map(|s| self.active[s].last_token)
-                .collect();
+            let mut t: Vec<i32> = group.iter().map(|s| self.active[s].last_token).collect();
             t.resize(bucket, 0);
             t
         };
@@ -657,9 +879,8 @@ impl Engine {
         literals.push(TensorIn::i32(&[bucket], lens).to_literal()?);
         let outs = art.run_literals(&literals)?;
 
-        // outputs: logits (B, V), k, v.
+        // outputs: logits (B, V), k, v — scatter back only the real rows.
         let vsz = self.meta.vocab;
-        // Scatter back only the real rows.
         let (l, b) = (self.meta.layers, group.len());
         let (mut kr, mut vr) = (vec![0.0f32; l * b * ss], vec![0.0f32; l * b * ss]);
         for li in 0..l {
@@ -670,9 +891,6 @@ impl Engine {
                 vr[dst..dst + ss].copy_from_slice(&outs[2].data[src..src + ss]);
             }
         }
-        // "Sequence full" slots must finish below: the store clamps their
-        // length at cache_t, and another decode step would silently
-        // overwrite the last position.
         let full_slots = self.kv.scatter_batch(group, &kr, &vr);
 
         let now = Instant::now();

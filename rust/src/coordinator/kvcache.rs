@@ -36,6 +36,29 @@
 //! payload at any realistic geometry, `layout.scale_bytes_per_block()`)
 //! and is charged against the fixed workspace reserve so the per-token
 //! rate — and with it the Table 6 frontier — stays exact.
+//!
+//! # The paged read/write contract (ISSUE 5)
+//!
+//! The decode hot path is **block-table-native**:
+//!
+//! * Reads go through a [`PagedAttentionView`]: per-slot `&[BlockId]`
+//!   tables plus per-block FP8 scale refs, dequantized on read at block
+//!   granularity ([`BlockPool::read_block_head`] decodes one 16-token
+//!   block tile — the SRAM-resident working set of a real paged kernel).
+//!   There is **no** dense `(L, B, T, …)` staging, no zero-fill, and no
+//!   bucket padding: a step reads exactly each slot's live block bytes,
+//!   which [`BlockPool::bytes_read`] instruments so tests can assert it.
+//! * Writes go through [`KvStore::append_token`]: one token is quantized
+//!   into the hot block (copy-on-write first if that block is still
+//!   readable elsewhere), replacing the full dense scatter.
+//!
+//! [`KvStore::gather_batch_into`] / [`KvStore::gather_batch`] /
+//! [`KvStore::scatter_batch`] remain as the **dense reference
+//! implementation** — used by roundtrip/property tests and the
+//! feature-gated (`dense-decode-ref`) reference engine path — and are no
+//! longer on the decode hot path.
+
+use std::cell::Cell;
 
 use anyhow::{bail, Result};
 
@@ -281,6 +304,12 @@ pub struct BlockPool {
     data: KvData,
     refs: Vec<u32>,
     free: Vec<BlockId>,
+    /// Physical bytes dequantized through the paged read path
+    /// ([`Self::read_block_head`]) since the last reset — the
+    /// instrumentation behind the "a decode step reads exactly the live
+    /// block bytes" contract. Dense reference gathers are deliberately
+    /// *not* counted: the counter measures the paged path alone.
+    bytes_read: Cell<u64>,
 }
 
 impl BlockPool {
@@ -323,6 +352,7 @@ impl BlockPool {
             // Reversed so the first alloc hands out block 0 — deterministic
             // IDs make failures readable.
             free: (0..total_blocks).rev().collect(),
+            bytes_read: Cell::new(0),
         }
     }
 
@@ -552,6 +582,281 @@ impl BlockPool {
             }
         }
     }
+
+    /// Physical bytes dequantized through the paged read path since the
+    /// last [`Self::reset_bytes_read`].
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.get()
+    }
+
+    pub fn reset_bytes_read(&self) {
+        self.bytes_read.set(0);
+    }
+
+    /// Bytes one [`Self::read_block_head`] call moves: the (layer, kv-head)
+    /// share of a block's K+V payload plus, under FP8, its two f32 scales.
+    /// Summed over all (layer, kv-head) pairs and a sequence's live blocks
+    /// this is exactly `KvLayout::block_bytes(block_tokens)` per block —
+    /// the same rate every capacity consumer charges.
+    fn block_read_bytes_per_head(&self) -> usize {
+        let payload = 2 * self.block_tokens * self.head_dim * self.dtype().elem_bytes();
+        let scales = match &self.data {
+            KvData::Fp8 { .. } => 2 * 4,
+            _ => 0,
+        };
+        payload + scales
+    }
+
+    /// Allocate a private copy of a live block: payload *and* scales are
+    /// duplicated. The copy-on-write primitive behind
+    /// [`KvStore::append_token`] — unlike the dense scatter (which rewrites
+    /// the whole valid span from its batch buffer and can skip the copy),
+    /// a single-token append must preserve the shared block's history.
+    pub fn clone_block(&mut self, src: BlockId) -> Option<BlockId> {
+        assert!(self.refs[src] > 0, "clone of a free block {src}");
+        let dst = self.alloc()?;
+        let per_block = self.layers * self.block_tokens * self.row();
+        let (sb, db) = (src * per_block, dst * per_block);
+        let groups = self.layers * self.kv_heads;
+        match &mut self.data {
+            KvData::F32 { k, v } => {
+                k.copy_within(sb..sb + per_block, db);
+                v.copy_within(sb..sb + per_block, db);
+            }
+            KvData::Bf16 { k, v } => {
+                k.copy_within(sb..sb + per_block, db);
+                v.copy_within(sb..sb + per_block, db);
+            }
+            KvData::Fp8 {
+                k, v, k_scale, v_scale, ..
+            } => {
+                k.copy_within(sb..sb + per_block, db);
+                v.copy_within(sb..sb + per_block, db);
+                let (ss, ds) = (src * groups, dst * groups);
+                k_scale.copy_within(ss..ss + groups, ds);
+                v_scale.copy_within(ss..ss + groups, ds);
+            }
+        }
+        Some(dst)
+    }
+
+    /// Per-block FP8 scale refs for one layer of block `id` (kv_heads-long
+    /// K and V slices), `None` for scale-free dtypes. This is the scale
+    /// metadata a paged kernel loads alongside each block's codes.
+    pub fn block_scales(&self, id: BlockId, layer: usize) -> Option<(&[f32], &[f32])> {
+        match &self.data {
+            KvData::Fp8 {
+                k_scale, v_scale, ..
+            } => {
+                let si = (id * self.layers + layer) * self.kv_heads;
+                Some((
+                    &k_scale[si..si + self.kv_heads],
+                    &v_scale[si..si + self.kv_heads],
+                ))
+            }
+            _ => None,
+        }
+    }
+
+    /// Dequantize one (layer, kv-head) tile of block `id` — all
+    /// `block_tokens` positions × `head_dim` — into `k_out`/`v_out`
+    /// (row-major `(token, dim)`). This is the paged kernel's unit of HBM
+    /// traffic: a whole block streams regardless of how many of its
+    /// positions are valid (the caller masks scores past the sequence
+    /// length), which is why [`Self::bytes_read`] charges full blocks.
+    pub fn read_block_head(
+        &self,
+        id: BlockId,
+        layer: usize,
+        kv_head: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let bt = self.block_tokens;
+        let d = self.head_dim;
+        let row = self.row();
+        assert!(k_out.len() >= bt * d, "k tile too small");
+        assert!(v_out.len() >= bt * d, "v tile too small");
+        let base = (id * self.layers + layer) * bt * row + kv_head * d;
+        match &self.data {
+            KvData::F32 { k, v } => {
+                for ti in 0..bt {
+                    let s = base + ti * row;
+                    let o = ti * d;
+                    k_out[o..o + d].copy_from_slice(&k[s..s + d]);
+                    v_out[o..o + d].copy_from_slice(&v[s..s + d]);
+                }
+            }
+            KvData::Bf16 { k, v } => {
+                for ti in 0..bt {
+                    let s = base + ti * row;
+                    let o = ti * d;
+                    for i in 0..d {
+                        k_out[o + i] = bf16_to_f32(k[s + i]);
+                        v_out[o + i] = bf16_to_f32(v[s + i]);
+                    }
+                }
+            }
+            KvData::Fp8 {
+                k,
+                v,
+                k_scale,
+                v_scale,
+                table,
+                ..
+            } => {
+                let si = (id * self.layers + layer) * self.kv_heads + kv_head;
+                let (ks, vs) = (k_scale[si], v_scale[si]);
+                for ti in 0..bt {
+                    let s = base + ti * row;
+                    let o = ti * d;
+                    for i in 0..d {
+                        k_out[o + i] = table.get(k[s + i]) * ks;
+                        v_out[o + i] = table.get(v[s + i]) * vs;
+                    }
+                }
+            }
+        }
+        self.bytes_read
+            .set(self.bytes_read.get() + self.block_read_bytes_per_head() as u64);
+    }
+
+    /// Write one token's (L, Hkv, D) K/V rows at block position `tok`,
+    /// quantizing to the pool dtype. FP8 re-encodes the block's valid span
+    /// `[0, tok]` from its *dequantized* history plus the new row, with
+    /// fresh per-(layer, kv-head) scales — exactly the arithmetic the dense
+    /// reference performs when it rewrites the hot block from a gathered
+    /// (dequantized) batch buffer, so both write paths store identical
+    /// bytes. The caller must hold the block exclusively (refcount 1).
+    pub fn append_token(&mut self, id: BlockId, tok: usize, k_row: &[f32], v_row: &[f32]) {
+        let bt = self.block_tokens;
+        let row = self.row();
+        assert!(tok < bt, "append past block capacity");
+        assert_eq!(k_row.len(), self.layers * row, "append k row size");
+        assert_eq!(v_row.len(), self.layers * row, "append v row size");
+        debug_assert_eq!(self.refs[id], 1, "append into a shared or free block");
+        let (layers, kv_heads, head_dim) = (self.layers, self.kv_heads, self.head_dim);
+        match &mut self.data {
+            KvData::F32 { k, v } => {
+                for l in 0..layers {
+                    let dst = (id * layers + l) * bt * row + tok * row;
+                    let src = l * row;
+                    k[dst..dst + row].copy_from_slice(&k_row[src..src + row]);
+                    v[dst..dst + row].copy_from_slice(&v_row[src..src + row]);
+                }
+            }
+            KvData::Bf16 { k, v } => {
+                for l in 0..layers {
+                    let dst = (id * layers + l) * bt * row + tok * row;
+                    let src = l * row;
+                    for i in 0..row {
+                        k[dst + i] = f32_to_bf16(k_row[src + i]);
+                        v[dst + i] = f32_to_bf16(v_row[src + i]);
+                    }
+                }
+            }
+            KvData::Fp8 {
+                format,
+                table,
+                k,
+                v,
+                k_scale,
+                v_scale,
+            } => {
+                let mut ks = vec![0.0f32; bt * row];
+                let mut vs = vec![0.0f32; bt * row];
+                for l in 0..layers {
+                    let bbase = (id * layers + l) * bt * row;
+                    let si = (id * layers + l) * kv_heads;
+                    decode_region_fp8(
+                        &k[bbase..bbase + bt * row],
+                        &mut ks,
+                        &k_scale[si..si + kv_heads],
+                        table,
+                        tok,
+                        kv_heads,
+                        head_dim,
+                    );
+                    decode_region_fp8(
+                        &v[bbase..bbase + bt * row],
+                        &mut vs,
+                        &v_scale[si..si + kv_heads],
+                        table,
+                        tok,
+                        kv_heads,
+                        head_dim,
+                    );
+                    ks[tok * row..(tok + 1) * row].copy_from_slice(&k_row[l * row..(l + 1) * row]);
+                    vs[tok * row..(tok + 1) * row].copy_from_slice(&v_row[l * row..(l + 1) * row]);
+                    encode_region_fp8(
+                        &ks,
+                        &mut k[bbase..bbase + bt * row],
+                        &mut k_scale[si..si + kv_heads],
+                        tok + 1,
+                        bt,
+                        kv_heads,
+                        head_dim,
+                        *format,
+                    );
+                    encode_region_fp8(
+                        &vs,
+                        &mut v[bbase..bbase + bt * row],
+                        &mut v_scale[si..si + kv_heads],
+                        tok + 1,
+                        bt,
+                        kv_heads,
+                        head_dim,
+                        *format,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Dequantize the listed blocks into a caller-owned, persistent f32
+    /// pool-operand pair laid out `(block, layer, token, kv_head,
+    /// head_dim)` (the compiled pool shape of the paged decode artifact).
+    /// Only the listed blocks are written — duplicates (a shared prefix
+    /// mapped by several rows) once — and the distinct ids written are
+    /// returned so the caller can zero exactly those regions before the
+    /// next export instead of re-zeroing the whole pool. A device
+    /// deployment keeps the pool resident in HBM and donates it between
+    /// steps; this incremental export exists only for the PJRT-CPU stub
+    /// runner.
+    pub fn export_f32_blocks_into(
+        &self,
+        ids: &[BlockId],
+        k: &mut [f32],
+        v: &mut [f32],
+    ) -> Vec<BlockId> {
+        let per_block = self.layers * self.block_tokens * self.row();
+        let mut seen = vec![false; self.total_blocks];
+        let mut written = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if seen[id] {
+                continue;
+            }
+            seen[id] = true;
+            assert!(
+                (id + 1) * per_block <= k.len() && (id + 1) * per_block <= v.len(),
+                "block id {id} beyond the export buffers"
+            );
+            written.push(id);
+            if self.refs[id] == 0 {
+                continue; // free block: its (pre-zeroed) region stays zero
+            }
+            self.gather_into(
+                id,
+                k,
+                v,
+                id * per_block,
+                self.block_tokens * self.row(),
+                0,
+                self.block_tokens,
+            );
+        }
+        written
+    }
 }
 
 /// One sequence's view into the pool: its physical blocks, in token order,
@@ -560,6 +865,143 @@ impl BlockPool {
 struct SlotTable {
     blocks: Vec<BlockId>,
     len: usize,
+}
+
+/// Outcome of a paged single-token write ([`KvStore::append_token`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppendOutcome {
+    /// Token stored; the sequence still has room.
+    Appended,
+    /// Token stored and the sequence just reached cache capacity
+    /// (`len == t`) — the caller must finish the request (the same
+    /// "sequence full" signal the dense `scatter_batch` returns).
+    Full,
+    /// No position to write: the slot is inactive or already at capacity.
+    /// The caller's `maybe_finish` retires on this, exactly as it does on
+    /// [`Self::Full`] — a further append would have nowhere to land.
+    AtCapacity,
+}
+
+/// One slot's borrowed decode-read state: its physical block table and
+/// valid length. Shared entries (refcount > 1) are fine to *read* — only
+/// writes trigger copy-on-write.
+pub struct PagedSlotView<'a> {
+    /// The store slot this row reads.
+    pub slot: usize,
+    /// Physical block IDs in token order (may extend past `len` when a
+    /// longer cached prefix was mapped; blocks past the live range are
+    /// never read).
+    pub blocks: &'a [BlockId],
+    /// Valid token count.
+    pub len: usize,
+}
+
+impl PagedSlotView<'_> {
+    /// Blocks holding valid tokens (`ceil(len / block_tokens)`).
+    pub fn live_blocks(&self, block_tokens: usize) -> usize {
+        self.len.div_ceil(block_tokens)
+    }
+}
+
+/// The block-table-native decode read contract (ISSUE 5): per-slot
+/// `&[BlockId]` tables plus per-block FP8 scale refs, handed to the
+/// compute layer with **no copy, no zero-fill, and no bucket padding**.
+/// Reads dequantize at block granularity ([`BlockPool::read_block_head`]),
+/// so a decode step's HBM traffic is exactly the group's live block bytes
+/// — the quantity [`BlockPool::bytes_read`] instruments and the paged
+/// gaudisim pricing charges.
+pub struct PagedAttentionView<'a> {
+    pool: &'a BlockPool,
+    layout: KvLayout,
+    slots: Vec<PagedSlotView<'a>>,
+}
+
+impl<'a> PagedAttentionView<'a> {
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot(&self, i: usize) -> &PagedSlotView<'a> {
+        &self.slots[i]
+    }
+
+    pub fn pool(&self) -> &'a BlockPool {
+        self.pool
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    /// Physical bytes of slot `i`'s live blocks — what one decode step
+    /// reads for that row (payload + FP8 block scales, at the shared
+    /// `KvLayout` rate).
+    pub fn slot_live_block_bytes(&self, i: usize) -> usize {
+        self.slots[i].live_blocks(self.pool.block_tokens())
+            * self.layout.block_bytes(self.pool.block_tokens())
+    }
+
+    /// Total physical bytes one decode step over this group reads — the
+    /// sum of each slot's live block bytes, with no bucket padding.
+    pub fn live_block_bytes(&self) -> usize {
+        (0..self.slots.len())
+            .map(|i| self.slot_live_block_bytes(i))
+            .sum()
+    }
+
+    /// Per-block FP8 scale refs (K, V) for `block_idx` of slot `i` at
+    /// `layer`; `None` for scale-free dtypes.
+    pub fn block_scales(&self, i: usize, block_idx: usize, layer: usize) -> Option<(&[f32], &[f32])> {
+        self.pool.block_scales(self.slots[i].blocks[block_idx], layer)
+    }
+
+    /// Single-head paged attention readout for slot `i`: softmax(q·Kᵀ/√d)·V
+    /// over the slot's valid positions, walking the block table with an
+    /// online (streaming) softmax — one block-sized K/V tile in flight at
+    /// a time, dequantized on read, never a dense (T, …) buffer. Returns
+    /// zeros for an empty sequence.
+    pub fn attend(&self, i: usize, layer: usize, kv_head: usize, q: &[f32]) -> Vec<f32> {
+        let d = self.layout.head_dim;
+        assert_eq!(q.len(), d, "query dim");
+        let s = &self.slots[i];
+        let mut acc = vec![0.0f32; d];
+        if s.len == 0 {
+            return acc;
+        }
+        let bt = self.pool.block_tokens();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut k_tile = vec![0.0f32; bt * d];
+        let mut v_tile = vec![0.0f32; bt * d];
+        // Online softmax state: running max, normalizer, weighted V sum.
+        let mut m = f32::NEG_INFINITY;
+        let mut z = 0.0f32;
+        let live = s.len.div_ceil(bt);
+        for (bi, &id) in s.blocks.iter().take(live).enumerate() {
+            let tok0 = bi * bt;
+            let count = bt.min(s.len - tok0);
+            self.pool.read_block_head(id, layer, kv_head, &mut k_tile, &mut v_tile);
+            for ti in 0..count {
+                let mut score = 0.0f32;
+                for (di, qd) in q.iter().enumerate() {
+                    score += qd * k_tile[ti * d + di];
+                }
+                score *= scale;
+                let m_new = m.max(score);
+                let corr = (m - m_new).exp(); // first iteration: exp(-inf) = 0
+                let w = (score - m_new).exp();
+                z = z * corr + w;
+                for di in 0..d {
+                    acc[di] = acc[di] * corr + w * v_tile[ti * d + di];
+                }
+                m = m_new;
+            }
+        }
+        let inv = 1.0 / z.max(1e-30);
+        for a in &mut acc {
+            *a *= inv;
+        }
+        acc
+    }
 }
 
 /// Host-side paged KV storage for `slots` concurrent sequences of up to
@@ -794,8 +1236,10 @@ impl KvStore {
         self.tables[slot] = Some(SlotTable { blocks, len });
     }
 
-    /// Gather `group` slots into a contiguous (L, B, T, Hkv, D) batch
-    /// buffer for the decode artifact. Returns (k, v, lens).
+    /// **Dense reference only** (roundtrip/property tests and the
+    /// `dense-decode-ref` engine path — not the decode hot path, which
+    /// reads through [`Self::paged_view`]): gather `group` slots into a
+    /// contiguous (L, B, T, Hkv, D) batch buffer. Returns (k, v, lens).
     pub fn gather_batch(&self, group: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
         let b = group.len();
         let ss = self.slot_stride();
@@ -805,13 +1249,15 @@ impl KvStore {
         (k, v, lens)
     }
 
-    /// Allocation-free gather into caller-owned buffers sized for a batch
-    /// of `bucket` rows (§Perf L3: the per-step `vec!` zero-fill dominated
-    /// the gather path), walking each slot's block table and dequantizing
-    /// to f32 on the way out. Rows ≥ group.len() are left untouched — the
-    /// engine zeroes padding rows only when the bucket grows. Positions at
-    /// or past each slot's valid length come back as exact zeros (the pool
-    /// never stores masked pad positions).
+    /// **Dense reference only** — the pre-paged decode staging, kept for
+    /// roundtrip/property tests and the feature-gated (`dense-decode-ref`)
+    /// reference engine; the hot path reads through [`Self::paged_view`]
+    /// with no dense staging at all. Allocation-free gather into
+    /// caller-owned buffers sized for a batch of `bucket` rows, walking
+    /// each slot's block table and dequantizing to f32 on the way out.
+    /// Rows ≥ group.len() are left untouched. Positions at or past each
+    /// slot's valid length come back as exact zeros (the pool never
+    /// stores masked pad positions).
     pub fn gather_batch_into(
         &self,
         group: &[usize],
@@ -859,6 +1305,9 @@ impl KvStore {
         lens
     }
 
+    /// **Dense reference only** — the write-side twin of
+    /// [`Self::gather_batch_into`]; the hot path appends through
+    /// [`Self::append_token`] instead (one token, no batch buffer).
     /// Scatter an updated (L, B, T, Hkv, D) batch back into the slots and
     /// bump their lengths. The paged contract: only the *hot* block — the
     /// one holding the newly appended position — is written, re-encoded
@@ -933,6 +1382,110 @@ impl KvStore {
         }
     }
 
+    /// Like `ensure_private_block`, but *payload-preserving*: the paged
+    /// append writes a single position, so a shared hot block's valid
+    /// history must be cloned into the private replacement
+    /// ([`BlockPool::clone_block`]). The dense scatter skips the copy only
+    /// because it rewrites the whole valid span from its batch buffer.
+    fn ensure_private_hot_block(&mut self, slot: usize, hb: usize) {
+        loop {
+            let have = self.tables[slot].as_ref().expect("active slot").blocks.len();
+            if have > hb {
+                break;
+            }
+            let id = self
+                .pool
+                .alloc()
+                .expect("pool provisioned for slots + prefix cache");
+            self.tables[slot].as_mut().expect("active slot").blocks.push(id);
+        }
+        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        if self.pool.ref_count(id) > 1 {
+            let fresh = self
+                .pool
+                .clone_block(id)
+                .expect("pool provisioned for slots + prefix cache");
+            self.tables[slot].as_mut().expect("active slot").blocks[hb] = fresh;
+            self.pool.release(id);
+        }
+    }
+
+    /// The paged decode write path: quantize one token's (L, Hkv, D) K/V
+    /// rows into `slot`'s hot block and bump its length — no dense batch
+    /// buffer, no rewrite of history. Copy-on-write fires first when the
+    /// hot block is still readable by another sequence or the prefix cache
+    /// (valid history is cloned, then the append lands privately), and an
+    /// append landing exactly on a block boundary allocates the next
+    /// block. At capacity nothing is written and
+    /// [`AppendOutcome::AtCapacity`] keeps signalling — the caller must
+    /// finish the request, exactly as with the dense scatter's "sequence
+    /// full" list.
+    pub fn append_token(&mut self, slot: usize, k_row: &[f32], v_row: &[f32]) -> AppendOutcome {
+        let row = self.row();
+        assert_eq!(k_row.len(), self.layers * row, "append k size");
+        assert_eq!(v_row.len(), self.layers * row, "append v size");
+        let Some(len) = self.tables[slot].as_ref().map(|t| t.len) else {
+            return AppendOutcome::AtCapacity; // inactive slot: nothing to append to
+        };
+        if len >= self.t {
+            return AppendOutcome::AtCapacity;
+        }
+        let bt = self.pool.block_tokens();
+        let hb = len / bt;
+        self.ensure_private_hot_block(slot, hb);
+        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        self.pool.append_token(id, len % bt, k_row, v_row);
+        let tab = self.tables[slot].as_mut().expect("active slot");
+        tab.len = len + 1;
+        if tab.len == self.t {
+            AppendOutcome::Full
+        } else {
+            AppendOutcome::Appended
+        }
+    }
+
+    /// Fork `src` into a fresh slot sharing its *entire* history — the
+    /// beam-search primitive, a thin wrapper over the pool's multi-reader
+    /// blocks: every block gains a reference, zero bytes are copied, and
+    /// each branch's next [`Self::append_token`] copy-on-writes its own
+    /// hot block so the branches diverge privately. `None` when no slot is
+    /// free or `src` is inactive.
+    pub fn fork_slot(&mut self, src: usize) -> Option<usize> {
+        let (blocks, len) = {
+            let tab = self.tables[src].as_ref()?;
+            (tab.blocks.clone(), tab.len)
+        };
+        let dst = self.alloc_slot()?;
+        for &id in &blocks {
+            self.pool.retain(id);
+        }
+        self.tables[dst] = Some(SlotTable { blocks, len });
+        Some(dst)
+    }
+
+    /// Borrow the group's block-table-native read state: per-slot block
+    /// tables + lengths over the shared pool. Inactive slots read as
+    /// empty. This — not a dense gather — is what the decode step hands
+    /// the compute layer.
+    pub fn paged_view(&self, group: &[usize]) -> PagedAttentionView<'_> {
+        let layout = self.layout();
+        let slots = group
+            .iter()
+            .map(|&slot| {
+                let (blocks, len) = match &self.tables[slot] {
+                    Some(tab) => (tab.blocks.as_slice(), tab.len),
+                    None => (&[] as &[BlockId], 0),
+                };
+                PagedSlotView { slot, blocks, len }
+            })
+            .collect();
+        PagedAttentionView {
+            pool: &self.pool,
+            layout,
+            slots,
+        }
+    }
+
     /// Exact bytes this store's pool provisions:
     /// `total blocks × layout.block_bytes(block_tokens)`.
     pub fn kv_bytes(&self) -> usize {
@@ -953,42 +1506,22 @@ impl KvStore {
     /// over the valid positions; readouts are concatenated in
     /// (slot, layer, head, dim) order. Two stores holding the same written
     /// data produce comparable vectors regardless of dtype.
+    ///
+    /// Block-table-native since ISSUE 5: each (slot, layer, head) readout
+    /// walks the slot's block table through [`PagedAttentionView::attend`]
+    /// — dequant-on-read at block granularity, no dense gather — so the
+    /// probe's HBM traffic is exactly the group's live block bytes
+    /// ([`BlockPool::bytes_read`] instruments it).
     pub fn decode_attention_probe(&self, slots: &[usize], seed: u64) -> Vec<f32> {
         let mut rng = XorShiftRng::new(seed);
         let d = self.head_dim;
-        let ss = self.slot_stride();
-        let (k, v, lens) = self.gather_batch(slots);
-        let b = slots.len();
-        let mut out = Vec::with_capacity(b * self.layers * self.kv_heads * d);
-        for bi in 0..b {
-            let len = (lens[bi].max(1)) as usize;
+        let view = self.paged_view(slots);
+        let mut out = Vec::with_capacity(slots.len() * self.layers * self.kv_heads * d);
+        for bi in 0..slots.len() {
             for l in 0..self.layers {
-                let base = (l * b + bi) * ss;
                 for h in 0..self.kv_heads {
                     let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-                    let mut scores = Vec::with_capacity(len);
-                    for ti in 0..len {
-                        let off = base + (ti * self.kv_heads + h) * d;
-                        let mut s = 0.0f32;
-                        for (di, qd) in q.iter().enumerate() {
-                            s += qd * k[off + di];
-                        }
-                        scores.push(s / (d as f32).sqrt());
-                    }
-                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut ws: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
-                    let z: f32 = ws.iter().sum::<f32>().max(1e-30);
-                    for w in &mut ws {
-                        *w /= z;
-                    }
-                    for di in 0..d {
-                        let mut acc = 0.0f32;
-                        for (ti, w) in ws.iter().enumerate() {
-                            let off = base + (ti * self.kv_heads + h) * d;
-                            acc += w * v[off + di];
-                        }
-                        out.push(acc);
-                    }
+                    out.extend(view.attend(bi, l, h, &q));
                 }
             }
         }
@@ -1381,6 +1914,173 @@ mod tests {
         let slot = s.alloc_slot().unwrap();
         s.write_slot(slot, &vec![1.0; 16], &vec![1.0; 16], 3);
         assert_eq!(s.resident_bytes(), s.layout().block_bytes(8));
+    }
+
+    #[test]
+    fn append_token_matches_dense_scatter_reference_bitwise() {
+        // The same logical writes through both paths — paged append vs
+        // dense gather → poke → scatter — must store identical bytes:
+        // append re-encodes the hot block from its dequantized history
+        // exactly as the dense reference re-encodes it from the gathered
+        // (dequantized) batch buffer.
+        for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+            let (l, t, kvh, hd, bt) = (2, 12, 2, 3, 4);
+            let mut a = KvStore::with_block_tokens(l, 1, t, kvh, hd, dtype, bt, 0);
+            let mut b = KvStore::with_block_tokens(l, 1, t, kvh, hd, dtype, bt, 0);
+            let sa = a.alloc_slot().unwrap();
+            let sb = b.alloc_slot().unwrap();
+            let mut rng = XorShiftRng::new(5);
+            let ss = t * kvh * hd;
+            let n = l * ss;
+            let k0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let v0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            a.write_slot(sa, &k0, &v0, 6);
+            b.write_slot(sb, &k0, &v0, 6);
+            let row = kvh * hd;
+            for step in 0..3 {
+                let kr: Vec<f32> = (0..l * row).map(|_| rng.normal()).collect();
+                let vr: Vec<f32> = (0..l * row).map(|_| rng.normal()).collect();
+                assert_eq!(a.append_token(sa, &kr, &vr), AppendOutcome::Appended);
+                let (mut kg, mut vg, _) = b.gather_batch(&[sb]);
+                let len = b.len(sb).unwrap();
+                for li in 0..l {
+                    let base = (li * t + len) * row;
+                    kg[base..base + row].copy_from_slice(&kr[li * row..(li + 1) * row]);
+                    vg[base..base + row].copy_from_slice(&vr[li * row..(li + 1) * row]);
+                }
+                b.scatter_batch(&[sb], &kg, &vg);
+                let (ka, va, la) = a.gather_batch(&[sa]);
+                let (kb, vb, lb) = b.gather_batch(&[sb]);
+                assert_eq!(la, lb, "{dtype:?} step {step}");
+                for i in 0..n {
+                    assert_eq!(ka[i].to_bits(), kb[i].to_bits(), "{dtype:?} K[{i}] step {step}");
+                    assert_eq!(va[i].to_bits(), vb[i].to_bits(), "{dtype:?} V[{i}] step {step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fork_slot_shares_history_and_isolates_branch_writes() {
+        let (l, t, kvh, hd, bt) = (1, 16, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, KvDtype::F32, bt, 0);
+        let a = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let row = kvh * hd;
+        let k0: Vec<f32> = (0..l * ss).map(|i| 1.0 + i as f32).collect();
+        s.write_slot(a, &k0, &k0, 6); // blocks: [0, 4) full + [4, 6) partial
+        let b = s.fork_slot(a).expect("free slot");
+        assert_eq!(s.slot_blocks(a), s.slot_blocks(b), "fork maps, never copies");
+        assert_eq!(s.len(b), Some(6));
+        let shared = s.slot_blocks(a);
+        assert_eq!(s.pool().ref_count(shared[0]), 2);
+        assert_eq!(s.pool().ref_count(shared[1]), 2);
+        assert_eq!(s.pool().used_blocks(), 2, "fork allocates nothing");
+        // The branches diverge: each append CoWs its own hot block.
+        let ka = vec![111.0f32; l * row];
+        let kb = vec![222.0f32; l * row];
+        assert_eq!(s.append_token(a, &ka, &ka), AppendOutcome::Appended);
+        assert_eq!(s.append_token(b, &kb, &kb), AppendOutcome::Appended);
+        let (nab, nbb) = (s.slot_blocks(a), s.slot_blocks(b));
+        assert_eq!(nab[0], nbb[0], "cold shared history stays mapped once");
+        assert_ne!(nab[1], nbb[1], "hot block must diverge per branch");
+        assert_eq!(s.pool().used_blocks(), 3, "one CoW copy, shared root once");
+        assert_eq!(s.pool().ref_count(nab[0]), 2);
+        assert_eq!(s.pool().ref_count(nab[1]), 1);
+        assert_eq!(s.pool().ref_count(nbb[1]), 1);
+        // Each branch reads the shared history plus exactly its own write.
+        let (kra, _, _) = s.gather_batch(&[a]);
+        let (krb, _, _) = s.gather_batch(&[b]);
+        assert_eq!(kra[..6 * row], k0[..6 * row]);
+        assert_eq!(krb[..6 * row], k0[..6 * row]);
+        assert!(kra[6 * row..7 * row].iter().all(|x| *x == 111.0));
+        assert!(krb[6 * row..7 * row].iter().all(|x| *x == 222.0));
+        s.free_slot(b);
+        assert_eq!(s.pool().ref_count(nab[0]), 1, "branch release keeps a's refs");
+        assert_eq!(s.pool().used_blocks(), 2);
+    }
+
+    #[test]
+    fn paged_probe_reads_exactly_the_live_block_bytes() {
+        // The zero-dense-materialization contract: a decode step's reads
+        // equal the sum over the group of each slot's live block bytes —
+        // no bucket padding, no window padding.
+        for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+            let (l, t, kvh, hd, bt) = (2, 32, 2, 4, 4);
+            let mut s = KvStore::with_block_tokens(l, 3, t, kvh, hd, dtype, bt, 0);
+            let ss = t * kvh * hd;
+            let buf: Vec<f32> = (0..l * ss).map(|i| (i % 7) as f32 * 0.25).collect();
+            let lens = [5usize, 12, 32];
+            let mut group = Vec::new();
+            for &len in &lens {
+                let slot = s.alloc_slot().unwrap();
+                s.write_slot(slot, &buf, &buf, len);
+                group.push(slot);
+            }
+            s.pool().reset_bytes_read();
+            let _ = s.decode_attention_probe(&group, 3);
+            let view = s.paged_view(&group);
+            let expect = view.live_block_bytes();
+            assert_eq!(s.pool().bytes_read(), expect as u64, "{dtype:?}");
+            // The same number through the shared accounting contract.
+            let blocks: usize = lens.iter().map(|&x| x.div_ceil(bt)).sum();
+            assert_eq!(expect, blocks * s.layout().block_bytes(bt), "{dtype:?}");
+            // Strictly less than any dense staging of the (B, T) window.
+            let dense = group.len() * t.div_ceil(bt) * s.layout().block_bytes(bt);
+            assert!(expect < dense, "{dtype:?}: padding crept back in");
+        }
+    }
+
+    #[test]
+    fn paged_view_exposes_tables_and_scale_refs() {
+        let (l, t, kvh, hd, bt) = (2, 16, 2, 4, 4);
+        let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, KvDtype::FP8_DEFAULT, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let buf: Vec<f32> = (0..l * ss).map(|i| 0.5 + (i % 11) as f32).collect();
+        s.write_slot(slot, &buf, &buf, 10);
+        let view = s.paged_view(&[slot]);
+        assert_eq!(view.num_slots(), 1);
+        assert_eq!(view.slot(0).len, 10);
+        assert_eq!(view.slot(0).blocks, s.slot_blocks(slot).as_slice());
+        assert_eq!(view.slot(0).live_blocks(bt), 3);
+        let (ks, vs) = view.block_scales(0, 0, 1).expect("fp8 has block scales");
+        assert_eq!(ks.len(), kvh);
+        assert_eq!(vs.len(), kvh);
+        assert!(ks.iter().all(|x| *x > 0.0));
+        // Scale-free dtypes expose no scale metadata.
+        let mut f = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::F32, bt, 0);
+        let fs = f.alloc_slot().unwrap();
+        f.write_slot(fs, &buf, &buf, 4);
+        assert!(f.paged_view(&[fs]).block_scales(0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn append_token_capacity_and_boundary_semantics() {
+        let (l, t, kvh, hd, bt) = (1, 8, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::F32, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let row = kvh * hd;
+        let ss = t * row;
+        s.write_slot(slot, &vec![1.0; l * ss], &vec![1.0; l * ss], 4); // exactly one full block
+        assert_eq!(s.slot_blocks(slot).len(), 1);
+        // Append exactly on the block boundary: allocates block 1.
+        let kr = vec![2.0f32; l * row];
+        assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::Appended);
+        assert_eq!(s.slot_blocks(slot).len(), 2);
+        assert_eq!(s.len(slot), Some(5));
+        // Fill to capacity: the append that reaches t reports Full…
+        for _ in 5..t - 1 {
+            assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::Appended);
+        }
+        assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::Full);
+        assert_eq!(s.len(slot), Some(t));
+        // …and past capacity nothing is written; the signal persists.
+        let (k_before, _, _) = s.gather_batch(&[slot]);
+        assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::AtCapacity);
+        assert_eq!(s.len(slot), Some(t));
+        let (k_after, _, _) = s.gather_batch(&[slot]);
+        assert_eq!(k_before, k_after, "at-capacity append must not write");
     }
 
     #[test]

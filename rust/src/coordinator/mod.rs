@@ -1,7 +1,10 @@
 //! L3 serving coordinator — the vLLM-style layer the paper's end-to-end
 //! numbers (Tables 5–6) presuppose: request admission, continuous batching
 //! with prefill/decode interleave, paged KV management (one refcounted
-//! physical [`kvcache::BlockPool`] + per-sequence block tables), a
+//! physical [`kvcache::BlockPool`] + per-sequence block tables, read on
+//! the decode hot path through the block-table-native
+//! [`kvcache::PagedAttentionView`] and written one token at a time via
+//! [`kvcache::KvStore::append_token`]), a
 //! radix-tree shared-prefix KV cache with chunked prefill ([`prefix`])
 //! whose hits map physical blocks instead of copying, and metrics.
 //!
@@ -19,7 +22,9 @@ pub mod scheduler;
 
 pub use batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 pub use engine::{Engine, EngineConfig};
-pub use kvcache::{BlockAllocator, BlockId, BlockPool, KvStore};
+pub use kvcache::{
+    AppendOutcome, BlockAllocator, BlockId, BlockPool, KvStore, PagedAttentionView, PagedSlotView,
+};
 pub use metrics::{LatencyStat, ServeMetrics};
 pub use prefix::{PrefixCache, PrefixCacheConfig, PrefixStats};
 pub use request::{Request, RequestId, RequestOutput, RequestState};

@@ -114,6 +114,14 @@ impl Scheduler {
     }
 
     /// Partition active slots into artifact-sized decode groups.
+    ///
+    /// **Relaxed for paged decode** (ISSUE 5): the block-table-native path
+    /// reads each slot's exact live blocks, so a group has no shared
+    /// context shape to pad to — plain order-preserving chunks are optimal
+    /// and slots never wait to be packed with similar lengths. Dense
+    /// batched-attention kernels, which bucket-pad every row to the
+    /// group-max context, should group via
+    /// [`Self::decode_groups_dense_ctx`] instead.
     pub fn decode_groups(&self, slots: &[usize]) -> Vec<Vec<usize>> {
         let max_b = self
             .decode_batches
@@ -126,6 +134,19 @@ impl Scheduler {
             groups.push(chunk.to_vec());
         }
         groups
+    }
+
+    /// Grouping for the **dense reference** path: a dense batched-attention
+    /// kernel pads every row of a group to the group-max context, so slots
+    /// are sorted by context (descending, slot id tie-break for
+    /// determinism) before chunking — packing similar lengths together
+    /// minimizes the padded bytes the group-max rule wastes. The paged hot
+    /// path does not need this; see [`Self::decode_groups`].
+    pub fn decode_groups_dense_ctx(&self, slots_ctx: &[(usize, usize)]) -> Vec<Vec<usize>> {
+        let mut sorted: Vec<(usize, usize)> = slots_ctx.to_vec();
+        sorted.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let ids: Vec<usize> = sorted.iter().map(|(s, _)| *s).collect();
+        self.decode_groups(&ids)
     }
 
     /// Build the next iteration's plan (no prefix cache, single-chunk
@@ -317,6 +338,37 @@ mod tests {
         // Slots survive the partition exactly once, in order.
         let flat: Vec<usize> = groups.into_iter().flatten().collect();
         assert_eq!(flat, slots);
+    }
+
+    #[test]
+    fn dense_grouping_packs_similar_contexts_paged_grouping_stays_relaxed() {
+        let s = sched(SchedulePolicy::PrefillFirst);
+        // (slot, context) in admission order: short/long interleaved.
+        let slots_ctx = [(0usize, 100usize), (1, 4000), (2, 120), (3, 3900)];
+        // Dense kernels pad each group to its max context: packed groups
+        // [4000, 3900] + [120, 100] waste far fewer padded bytes than the
+        // order-preserving split [100, 4000] + [120, 3900].
+        let s2 = Scheduler::new(SchedulePolicy::PrefillFirst, vec![16], vec![1, 2]);
+        let dense = s2.decode_groups_dense_ctx(&slots_ctx);
+        assert_eq!(dense, vec![vec![1, 3], vec![2, 0]]);
+        let padded = |groups: &[Vec<usize>]| -> usize {
+            groups
+                .iter()
+                .map(|g| {
+                    let max = g
+                        .iter()
+                        .map(|s| slots_ctx.iter().find(|(id, _)| id == s).unwrap().1)
+                        .max()
+                        .unwrap();
+                    max * g.len()
+                })
+                .sum()
+        };
+        let naive = s2.decode_groups(&[0, 1, 2, 3]);
+        assert!(padded(&dense) < padded(&naive), "{dense:?} vs {naive:?}");
+        // The paged path needs no packing: groups preserve slot order
+        // exactly (no reordering latency games, no group-max padding).
+        assert_eq!(s.decode_groups(&[5, 9, 2]), vec![vec![5, 9, 2]]);
     }
 
     #[test]

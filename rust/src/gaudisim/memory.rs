@@ -94,6 +94,17 @@ impl MemoryModel {
         (p_blocks + batch * tail_blocks) as f64 * block_bytes
     }
 
+    /// Physical bytes one paged decode step reads for `batch` sequences at
+    /// context `seq` — block-quantized per sequence (whole 16-token blocks
+    /// stream; the kernel masks inside the tail block), at this model's KV
+    /// dtype rate. The capacity-model twin of
+    /// `gaudisim::kv_read_bytes_paged` (which charges the paper's fixed
+    /// FP8 serving rate).
+    pub fn kv_read_bytes_per_step(&self, batch: usize, seq: usize) -> f64 {
+        let bt = KV_BLOCK_TOKENS;
+        (batch * seq.div_ceil(bt) * bt) as f64 * self.kv_layout().bytes_per_token() as f64
+    }
+
     pub fn total_bytes_fp8(&self, batch: usize, seq: usize) -> f64 {
         self.weight_bytes_fp8() + self.kv_bytes(batch, seq) + WORKSPACE_BYTES
     }
@@ -218,6 +229,15 @@ mod tests {
         let m = mm();
         assert_eq!(m.kv_bytes(16, 1024), 2.0 * m.kv_bytes(8, 1024));
         assert_eq!(m.kv_bytes(8, 2048), m.kv_bytes(16, 1024));
+    }
+
+    #[test]
+    fn step_read_bytes_are_block_quantized() {
+        let m = mm();
+        // Block-aligned contexts read exactly their resident bytes…
+        assert_eq!(m.kv_read_bytes_per_step(8, 512), m.kv_bytes(8, 512));
+        // …and a mid-block context rounds up to whole streamed blocks.
+        assert_eq!(m.kv_read_bytes_per_step(2, 100), m.kv_bytes(2, 112));
     }
 
     #[test]

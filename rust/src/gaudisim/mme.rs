@@ -70,6 +70,13 @@ const T_FIXED: f64 = 8.0e-6;
 /// small-M weight-reload penalty (`M_HALF` below) — is the floor on how
 /// small prefill chunks can usefully get.
 pub const GEMM_LAUNCH_OVERHEAD_S: f64 = T_FIXED;
+/// Fixed per-block program cost of the paged-attention read path: the
+/// block-table walk, descriptor setup, and partial-softmax bookkeeping a
+/// kernel pays for every 16-token KV block it streams. Together with
+/// `e2e::KV_PAGED_STREAM_INEFFICIENCY` this decomposes the old flat
+/// KV-read inefficiency factor into streaming + a per-block launch floor
+/// (the two agree at the paper's block-aligned geometries).
+pub const PAGED_BLOCK_LAUNCH_OVERHEAD_S: f64 = 5.0e-8;
 /// Descale-pass exposure coefficients (fraction of a full output
 /// read+write pass that escapes overlap, times spill³).
 const SW_SCALE_COEFF: f64 = 1.0;

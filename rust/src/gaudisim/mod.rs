@@ -11,6 +11,14 @@ pub mod memory;
 pub mod mme;
 
 pub use device::{Device, Generation};
-pub use e2e::{chunked_prefill_time_s, decode_step_tflops, prefill_tflops, E2eConfig};
+pub use e2e::{
+    attn_time_s_dense_copy, attn_time_s_paged, chunked_prefill_time_s,
+    decode_group_time_s_paged, decode_step_tflops, decode_step_tflops_dense,
+    kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, E2eConfig,
+    KV_PAGED_STREAM_INEFFICIENCY,
+};
 pub use memory::MemoryModel;
-pub use mme::{gemm_time_s, GemmConfig, GemmReport, ScalingKind, GEMM_LAUNCH_OVERHEAD_S};
+pub use mme::{
+    gemm_time_s, GemmConfig, GemmReport, ScalingKind, GEMM_LAUNCH_OVERHEAD_S,
+    PAGED_BLOCK_LAUNCH_OVERHEAD_S,
+};

@@ -5,10 +5,12 @@
 //! Each replica owns its own simulated device and a [`BlockAllocator`]
 //! sized from that device's HBM minus the FP8 model weights — so fleet
 //! admission control exercises the same OOM frontier Table 6 maps. Step
-//! timing comes from [`prefill_tflops`] / [`decode_step_tflops`], which
-//! means routing experiments inherit the paper's performance shape (long
-//! prompts are expensive, decode is memory-bound) without needing the PJRT
-//! artifacts.
+//! timing comes from [`prefill_tflops`] / [`decode_group_time_s_paged`]
+//! (per-slot paged KV reads, matching the engine's block-table-native
+//! decode; `dense_decode` switches to the pre-paged dense-copy reference
+//! pricing), which means routing experiments inherit the paper's
+//! performance shape (long prompts are expensive, decode is memory-bound)
+//! without needing the PJRT artifacts.
 //!
 //! With `prefix_cache` enabled the replica shares prompt KV through a
 //! [`PrefixCache`] drawing on the *same* block pool: admission charges
@@ -28,8 +30,8 @@ use crate::coordinator::{
     PrefixCacheConfig, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
 };
 use crate::gaudisim::{
-    chunked_prefill_time_s, decode_step_tflops, prefill_tflops, Device, E2eConfig, MemoryModel,
-    ScalingKind,
+    chunked_prefill_time_s, decode_group_time_s_paged, decode_step_tflops_dense, prefill_tflops,
+    Device, E2eConfig, MemoryModel, ScalingKind,
 };
 use crate::model::config::{ModelConfig, ModelFamily};
 use crate::quant::KvDtype;
@@ -61,6 +63,12 @@ pub struct SimReplicaConfig {
     /// Chunked-prefill chunk size in tokens for cache-hit tails
     /// (0 = single-chunk tail).
     pub prefill_chunk: usize,
+    /// Price decode through the **dense-copy reference** model instead of
+    /// the paged reads: context-packed groups, every bucket row padded to
+    /// the group-max context (the pre-paged engine's cost shape). Off by
+    /// default — the block-table-native path charges each slot's actual
+    /// live blocks. For paged-vs-dense A/B comparisons only.
+    pub dense_decode: bool,
     pub prefill_seqs: Vec<usize>,
     pub decode_batches: Vec<usize>,
 }
@@ -83,6 +91,7 @@ impl SimReplicaConfig {
             kv_blocks_override: None,
             prefix_cache: false,
             prefill_chunk: 0,
+            dense_decode: false,
             prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
             decode_batches: vec![1, 2, 4, 8],
         }
@@ -100,6 +109,7 @@ impl SimReplicaConfig {
             kv_blocks_override: None,
             prefix_cache: false,
             prefill_chunk: 0,
+            dense_decode: false,
             prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
             decode_batches: vec![1, 8, 16, 32, 64, 128],
         }
@@ -351,17 +361,43 @@ impl SimReplica {
 
     /// One decode step for every active request, split into compiled batch
     /// groups like the real engine.
+    ///
+    /// Pricing follows the engine's block-table-native path: each group
+    /// charges the sum of its members' live block bytes
+    /// ([`decode_group_time_s_paged`]) — bucket padding rows read nothing
+    /// and no row pays another's context. With `dense_decode` the replica
+    /// instead reproduces the pre-paged cost shape: context-packed groups
+    /// whose every bucket row is padded to the group-max context.
     fn decode_round(&mut self) -> bool {
         if self.active.is_empty() {
             return false;
         }
-        let idxs: Vec<usize> = (0..self.active.len()).collect();
-        for group in self.sched.decode_groups(&idxs) {
-            let bucket = self.sched.decode_bucket(group.len());
-            let mean_ctx = (group.iter().map(|&i| self.active[i].context).sum::<usize>()
-                / group.len())
-            .max(1);
-            let t = decode_step_tflops(&self.cfg.e2e, bucket, mean_ctx).time_s;
+        let groups: Vec<Vec<usize>> = if self.cfg.dense_decode {
+            let slots_ctx: Vec<(usize, usize)> = (0..self.active.len())
+                .map(|i| (i, self.active[i].context))
+                .collect();
+            self.sched.decode_groups_dense_ctx(&slots_ctx)
+        } else {
+            let idxs: Vec<usize> = (0..self.active.len()).collect();
+            self.sched.decode_groups(&idxs)
+        };
+        for group in groups {
+            let t = if self.cfg.dense_decode {
+                let bucket = self.sched.decode_bucket(group.len());
+                let max_ctx = group
+                    .iter()
+                    .map(|&i| self.active[i].context)
+                    .max()
+                    .unwrap_or(1)
+                    .max(1);
+                decode_step_tflops_dense(&self.cfg.e2e, bucket, max_ctx, max_ctx).time_s
+            } else {
+                let ctxs: Vec<usize> = group
+                    .iter()
+                    .map(|&i| self.active[i].context.max(1))
+                    .collect();
+                decode_group_time_s_paged(&self.cfg.e2e, &ctxs)
+            };
             self.now_s += t;
             self.metrics.decode_steps += 1;
             self.metrics.decode_batch_sum += group.len() as u64;
@@ -740,6 +776,32 @@ mod tests {
                 r.allocator().total_blocks
             );
         }
+    }
+
+    #[test]
+    fn paged_decode_prices_actual_contexts_not_the_group_max() {
+        // Paper geometry, a ragged pair (one long, one short prompt)
+        // decoding together: the dense reference pads both bucket rows to
+        // the group-max context, the paged path charges each row's live
+        // blocks — the same workload must finish strictly sooner paged.
+        let mk = |dense: bool| {
+            let mut cfg = SimReplicaConfig::gaudi2_llama31_70b();
+            cfg.dense_decode = dense;
+            let mut r = SimReplica::new(if dense { "dense" } else { "paged" }, cfg).unwrap();
+            r.submit(Request::new(0, vec![1i32; 4096], 16), 0.0);
+            r.submit(Request::new(1, vec![2i32; 512], 16), 0.0);
+            while r.has_work() {
+                r.step().unwrap();
+            }
+            assert_eq!(r.metrics().requests_completed, 2);
+            r.clock_s()
+        };
+        let paged = mk(false);
+        let dense = mk(true);
+        assert!(
+            paged < dense,
+            "paged makespan {paged} must beat dense-copy {dense}"
+        );
     }
 
     #[test]

@@ -41,6 +41,18 @@ impl ArtifactKey {
         }
     }
 
+    /// Block-table-native decode (ISSUE 5): the artifact takes the KV
+    /// block pool plus per-row block tables and lengths, walks the tables
+    /// in place, and returns only the appended token's KV.
+    pub fn decode_paged(variant: &str, batch: usize) -> Self {
+        Self {
+            kind: "decode_paged".into(),
+            variant: variant.into(),
+            batch,
+            seq: 0,
+        }
+    }
+
     /// Filename convention shared with aot.py.
     pub fn filename(&self) -> String {
         match self.kind.as_str() {
@@ -49,6 +61,7 @@ impl ArtifactKey {
                 self.variant, self.batch, self.seq
             ),
             "decode" => format!("decode_{}_b{}.hlo.txt", self.variant, self.batch),
+            "decode_paged" => format!("decode_paged_{}_b{}.hlo.txt", self.variant, self.batch),
             k => format!("{}_{}.hlo.txt", k, self.variant),
         }
     }
@@ -140,6 +153,10 @@ mod tests {
         assert_eq!(
             ArtifactKey::decode("bf16", 4).filename(),
             "decode_bf16_b4.hlo.txt"
+        );
+        assert_eq!(
+            ArtifactKey::decode_paged("fp8_pt", 8).filename(),
+            "decode_paged_fp8_pt_b8.hlo.txt"
         );
     }
 

@@ -22,7 +22,7 @@
 //!   prefix hold P-worth of blocks once plus N private tails, verified by
 //!   reading pool occupancy, versus N·P under private copies.
 
-use gaudi_fp8::coordinator::{BlockId, KvStore, PrefixCache, PrefixCacheConfig};
+use gaudi_fp8::coordinator::{AppendOutcome, BlockId, KvStore, PrefixCache, PrefixCacheConfig};
 use gaudi_fp8::fp8::bf16::{bf16_to_f32, f32_to_bf16};
 use gaudi_fp8::fp8::Fp8Format;
 use gaudi_fp8::quant::{KvDtype, KvLayout};
@@ -48,8 +48,11 @@ enum Op {
     /// cached (full hits bootstrap at `len - 1`, the engine shape that
     /// forces CoW), cold-write otherwise.
     Start(usize),
-    /// Append one uniquely-valued token to live sequence `i % live` —
-    /// the scatter/CoW path.
+    /// Append one uniquely-valued token to live sequence `i % live`.
+    /// Even-uid sequences use the paged hot path (`append_token`: one
+    /// (L, Hkv, D) row, payload-copying CoW); odd-uid sequences use the
+    /// dense reference (gather → poke → scatter) — both write paths must
+    /// uphold every invariant, interleaved in one world.
     Append(usize),
     /// Share a cold sequence's block-aligned prompt into the cache
     /// (`insert_shared` — block adoption, no copies).
@@ -297,10 +300,23 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
                 if len >= T {
                     continue;
                 }
-                let (mut k, mut v, _) = kv.gather_batch(&[slot]);
                 let val = append_val(live[idx].uid, len);
-                poke(&mut k, &mut v, len, val);
-                kv.scatter_batch(&[slot], &k, &v);
+                if live[idx].uid % 2 == 0 {
+                    // Paged hot path.
+                    let row = vec![val; LAYERS * ROW];
+                    let out = kv.append_token(slot, &row, &row);
+                    if out == AppendOutcome::AtCapacity {
+                        return Err(format!(
+                            "append_token refused seq {} at len {len} < T",
+                            live[idx].uid
+                        ));
+                    }
+                } else {
+                    // Dense reference path.
+                    let (mut k, mut v, _) = kv.gather_batch(&[slot]);
+                    poke(&mut k, &mut v, len, val);
+                    kv.scatter_batch(&[slot], &k, &v);
+                }
                 live[idx].vals.push(val);
                 // (c) the written (hot) block must now be private.
                 let blocks = kv.slot_blocks(slot);
