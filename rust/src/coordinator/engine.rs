@@ -62,6 +62,7 @@ use super::metrics::ServeMetrics;
 use super::prefix::{PrefixCache, PrefixCacheConfig};
 use super::request::{Request, RequestId, RequestOutput};
 use super::scheduler::{chunk_spans, warm_admittable_without_bucket, SchedulePolicy, Scheduler};
+use crate::obs::{Clock, TraceEventKind, TraceRecorder};
 use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
@@ -241,6 +242,10 @@ pub struct Engine {
     chunked: Option<ChunkedPrefill>,
     pub metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
+    /// Lifecycle-event recorder (None = tracing off, the hot-path default).
+    /// Wall-clocked: the engine measures real service latency, so its
+    /// timeline is directly comparable with a SimReplica's virtual one.
+    trace: Option<TraceRecorder>,
     // The dense scratch pairs (`scratch_k`/`scratch_v`/`chunk_k`/`chunk_v`)
     // that staged every decode step's bucket-padded (L, B, cache_t, …)
     // gather are gone — the paged path reads block tables in place and
@@ -329,6 +334,7 @@ impl Engine {
             chunked: None,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
+            trace: None,
             cfg,
             meta,
             registry,
@@ -440,7 +446,37 @@ impl Engine {
         for group in self.scheduler.decode_groups(&active) {
             self.run_decode_group(&group)?;
         }
+        self.sync_observability();
         Ok(true)
+    }
+
+    /// Fold pool-level telemetry into the metrics snapshot: copy-on-write
+    /// clones since the last sync become one `CowCopy` trace event, and the
+    /// ring buffer's drop count is mirrored so `json_row`/`report` can warn.
+    fn sync_observability(&mut self) {
+        let cow = self.kv.pool().cow_clones();
+        let delta = cow - self.metrics.cow_block_copies;
+        if delta > 0 {
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record(None, TraceEventKind::CowCopy { blocks: delta });
+            }
+        }
+        self.metrics.cow_block_copies = cow;
+        if let Some(tr) = &self.trace {
+            self.metrics.trace_events_dropped = tr.dropped();
+        }
+    }
+
+    /// Record the physical pool's occupancy into the windowed gauge (and
+    /// its peak), returning the sampled value for trace events.
+    fn note_occupancy(&mut self) -> f64 {
+        let pool = self.kv.pool();
+        let occ = pool.used_blocks() as f64 / pool.total_blocks().max(1) as f64;
+        self.metrics.pool_occupancy.record(occ);
+        if occ > self.metrics.pool_occupancy_peak {
+            self.metrics.pool_occupancy_peak = occ;
+        }
+        occ
     }
 
     /// Drive until every submitted request completes.
@@ -457,6 +493,14 @@ impl Engine {
 
     /// Complete a request that can never run here with an empty output.
     fn finish_unservable(&mut self, req: Request) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record(
+                Some(req.id),
+                TraceEventKind::Reject {
+                    reason: "unservable".to_string(),
+                },
+            );
+        }
         self.finished.push(RequestOutput {
             id: req.id,
             prompt_len: req.prompt.len(),
@@ -505,13 +549,43 @@ impl Engine {
             let rep = p.insert_shared(&req.prompt, &blocks, self.kv.pool_mut());
             self.metrics.prefix_evicted_blocks += rep.evicted_blocks as u64;
             cache_tokens = p.acquire(&req.prompt);
+            if rep.evicted_blocks > 0 {
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record(
+                        None,
+                        TraceEventKind::Evict {
+                            blocks: rep.evicted_blocks as u64,
+                        },
+                    );
+                }
+            }
         }
         self.metrics.prefill_steps += 1;
-        self.metrics.prefill_time.record(t0.elapsed().as_secs_f64());
+        let prefill_s = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_time.record(prefill_s);
         let now = Instant::now();
         self.metrics
             .ttft
             .record(now.duration_since(req.arrival).as_secs_f64());
+        self.note_occupancy();
+        if let Some(tr) = self.trace.as_mut() {
+            let end_s = tr.now_s();
+            let start_s = (end_s - prefill_s).max(0.0);
+            let queued_s = t0.duration_since(req.arrival).as_secs_f64();
+            tr.record_at(start_s, Some(req.id), TraceEventKind::Admit { queued_s });
+            tr.record_span(
+                Some(req.id),
+                start_s,
+                prefill_s,
+                TraceEventKind::PrefillChunk {
+                    tokens: req.prompt.len(),
+                    // The real engine runs on the PJRT-CPU stub: there is no
+                    // analytic device model to divide by, so MFU stays 0 and
+                    // the summaries populate only on simulated replicas.
+                    mfu: 0.0,
+                },
+            );
+        }
 
         self.active.insert(
             slot,
@@ -566,6 +640,11 @@ impl Engine {
         };
         self.metrics.prefix_hits += 1;
         self.metrics.prefix_hit_tokens += cached as u64;
+        if let Some(tr) = self.trace.as_mut() {
+            let queued_s = req.arrival.elapsed().as_secs_f64();
+            tr.record(Some(req.id), TraceEventKind::Admit { queued_s });
+            tr.record(Some(req.id), TraceEventKind::PrefixHit { tokens: cached });
+        }
         // Execute the plan's chunk list (re-derived only if the cache
         // changed between planning and admission, which a single-threaded
         // step cannot actually produce).
@@ -604,13 +683,30 @@ impl Engine {
             return Ok(());
         };
         let t0 = Instant::now();
+        let mut chunk_tokens = 0usize;
         if let Some((start, len)) = cp.chunks.pop_front() {
             for pos in start..start + len {
                 cp.last_logits = self.forced_decode(cp.slot, cp.req.prompt[pos])?;
             }
+            chunk_tokens = len;
         }
         self.metrics.prefill_chunks += 1;
-        self.metrics.prefill_time.record(t0.elapsed().as_secs_f64());
+        let chunk_s = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_time.record(chunk_s);
+        if chunk_tokens > 0 {
+            if let Some(tr) = self.trace.as_mut() {
+                let end_s = tr.now_s();
+                tr.record_span(
+                    Some(cp.req.id),
+                    (end_s - chunk_s).max(0.0),
+                    chunk_s,
+                    TraceEventKind::PrefillChunk {
+                        tokens: chunk_tokens,
+                        mfu: 0.0,
+                    },
+                );
+            }
+        }
         if !cp.chunks.is_empty() {
             self.chunked = Some(cp);
             return Ok(());
@@ -650,8 +746,14 @@ impl Engine {
     /// staging, no zero-fill, no bucket padding of the context. The
     /// artifact returns logits plus only the appended token's KV, which
     /// [`KvStore::append_token`] quantizes into each row's hot block
-    /// (copy-on-write preserved). Returns (logits rows, full slots).
-    fn paged_decode_forward(&mut self, rows: &[(usize, i32)]) -> Result<(Vec<f32>, Vec<usize>)> {
+    /// (copy-on-write preserved). Returns (logits rows, full slots, KV
+    /// bytes the step's table walk covers — each row charged its own live
+    /// blocks at the pool dtype rate, the same convention as
+    /// [`crate::gaudisim::kv_read_bytes_paged`]).
+    fn paged_decode_forward(
+        &mut self,
+        rows: &[(usize, i32)],
+    ) -> Result<(Vec<f32>, Vec<usize>, u64)> {
         let Some(pool_blocks) = self.meta.paged_pool_blocks else {
             bail!(
                 "artifacts at {:?} predate the paged decode ABI — regenerate them \
@@ -677,6 +779,7 @@ impl Engine {
                 group_blocks.push(*id);
             }
         }
+        let kv_bytes = (group_blocks.len() * self.kv.layout().block_bytes(bt)) as u64;
         // On device the pool stays resident and is donated between steps;
         // the PJRT-CPU stub runner maintains a persistent export pair and
         // updates it incrementally: zero last step's block regions, write
@@ -738,7 +841,7 @@ impl Engine {
                 AppendOutcome::Full | AppendOutcome::AtCapacity => full.push(slot),
             }
         }
-        Ok((std::mem::take(&mut outs[0].data), full))
+        Ok((std::mem::take(&mut outs[0].data), full, kv_bytes))
     }
 
     /// One decode call for `slot` with a forced input token — the
@@ -750,7 +853,8 @@ impl Engine {
         if self.cfg.use_dense_decode {
             return self.forced_decode_dense(slot, token);
         }
-        let (logits, _full) = self.paged_decode_forward(&[(slot, token)])?;
+        let (logits, _full, kv_bytes) = self.paged_decode_forward(&[(slot, token)])?;
+        self.metrics.kv_bytes_read += kv_bytes;
         Ok(logits[..self.meta.vocab].to_vec())
     }
 
@@ -811,7 +915,7 @@ impl Engine {
         // "Sequence full" slots must finish below: the store clamps their
         // length at cache_t, and another decode step would silently
         // overwrite the last position.
-        let (logits, full_slots) = self.paged_decode_forward(&rows)?;
+        let (logits, full_slots, kv_bytes) = self.paged_decode_forward(&rows)?;
 
         let vsz = self.meta.vocab;
         let now = Instant::now();
@@ -830,7 +934,24 @@ impl Engine {
         self.metrics.generated_tokens += group.len() as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_batch_sum += group.len() as u64;
-        self.metrics.decode_time.record(t0.elapsed().as_secs_f64());
+        let step_s = t0.elapsed().as_secs_f64();
+        self.metrics.decode_time.record(step_s);
+        self.metrics.kv_bytes_read += kv_bytes;
+        let occ = self.note_occupancy();
+        if let Some(tr) = self.trace.as_mut() {
+            let end_s = tr.now_s();
+            tr.record_span(
+                None,
+                (end_s - step_s).max(0.0),
+                step_s,
+                TraceEventKind::DecodeStep {
+                    batch: group.len(),
+                    mfu: 0.0,
+                    kv_bytes,
+                    pool_occupancy: occ,
+                },
+            );
+        }
 
         for &slot in group {
             self.maybe_finish(slot, full_slots.contains(&slot));
@@ -909,7 +1030,28 @@ impl Engine {
         self.metrics.generated_tokens += group.len() as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_batch_sum += group.len() as u64;
-        self.metrics.decode_time.record(t0.elapsed().as_secs_f64());
+        let step_s = t0.elapsed().as_secs_f64();
+        self.metrics.decode_time.record(step_s);
+        // Dense staging reads the whole bucket-padded window regardless of
+        // live context — the cost shape the paged path exists to beat.
+        let kv_bytes =
+            (bucket * self.meta.cache_t * self.kv.layout().bytes_per_token()) as u64;
+        self.metrics.kv_bytes_read += kv_bytes;
+        let occ = self.note_occupancy();
+        if let Some(tr) = self.trace.as_mut() {
+            let end_s = tr.now_s();
+            tr.record_span(
+                None,
+                (end_s - step_s).max(0.0),
+                step_s,
+                TraceEventKind::DecodeStep {
+                    batch: group.len(),
+                    mfu: 0.0,
+                    kv_bytes,
+                    pool_occupancy: occ,
+                },
+            );
+        }
 
         for &slot in group {
             self.maybe_finish(slot, full_slots.contains(&slot));
@@ -941,12 +1083,24 @@ impl Engine {
                 .map(|t| t.duration_since(a.arrival).as_secs_f64())
                 .unwrap_or(total);
             let n = a.generated.len();
+            let tpot_s = if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 };
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record(
+                    Some(a.id),
+                    TraceEventKind::Retire {
+                        generated: n,
+                        ttft_s: ttft,
+                        tpot_s,
+                        total_s: total,
+                    },
+                );
+            }
             self.finished.push(RequestOutput {
                 id: a.id,
                 prompt_len: a.prompt.len(),
                 tokens: a.generated,
                 ttft_s: ttft,
-                tpot_s: if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 },
+                tpot_s,
                 total_s: total,
             });
             self.metrics.requests_completed += 1;
@@ -1063,6 +1217,18 @@ impl ReplicaHandle for Engine {
 
     fn metrics(&self) -> &ServeMetrics {
         &self.metrics
+    }
+
+    fn enable_trace(&mut self, replica: usize, capacity: usize) {
+        self.trace = Some(TraceRecorder::with_capacity(
+            replica,
+            Clock::wall(),
+            capacity,
+        ));
+    }
+
+    fn trace(&self) -> Option<&TraceRecorder> {
+        self.trace.as_ref()
     }
 }
 

@@ -310,6 +310,9 @@ pub struct BlockPool {
     /// block bytes" contract. Dense reference gathers are deliberately
     /// *not* counted: the counter measures the paged path alone.
     bytes_read: Cell<u64>,
+    /// Copy-on-write clones performed ([`Self::clone_block`]) over the
+    /// pool's lifetime — the telemetry behind `CowCopy` trace events.
+    cow_clones: u64,
 }
 
 impl BlockPool {
@@ -353,6 +356,7 @@ impl BlockPool {
             // IDs make failures readable.
             free: (0..total_blocks).rev().collect(),
             bytes_read: Cell::new(0),
+            cow_clones: 0,
         }
     }
 
@@ -593,6 +597,11 @@ impl BlockPool {
         self.bytes_read.set(0);
     }
 
+    /// Copy-on-write clones performed over the pool's lifetime.
+    pub fn cow_clones(&self) -> u64 {
+        self.cow_clones
+    }
+
     /// Bytes one [`Self::read_block_head`] call moves: the (layer, kv-head)
     /// share of a block's K+V payload plus, under FP8, its two f32 scales.
     /// Summed over all (layer, kv-head) pairs and a sequence's live blocks
@@ -637,6 +646,7 @@ impl BlockPool {
                 v_scale.copy_within(ss..ss + groups, ds);
             }
         }
+        self.cow_clones += 1;
         Some(dst)
     }
 

@@ -3,19 +3,28 @@
 
 use std::time::Instant;
 
+use crate::util::rng::XorShiftRng;
+
 /// Retained samples per [`LatencyStat`] — bounds memory while keeping
 /// percentiles meaningful; shared by `record` and `merge`.
 const RESERVOIR: usize = 4096;
 
-/// Streaming latency statistic (count / mean / min / max / p50-ish via
-/// reservoir of recent values).
+/// Seed for the Algorithm-R replacement draws. Fixed (not per-instance)
+/// so every run of the same workload reports identical percentiles.
+const RESERVOIR_SEED: u64 = 0x0b5e_51a7_5eed_0001;
+
+/// Streaming latency statistic (count / mean / min / max / percentiles via
+/// a uniform reservoir sample of everything seen).
 #[derive(Clone, Debug)]
 pub struct LatencyStat {
     pub count: u64,
     pub sum_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+    /// Algorithm-R reservoir: a uniform sample of all `count` recordings,
+    /// not a sliding window of the most recent ones.
     recent: Vec<f64>,
+    rng: XorShiftRng,
 }
 
 impl Default for LatencyStat {
@@ -32,6 +41,7 @@ impl LatencyStat {
             min_s: f64::INFINITY,
             max_s: 0.0,
             recent: Vec::new(),
+            rng: XorShiftRng::new(RESERVOIR_SEED),
         }
     }
 
@@ -43,8 +53,15 @@ impl LatencyStat {
         if self.recent.len() < RESERVOIR {
             self.recent.push(seconds);
         } else {
-            let i = (self.count as usize) % RESERVOIR;
-            self.recent[i] = seconds;
+            // Algorithm R: the i-th sample replaces a reservoir slot with
+            // probability RESERVOIR/i, keeping the reservoir a uniform
+            // sample of the whole stream. (The previous modulo overwrite
+            // kept only the most recent window, recency-biasing long-run
+            // percentiles.)
+            let j = self.rng.below(self.count as usize);
+            if j < RESERVOIR {
+                self.recent[j] = seconds;
+            }
         }
     }
 
@@ -108,6 +125,10 @@ impl LatencyStat {
             combined.extend_from_slice(&s.recent);
         }
         if combined.len() > RESERVOIR {
+            // Sort before the stride downsample: the result is then a
+            // deterministic quantile sketch of the union — independent of
+            // the order the sources were merged in.
+            combined.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let stride = combined.len() as f64 / RESERVOIR as f64;
             out.recent = (0..RESERVOIR)
                 .map(|i| combined[(i as f64 * stride) as usize])
@@ -140,10 +161,24 @@ pub struct ServeMetrics {
     pub prefix_evicted_blocks: u64,
     /// Chunked-prefill chunks executed (tail pieces, not whole prefills).
     pub prefill_chunks: u64,
+    /// Physical KV bytes decode steps read (paged path).
+    pub kv_bytes_read: u64,
+    /// Copy-on-write block clones (a shared block went private under a
+    /// single-token append).
+    pub cow_block_copies: u64,
+    /// Events the bounded trace ring buffer refused (0 = complete trace).
+    pub trace_events_dropped: u64,
+    /// Peak KV block-pool occupancy observed across steps (0–1).
+    pub pool_occupancy_peak: f64,
     pub ttft: LatencyStat,
     pub tpot: LatencyStat,
     pub prefill_time: LatencyStat,
     pub decode_time: LatencyStat,
+    /// Per-step model-FLOPs utilization vs the device FP8 peak (0–1);
+    /// dimensionless but the same windowed-reservoir machinery applies.
+    pub mfu: LatencyStat,
+    /// Per-step KV block-pool occupancy samples (0–1).
+    pub pool_occupancy: LatencyStat,
 }
 
 impl Default for ServeMetrics {
@@ -167,10 +202,16 @@ impl ServeMetrics {
             prefix_hit_tokens: 0,
             prefix_evicted_blocks: 0,
             prefill_chunks: 0,
+            kv_bytes_read: 0,
+            cow_block_copies: 0,
+            trace_events_dropped: 0,
+            pool_occupancy_peak: 0.0,
             ttft: LatencyStat::new(),
             tpot: LatencyStat::new(),
             prefill_time: LatencyStat::new(),
             decode_time: LatencyStat::new(),
+            mfu: LatencyStat::new(),
+            pool_occupancy: LatencyStat::new(),
         }
     }
 
@@ -214,11 +255,17 @@ impl ServeMetrics {
             out.prefix_hit_tokens += m.prefix_hit_tokens;
             out.prefix_evicted_blocks += m.prefix_evicted_blocks;
             out.prefill_chunks += m.prefill_chunks;
+            out.kv_bytes_read += m.kv_bytes_read;
+            out.cow_block_copies += m.cow_block_copies;
+            out.trace_events_dropped += m.trace_events_dropped;
+            out.pool_occupancy_peak = out.pool_occupancy_peak.max(m.pool_occupancy_peak);
         }
         out.ttft = LatencyStat::merge_many(all.iter().map(|m| &m.ttft));
         out.tpot = LatencyStat::merge_many(all.iter().map(|m| &m.tpot));
         out.prefill_time = LatencyStat::merge_many(all.iter().map(|m| &m.prefill_time));
         out.decode_time = LatencyStat::merge_many(all.iter().map(|m| &m.decode_time));
+        out.mfu = LatencyStat::merge_many(all.iter().map(|m| &m.mfu));
+        out.pool_occupancy = LatencyStat::merge_many(all.iter().map(|m| &m.pool_occupancy));
         out
     }
 
@@ -254,7 +301,59 @@ impl ServeMetrics {
                 self.prefix_evicted_blocks
             ));
         }
+        if self.mfu.count > 0 {
+            s.push_str(&format!(
+                " mfu_mean={:.3} mfu_p50={:.3} mfu_p99={:.3} pool_occupancy_peak={:.2}",
+                self.mfu.mean_s(),
+                self.mfu.p50_s(),
+                self.mfu.p99_s(),
+                self.pool_occupancy_peak
+            ));
+        }
+        if self.trace_events_dropped > 0 {
+            s.push_str(&format!(
+                "\nwarning: trace ring buffer dropped {} events (raise --trace-capacity for a complete timeline)",
+                self.trace_events_dropped
+            ));
+        }
         s
+    }
+
+    /// One machine-readable JSON object per snapshot (the serve-side analog
+    /// of the fleet bench rows).
+    pub fn json_row(&self, label: &str) -> String {
+        format!(
+            "{{\"label\":\"{}\",\"requests_completed\":{},\"prompt_tokens\":{},\
+             \"generated_tokens\":{},\"decode_steps\":{},\"mean_decode_batch\":{:.4},\
+             \"ttft_mean_ms\":{:.4},\"ttft_p50_ms\":{:.4},\"ttft_p95_ms\":{:.4},\
+             \"ttft_p99_ms\":{:.4},\"tpot_mean_ms\":{:.5},\"tpot_p50_ms\":{:.5},\
+             \"tpot_p99_ms\":{:.5},\"prefix_hit_rate\":{:.4},\"prefix_hit_tokens\":{},\
+             \"mfu_mean\":{:.6},\"mfu_p50\":{:.6},\"mfu_p99\":{:.6},\
+             \"pool_occupancy_peak\":{:.6},\"kv_bytes_read\":{},\"cow_block_copies\":{},\
+             \"trace_events_dropped\":{}}}",
+            label.replace(['"', '\\'], "_"),
+            self.requests_completed,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.decode_steps,
+            self.mean_decode_batch(),
+            self.ttft.mean_s() * 1e3,
+            self.ttft.p50_s() * 1e3,
+            self.ttft.p95_s() * 1e3,
+            self.ttft.p99_s() * 1e3,
+            self.tpot.mean_s() * 1e3,
+            self.tpot.p50_s() * 1e3,
+            self.tpot.p99_s() * 1e3,
+            self.prefix_hit_rate(),
+            self.prefix_hit_tokens,
+            self.mfu.mean_s(),
+            self.mfu.p50_s(),
+            self.mfu.p99_s(),
+            self.pool_occupancy_peak,
+            self.kv_bytes_read,
+            self.cow_block_copies,
+            self.trace_events_dropped,
+        )
     }
 }
 
@@ -369,5 +468,110 @@ mod tests {
         m.decode_batch_sum = 100;
         assert_eq!(m.mean_decode_batch(), 2.0);
         assert!(m.report().contains("requests=2"));
+        assert!(!m.report().contains("warning"), "no drops, no warning");
+        m.trace_events_dropped = 12;
+        assert!(
+            m.report().contains("dropped 12 events"),
+            "drops must warn, not stay silent: {}",
+            m.report()
+        );
+    }
+
+    #[test]
+    fn reservoir_is_uniform_not_recency_biased() {
+        // Record a long ascending stream: with Algorithm R the retained
+        // sample is uniform over the whole stream, so p50 lands near the
+        // stream midpoint. The old modulo overwrite kept only the newest
+        // RESERVOIR window, which would put p50 near 48_000 here.
+        let n = 50_000usize;
+        let mut s = LatencyStat::new();
+        for i in 0..n {
+            s.record(i as f64);
+        }
+        let mid = n as f64 / 2.0;
+        let p50 = s.p50_s();
+        assert!(
+            (p50 - mid).abs() < 0.05 * n as f64,
+            "p50 {p50} not near midpoint {mid}: reservoir is biased"
+        );
+        // Tails from early and late in the stream both survive.
+        assert!(s.percentile_s(0.05) < 0.15 * n as f64);
+        assert!(s.percentile_s(0.95) > 0.85 * n as f64);
+        // Exact moments are untouched by sampling.
+        assert_eq!(s.count, n as u64);
+        assert_eq!(s.min_s, 0.0);
+        assert_eq!(s.max_s, (n - 1) as f64);
+        // Deterministic: same stream, same percentiles.
+        let mut s2 = LatencyStat::new();
+        for i in 0..n {
+            s2.record(i as f64);
+        }
+        assert_eq!(s.p50_s(), s2.p50_s());
+    }
+
+    #[test]
+    fn merge_many_is_order_independent_past_the_cap() {
+        // Three overfull stats with disjoint ranges: merged percentiles
+        // must not depend on merge order.
+        let mk = |lo: usize| {
+            let mut s = LatencyStat::new();
+            for i in 0..6000 {
+                s.record((lo + i) as f64);
+            }
+            s
+        };
+        let (a, b, c) = (mk(0), mk(6000), mk(12000));
+        let abc = LatencyStat::merge_many([&a, &b, &c]);
+        let cba = LatencyStat::merge_many([&c, &b, &a]);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(
+                abc.percentile_s(q),
+                cba.percentile_s(q),
+                "merge order changed the q={q} percentile"
+            );
+        }
+        assert_eq!(abc.count, 18_000);
+    }
+
+    #[test]
+    fn serve_metrics_merge_folds_observability_fields() {
+        let mut a = ServeMetrics::new();
+        a.kv_bytes_read = 100;
+        a.cow_block_copies = 2;
+        a.trace_events_dropped = 5;
+        a.pool_occupancy_peak = 0.7;
+        a.mfu.record(0.4);
+        a.pool_occupancy.record(0.5);
+        let mut b = ServeMetrics::new();
+        b.kv_bytes_read = 50;
+        b.trace_events_dropped = 1;
+        b.pool_occupancy_peak = 0.9;
+        b.mfu.record(0.8);
+        a.merge(&b);
+        assert_eq!(a.kv_bytes_read, 150);
+        assert_eq!(a.cow_block_copies, 2);
+        assert_eq!(a.trace_events_dropped, 6);
+        assert!((a.pool_occupancy_peak - 0.9).abs() < 1e-12);
+        assert_eq!(a.mfu.count, 2);
+        assert_eq!(a.pool_occupancy.count, 1);
+    }
+
+    #[test]
+    fn json_row_parses_and_carries_new_fields() {
+        use crate::util::json::Json;
+        let mut m = ServeMetrics::new();
+        m.requests_completed = 4;
+        m.kv_bytes_read = 2048;
+        m.trace_events_dropped = 3;
+        m.pool_occupancy_peak = 0.5;
+        m.mfu.record(0.6);
+        let row = m.json_row("sim0");
+        let j = Json::parse(&row).expect("json_row must parse");
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("sim0"));
+        assert_eq!(j.get("requests_completed").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(j.get("kv_bytes_read").and_then(Json::as_f64), Some(2048.0));
+        assert_eq!(j.get("trace_events_dropped").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("pool_occupancy_peak").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(j.get("mfu_mean").and_then(Json::as_f64), Some(0.6));
     }
 }

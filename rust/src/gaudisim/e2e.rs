@@ -224,6 +224,91 @@ pub fn decode_group_time_s_paged(cfg: &E2eConfig, ctxs: &[usize]) -> f64 {
     decode_weights_time_s(cfg) + attn_time_s_paged(cfg, ctxs) + DECODE_STEP_OVERHEAD_S
 }
 
+/// Kim-et-al model FLOPs of one decode step over a ragged group: the sum
+/// of per-slot batch-1 decode FLOPs. The linear (and LM-head) term scales
+/// with the group size and the attention term with each slot's own
+/// context, so at uniform contexts this equals the batched
+/// [`decode_step_model_flops`] exactly.
+pub fn decode_group_model_flops(cfg: &E2eConfig, ctxs: &[usize]) -> f64 {
+    ctxs.iter()
+        .map(|&c| decode_step_model_flops(&cfg.model, 1, c.max(1), cfg.lm_head_bf16))
+        .sum()
+}
+
+/// Time + FLOPs + achieved TFLOPS + MFU for one ragged paged decode group
+/// — the per-step utilization sample the serving telemetry records.
+pub fn decode_group_report_paged(cfg: &E2eConfig, ctxs: &[usize]) -> E2eReport {
+    let time_s = decode_group_time_s_paged(cfg, ctxs);
+    let model_flops = decode_group_model_flops(cfg, ctxs);
+    let tflops = model_flops / time_s / 1e12;
+    E2eReport {
+        time_s,
+        model_flops,
+        tflops,
+        mfu: tflops / cfg.device.peak_fp8_tflops,
+    }
+}
+
+/// Model FLOPs matching [`chunked_prefill_time_s`]'s execution shape:
+/// each chunk pays its linears (and LM head, when configured) at
+/// M = chunk rows, plus *causal* attention over the context accumulated
+/// so far — the chunks never materialize the masked square, so the FLOPs
+/// model must not charge it either, or chunked MFU would be overstated.
+/// A single cold chunk degenerates to [`prefill_model_flops`] exactly; a
+/// full hit costs one batch-1 decode step, mirroring the time model.
+pub fn chunked_prefill_model_flops(
+    cfg: &E2eConfig,
+    prompt: usize,
+    cached: usize,
+    chunk_tokens: usize,
+) -> f64 {
+    let m = &cfg.model;
+    let cached = cached.min(prompt);
+    if cached >= prompt {
+        return decode_step_model_flops(m, 1, prompt.max(1), cfg.lm_head_bf16);
+    }
+    let step = if chunk_tokens == 0 {
+        prompt - cached
+    } else {
+        chunk_tokens.max(1)
+    };
+    let per_layer_lin = m.attn_params_per_layer() as f64
+        + m.active_experts as f64 * m.mlp_params_per_expert() as f64;
+    let mut flops = 0.0f64;
+    let mut pos = cached;
+    while pos < prompt {
+        let c = step.min(prompt - pos);
+        let rows = c as f64;
+        let ctx = (pos + c) as f64;
+        flops += 2.0 * m.layers as f64 * per_layer_lin * rows;
+        flops += 4.0 * m.layers as f64 * rows * ctx * m.hidden as f64;
+        if cfg.lm_head_bf16 {
+            flops += 2.0 * rows * m.hidden as f64 * m.vocab as f64;
+        }
+        pos += c;
+    }
+    flops
+}
+
+/// Time + FLOPs + achieved TFLOPS + MFU for a (possibly warm, possibly
+/// chunked) prefill — the per-admission utilization sample.
+pub fn chunked_prefill_report(
+    cfg: &E2eConfig,
+    prompt: usize,
+    cached: usize,
+    chunk_tokens: usize,
+) -> E2eReport {
+    let time_s = chunked_prefill_time_s(cfg, prompt, cached, chunk_tokens);
+    let model_flops = chunked_prefill_model_flops(cfg, prompt, cached, chunk_tokens);
+    let tflops = model_flops / time_s / 1e12;
+    E2eReport {
+        time_s,
+        model_flops,
+        tflops,
+        mfu: tflops / cfg.device.peak_fp8_tflops,
+    }
+}
+
 /// One decode step for `batch` sequences at context `context` (Table 6
 /// measures 256 such steps before the target length; steady-state per-step
 /// numbers are equivalent). Priced through the **paged** read model —
@@ -521,6 +606,52 @@ mod tests {
         let one = attn_time_s_paged(&cfg, &[4096]);
         let four = attn_time_s_paged(&cfg, &[1024; 4]);
         assert!((one - four).abs() / one < 1e-9);
+    }
+
+    #[test]
+    fn group_model_flops_sum_equals_batched_formula() {
+        // Uniform contexts: the ragged sum must reproduce the batched
+        // decode FLOPs exactly (linear term × batch, attention × context).
+        let cfg = E2eConfig::llama31_70b_paper();
+        for &(b, s) in &[(8usize, 512usize), (32, 2048), (128, 1024)] {
+            let ragged = decode_group_model_flops(&cfg, &vec![s; b]);
+            let batched = decode_step_model_flops(&cfg.model, b, s, cfg.lm_head_bf16);
+            assert!(
+                (ragged - batched).abs() / batched < 1e-12,
+                "({b},{s}): {ragged} vs {batched}"
+            );
+        }
+        // And the report wrapper agrees with decode_step_tflops at the
+        // same geometry.
+        let rep = decode_group_report_paged(&cfg, &[2048; 32]);
+        let stp = decode_step_tflops(&cfg, 32, 2048);
+        assert!((rep.tflops - stp.tflops).abs() / stp.tflops < 1e-12);
+        assert!(rep.mfu > 0.0 && rep.mfu < 1.0);
+    }
+
+    #[test]
+    fn chunked_prefill_flops_boundary_cases() {
+        let cfg = E2eConfig::llama31_70b_paper();
+        // Single cold chunk = the full prefill formula, exactly.
+        for seq in [1024usize, 4096] {
+            let chunked = chunked_prefill_model_flops(&cfg, seq, 0, 0);
+            let full = prefill_model_flops(&cfg.model, seq, cfg.lm_head_bf16);
+            assert!((chunked - full).abs() / full < 1e-12, "seq {seq}");
+        }
+        // Full hit = one bootstrap batch-1 decode step.
+        let hit = chunked_prefill_model_flops(&cfg, 4096, 4096, 512);
+        let boot = decode_step_model_flops(&cfg.model, 1, 4096, cfg.lm_head_bf16);
+        assert!((hit - boot).abs() / boot < 1e-12);
+        // Causal chunking computes *less* than the masked square, and a
+        // warm tail less than a cold one.
+        let cold_chunked = chunked_prefill_model_flops(&cfg, 4096, 0, 512);
+        let cold_full = chunked_prefill_model_flops(&cfg, 4096, 0, 0);
+        assert!(cold_chunked < cold_full);
+        let warm = chunked_prefill_model_flops(&cfg, 4096, 2048, 512);
+        assert!(warm < cold_chunked);
+        // The report's MFU is finite and positive for a warm tail.
+        let rep = chunked_prefill_report(&cfg, 4096, 2048, 512);
+        assert!(rep.mfu > 0.0 && rep.mfu < 1.0, "mfu {}", rep.mfu);
     }
 
     #[test]

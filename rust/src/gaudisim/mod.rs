@@ -12,10 +12,11 @@ pub mod mme;
 
 pub use device::{Device, Generation};
 pub use e2e::{
-    attn_time_s_dense_copy, attn_time_s_paged, chunked_prefill_time_s,
-    decode_group_time_s_paged, decode_step_tflops, decode_step_tflops_dense,
-    kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, E2eConfig,
-    KV_PAGED_STREAM_INEFFICIENCY,
+    attn_time_s_dense_copy, attn_time_s_paged, chunked_prefill_model_flops,
+    chunked_prefill_report, chunked_prefill_time_s, decode_group_model_flops,
+    decode_group_report_paged, decode_group_time_s_paged, decode_step_tflops,
+    decode_step_tflops_dense, kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops,
+    E2eConfig, E2eReport, KV_PAGED_STREAM_INEFFICIENCY,
 };
 pub use memory::MemoryModel;
 pub use mme::{

@@ -27,6 +27,9 @@
 //!   registry with health/drain state, routing policies, bounded admission
 //!   with typed rejects, fleet-merged metrics) over [`coordinator::Engine`]
 //!   replicas or gaudisim-backed simulated replicas.
+//! * [`obs`] — observability: per-replica trace recorders of typed request
+//!   lifecycle events (Chrome trace-event / Perfetto export), step-level
+//!   MFU and KV-bytes accounting, and Prometheus text exposition.
 //! * [`eval`] — accuracy harness (perplexity, KL, top-1 agreement) emitting
 //!   the paper's Δ% tables.
 //! * [`server`] — CLI plumbing for the `repro` binary.
@@ -43,6 +46,7 @@ pub mod fp8;
 pub mod gaudisim;
 pub mod gemm;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod router;
 pub mod runtime;

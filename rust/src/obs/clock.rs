@@ -1,0 +1,69 @@
+//! Clock abstraction for trace timestamps.
+//!
+//! The wall-clock [`crate::coordinator::Engine`] and the virtual-clock
+//! [`crate::router::SimReplica`] must emit *comparable* timelines: both
+//! report seconds since their own time zero, so a Chrome trace merging
+//! replicas of either kind lines up on one axis.
+
+use std::time::Instant;
+
+/// Seconds-since-start time source behind a [`super::TraceRecorder`].
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Real time, measured from an anchor instant (the engine path).
+    Wall(Instant),
+    /// Discrete-event virtual time in seconds (`SimReplica::now_s`).
+    Virtual(f64),
+}
+
+impl Clock {
+    /// A wall clock anchored at the call site.
+    pub fn wall() -> Self {
+        Clock::Wall(Instant::now())
+    }
+
+    /// A virtual clock starting at `now_s` (usually 0.0).
+    pub fn virtual_at(now_s: f64) -> Self {
+        Clock::Virtual(now_s)
+    }
+
+    /// Current time in seconds since this clock's zero.
+    pub fn now_s(&self) -> f64 {
+        match self {
+            Clock::Wall(anchor) => anchor.elapsed().as_secs_f64(),
+            Clock::Virtual(t) => *t,
+        }
+    }
+
+    /// Advance a virtual clock (monotonic: never backwards). Wall clocks
+    /// advance themselves and ignore this.
+    pub fn set_virtual(&mut self, now_s: f64) {
+        if let Clock::Virtual(t) = self {
+            *t = t.max(now_s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_monotonic() {
+        let mut c = Clock::virtual_at(1.0);
+        assert_eq!(c.now_s(), 1.0);
+        c.set_virtual(3.5);
+        assert_eq!(c.now_s(), 3.5);
+        c.set_virtual(2.0);
+        assert_eq!(c.now_s(), 3.5, "clock never goes backwards");
+    }
+
+    #[test]
+    fn wall_clock_advances_by_itself() {
+        let mut c = Clock::wall();
+        let t0 = c.now_s();
+        c.set_virtual(1e9); // ignored
+        assert!(c.now_s() < 1e6);
+        assert!(c.now_s() >= t0);
+    }
+}

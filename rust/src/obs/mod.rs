@@ -1,0 +1,32 @@
+//! Observability: per-request trace timelines, step-level utilization
+//! accounting, and metrics exposition.
+//!
+//! The paper's headline claim is operational ("frequently exceeding 90%
+//! MFU") — this layer makes the repro report what the serving stack
+//! *actually did* during a run, not just what isolated gaudisim calls
+//! predict:
+//!
+//! * [`trace`] — a bounded per-replica [`TraceRecorder`] of typed
+//!   lifecycle events (admit / prefill chunk / decode step / prefix hit /
+//!   CoW copy / evict / retire / reject), exported as Chrome trace-event
+//!   JSON (Perfetto-loadable): one process per replica, one track per
+//!   request.
+//! * [`clock`] — the [`Clock`] abstraction that lets the wall-clock
+//!   engine and the discrete-event simulation stamp comparable timelines.
+//! * [`step`] — [`StepStats`]: per-step modeled time / model FLOPs / KV
+//!   bytes / pool occupancy, folded into the windowed `mfu` and
+//!   `pool_occupancy` gauges on [`crate::coordinator::ServeMetrics`].
+//! * [`prom`] — Prometheus text-format exposition
+//!   (`ServeMetrics::render_prometheus`), the schema shared by `repro
+//!   serve --metrics-out`, `repro fleet --metrics-out`, and the benches.
+
+pub mod clock;
+pub mod prom;
+pub mod step;
+pub mod trace;
+
+pub use clock::Clock;
+pub use step::StepStats;
+pub use trace::{
+    chrome_trace_json, TraceEvent, TraceEventKind, TraceRecorder, DEFAULT_TRACE_CAPACITY,
+};

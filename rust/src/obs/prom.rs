@@ -1,0 +1,189 @@
+//! Prometheus text-format exposition for the serving metrics.
+//!
+//! One schema shared by `repro serve`, `repro fleet` (fleet-merged), and
+//! any future HTTP front end: counters for work done, summaries (with
+//! `quantile` labels) for the latency and utilization distributions, and
+//! gauges for pool occupancy / hit rates. Rendered on demand from a
+//! [`ServeMetrics`] snapshot — there is no background collector thread.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{LatencyStat, ServeMetrics};
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Prometheus `summary`: quantiles over the stat's reservoir plus exact
+/// `_sum` / `_count`.
+fn summary(out: &mut String, name: &str, help: &str, s: &LatencyStat) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} summary");
+    for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+        let _ = writeln!(out, "{name}{{quantile=\"{label}\"}} {}", s.percentile_s(q));
+    }
+    let _ = writeln!(out, "{name}_sum {}", s.sum_s);
+    let _ = writeln!(out, "{name}_count {}", s.count);
+}
+
+impl ServeMetrics {
+    /// Render this snapshot in the Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        counter(
+            &mut out,
+            "repro_requests_completed",
+            "Requests completed (including unservable empties).",
+            self.requests_completed,
+        );
+        counter(
+            &mut out,
+            "repro_prompt_tokens",
+            "Prompt tokens admitted.",
+            self.prompt_tokens,
+        );
+        counter(
+            &mut out,
+            "repro_generated_tokens",
+            "Tokens generated.",
+            self.generated_tokens,
+        );
+        counter(
+            &mut out,
+            "repro_prefill_steps",
+            "Prefill steps executed.",
+            self.prefill_steps,
+        );
+        counter(
+            &mut out,
+            "repro_prefill_chunks",
+            "Chunked-prefill tail chunks executed.",
+            self.prefill_chunks,
+        );
+        counter(
+            &mut out,
+            "repro_decode_steps",
+            "Decode steps executed.",
+            self.decode_steps,
+        );
+        counter(
+            &mut out,
+            "repro_prefix_hit_tokens",
+            "Prompt tokens served from the prefix cache.",
+            self.prefix_hit_tokens,
+        );
+        counter(
+            &mut out,
+            "repro_prefix_evicted_blocks",
+            "KV blocks reclaimed from the prefix cache by eviction.",
+            self.prefix_evicted_blocks,
+        );
+        counter(
+            &mut out,
+            "repro_kv_bytes_read",
+            "Physical KV bytes read by decode steps.",
+            self.kv_bytes_read,
+        );
+        counter(
+            &mut out,
+            "repro_cow_block_copies",
+            "Copy-on-write block clones (shared block went private).",
+            self.cow_block_copies,
+        );
+        counter(
+            &mut out,
+            "repro_trace_events_dropped",
+            "Trace events dropped by the bounded ring buffer.",
+            self.trace_events_dropped,
+        );
+        gauge(
+            &mut out,
+            "repro_prefix_hit_rate",
+            "Fraction of cache-attached admissions that hit.",
+            self.prefix_hit_rate(),
+        );
+        gauge(
+            &mut out,
+            "repro_mean_decode_batch",
+            "Mean decode group size.",
+            self.mean_decode_batch(),
+        );
+        gauge(
+            &mut out,
+            "repro_pool_occupancy_peak",
+            "Peak KV block-pool occupancy observed (0-1).",
+            self.pool_occupancy_peak,
+        );
+        summary(
+            &mut out,
+            "repro_ttft_seconds",
+            "Time to first token.",
+            &self.ttft,
+        );
+        summary(
+            &mut out,
+            "repro_tpot_seconds",
+            "Time per output token.",
+            &self.tpot,
+        );
+        summary(
+            &mut out,
+            "repro_mfu",
+            "Per-step model FLOPs utilization vs device FP8 peak (0-1).",
+            &self.mfu,
+        );
+        summary(
+            &mut out,
+            "repro_pool_occupancy",
+            "Per-step KV block-pool occupancy (0-1).",
+            &self.pool_occupancy,
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_families_and_values() {
+        let mut m = ServeMetrics::new();
+        m.requests_completed = 3;
+        m.generated_tokens = 42;
+        m.kv_bytes_read = 4096;
+        m.trace_events_dropped = 7;
+        m.pool_occupancy_peak = 0.75;
+        m.ttft.record(0.5);
+        m.mfu.record(0.9);
+        let text = m.render_prometheus();
+        for needle in [
+            "# TYPE repro_requests_completed counter",
+            "repro_requests_completed 3",
+            "repro_generated_tokens 42",
+            "repro_kv_bytes_read 4096",
+            "repro_trace_events_dropped 7",
+            "repro_pool_occupancy_peak 0.75",
+            "# TYPE repro_ttft_seconds summary",
+            "repro_ttft_seconds{quantile=\"0.5\"} 0.5",
+            "repro_ttft_seconds_count 1",
+            "repro_mfu{quantile=\"0.99\"} 0.9",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut it = line.rsplitn(2, ' ');
+            let v = it.next().unwrap();
+            assert!(v.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+    }
+}

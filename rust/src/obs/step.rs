@@ -1,0 +1,99 @@
+//! Step-level utilization accounting: one record per prefill chunk or
+//! decode step, priced against the device roofline.
+//!
+//! Both replica kinds produce these — the simulation from the gaudisim
+//! model's own time/FLOPs, the engine from wall-clock step times — and
+//! fold them into [`crate::coordinator::ServeMetrics`] windowed gauges
+//! (`mfu`, `pool_occupancy`, `kv_bytes_read`). MFU follows the paper's
+//! convention: Kim-et-al model FLOPs over modeled time, divided by
+//! `Device::peak_fp8_tflops`.
+
+use crate::coordinator::ServeMetrics;
+
+/// One prefill-chunk or decode-step utilization sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Modeled (or measured) step time.
+    pub time_s: f64,
+    /// Kim-et-al model FLOPs the step performed (0 when no model applies,
+    /// e.g. the tiny artifact engine — MFU then records as 0).
+    pub model_flops: f64,
+    /// Physical KV bytes the step read.
+    pub kv_bytes_read: u64,
+    /// Block-pool occupancy in [0, 1] right after the step.
+    pub pool_occupancy: f64,
+}
+
+impl StepStats {
+    /// Achieved TFLOPS: model FLOPs over step time.
+    pub fn achieved_tflops(&self) -> f64 {
+        if self.time_s > 0.0 {
+            self.model_flops / self.time_s / 1e12
+        } else {
+            0.0
+        }
+    }
+
+    /// Model FLOPs utilization against the device's FP8 peak.
+    pub fn mfu(&self, peak_fp8_tflops: f64) -> f64 {
+        if peak_fp8_tflops > 0.0 {
+            self.achieved_tflops() / peak_fp8_tflops
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold this sample into the serving metrics' windowed gauges and
+    /// return the MFU it recorded (so the caller can stamp it on the
+    /// trace event too).
+    pub fn apply(&self, m: &mut ServeMetrics, peak_fp8_tflops: f64) -> f64 {
+        let mfu = self.mfu(peak_fp8_tflops);
+        m.mfu.record(mfu);
+        m.pool_occupancy.record(self.pool_occupancy);
+        m.pool_occupancy_peak = m.pool_occupancy_peak.max(self.pool_occupancy);
+        m.kv_bytes_read += self.kv_bytes_read;
+        mfu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mfu_is_flops_over_time_over_peak() {
+        let s = StepStats {
+            time_s: 0.01,
+            model_flops: 4.0e12,
+            kv_bytes_read: 1024,
+            pool_occupancy: 0.25,
+        };
+        assert!((s.achieved_tflops() - 400.0).abs() < 1e-9);
+        assert!((s.mfu(800.0) - 0.5).abs() < 1e-12);
+        assert_eq!(StepStats::default().mfu(800.0), 0.0);
+        assert_eq!(s.mfu(0.0), 0.0);
+    }
+
+    #[test]
+    fn apply_updates_gauges_and_peak() {
+        let mut m = ServeMetrics::new();
+        let a = StepStats {
+            time_s: 0.01,
+            model_flops: 4.0e12,
+            kv_bytes_read: 100,
+            pool_occupancy: 0.5,
+        };
+        let b = StepStats {
+            time_s: 0.01,
+            model_flops: 2.0e12,
+            kv_bytes_read: 50,
+            pool_occupancy: 0.3,
+        };
+        a.apply(&mut m, 800.0);
+        b.apply(&mut m, 800.0);
+        assert_eq!(m.mfu.count, 2);
+        assert!((m.mfu.max_s - 0.5).abs() < 1e-12);
+        assert!((m.pool_occupancy_peak - 0.5).abs() < 1e-12);
+        assert_eq!(m.kv_bytes_read, 150);
+    }
+}

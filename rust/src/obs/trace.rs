@@ -1,0 +1,486 @@
+//! Bounded per-replica trace recorder + Chrome trace-event JSON export.
+//!
+//! Every replica (wall-clock engine or virtual-clock simulation) owns one
+//! [`TraceRecorder`]: a bounded buffer of typed lifecycle events stamped
+//! by a [`Clock`]. The exporter renders a fleet of recorders as Chrome
+//! trace-event JSON — loadable in Perfetto / `chrome://tracing` — with
+//! one *process* per replica and one *thread* (track) per request, plus a
+//! `steps` track carrying the device-level prefill/decode spans.
+//!
+//! The buffer drops the **newest** events once full (and counts them in
+//! [`TraceRecorder::dropped`]) rather than overwriting the oldest:
+//! retire events synthesize whole-request spans from their own payload,
+//! so a truncated tail loses recent detail but never tears an
+//! already-recorded span in half.
+
+use super::clock::Clock;
+use crate::coordinator::RequestId;
+
+/// Default per-replica event capacity (~64k events ≈ a few MB).
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Typed lifecycle event payloads — the event taxonomy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEventKind {
+    /// Request left the queue and was admitted for prefill.
+    Admit {
+        /// Seconds it waited in the queue before admission.
+        queued_s: f64,
+    },
+    /// One prefill chunk (or a whole cold prefill) executed.
+    PrefillChunk { tokens: usize, mfu: f64 },
+    /// One decode step over a compiled group.
+    DecodeStep {
+        batch: usize,
+        mfu: f64,
+        kv_bytes: u64,
+        /// Block-pool occupancy in [0, 1] right after the step.
+        pool_occupancy: f64,
+    },
+    /// Admission found `tokens` of the prompt resident in the prefix cache.
+    PrefixHit { tokens: usize },
+    /// Copy-on-write block clones performed (shared block went private).
+    CowCopy { blocks: u64 },
+    /// Prefix-cache blocks reclaimed under admission pressure.
+    Evict { blocks: u64 },
+    /// Request finished; carries the latency summary used to synthesize
+    /// its whole-request span in the export.
+    Retire {
+        generated: usize,
+        ttft_s: f64,
+        tpot_s: f64,
+        total_s: f64,
+    },
+    /// Request completed unservable / rejected at the replica.
+    Reject { reason: String },
+}
+
+impl TraceEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Admit { .. } => "admit",
+            TraceEventKind::PrefillChunk { .. } => "prefill_chunk",
+            TraceEventKind::DecodeStep { .. } => "decode_step",
+            TraceEventKind::PrefixHit { .. } => "prefix_hit",
+            TraceEventKind::CowCopy { .. } => "cow_copy",
+            TraceEventKind::Evict { .. } => "evict",
+            TraceEventKind::Retire { .. } => "retire",
+            TraceEventKind::Reject { .. } => "reject",
+        }
+    }
+}
+
+/// One recorded event: a timestamp (+ optional duration for spans) on the
+/// replica's clock, an optional request id, and the typed payload.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub ts_s: f64,
+    /// 0.0 for instants; > 0 for complete spans.
+    pub dur_s: f64,
+    pub request: Option<RequestId>,
+    pub kind: TraceEventKind,
+}
+
+/// Bounded event buffer owned by one replica.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    replica: usize,
+    clock: Clock,
+    capacity: usize,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(replica: usize, clock: Clock) -> Self {
+        Self::with_capacity(replica, clock, DEFAULT_TRACE_CAPACITY)
+    }
+
+    pub fn with_capacity(replica: usize, clock: Clock, capacity: usize) -> Self {
+        Self {
+            replica,
+            clock,
+            capacity: capacity.max(1),
+            events: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Current time on this recorder's clock.
+    pub fn now_s(&self) -> f64 {
+        self.clock.now_s()
+    }
+
+    /// Advance the underlying virtual clock (no-op on wall clocks).
+    pub fn set_virtual_now(&mut self, now_s: f64) {
+        self.clock.set_virtual(now_s);
+    }
+
+    /// Record an instant event stamped "now".
+    pub fn record(&mut self, request: Option<RequestId>, kind: TraceEventKind) {
+        let ts = self.now_s();
+        self.record_at(ts, request, kind);
+    }
+
+    /// Record an instant event at an explicit timestamp (virtual-clock
+    /// replicas stamp events at the modeled time, not the call time).
+    pub fn record_at(&mut self, ts_s: f64, request: Option<RequestId>, kind: TraceEventKind) {
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            request,
+            kind,
+        });
+    }
+
+    /// Record a complete span `[start_s, start_s + dur_s]`.
+    pub fn record_span(
+        &mut self,
+        request: Option<RequestId>,
+        start_s: f64,
+        dur_s: f64,
+        kind: TraceEventKind,
+    ) {
+        self.push(TraceEvent {
+            ts_s: start_s,
+            dur_s: dur_s.max(0.0),
+            request,
+            kind,
+        });
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.capacity {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events refused because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Track id for a request's thread row (0 is the replica's `steps` track).
+fn request_tid(id: RequestId) -> u64 {
+    id + 1
+}
+
+fn complete_event(pid: usize, tid: u64, name: &str, ts_us: f64, dur_us: f64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+         \"ts\":{ts_us:.3},\"dur\":{dur_us:.3},\"args\":{{{args}}}}}"
+    )
+}
+
+fn instant_event(pid: usize, tid: u64, name: &str, ts_us: f64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\
+         \"ts\":{ts_us:.3},\"args\":{{{args}}}}}"
+    )
+}
+
+/// Render a fleet of recorders as Chrome trace-event JSON.
+///
+/// Layout: one process per replica (`pid` = replica id, named by its
+/// label); inside it, `tid 0` is the `steps` track (prefill/decode spans,
+/// CoW/evict instants) and each request gets its own thread whose
+/// whole-request / ttft / decode spans are synthesized from the `Retire`
+/// payload. Every track's events are sorted by timestamp, so per-track
+/// timestamps are monotonic by construction.
+pub fn chrome_trace_json(tracks: &[(String, &TraceRecorder)]) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for (label, rec) in tracks {
+        let pid = rec.replica();
+        parts.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(label)
+        ));
+        parts.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"steps\"}}}}"
+        ));
+        // Bucket events per track, then sort each track by timestamp.
+        let mut per_tid: std::collections::BTreeMap<u64, Vec<(f64, String)>> =
+            std::collections::BTreeMap::new();
+        let mut named_tids: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+        for ev in rec.events() {
+            let ts_us = ev.ts_s.max(0.0) * 1e6;
+            let dur_us = ev.dur_s * 1e6;
+            match &ev.kind {
+                TraceEventKind::PrefillChunk { tokens, mfu } => {
+                    let args = format!("\"tokens\":{tokens},\"mfu\":{mfu:.6}");
+                    per_tid.entry(0).or_default().push((
+                        ts_us,
+                        complete_event(pid, 0, "prefill_chunk", ts_us, dur_us, &args),
+                    ));
+                }
+                TraceEventKind::DecodeStep {
+                    batch,
+                    mfu,
+                    kv_bytes,
+                    pool_occupancy,
+                } => {
+                    let args = format!(
+                        "\"batch\":{batch},\"mfu\":{mfu:.6},\"kv_bytes\":{kv_bytes},\
+                         \"pool_occupancy\":{pool_occupancy:.6}"
+                    );
+                    per_tid.entry(0).or_default().push((
+                        ts_us,
+                        complete_event(pid, 0, "decode_step", ts_us, dur_us, &args),
+                    ));
+                }
+                TraceEventKind::CowCopy { blocks } => {
+                    per_tid.entry(0).or_default().push((
+                        ts_us,
+                        instant_event(pid, 0, "cow_copy", ts_us, &format!("\"blocks\":{blocks}")),
+                    ));
+                }
+                TraceEventKind::Evict { blocks } => {
+                    per_tid.entry(0).or_default().push((
+                        ts_us,
+                        instant_event(pid, 0, "evict", ts_us, &format!("\"blocks\":{blocks}")),
+                    ));
+                }
+                TraceEventKind::Admit { queued_s } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(pid, tid, "admit", ts_us, &format!("\"queued_s\":{queued_s:.6}")),
+                    ));
+                }
+                TraceEventKind::PrefixHit { tokens } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(pid, tid, "prefix_hit", ts_us, &format!("\"tokens\":{tokens}")),
+                    ));
+                }
+                TraceEventKind::Reject { reason } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(pid, tid, "reject", ts_us, &format!("\"reason\":\"{}\"", esc(reason))),
+                    ));
+                }
+                TraceEventKind::Retire {
+                    generated,
+                    ttft_s,
+                    tpot_s,
+                    total_s,
+                } => {
+                    // The retire payload carries the whole request's
+                    // latency summary: synthesize its request / ttft /
+                    // decode spans on its own track.
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    let start_us = (ev.ts_s - total_s).max(0.0) * 1e6;
+                    let ttft_us = ttft_s.max(0.0) * 1e6;
+                    let total_us = total_s.max(0.0) * 1e6;
+                    let bucket = per_tid.entry(tid).or_default();
+                    bucket.push((
+                        start_us,
+                        complete_event(
+                            pid,
+                            tid,
+                            "request",
+                            start_us,
+                            total_us,
+                            &format!(
+                                "\"generated\":{generated},\"ttft_s\":{ttft_s:.6},\
+                                 \"tpot_s\":{tpot_s:.6},\"total_s\":{total_s:.6}"
+                            ),
+                        ),
+                    ));
+                    bucket.push((
+                        start_us,
+                        complete_event(pid, tid, "ttft", start_us, ttft_us, ""),
+                    ));
+                    let decode_start_us = start_us + ttft_us;
+                    bucket.push((
+                        decode_start_us,
+                        complete_event(
+                            pid,
+                            tid,
+                            "decode",
+                            decode_start_us,
+                            (total_us - ttft_us).max(0.0),
+                            "",
+                        ),
+                    ));
+                }
+            }
+        }
+        for tid in named_tids {
+            parts.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"req {}\"}}}}",
+                tid - 1
+            ));
+        }
+        for (_, mut evs) in per_tid {
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            parts.extend(evs.into_iter().map(|(_, s)| s));
+        }
+    }
+    format!(
+        "{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}",
+        parts.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn recorder() -> TraceRecorder {
+        TraceRecorder::with_capacity(0, Clock::virtual_at(0.0), 16)
+    }
+
+    #[test]
+    fn records_and_stamps_virtual_time() {
+        let mut r = recorder();
+        r.set_virtual_now(1.5);
+        r.record(Some(7), TraceEventKind::Admit { queued_s: 0.5 });
+        r.record_span(
+            None,
+            1.0,
+            0.5,
+            TraceEventKind::PrefillChunk {
+                tokens: 128,
+                mfu: 0.4,
+            },
+        );
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.events()[0].ts_s, 1.5);
+        assert_eq!(r.events()[1].dur_s, 0.5);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn full_buffer_drops_newest_and_counts() {
+        let mut r = TraceRecorder::with_capacity(0, Clock::virtual_at(0.0), 2);
+        for i in 0..5 {
+            r.record_at(i as f64, None, TraceEventKind::CowCopy { blocks: 1 });
+        }
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 3);
+        // The *oldest* events survive.
+        assert_eq!(r.events()[0].ts_s, 0.0);
+        assert_eq!(r.events()[1].ts_s, 1.0);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_is_monotonic_per_track() {
+        let mut r = recorder();
+        // Deliberately out of order: the exporter must sort per track.
+        r.record_span(
+            None,
+            2.0,
+            0.1,
+            TraceEventKind::DecodeStep {
+                batch: 2,
+                mfu: 0.1,
+                kv_bytes: 1024,
+                pool_occupancy: 0.5,
+            },
+        );
+        r.record_span(
+            None,
+            1.0,
+            0.5,
+            TraceEventKind::PrefillChunk {
+                tokens: 64,
+                mfu: 0.3,
+            },
+        );
+        r.record_at(3.0, Some(1), TraceEventKind::PrefixHit { tokens: 32 });
+        r.record_at(
+            5.0,
+            Some(1),
+            TraceEventKind::Retire {
+                generated: 8,
+                ttft_s: 1.5,
+                tpot_s: 0.5,
+                total_s: 5.0,
+            },
+        );
+        let out = chrome_trace_json(&[("sim0".to_string(), &r)]);
+        let j = Json::parse(&out).expect("chrome trace must be valid JSON");
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events.len() >= 7, "events + metadata expected");
+        // Per-(pid, tid) monotonic timestamps over non-metadata events.
+        let mut last: std::collections::HashMap<(u64, u64), f64> = std::collections::HashMap::new();
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) == Some("M") {
+                continue;
+            }
+            let pid = e.get("pid").and_then(Json::as_f64).unwrap() as u64;
+            let tid = e.get("tid").and_then(Json::as_f64).unwrap() as u64;
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            let prev = last.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+            assert!(ts >= *prev, "track ({pid},{tid}) went backwards");
+            *prev = ts;
+        }
+        // The retire synthesized a whole-request span whose duration is
+        // total_s and a ttft sub-span of ttft_s.
+        let req_span = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("request"))
+            .expect("request span synthesized");
+        let dur = req_span.get("dur").and_then(Json::as_f64).unwrap();
+        assert!((dur - 5.0e6).abs() < 1.0, "dur {dur} != 5s in us");
+        let ttft_span = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("ttft"))
+            .unwrap();
+        assert!((ttft_span.get("dur").and_then(Json::as_f64).unwrap() - 1.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let r = TraceRecorder::with_capacity(3, Clock::virtual_at(0.0), 4);
+        let out = chrome_trace_json(&[("we\"ird\\label".to_string(), &r)]);
+        assert!(Json::parse(&out).is_ok(), "escaping broke: {out}");
+    }
+}

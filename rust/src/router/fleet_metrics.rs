@@ -108,6 +108,42 @@ impl FleetMetrics {
             self.merged.tpot.p50_s() * 1e3,
             self.merged.tpot.p99_s() * 1e3,
         ));
+        if self.merged.mfu.count > 0 {
+            s.push_str(&format!(
+                " mfu p50={:.4} p99={:.4} pool_peak={:.3}",
+                self.merged.mfu.p50_s(),
+                self.merged.mfu.p99_s(),
+                self.merged.pool_occupancy_peak,
+            ));
+        }
+        if self.merged.trace_events_dropped > 0 {
+            s.push_str(&format!(
+                "\nwarning: trace ring buffer dropped {} events across the fleet \
+                 (raise --trace-capacity for a complete timeline)",
+                self.merged.trace_events_dropped
+            ));
+        }
+        s
+    }
+
+    /// Prometheus text exposition for the whole fleet: the merged
+    /// [`ServeMetrics`] families plus fleet-level extras (rejections,
+    /// backlog peak, makespan, throughput). One scrape = one run snapshot.
+    pub fn render_prometheus(&self) -> String {
+        let mut s = self.merged.render_prometheus();
+        s.push_str("# TYPE repro_fleet_replicas gauge\n");
+        s.push_str(&format!("repro_fleet_replicas {}\n", self.replicas.len()));
+        s.push_str("# TYPE repro_fleet_rejected_total counter\n");
+        s.push_str(&format!("repro_fleet_rejected_total {}\n", self.rejected));
+        s.push_str("# TYPE repro_fleet_queued_peak gauge\n");
+        s.push_str(&format!("repro_fleet_queued_peak {}\n", self.queued_peak));
+        s.push_str("# TYPE repro_fleet_makespan_seconds gauge\n");
+        s.push_str(&format!("repro_fleet_makespan_seconds {:.6}\n", self.makespan_s));
+        s.push_str("# TYPE repro_fleet_throughput_tokens_per_second gauge\n");
+        s.push_str(&format!(
+            "repro_fleet_throughput_tokens_per_second {:.3}\n",
+            self.throughput_tok_s()
+        ));
         s
     }
 
@@ -119,7 +155,9 @@ impl FleetMetrics {
              \"makespan_s\":{:.6},\"throughput_tok_s\":{:.3},\
              \"ttft_p50_ms\":{:.4},\"ttft_p95_ms\":{:.4},\"ttft_p99_ms\":{:.4},\
              \"tpot_p50_ms\":{:.5},\"tpot_p95_ms\":{:.5},\"tpot_p99_ms\":{:.5},\
-             \"prefix_hits\":{},\"prefix_hit_tokens\":{}}}",
+             \"prefix_hits\":{},\"prefix_hit_tokens\":{},\
+             \"mfu_mean\":{:.6},\"pool_occupancy_peak\":{:.6},\
+             \"trace_events_dropped\":{}}}",
             replicas,
             policy,
             requests,
@@ -136,6 +174,9 @@ impl FleetMetrics {
             self.merged.tpot.p99_s() * 1e3,
             self.merged.prefix_hits,
             self.merged.prefix_hit_tokens,
+            self.merged.mfu.mean_s(),
+            self.merged.pool_occupancy_peak,
+            self.merged.trace_events_dropped,
         )
     }
 }
@@ -167,5 +208,33 @@ mod tests {
             Some("least_outstanding")
         );
         assert_eq!(j.get("rejected").and_then(Json::as_f64), Some(2.0));
+        // Observability satellites ride in the same row.
+        assert_eq!(j.get("mfu_mean").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(
+            j.get("trace_events_dropped").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        assert!(j.get("pool_occupancy_peak").is_some());
+    }
+
+    #[test]
+    fn prometheus_includes_fleet_families_and_drop_warning() {
+        let reg = ReplicaRegistry::new();
+        let mut fm = FleetMetrics::collect(&reg, 3, 7);
+        let prom = fm.render_prometheus();
+        for needle in [
+            "repro_fleet_replicas 0",
+            "repro_fleet_rejected_total 3",
+            "repro_fleet_queued_peak 7",
+            "repro_fleet_makespan_seconds",
+            "repro_fleet_throughput_tokens_per_second",
+            "repro_ttft_seconds_count",
+        ] {
+            assert!(prom.contains(needle), "missing {needle:?} in:\n{prom}");
+        }
+        assert!(!fm.report().contains("warning:"));
+        fm.merged.trace_events_dropped = 41;
+        let rep = fm.report();
+        assert!(rep.contains("warning:") && rep.contains("41"), "{rep}");
     }
 }

@@ -38,6 +38,7 @@ pub use sim::{SimReplica, SimReplicaConfig};
 use anyhow::Result;
 
 use crate::coordinator::{Request, RequestId, RequestOutput, ServeMetrics};
+use crate::obs::{chrome_trace_json, TraceRecorder};
 
 /// The narrow interface the router drives a replica through.
 ///
@@ -124,6 +125,16 @@ pub trait ReplicaHandle {
     fn abort_active(&mut self) -> Vec<RequestId>;
 
     fn metrics(&self) -> &ServeMetrics;
+
+    /// Attach a lifecycle trace recorder; `replica` becomes the Chrome
+    /// trace process id, `capacity` bounds the event buffer. Replicas
+    /// without tracing support ignore the call (the default).
+    fn enable_trace(&mut self, _replica: usize, _capacity: usize) {}
+
+    /// The replica's trace recorder, when tracing is enabled.
+    fn trace(&self) -> Option<&TraceRecorder> {
+        None
+    }
 }
 
 /// Fleet-level configuration.
@@ -197,6 +208,27 @@ impl FleetRouter {
 
     pub fn rejected(&self) -> &[RejectedRequest] {
         &self.rejected
+    }
+
+    /// Turn on lifecycle tracing for every registered replica (its
+    /// registry id becomes the Chrome trace pid).
+    pub fn enable_tracing(&mut self, capacity: usize) {
+        let ids: Vec<usize> = self.registry.entries().iter().map(|e| e.id).collect();
+        for id in ids {
+            self.registry.handle_mut(id).enable_trace(id, capacity);
+        }
+    }
+
+    /// Fleet-wide Chrome trace-event JSON over every tracing replica
+    /// (empty trace when tracing was never enabled).
+    pub fn chrome_trace(&self) -> String {
+        let tracks: Vec<(String, &TraceRecorder)> = self
+            .registry
+            .entries()
+            .iter()
+            .filter_map(|e| e.handle.trace().map(|t| (e.handle.label(), t)))
+            .collect();
+        chrome_trace_json(&tracks)
     }
 
     /// Health transition. Marking a replica `Down` evicts its queued

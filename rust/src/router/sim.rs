@@ -30,10 +30,12 @@ use crate::coordinator::{
     PrefixCacheConfig, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
 };
 use crate::gaudisim::{
-    chunked_prefill_time_s, decode_group_time_s_paged, decode_step_tflops_dense, prefill_tflops,
-    Device, E2eConfig, MemoryModel, ScalingKind,
+    chunked_prefill_report, decode_group_report_paged, decode_step_tflops_dense,
+    kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, Device, E2eConfig, MemoryModel,
+    ScalingKind,
 };
 use crate::model::config::{ModelConfig, ModelFamily};
+use crate::obs::{Clock, StepStats, TraceEventKind, TraceRecorder};
 use crate::quant::KvDtype;
 
 use super::{Admission, ReplicaHandle};
@@ -145,6 +147,9 @@ pub struct SimReplica {
     now_s: f64,
     metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
+    /// Lifecycle trace recorder (None = tracing off; the default, so the
+    /// hot path pays nothing).
+    trace: Option<TraceRecorder>,
 }
 
 impl SimReplica {
@@ -192,6 +197,7 @@ impl SimReplica {
             now_s: 0.0,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
+            trace: None,
         })
     }
 
@@ -208,6 +214,15 @@ impl SimReplica {
     /// (mirrors the engine's unservable path) rather than wedging the
     /// queue.
     fn finish_unservable(&mut self, req: Request) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record_at(
+                self.now_s,
+                Some(req.id),
+                TraceEventKind::Reject {
+                    reason: "unservable".to_string(),
+                },
+            );
+        }
         self.finished.push(RequestOutput {
             id: req.id,
             prompt_len: req.prompt.len(),
@@ -270,6 +285,15 @@ impl SimReplica {
                     self.alloc
                         .release(freed)
                         .expect("evicted cache blocks return to the pool");
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.record_at(
+                            self.now_s,
+                            None,
+                            TraceEventKind::Evict {
+                                blocks: freed as u64,
+                            },
+                        );
+                    }
                 }
             }
         }
@@ -297,15 +321,51 @@ impl SimReplica {
         // Cold admissions keep the legacy bucketed whole-prompt prefill
         // cost; warm ones pay only the chunked uncached tail (or a single
         // bootstrap decode step on a full hit).
-        let t = if cached == 0 {
+        let rep = if cached == 0 {
             let bucket = bucket_opt.expect("cold admission always has a bucket");
-            prefill_tflops(&self.cfg.e2e, bucket).time_s
+            prefill_tflops(&self.cfg.e2e, bucket)
         } else {
-            chunked_prefill_time_s(&self.cfg.e2e, prompt_len, cached, self.cfg.prefill_chunk)
+            chunked_prefill_report(&self.cfg.e2e, prompt_len, cached, self.cfg.prefill_chunk)
         };
+        let t = rep.time_s;
+        let admit_s = self.now_s;
         self.now_s += t;
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_time.record(t);
+        // Step-level utilization sample (gaudisim-modeled FLOPs over
+        // modeled time, vs the device FP8 peak).
+        let step = StepStats {
+            time_s: t,
+            model_flops: rep.model_flops,
+            kv_bytes_read: 0,
+            pool_occupancy: self.alloc.utilization(),
+        };
+        let step_mfu = step.apply(&mut self.metrics, self.cfg.e2e.device.peak_fp8_tflops);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record_at(
+                admit_s,
+                Some(req.id),
+                TraceEventKind::Admit {
+                    queued_s: (admit_s - arrival_s).max(0.0),
+                },
+            );
+            if cached > 0 {
+                tr.record_at(
+                    admit_s,
+                    Some(req.id),
+                    TraceEventKind::PrefixHit { tokens: cached },
+                );
+            }
+            tr.record_span(
+                Some(req.id),
+                admit_s,
+                t,
+                TraceEventKind::PrefillChunk {
+                    tokens: prompt_len - cached,
+                    mfu: step_mfu,
+                },
+            );
+        }
         if self.prefix.is_some() {
             if cached > 0 {
                 self.metrics.prefix_hits += 1;
@@ -344,6 +404,15 @@ impl SimReplica {
             self.alloc
                 .release(insert_evicted)
                 .expect("evicted cache blocks return to the pool");
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record_at(
+                    self.now_s,
+                    None,
+                    TraceEventKind::Evict {
+                        blocks: insert_evicted as u64,
+                    },
+                );
+            }
         }
         self.active.push(SimActive {
             id: req.id,
@@ -382,7 +451,9 @@ impl SimReplica {
             self.sched.decode_groups(&idxs)
         };
         for group in groups {
-            let t = if self.cfg.dense_decode {
+            // Step report (time + model FLOPs) and physical KV bytes read,
+            // under whichever pricing model is active.
+            let (rep, kv_bytes) = if self.cfg.dense_decode {
                 let bucket = self.sched.decode_bucket(group.len());
                 let max_ctx = group
                     .iter()
@@ -390,18 +461,46 @@ impl SimReplica {
                     .max()
                     .unwrap_or(1)
                     .max(1);
-                decode_step_tflops_dense(&self.cfg.e2e, bucket, max_ctx, max_ctx).time_s
+                (
+                    decode_step_tflops_dense(&self.cfg.e2e, bucket, max_ctx, max_ctx),
+                    kv_read_bytes_dense(&self.cfg.e2e.model, bucket, max_ctx),
+                )
             } else {
                 let ctxs: Vec<usize> = group
                     .iter()
                     .map(|&i| self.active[i].context.max(1))
                     .collect();
-                decode_group_time_s_paged(&self.cfg.e2e, &ctxs)
+                (
+                    decode_group_report_paged(&self.cfg.e2e, &ctxs),
+                    kv_read_bytes_paged(&self.cfg.e2e.model, &ctxs),
+                )
             };
+            let t = rep.time_s;
+            let start_s = self.now_s;
             self.now_s += t;
             self.metrics.decode_steps += 1;
             self.metrics.decode_batch_sum += group.len() as u64;
             self.metrics.decode_time.record(t);
+            let step = StepStats {
+                time_s: t,
+                model_flops: rep.model_flops,
+                kv_bytes_read: kv_bytes as u64,
+                pool_occupancy: self.alloc.utilization(),
+            };
+            let step_mfu = step.apply(&mut self.metrics, self.cfg.e2e.device.peak_fp8_tflops);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record_span(
+                    None,
+                    start_s,
+                    t,
+                    TraceEventKind::DecodeStep {
+                        batch: group.len(),
+                        mfu: step_mfu,
+                        kv_bytes: kv_bytes as u64,
+                        pool_occupancy: step.pool_occupancy,
+                    },
+                );
+            }
             for &i in &group {
                 {
                     let a = &mut self.active[i];
@@ -429,18 +528,32 @@ impl SimReplica {
                     }
                 }
                 let n = a.generated;
+                let tpot_s = if n > 1 {
+                    (self.now_s - a.first_token_s) / (n - 1) as f64
+                } else {
+                    0.0
+                };
+                let total_s = a.ttft_s + (self.now_s - a.first_token_s);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record_at(
+                        self.now_s,
+                        Some(a.id),
+                        TraceEventKind::Retire {
+                            generated: n,
+                            ttft_s: a.ttft_s,
+                            tpot_s,
+                            total_s,
+                        },
+                    );
+                }
                 self.finished.push(RequestOutput {
                     id: a.id,
                     prompt_len: a.prompt.len(),
                     // The simulation produces timing, not text.
                     tokens: vec![0; n],
                     ttft_s: a.ttft_s,
-                    tpot_s: if n > 1 {
-                        (self.now_s - a.first_token_s) / (n - 1) as f64
-                    } else {
-                        0.0
-                    },
-                    total_s: a.ttft_s + (self.now_s - a.first_token_s),
+                    tpot_s,
+                    total_s,
                 });
                 self.metrics.requests_completed += 1;
             } else {
@@ -532,6 +645,10 @@ impl ReplicaHandle for SimReplica {
         let mut did = self.admit_one_prefill();
         did |= self.decode_round();
         self.retire_finished();
+        if let Some(tr) = self.trace.as_mut() {
+            tr.set_virtual_now(self.now_s);
+            self.metrics.trace_events_dropped = tr.dropped();
+        }
         Ok(did)
     }
 
@@ -561,6 +678,18 @@ impl ReplicaHandle for SimReplica {
 
     fn metrics(&self) -> &ServeMetrics {
         &self.metrics
+    }
+
+    fn enable_trace(&mut self, replica: usize, capacity: usize) {
+        self.trace = Some(TraceRecorder::with_capacity(
+            replica,
+            Clock::virtual_at(self.now_s),
+            capacity,
+        ));
+    }
+
+    fn trace(&self) -> Option<&TraceRecorder> {
+        self.trace.as_ref()
     }
 }
 

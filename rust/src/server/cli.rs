@@ -11,8 +11,11 @@ use crate::eval::tables::render_accuracy_table;
 use crate::fp8::Fp8Format;
 use crate::gaudisim::{decode_step_tflops, gemm_time_s, prefill_tflops, Device, E2eConfig, GemmConfig, ScalingKind};
 use crate::model::config::{ModelConfig, ModelFamily};
+use crate::obs::{chrome_trace_json, DEFAULT_TRACE_CAPACITY};
 use crate::quant::KvDtype;
-use crate::router::{FleetConfig, FleetRouter, RoutePolicy, SimReplica, SimReplicaConfig};
+use crate::router::{
+    FleetConfig, FleetRouter, ReplicaHandle, RoutePolicy, SimReplica, SimReplicaConfig,
+};
 use crate::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig, WorkloadGen};
 
 /// Parsed command line: subcommand + --key value flags.
@@ -25,7 +28,7 @@ pub struct Args {
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         if argv.is_empty() {
-            bail!("usage: repro <serve|fleet|eval|simulate|gemm|info> [--flag value ...]");
+            bail!("usage: repro <serve|fleet|trace|eval|simulate|gemm|info> [--flag value ...]");
         }
         let mut args = Args {
             command: argv[0].clone(),
@@ -86,11 +89,12 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
+        "trace" => cmd_trace(&args),
         "eval" => cmd_eval(&args),
         "simulate" => cmd_simulate(&args),
         "gemm" => cmd_gemm(&args),
         "info" => cmd_info(&args),
-        other => bail!("unknown command {other:?} (serve|fleet|eval|simulate|gemm|info)"),
+        other => bail!("unknown command {other:?} (serve|fleet|trace|eval|simulate|gemm|info)"),
     }
 }
 
@@ -114,6 +118,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
     }
     let mut engine = Engine::new(cfg)?;
+    let trace_out = args.get("trace-out", "");
+    let metrics_out = args.get("metrics-out", "");
+    if !trace_out.is_empty() {
+        ReplicaHandle::enable_trace(
+            &mut engine,
+            0,
+            args.get_usize("trace-capacity", DEFAULT_TRACE_CAPACITY),
+        );
+    }
     let wl = WorkloadConfig {
         requests: args.get_usize("requests", 16),
         ..Default::default()
@@ -137,6 +150,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("{}", engine.metrics.report());
+    if !trace_out.is_empty() {
+        if let Some(tr) = ReplicaHandle::trace(&engine) {
+            std::fs::write(&trace_out, chrome_trace_json(&[(engine.label(), tr)]))?;
+            println!("wrote Chrome trace to {trace_out} (load in Perfetto / chrome://tracing)");
+        }
+    }
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, engine.metrics.render_prometheus())?;
+        println!("wrote Prometheus snapshot to {metrics_out}");
+    }
+    if engine.metrics.trace_events_dropped > 0 {
+        eprintln!(
+            "warning: trace ring buffer dropped {} events (raise --trace-capacity \
+             for a complete timeline)",
+            engine.metrics.trace_events_dropped
+        );
+    }
     Ok(())
 }
 
@@ -149,7 +179,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// --prefix-cache on|off (radix shared-prefix KV cache per replica),
 /// --prefill-chunk TOK (chunked-prefill tail granularity, 0 = one chunk),
 /// --prompt-min/--prompt-max TOK, --max-new TOK, --seed N,
-/// --fleet-queue N, --json.
+/// --fleet-queue N, --json,
+/// --trace-out PATH (per-request Chrome trace-event timeline, Perfetto-
+/// loadable), --metrics-out PATH (Prometheus text snapshot),
+/// --trace-capacity N (per-replica event ring size).
 fn cmd_fleet(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 4).max(1);
     let policy = RoutePolicy::parse(&args.get("policy", "least"))
@@ -212,6 +245,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         pattern,
     };
     let json = args.get("json", "false") == "true";
+    let trace_out = args.get("trace-out", "");
+    let metrics_out = args.get("metrics-out", "");
+    if !trace_out.is_empty() {
+        router.enable_tracing(args.get_usize("trace-capacity", DEFAULT_TRACE_CAPACITY));
+    }
     if !json {
         println!(
             "fleet: {replicas} replicas, policy={}, {requests} requests ({})",
@@ -230,7 +268,39 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             println!("  rejected req {}: {:?}", r.id, r.reason);
         }
     }
+    if !trace_out.is_empty() {
+        std::fs::write(&trace_out, router.chrome_trace())?;
+        if !json {
+            println!("wrote Chrome trace to {trace_out} (load in Perfetto / chrome://tracing)");
+        }
+    }
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, report.metrics.render_prometheus())?;
+        if !json {
+            println!("wrote Prometheus snapshot to {metrics_out}");
+        }
+    }
+    // Never silent on an incomplete timeline — and never on stdout, which
+    // --json reserves for the single machine-readable row.
+    if report.metrics.merged.trace_events_dropped > 0 {
+        eprintln!(
+            "warning: trace ring buffer dropped {} events (raise --trace-capacity \
+             for a complete timeline)",
+            report.metrics.merged.trace_events_dropped
+        );
+    }
     Ok(())
+}
+
+/// `repro trace` — a fleet run with tracing forced on. Identical flags to
+/// `fleet`; `--trace-out` defaults to `trace.json` instead of off.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let mut forced = args.clone();
+    forced
+        .flags
+        .entry("trace-out".to_string())
+        .or_insert_with(|| "trace.json".to_string());
+    cmd_fleet(&forced)
 }
 
 /// Accuracy tables (Tables 2–4 analogues) on synthetic-statistics models.
@@ -449,6 +519,41 @@ mod tests {
         let bad_pattern =
             Args::parse(&["fleet".into(), "--pattern".into(), "sawtooth".into()]).unwrap();
         assert!(cmd_fleet(&bad_pattern).is_err());
+    }
+
+    #[test]
+    fn fleet_trace_and_metrics_outputs_are_written_and_parse() {
+        let dir = std::env::temp_dir();
+        let trace = dir.join("repro_cli_test_trace.json");
+        let prom = dir.join("repro_cli_test_metrics.prom");
+        let args = Args::parse(&[
+            "trace".into(),
+            "--replicas".into(),
+            "2".into(),
+            "--requests".into(),
+            "8".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--trace-out".into(),
+            trace.to_str().unwrap().into(),
+            "--metrics-out".into(),
+            prom.to_str().unwrap().into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_trace(&args).unwrap();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let j = crate::util::json::Json::parse(&text).expect("trace must be valid JSON");
+        let events = j
+            .get("traceEvents")
+            .and_then(crate::util::json::Json::as_arr)
+            .expect("traceEvents array");
+        assert!(!events.is_empty());
+        let pm = std::fs::read_to_string(&prom).unwrap();
+        assert!(pm.contains("repro_fleet_replicas 2"), "{pm}");
+        assert!(pm.contains("repro_mfu"), "{pm}");
+        let _ = std::fs::remove_file(&trace);
+        let _ = std::fs::remove_file(&prom);
     }
 
     #[test]
