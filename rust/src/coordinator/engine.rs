@@ -52,7 +52,6 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -205,8 +204,11 @@ struct ActiveRequest {
     cache_tokens: usize,
     max_new_tokens: usize,
     stop_token: Option<i32>,
-    arrival: Instant,
-    first_token_at: Option<Instant>,
+    /// The request's arrival clock (`arrival.now_s()` = age in seconds).
+    arrival: Clock,
+    /// Clock anchored when the first token was produced; `None` until
+    /// prefill completes.
+    first_token_at: Option<Clock>,
     generated: Vec<i32>,
     last_token: i32,
 }
@@ -422,6 +424,7 @@ impl Engine {
         }
 
         if let Some(pp) = plan.prefill.clone() {
+            // lint:allow(no-unwrap-in-lib): the scheduler only plans a prefill for a queued request
             let req = self.queue.pop().expect("planned prefill without request");
             if pp.cached_tokens > 0 {
                 self.begin_chunked_prefill(req, &pp)?;
@@ -520,7 +523,7 @@ impl Engine {
             .ok_or_else(|| anyhow!("prompt of {} exceeds buckets", req.prompt.len()))?;
         let key = ArtifactKey::prefill(&self.cfg.variant, 1, bucket);
         let art = self.artifact(&key)?;
-        let t0 = Instant::now();
+        let t0 = Clock::wall();
 
         let mut tokens = req.prompt.clone();
         tokens.resize(bucket, 0);
@@ -545,6 +548,7 @@ impl Engine {
         if self.prefix.is_some() {
             self.metrics.prefix_misses += 1;
             let blocks = self.kv.slot_blocks(slot);
+            // lint:allow(no-unwrap-in-lib): guarded by the is_some() branch above
             let p = self.prefix.as_mut().expect("checked above");
             let rep = p.insert_shared(&req.prompt, &blocks, self.kv.pool_mut());
             self.metrics.prefix_evicted_blocks += rep.evicted_blocks as u64;
@@ -561,17 +565,17 @@ impl Engine {
             }
         }
         self.metrics.prefill_steps += 1;
-        let prefill_s = t0.elapsed().as_secs_f64();
+        let prefill_s = t0.now_s();
         self.metrics.prefill_time.record(prefill_s);
-        let now = Instant::now();
-        self.metrics
-            .ttft
-            .record(now.duration_since(req.arrival).as_secs_f64());
+        let now = Clock::wall();
+        self.metrics.ttft.record(req.arrival.now_s());
         self.note_occupancy();
         if let Some(tr) = self.trace.as_mut() {
             let end_s = tr.now_s();
             let start_s = (end_s - prefill_s).max(0.0);
-            let queued_s = t0.duration_since(req.arrival).as_secs_f64();
+            // Arrival→prefill-start interval: both clocks read "seconds
+            // ago", so the difference of their readings is the gap.
+            let queued_s = (req.arrival.now_s() - t0.now_s()).max(0.0);
             tr.record_at(start_s, Some(req.id), TraceEventKind::Admit { queued_s });
             tr.record_span(
                 Some(req.id),
@@ -616,6 +620,7 @@ impl Engine {
     fn begin_chunked_prefill(&mut self, req: Request, pp: &PrefillPlan) -> Result<()> {
         let prompt_len = req.prompt.len();
         let (cached, blocks) = {
+            // lint:allow(no-unwrap-in-lib): a warm plan is only produced when a prefix cache is attached
             let prefix = self.prefix.as_mut().expect("warm plan without a cache");
             let cached = prefix.acquire(&req.prompt).min(prompt_len);
             let blocks = if cached > 0 {
@@ -641,7 +646,7 @@ impl Engine {
         self.metrics.prefix_hits += 1;
         self.metrics.prefix_hit_tokens += cached as u64;
         if let Some(tr) = self.trace.as_mut() {
-            let queued_s = req.arrival.elapsed().as_secs_f64();
+            let queued_s = req.arrival.now_s();
             tr.record(Some(req.id), TraceEventKind::Admit { queued_s });
             tr.record(Some(req.id), TraceEventKind::PrefixHit { tokens: cached });
         }
@@ -664,6 +669,7 @@ impl Engine {
         if chunks.is_empty() {
             chunks.push_back((prompt_len - 1, 1));
         }
+        // lint:allow(no-unwrap-in-lib): the branch above just guaranteed at least one chunk
         let start = chunks.front().expect("chunk list non-empty").0;
         self.kv.map_shared_prefix(pp.slot, &blocks, start);
         self.chunked = Some(ChunkedPrefill {
@@ -682,7 +688,7 @@ impl Engine {
         let Some(mut cp) = self.chunked.take() else {
             return Ok(());
         };
-        let t0 = Instant::now();
+        let t0 = Clock::wall();
         let mut chunk_tokens = 0usize;
         if let Some((start, len)) = cp.chunks.pop_front() {
             for pos in start..start + len {
@@ -691,7 +697,7 @@ impl Engine {
             chunk_tokens = len;
         }
         self.metrics.prefill_chunks += 1;
-        let chunk_s = t0.elapsed().as_secs_f64();
+        let chunk_s = t0.now_s();
         self.metrics.prefill_time.record(chunk_s);
         if chunk_tokens > 0 {
             if let Some(tr) = self.trace.as_mut() {
@@ -715,10 +721,8 @@ impl Engine {
         // first-token distribution.
         let first_token = argmax(&cp.last_logits);
         self.metrics.prefill_steps += 1;
-        let now = Instant::now();
-        self.metrics
-            .ttft
-            .record(now.duration_since(cp.req.arrival).as_secs_f64());
+        let now = Clock::wall();
+        self.metrics.ttft.record(cp.req.arrival.now_s());
         self.active.insert(
             cp.slot,
             ActiveRequest {
@@ -907,7 +911,7 @@ impl Engine {
         if self.cfg.use_dense_decode {
             return self.run_decode_group_dense(group);
         }
-        let t0 = Instant::now();
+        let t0 = Clock::wall();
         let rows: Vec<(usize, i32)> = group
             .iter()
             .map(|s| (*s, self.active[s].last_token))
@@ -918,23 +922,23 @@ impl Engine {
         let (logits, full_slots, kv_bytes) = self.paged_decode_forward(&rows)?;
 
         let vsz = self.meta.vocab;
-        let now = Instant::now();
         for (bi, &slot) in group.iter().enumerate() {
             let row = &logits[bi * vsz..(bi + 1) * vsz];
             let tok = argmax(row);
+            // lint:allow(no-unwrap-in-lib): group is built from self.active's live slot keys
             let a = self.active.get_mut(&slot).unwrap();
             a.generated.push(tok);
             a.last_token = tok;
-            if let Some(ft) = a.first_token_at {
+            if let Some(ft) = &a.first_token_at {
                 self.metrics
                     .tpot
-                    .record(now.duration_since(ft).as_secs_f64() / a.generated.len().max(1) as f64);
+                    .record(ft.now_s() / a.generated.len().max(1) as f64);
             }
         }
         self.metrics.generated_tokens += group.len() as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_batch_sum += group.len() as u64;
-        let step_s = t0.elapsed().as_secs_f64();
+        let step_s = t0.now_s();
         self.metrics.decode_time.record(step_s);
         self.metrics.kv_bytes_read += kv_bytes;
         let occ = self.note_occupancy();
@@ -973,7 +977,7 @@ impl Engine {
         let bucket = self.scheduler.decode_bucket(group.len());
         let key = ArtifactKey::decode(&self.cfg.variant, bucket);
         let art = self.artifact(&key)?;
-        let t0 = Instant::now();
+        let t0 = Clock::wall();
 
         let ss = self.meta.cache_t * self.meta.kv_heads * self.meta.head_dim();
         let need = self.meta.layers * bucket * ss;
@@ -1014,23 +1018,23 @@ impl Engine {
         }
         let full_slots = self.kv.scatter_batch(group, &kr, &vr);
 
-        let now = Instant::now();
         for (bi, &slot) in group.iter().enumerate() {
             let row = &outs[0].data[bi * vsz..(bi + 1) * vsz];
             let tok = argmax(row);
+            // lint:allow(no-unwrap-in-lib): group is built from self.active's live slot keys
             let a = self.active.get_mut(&slot).unwrap();
             a.generated.push(tok);
             a.last_token = tok;
-            if let Some(ft) = a.first_token_at {
+            if let Some(ft) = &a.first_token_at {
                 self.metrics
                     .tpot
-                    .record(now.duration_since(ft).as_secs_f64() / a.generated.len().max(1) as f64);
+                    .record(ft.now_s() / a.generated.len().max(1) as f64);
             }
         }
         self.metrics.generated_tokens += group.len() as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_batch_sum += group.len() as u64;
-        let step_s = t0.elapsed().as_secs_f64();
+        let step_s = t0.now_s();
         self.metrics.decode_time.record(step_s);
         // Dense staging reads the whole bucket-padded window regardless of
         // live context — the cost shape the paged path exists to beat.
@@ -1070,6 +1074,7 @@ impl Engine {
             a.generated.len() >= a.max_new_tokens || hit_stop || kv_full
         };
         if done {
+            // lint:allow(no-unwrap-in-lib): get() on the same key succeeded just above
             let a = self.active.remove(&slot).unwrap();
             self.kv.free_slot(slot);
             if a.cache_tokens > 0 {
@@ -1077,10 +1082,12 @@ impl Engine {
                     p.release(&a.prompt, a.cache_tokens);
                 }
             }
-            let total = a.arrival.elapsed().as_secs_f64();
+            let total = a.arrival.now_s();
+            // Arrival→first-token gap: both clocks read "seconds ago".
             let ttft = a
                 .first_token_at
-                .map(|t| t.duration_since(a.arrival).as_secs_f64())
+                .as_ref()
+                .map(|t| (a.arrival.now_s() - t.now_s()).max(0.0))
                 .unwrap_or(total);
             let n = a.generated.len();
             let tpot_s = if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 };
@@ -1118,7 +1125,7 @@ impl ReplicaHandle for Engine {
 
     /// Wall-clock replica: elapsed seconds since construction.
     fn clock_s(&self) -> f64 {
-        self.metrics.started.elapsed().as_secs_f64()
+        self.metrics.started.now_s()
     }
 
     fn advance_clock_to(&mut self, _t_s: f64) {
@@ -1203,6 +1210,7 @@ impl ReplicaHandle for Engine {
         }
         let slots: Vec<usize> = self.active.keys().copied().collect();
         for slot in slots {
+            // lint:allow(no-unwrap-in-lib): iterating keys collected from the same map
             let a = self.active.remove(&slot).expect("slot key just listed");
             self.kv.free_slot(slot);
             if a.cache_tokens > 0 {

@@ -64,7 +64,9 @@ use anyhow::{bail, Result};
 
 use crate::fp8::bf16::{bf16_to_f32, f32_to_bf16};
 use crate::fp8::{encode_rne, CastMode, DecodeTable, Fp8Format};
-use crate::quant::{weight_scale_per_tensor, KvDtype, KvLayout, KV_BLOCK_TOKENS};
+use crate::quant::{
+    weight_scale_per_tensor, KvDtype, KvLayout, FP8_SCALE_GROUP_BYTES, KV_BLOCK_TOKENS,
+};
 use crate::util::rng::XorShiftRng;
 
 /// Page-granular KV accounting (vLLM-style). Used for admission control and
@@ -401,6 +403,7 @@ impl BlockPool {
         let id = self.free.pop()?;
         debug_assert_eq!(self.refs[id], 0, "free-listed block with live refs");
         self.refs[id] = 1;
+        self.audit();
         Some(id)
     }
 
@@ -408,6 +411,7 @@ impl BlockPool {
     pub fn retain(&mut self, id: BlockId) {
         assert!(self.refs[id] > 0, "retain of a free block {id}");
         self.refs[id] += 1;
+        self.audit();
     }
 
     /// Drop one reference; the last drop zeroes the block (codes *and*
@@ -420,7 +424,59 @@ impl BlockPool {
             self.zero_block(id);
             self.free.push(id);
         }
+        self.audit();
     }
+
+    /// Structural invariant auditor behind the `debug-invariants` feature:
+    /// every mutating pool operation (alloc / retain / release / CoW clone)
+    /// calls this on exit. Checks, in O(total_blocks):
+    ///
+    /// 1. **Refcount balance** — every free-listed block has refcount 0 and
+    ///    appears on the free list exactly once;
+    /// 2. **Capacity partition** — live blocks (refs > 0) and free-listed
+    ///    blocks partition the pool: `used + free == total_blocks`, no
+    ///    block leaked or double-counted.
+    ///
+    /// Compiled to a no-op unless the feature is on; even then it only
+    /// fires under `debug_assertions` so `--release` bench numbers are
+    /// never distorted by the sweep.
+    #[cfg(feature = "debug-invariants")]
+    pub fn audit(&self) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let mut on_free_list = vec![false; self.total_blocks];
+        for &id in &self.free {
+            assert!(
+                !on_free_list[id],
+                "pool audit: block {id} appears on the free list twice"
+            );
+            on_free_list[id] = true;
+            assert_eq!(
+                self.refs[id], 0,
+                "pool audit: free-listed block {id} has live refs"
+            );
+        }
+        let live = self.refs.iter().filter(|&&r| r > 0).count();
+        assert_eq!(
+            live + self.free.len(),
+            self.total_blocks,
+            "pool audit: live + free blocks must partition the pool \
+             (leaked or double-counted block)"
+        );
+        for (id, &r) in self.refs.iter().enumerate() {
+            assert!(
+                r > 0 || on_free_list[id],
+                "pool audit: block {id} has refcount 0 but is not free-listed"
+            );
+        }
+    }
+
+    /// No-op twin: without the `debug-invariants` feature the auditor
+    /// compiles away entirely.
+    #[cfg(not(feature = "debug-invariants"))]
+    #[inline(always)]
+    pub fn audit(&self) {}
 
     fn zero_block(&mut self, id: BlockId) {
         let per_block = self.layers * self.block_tokens * self.row();
@@ -610,7 +666,7 @@ impl BlockPool {
     fn block_read_bytes_per_head(&self) -> usize {
         let payload = 2 * self.block_tokens * self.head_dim * self.dtype().elem_bytes();
         let scales = match &self.data {
-            KvData::Fp8 { .. } => 2 * 4,
+            KvData::Fp8 { .. } => FP8_SCALE_GROUP_BYTES,
             _ => 0,
         };
         payload + scales
@@ -647,6 +703,7 @@ impl BlockPool {
             }
         }
         self.cow_clones += 1;
+        self.audit();
         Some(dst)
     }
 
@@ -674,6 +731,7 @@ impl BlockPool {
     /// traffic: a whole block streams regardless of how many of its
     /// positions are valid (the caller masks scores past the sequence
     /// length), which is why [`Self::bytes_read`] charges full blocks.
+    // lint: hot-path
     pub fn read_block_head(
         &self,
         id: BlockId,
@@ -966,22 +1024,47 @@ impl<'a> PagedAttentionView<'a> {
     }
 
     /// Single-head paged attention readout for slot `i`: softmax(q·Kᵀ/√d)·V
-    /// over the slot's valid positions, walking the block table with an
-    /// online (streaming) softmax — one block-sized K/V tile in flight at
-    /// a time, dequantized on read, never a dense (T, …) buffer. Returns
-    /// zeros for an empty sequence.
+    /// over the slot's valid positions. Convenience wrapper over
+    /// [`Self::attend_into`] that allocates its own output and scratch —
+    /// fine for tests and one-off probes; steady-state decode loops should
+    /// hold an [`AttendScratch`] and call `attend_into` directly.
     pub fn attend(&self, i: usize, layer: usize, kv_head: usize, q: &[f32]) -> Vec<f32> {
         let d = self.layout.head_dim;
+        let mut out = vec![0.0f32; d];
+        let mut scratch = AttendScratch::new(self.pool.block_tokens(), d);
+        self.attend_into(i, layer, kv_head, q, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free paged attention readout: softmax(q·Kᵀ/√d)·V over
+    /// slot `i`'s valid positions, walking the block table with an online
+    /// (streaming) softmax — one block-sized K/V tile in flight at a time,
+    /// dequantized on read, never a dense (T, …) buffer. Writes zeros for
+    /// an empty sequence. `out` must be `head_dim` long; `scratch` is
+    /// caller-owned so a decode loop reuses the same two tiles for every
+    /// (slot, layer, head) readout of a step.
+    // lint: hot-path
+    pub fn attend_into(
+        &self,
+        i: usize,
+        layer: usize,
+        kv_head: usize,
+        q: &[f32],
+        out: &mut [f32],
+        scratch: &mut AttendScratch,
+    ) {
+        let d = self.layout.head_dim;
         assert_eq!(q.len(), d, "query dim");
+        assert_eq!(out.len(), d, "output dim");
         let s = &self.slots[i];
-        let mut acc = vec![0.0f32; d];
+        out.fill(0.0);
         if s.len == 0 {
-            return acc;
+            return;
         }
         let bt = self.pool.block_tokens();
+        assert!(scratch.fits(bt, d), "scratch tiles sized for another pool");
         let scale = 1.0 / (d as f32).sqrt();
-        let mut k_tile = vec![0.0f32; bt * d];
-        let mut v_tile = vec![0.0f32; bt * d];
+        let (k_tile, v_tile) = scratch.tiles();
         // Online softmax state: running max, normalizer, weighted V sum.
         let mut m = f32::NEG_INFINITY;
         let mut z = 0.0f32;
@@ -989,7 +1072,7 @@ impl<'a> PagedAttentionView<'a> {
         for (bi, &id) in s.blocks.iter().take(live).enumerate() {
             let tok0 = bi * bt;
             let count = bt.min(s.len - tok0);
-            self.pool.read_block_head(id, layer, kv_head, &mut k_tile, &mut v_tile);
+            self.pool.read_block_head(id, layer, kv_head, k_tile, v_tile);
             for ti in 0..count {
                 let mut score = 0.0f32;
                 for (di, qd) in q.iter().enumerate() {
@@ -1001,16 +1084,43 @@ impl<'a> PagedAttentionView<'a> {
                 let w = (score - m_new).exp();
                 z = z * corr + w;
                 for di in 0..d {
-                    acc[di] = acc[di] * corr + w * v_tile[ti * d + di];
+                    out[di] = out[di] * corr + w * v_tile[ti * d + di];
                 }
                 m = m_new;
             }
         }
         let inv = 1.0 / z.max(1e-30);
-        for a in &mut acc {
+        for a in out.iter_mut() {
             *a *= inv;
         }
-        acc
+    }
+}
+
+/// Reusable K/V tile buffers for [`PagedAttentionView::attend_into`]: one
+/// block-sized dequantized K tile and V tile. Allocate once per decode
+/// loop (or per worker) and reuse across every (slot, layer, head)
+/// readout — the hot path itself never allocates.
+pub struct AttendScratch {
+    k_tile: Vec<f32>,
+    v_tile: Vec<f32>,
+}
+
+impl AttendScratch {
+    pub fn new(block_tokens: usize, head_dim: usize) -> Self {
+        Self {
+            k_tile: vec![0.0f32; block_tokens * head_dim],
+            v_tile: vec![0.0f32; block_tokens * head_dim],
+        }
+    }
+
+    /// True when the tiles can hold one `block_tokens × head_dim` block.
+    pub fn fits(&self, block_tokens: usize, head_dim: usize) -> bool {
+        self.k_tile.len() >= block_tokens * head_dim
+            && self.v_tile.len() >= block_tokens * head_dim
+    }
+
+    fn tiles(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k_tile, &mut self.v_tile)
     }
 }
 
@@ -1184,6 +1294,29 @@ impl KvStore {
             .map_or_else(Vec::new, |t| t.blocks.clone())
     }
 
+    /// Borrow `slot`'s table. Every caller sits behind an explicit
+    /// activity check or holds an engine-owned active slot, so an
+    /// inactive slot here is a block-table bookkeeping bug worth a loud
+    /// stop — not an error to propagate.
+    fn table(&self, slot: usize) -> &SlotTable {
+        // lint:allow(no-unwrap-in-lib): engine-owned active slot; inactive here is a block-table bookkeeping bug
+        self.tables[slot].as_ref().expect("active slot")
+    }
+
+    /// Mutable twin of [`Self::table`], same contract.
+    fn table_mut(&mut self, slot: usize) -> &mut SlotTable {
+        // lint:allow(no-unwrap-in-lib): engine-owned active slot; inactive here is a block-table bookkeeping bug
+        self.tables[slot].as_mut().expect("active slot")
+    }
+
+    /// Allocate from the pool, which [`Self::with_block_tokens`]
+    /// provisioned for `slots + prefix cache` blocks — exhaustion is a
+    /// provisioning bug, not a runtime condition.
+    fn alloc_provisioned(&mut self) -> BlockId {
+        // lint:allow(no-unwrap-in-lib): pool provisioned for slots + prefix cache at construction
+        self.pool.alloc().expect("pool provisioned for slots + prefix cache")
+    }
+
     /// Can a warm admission map `cached` prefix tokens and still allocate
     /// the private tail of a `prompt_len` prompt from the pool?
     pub fn can_map_tail(&self, prompt_len: usize, cached: usize) -> bool {
@@ -1207,9 +1340,7 @@ impl KvStore {
         for &id in blocks {
             self.pool.retain(id);
         }
-        let tab = self.tables[slot]
-            .as_mut()
-            .expect("map_shared_prefix into an unallocated slot");
+        let tab = self.table_mut(slot);
         assert!(tab.blocks.is_empty(), "map_shared_prefix into a written slot");
         tab.blocks.extend_from_slice(blocks);
         tab.len = len;
@@ -1234,10 +1365,7 @@ impl KvStore {
         let nblocks = len.div_ceil(bt);
         let mut blocks = Vec::with_capacity(nblocks);
         for b in 0..nblocks {
-            let id = self
-                .pool
-                .alloc()
-                .expect("pool provisioned for slots + prefix cache");
+            let id = self.alloc_provisioned();
             let tok0 = b * bt;
             let valid = bt.min(len - tok0);
             self.pool.scatter_from(id, k_out, v_out, 0, ss, tok0, valid);
@@ -1352,10 +1480,10 @@ impl KvStore {
             let hb = len / bt;
             let valid_in_block = len % bt + 1;
             self.ensure_private_block(slot, hb);
-            let id = self.tables[slot].as_ref().expect("table checked above").blocks[hb];
+            let id = self.table(slot).blocks[hb];
             self.pool
                 .scatter_from(id, k_in, v_in, base, layer_stride, hb * bt, valid_in_block);
-            let tab = self.tables[slot].as_mut().expect("table checked above");
+            let tab = self.table_mut(slot);
             tab.len = len + 1;
             if tab.len == self.t {
                 full.push(slot);
@@ -1370,24 +1498,14 @@ impl KvStore {
     /// fresh private block — copy-on-write; the caller rewrites the whole
     /// valid span from its batch buffer, so no payload copy is needed.
     fn ensure_private_block(&mut self, slot: usize, hb: usize) {
-        loop {
-            let have = self.tables[slot].as_ref().expect("active slot").blocks.len();
-            if have > hb {
-                break;
-            }
-            let id = self
-                .pool
-                .alloc()
-                .expect("pool provisioned for slots + prefix cache");
-            self.tables[slot].as_mut().expect("active slot").blocks.push(id);
+        while self.table(slot).blocks.len() <= hb {
+            let id = self.alloc_provisioned();
+            self.table_mut(slot).blocks.push(id);
         }
-        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        let id = self.table(slot).blocks[hb];
         if self.pool.ref_count(id) > 1 {
-            let fresh = self
-                .pool
-                .alloc()
-                .expect("pool provisioned for slots + prefix cache");
-            self.tables[slot].as_mut().expect("active slot").blocks[hb] = fresh;
+            let fresh = self.alloc_provisioned();
+            self.table_mut(slot).blocks[hb] = fresh;
             self.pool.release(id);
         }
     }
@@ -1398,24 +1516,15 @@ impl KvStore {
     /// ([`BlockPool::clone_block`]). The dense scatter skips the copy only
     /// because it rewrites the whole valid span from its batch buffer.
     fn ensure_private_hot_block(&mut self, slot: usize, hb: usize) {
-        loop {
-            let have = self.tables[slot].as_ref().expect("active slot").blocks.len();
-            if have > hb {
-                break;
-            }
-            let id = self
-                .pool
-                .alloc()
-                .expect("pool provisioned for slots + prefix cache");
-            self.tables[slot].as_mut().expect("active slot").blocks.push(id);
+        while self.table(slot).blocks.len() <= hb {
+            let id = self.alloc_provisioned();
+            self.table_mut(slot).blocks.push(id);
         }
-        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        let id = self.table(slot).blocks[hb];
         if self.pool.ref_count(id) > 1 {
-            let fresh = self
-                .pool
-                .clone_block(id)
-                .expect("pool provisioned for slots + prefix cache");
-            self.tables[slot].as_mut().expect("active slot").blocks[hb] = fresh;
+            // lint:allow(no-unwrap-in-lib): CoW clone draws from the same provisioned pool as alloc
+            let fresh = self.pool.clone_block(id).expect("pool provisioned for slots + prefix cache");
+            self.table_mut(slot).blocks[hb] = fresh;
             self.pool.release(id);
         }
     }
@@ -1430,6 +1539,7 @@ impl KvStore {
     /// [`AppendOutcome::AtCapacity`] keeps signalling — the caller must
     /// finish the request, exactly as with the dense scatter's "sequence
     /// full" list.
+    // lint: hot-path
     pub fn append_token(&mut self, slot: usize, k_row: &[f32], v_row: &[f32]) -> AppendOutcome {
         let row = self.row();
         assert_eq!(k_row.len(), self.layers * row, "append k size");
@@ -1443,9 +1553,9 @@ impl KvStore {
         let bt = self.pool.block_tokens();
         let hb = len / bt;
         self.ensure_private_hot_block(slot, hb);
-        let id = self.tables[slot].as_ref().expect("active slot").blocks[hb];
+        let id = self.table(slot).blocks[hb];
         self.pool.append_token(id, len % bt, k_row, v_row);
-        let tab = self.tables[slot].as_mut().expect("active slot");
+        let tab = self.table_mut(slot);
         tab.len = len + 1;
         if tab.len == self.t {
             AppendOutcome::Full
@@ -1518,20 +1628,29 @@ impl KvStore {
     /// data produce comparable vectors regardless of dtype.
     ///
     /// Block-table-native since ISSUE 5: each (slot, layer, head) readout
-    /// walks the slot's block table through [`PagedAttentionView::attend`]
-    /// — dequant-on-read at block granularity, no dense gather — so the
-    /// probe's HBM traffic is exactly the group's live block bytes
-    /// ([`BlockPool::bytes_read`] instruments it).
+    /// walks the slot's block table through
+    /// [`PagedAttentionView::attend_into`] — dequant-on-read at block
+    /// granularity, no dense gather — so the probe's HBM traffic is
+    /// exactly the group's live block bytes ([`BlockPool::bytes_read`]
+    /// instruments it). One [`AttendScratch`] and one query buffer are
+    /// reused across every (slot, layer, head) readout, mirroring how a
+    /// steady-state decode loop drives the hot path.
     pub fn decode_attention_probe(&self, slots: &[usize], seed: u64) -> Vec<f32> {
         let mut rng = XorShiftRng::new(seed);
         let d = self.head_dim;
         let view = self.paged_view(slots);
+        let mut scratch = AttendScratch::new(self.pool.block_tokens(), d);
+        let mut q = vec![0.0f32; d];
+        let mut head = vec![0.0f32; d];
         let mut out = Vec::with_capacity(slots.len() * self.layers * self.kv_heads * d);
         for bi in 0..slots.len() {
             for l in 0..self.layers {
                 for h in 0..self.kv_heads {
-                    let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-                    out.extend(view.attend(bi, l, h, &q));
+                    for qd in q.iter_mut() {
+                        *qd = rng.normal();
+                    }
+                    view.attend_into(bi, l, h, &q, &mut head, &mut scratch);
+                    out.extend_from_slice(&head);
                 }
             }
         }

@@ -1,8 +1,7 @@
 //! Serving metrics: TTFT / TPOT / throughput, in the units the paper's
 //! e2e evaluation reports.
 
-use std::time::Instant;
-
+use crate::obs::Clock;
 use crate::util::rng::XorShiftRng;
 
 /// Retained samples per [`LatencyStat`] — bounds memory while keeping
@@ -88,7 +87,7 @@ impl LatencyStat {
             return 0.0;
         }
         let mut v = self.recent.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((v.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
         v[idx.min(v.len() - 1)]
     }
@@ -128,7 +127,7 @@ impl LatencyStat {
             // Sort before the stride downsample: the result is then a
             // deterministic quantile sketch of the union — independent of
             // the order the sources were merged in.
-            combined.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            combined.sort_by(|a, b| a.total_cmp(b));
             let stride = combined.len() as f64 / RESERVOIR as f64;
             out.recent = (0..RESERVOIR)
                 .map(|i| combined[(i as f64 * stride) as usize])
@@ -143,7 +142,11 @@ impl LatencyStat {
 /// Engine-level counters.
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
-    pub started: Instant,
+    /// Clock anchored when this metrics object was created:
+    /// `started.now_s()` is the serve-loop age in seconds. A
+    /// [`Clock`] rather than a raw `Instant` so throughput accounting
+    /// works identically under wall and virtual time.
+    pub started: Clock,
     pub requests_completed: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
@@ -190,7 +193,7 @@ impl Default for ServeMetrics {
 impl ServeMetrics {
     pub fn new() -> Self {
         Self {
-            started: Instant::now(),
+            started: Clock::wall(),
             requests_completed: 0,
             prompt_tokens: 0,
             generated_tokens: 0,
@@ -216,7 +219,7 @@ impl ServeMetrics {
     }
 
     pub fn tokens_per_s(&self) -> f64 {
-        let el = self.started.elapsed().as_secs_f64();
+        let el = self.started.now_s();
         if el > 0.0 {
             self.generated_tokens as f64 / el
         } else {
@@ -243,7 +246,10 @@ impl ServeMetrics {
     pub fn merge_many(all: &[&ServeMetrics]) -> ServeMetrics {
         let mut out = ServeMetrics::new();
         for m in all {
-            out.started = out.started.min(m.started);
+            // Earliest start = the clock that has been running longest.
+            if m.started.now_s() > out.started.now_s() {
+                out.started = m.started.clone();
+            }
             out.requests_completed += m.requests_completed;
             out.prompt_tokens += m.prompt_tokens;
             out.generated_tokens += m.generated_tokens;

@@ -1,6 +1,6 @@
 //! Request types flowing through the coordinator.
 
-use std::time::Instant;
+use crate::obs::Clock;
 
 pub type RequestId = u64;
 
@@ -12,7 +12,12 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Stop generation at this token (e.g. b'.' for the byte-LM demo).
     pub stop_token: Option<i32>,
-    pub arrival: Instant,
+    /// Arrival clock, anchored when the request was constructed:
+    /// `arrival.now_s()` is the request's age in seconds. An
+    /// [`obs::Clock`](crate::obs::Clock) rather than a raw `Instant` so
+    /// queueing/TTFT accounting works identically under wall and virtual
+    /// (simulated) time.
+    pub arrival: Clock,
     /// Multi-turn conversation id: the fleet router's session-affinity
     /// policy keeps every turn of a session on the replica that already
     /// holds its KV history.
@@ -26,7 +31,7 @@ impl Request {
             prompt,
             max_new_tokens,
             stop_token: None,
-            arrival: Instant::now(),
+            arrival: Clock::wall(),
             session: None,
         }
     }

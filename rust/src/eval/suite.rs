@@ -50,9 +50,8 @@ fn softmax_row(row: &[f32]) -> Vec<f64> {
 fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map_or(0, |(i, _)| i)
 }
 
 /// Margin = top1 − top2 of the reference logits; splits examples into the
@@ -129,7 +128,7 @@ pub fn evaluate_model(
     let mut margins: Vec<f32> = (0..ref_logits.rows)
         .map(|i| margin(ref_logits.row(i)))
         .collect();
-    margins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    margins.sort_by(|a, b| a.total_cmp(b));
     let split = margins[margins.len() / 2];
 
     let base = metrics(&ref_logits, &labels, &ref_logits, split);

@@ -55,7 +55,7 @@ impl DecodeTable {
             .map(|c| (self.values[c as usize], c as u8))
             .filter(|(v, c)| v.is_finite() && c & 0x80 == 0)
             .collect();
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         v
     }
 }

@@ -358,7 +358,7 @@ pub fn chrome_trace_json(tracks: &[(String, &TraceRecorder)]) -> String {
             ));
         }
         for (_, mut evs) in per_tid {
-            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            evs.sort_by(|a, b| a.0.total_cmp(&b.0));
             parts.extend(evs.into_iter().map(|(_, s)| s));
         }
     }

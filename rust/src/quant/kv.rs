@@ -21,6 +21,19 @@ use crate::fp8::Fp8Format;
 /// different things on two sides of an interface.
 pub const KV_BLOCK_TOKENS: usize = 16;
 
+/// FP8 scale metadata is stored per (layer, kv-head) *group*: one slot for K
+/// and one for V. This names the `2 *` that would otherwise float around the
+/// byte arithmetic below and in the paged pool's read accounting.
+pub const KV_SCALE_SLOTS_PER_GROUP: usize = 2;
+
+/// Each FP8 max-abs scale is a host-side f32.
+pub const KV_SCALE_BYTES: usize = std::mem::size_of::<f32>();
+
+/// Bytes of scale metadata one (layer, kv-head) group carries: K-scale plus
+/// V-scale. The paged pool charges this per block head-pair read on the FP8
+/// path (`BlockPool::block_read_bytes_per_head`).
+pub const FP8_SCALE_GROUP_BYTES: usize = KV_SCALE_SLOTS_PER_GROUP * KV_SCALE_BYTES;
+
 /// Storage element type of the KV cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KvDtype {
@@ -112,7 +125,7 @@ impl KvLayout {
     /// group for each of K and V.
     pub fn scale_bytes_per_seq(&self) -> usize {
         match self.dtype {
-            KvDtype::Fp8(_) => 2 * self.layers * self.kv_heads * 4,
+            KvDtype::Fp8(_) => self.layers * self.kv_heads * FP8_SCALE_GROUP_BYTES,
             _ => 0,
         }
     }
@@ -126,7 +139,7 @@ impl KvLayout {
     /// (layer, kv-head) group for each of K and V, per physical block.
     pub fn scale_bytes_per_block(&self) -> usize {
         match self.dtype {
-            KvDtype::Fp8(_) => 2 * self.layers * self.kv_heads * 4,
+            KvDtype::Fp8(_) => self.layers * self.kv_heads * FP8_SCALE_GROUP_BYTES,
             _ => 0,
         }
     }
@@ -190,6 +203,20 @@ mod tests {
         // Scale-free dtypes pay payload only.
         let f = KvLayout::new(KvDtype::F32, 80, 8, 128);
         assert_eq!(f.block_bytes(16), 16 * f.bytes_per_token());
+    }
+
+    #[test]
+    fn scale_constants_preserve_legacy_literals() {
+        // The named constants must re-derive exactly what the old inline
+        // literals (`2 * layers * kv_heads * 4`, and the pool's `2 * 4`
+        // per-head-pair read charge) computed, or every Table 5/6 byte
+        // assertion downstream would shift.
+        assert_eq!(KV_SCALE_SLOTS_PER_GROUP, 2);
+        assert_eq!(KV_SCALE_BYTES, 4);
+        assert_eq!(FP8_SCALE_GROUP_BYTES, 2 * 4);
+        let l = KvLayout::new(KvDtype::FP8_DEFAULT, 80, 8, 128);
+        assert_eq!(l.scale_bytes_per_seq(), 2 * 80 * 8 * 4);
+        assert_eq!(l.scale_bytes_per_block(), 2 * 80 * 8 * 4);
     }
 
     #[test]

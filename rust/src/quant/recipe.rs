@@ -157,6 +157,7 @@ impl QuantizedLinear {
 
         // SmoothQuant path computes s_c, s_x, s_w jointly.
         if let Some(sq) = scheme.smoothquant {
+            // lint:allow(no-unwrap-in-lib): recipe validation rejects SmoothQuant schemes without calibration stats
             let stats = stats.expect("SmoothQuant requires calibration stats");
             let per_channel = matches!(
                 scheme.weight,
@@ -218,6 +219,7 @@ impl QuantizedLinear {
         let s_x_static = match scheme.act {
             ActScaling::Unit => Some(1.0),
             ActScaling::PerTensorStatic { backoff } => {
+                // lint:allow(no-unwrap-in-lib): recipe validation rejects static-act schemes without calibration stats
                 let st = stats.expect("static activation scaling requires calibration stats");
                 let mut s = act_scale_per_tensor(st.r_x, backoff, fmt);
                 if scheme.pow2_scales {
@@ -251,6 +253,7 @@ impl QuantizedLinear {
         let s_x: DiagScale = match self.scheme.act {
             ActScaling::Unit => DiagScale::Scalar(1.0),
             ActScaling::PerTensorStatic { .. } => {
+                // lint:allow(no-unwrap-in-lib): s_x_static is populated at build time for every PerTensorStatic scheme
                 DiagScale::Scalar(self.s_x_static.expect("static scale missing"))
             }
             ActScaling::PerTensorDynamic { backoff } => {

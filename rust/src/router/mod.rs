@@ -393,7 +393,7 @@ impl FleetRouter {
     pub fn run_open_loop(&mut self, arrivals: Vec<TimedRequest>) -> Result<FleetRunReport> {
         let mut arrivals: std::collections::VecDeque<TimedRequest> = {
             let mut v = arrivals;
-            v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             v.into()
         };
         let mut outputs: Vec<RequestOutput> = Vec::new();
@@ -401,6 +401,7 @@ impl FleetRouter {
             // Deliver every arrival due at or before the next fleet event.
             if let Some((_, frontier)) = self.registry.min_busy_clock() {
                 while arrivals.front().is_some_and(|a| a.arrival_s <= frontier) {
+                    // lint:allow(no-unwrap-in-lib): is_some_and on front() just held in the loop condition
                     let tr = arrivals.pop_front().expect("front was checked");
                     self.admit(tr);
                 }

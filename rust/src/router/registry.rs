@@ -90,7 +90,7 @@ impl ReplicaRegistry {
             .iter()
             .filter(|e| e.state != ReplicaState::Down && e.handle.has_work())
             .map(|e| (e.id, e.handle.clock_s()))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     /// Jump every idle (workless, not-Down) replica's clock to `t_s`, so a

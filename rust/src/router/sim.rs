@@ -284,6 +284,7 @@ impl SimReplica {
                     self.metrics.prefix_evicted_blocks += freed as u64;
                     self.alloc
                         .release(freed)
+                        // lint:allow(no-unwrap-in-lib): the allocator accounted these blocks to the cache; release cannot underflow
                         .expect("evicted cache blocks return to the pool");
                     if let Some(tr) = self.trace.as_mut() {
                         tr.record_at(
@@ -309,6 +310,7 @@ impl SimReplica {
         }
         self.alloc
             .allocate_blocks(need_blocks)
+            // lint:allow(no-unwrap-in-lib): can_admit() verified the block budget in the branch above
             .expect("availability just checked");
 
         if self.active.is_empty() {
@@ -322,6 +324,7 @@ impl SimReplica {
         // cost; warm ones pay only the chunked uncached tail (or a single
         // bootstrap decode step on a full hit).
         let rep = if cached == 0 {
+            // lint:allow(no-unwrap-in-lib): cold path only taken when a prefill bucket was found during admission
             let bucket = bucket_opt.expect("cold admission always has a bucket");
             prefill_tflops(&self.cfg.e2e, bucket)
         } else {
@@ -403,6 +406,7 @@ impl SimReplica {
             self.metrics.prefix_evicted_blocks += insert_evicted as u64;
             self.alloc
                 .release(insert_evicted)
+                // lint:allow(no-unwrap-in-lib): the allocator accounted these blocks to the cache; release cannot underflow
                 .expect("evicted cache blocks return to the pool");
             if let Some(tr) = self.trace.as_mut() {
                 tr.record_at(
@@ -521,6 +525,7 @@ impl SimReplica {
                 let a = self.active.swap_remove(i);
                 self.alloc
                     .release(a.blocks)
+                    // lint:allow(no-unwrap-in-lib): retiring a request frees the block count its admission charged
                     .expect("retire releases exactly the blocks it allocated");
                 if a.cache_tokens > 0 {
                     if let Some(p) = self.prefix.as_mut() {
@@ -665,6 +670,7 @@ impl ReplicaHandle for SimReplica {
         for a in self.active.drain(..) {
             self.alloc
                 .release(a.blocks)
+                // lint:allow(no-unwrap-in-lib): aborting a request frees the block count its admission charged
                 .expect("abort releases exactly the blocks it allocated");
             if a.cache_tokens > 0 {
                 if let Some(p) = self.prefix.as_mut() {

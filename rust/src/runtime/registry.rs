@@ -111,7 +111,14 @@ impl ArtifactRegistry {
 
     /// Get (compiling on first use) the artifact for `key`.
     pub fn get(&self, key: &ArtifactKey) -> Result<std::sync::Arc<Artifact>> {
-        if let Some(a) = self.cache.lock().unwrap().get(key) {
+        // A poisoned artifact cache only means another thread panicked
+        // mid-insert; the map itself stays valid, so keep serving.
+        if let Some(a) = self
+            .cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get(key)
+        {
             return Ok(a.clone());
         }
         let path = self.dir.join(key.filename());
@@ -134,7 +141,7 @@ impl ArtifactRegistry {
         };
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .insert(key.clone(), art.clone());
         Ok(art)
     }

@@ -163,7 +163,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -212,7 +212,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -246,7 +246,7 @@ impl<'a> Parser<'a> {
                     // UTF-8 passthrough: consume one full codepoint.
                     let s = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| "bad utf8".to_string())?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().ok_or_else(|| "bad utf8".to_string())?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }
@@ -255,7 +255,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -279,7 +279,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -290,7 +290,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value()?;
             map.insert(k, v);
             self.skip_ws();

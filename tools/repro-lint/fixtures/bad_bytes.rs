@@ -1,0 +1,7 @@
+pub fn tile_bytes_per_head() -> usize {
+    2 * 4
+}
+
+pub fn payload_elems() -> usize {
+    std::mem::size_of::<f32>()
+}

@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn measure() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,18 @@
+// lint: hot-path
+pub fn read_tile(src: &[f32]) -> Vec<f32> {
+    let a: Vec<f32> = Vec::new();
+    let b = vec![0.0f32; 4];
+    let c = src.to_vec();
+    let d = c.clone();
+    let e: Vec<f32> = src.iter().copied().collect();
+    [a, b, c, d, e].concat()
+}
+
+// lint: hot-path
+pub fn warm(src: &[f32]) -> Vec<f32> {
+    src.to_vec() // lint:allow(hot-path-no-alloc): one-time warmup scratch, not per-step
+}
+
+pub fn cold(src: &[f32]) -> Vec<f32> {
+    src.to_vec()
+}

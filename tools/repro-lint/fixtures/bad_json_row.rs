@@ -1,0 +1,7 @@
+pub fn emit_json_row(v: u64) -> String {
+    format!("{{\"label\":\"fixture\",\"bogus_key\":{}}}", v)
+}
+
+pub fn other_emitter(v: u64) -> String {
+    format!("{{\"unchecked_key\":{}}}", v)
+}

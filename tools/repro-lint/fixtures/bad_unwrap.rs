@@ -1,0 +1,11 @@
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn second(xs: &[u32]) -> u32 {
+    *xs.get(1).expect("len checked") // lint:allow(no-unwrap-in-lib)
+}
+
+pub fn third() -> u32 {
+    panic!("boom") // lint:allow(no-unwrap-in-lib): fixtures demonstrate a justified pragma
+}

@@ -1,0 +1,16 @@
+//! Instant, SystemTime, size_of, and panic appear here only in prose.
+
+/* block comment: Instant::now() and a vec![] of SystemTime */
+pub fn describe() -> &'static str {
+    "Instant::now() .unwrap() panic! size_of 2 * 4"
+}
+
+pub fn raw() -> &'static str {
+    r#"SystemTime "quoted" .expect("x")"#
+}
+
+pub fn anchored_ms() -> u64 {
+    // lint:allow(clock-discipline): fixture shows the line-above pragma form
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis() as u64
+}

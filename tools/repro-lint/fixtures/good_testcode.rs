@@ -1,0 +1,19 @@
+pub fn lib_fn(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let t0 = std::time::Instant::now();
+        Some(1u32).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.0);
+        panic!("fine in tests");
+    }
+}
+
+#[test]
+fn free_test() {
+    None::<u32>.unwrap();
+}

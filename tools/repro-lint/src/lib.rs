@@ -1,0 +1,1036 @@
+//! `repro-lint` — a dependency-free static-analysis pass for this
+//! workspace's cross-cutting contracts.
+//!
+//! The serving stack has three contracts nothing enforces mechanically:
+//! KV byte accounting routes through `quant::KvLayout`, timing routes
+//! through `obs::Clock` (so wall and virtual timelines export
+//! identically), and the paged decode hot path stays allocation-free.
+//! This crate lexes Rust source — comments, strings, char literals, and
+//! `#[cfg(test)]` / `mod tests` regions correctly skipped — and runs five
+//! rules over the token stream:
+//!
+//! - **clock-discipline**: no `std::time::Instant` / `SystemTime` outside
+//!   `obs/`.
+//! - **bytes-through-layout**: no `size_of` and no numeric-literal byte
+//!   multiplications (inside `*byte*`-named functions) outside `quant/`
+//!   and `fp8/`.
+//! - **hot-path-no-alloc**: no `Vec::new` / `vec!` / `.to_vec()` /
+//!   `.clone()` / `.collect()` inside functions annotated with a
+//!   `// lint: hot-path` comment.
+//! - **no-unwrap-in-lib**: `.unwrap()` / `.expect(` / `panic!` in
+//!   non-test library code must carry a *justified* pragma.
+//! - **bench-json-schema**: string literals inside `*json_row*`-named
+//!   functions may only name JSON keys declared in a checked-in schema
+//!   list, so bench artifact keys cannot silently fork.
+//!
+//! Violations are silenced per line with `// lint:allow(<rule>): <why>`
+//! (same line or the line directly above); `no-unwrap-in-lib` requires
+//! the `: <why>` justification to be non-empty. Diagnostics render as
+//! `file:line: [rule] message` and as a JSON array.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub const RULE_CLOCK: &str = "clock-discipline";
+pub const RULE_BYTES: &str = "bytes-through-layout";
+pub const RULE_HOT: &str = "hot-path-no-alloc";
+pub const RULE_UNWRAP: &str = "no-unwrap-in-lib";
+pub const RULE_JSON: &str = "bench-json-schema";
+
+pub const ALL_RULES: [&str; 5] = [RULE_CLOCK, RULE_BYTES, RULE_HOT, RULE_UNWRAP, RULE_JSON];
+
+/// One lexed token. Comments and whitespace never become tokens; string
+/// literals keep their (unescaped) content so the bench-json-schema rule
+/// can inspect emitted keys.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident(String),
+    Num(String),
+    Str(String),
+    Punct(char),
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: TokKind,
+}
+
+/// A `// lint:allow(rule)` or `// lint:allow(rule): why` pragma.
+/// It silences matching diagnostics on its own line and the line below.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub justified: bool,
+}
+
+/// Lexer output: the token stream (test regions *not* yet stripped — see
+/// [`strip_test_regions`]), the allow pragmas, and the lines carrying a
+/// `// lint: hot-path` annotation.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+    pub hot_lines: Vec<usize>,
+}
+
+/// A function item found in the (test-stripped) token stream: its name,
+/// the line of the `fn` keyword, the token-index span of its body braces
+/// (inclusive of both `{` and `}`), and whether a `// lint: hot-path`
+/// annotation precedes it.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    pub body: (usize, usize),
+    pub hot: bool,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The checked-in list of JSON keys bench emitters may name.
+pub struct Schema {
+    keys: BTreeSet<String>,
+}
+
+impl Schema {
+    pub fn load(path: &Path) -> io::Result<Schema> {
+        Ok(Schema::from_lines(&fs::read_to_string(path)?))
+    }
+
+    /// One key per line; blank lines and `#` comments are ignored.
+    pub fn from_lines(text: &str) -> Schema {
+        let mut keys = BTreeSet::new();
+        for raw in text.lines() {
+            let k = raw.trim();
+            if k.is_empty() || k.starts_with('#') {
+                continue;
+            }
+            keys.insert(k.to_string());
+        }
+        Schema { keys }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.keys.contains(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+fn ident_is(t: &Tok, s: &str) -> bool {
+    matches!(&t.kind, TokKind::Ident(i) if i == s)
+}
+
+fn is_punct(t: &Tok, c: char) -> bool {
+    t.kind == TokKind::Punct(c)
+}
+
+fn ident_at(toks: &[Tok], i: usize, s: &str) -> bool {
+    toks.get(i).is_some_and(|t| ident_is(t, s))
+}
+
+fn punct_at(toks: &[Tok], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| is_punct(t, c))
+}
+
+/// Lex Rust source into a token stream, extracting lint pragmas and
+/// hot-path annotations from comments along the way. Line comments,
+/// nested block comments, normal/raw/byte string literals, char literals,
+/// and lifetimes are all handled; doc comments (`///`, `//!`) are plain
+/// comments to the lexer.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut out = Lexed::default();
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment: scan for pragmas, consume to end of line.
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            let text: String = cs[start..j].iter().collect();
+            scan_pragma(&text, line, &mut out);
+            i = j;
+            continue;
+        }
+        // Block comment, nesting.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Byte string b"..." — lex like a normal string.
+        if c == 'b' && i + 1 < n && cs[i + 1] == '"' {
+            let tline = line;
+            let (content, ni, nl) = lex_string(&cs, i + 1, line);
+            out.toks.push(Tok {
+                line: tline,
+                kind: TokKind::Str(content),
+            });
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Raw strings r"..." / r#"..."# / br#"..."#.
+        if (c == 'r' && i + 1 < n && (cs[i + 1] == '"' || cs[i + 1] == '#'))
+            || (c == 'b' && i + 2 < n && cs[i + 1] == 'r' && (cs[i + 2] == '"' || cs[i + 2] == '#'))
+        {
+            let hash_start = if c == 'r' { i + 1 } else { i + 2 };
+            let mut h = 0usize;
+            let mut j = hash_start;
+            while j < n && cs[j] == '#' {
+                h += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                j += 1;
+                let start = j;
+                let tline = line;
+                let mut end = n;
+                while j < n {
+                    if cs[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if cs[j] == '"' {
+                        let mut m = 0usize;
+                        while m < h && j + 1 + m < n && cs[j + 1 + m] == '#' {
+                            m += 1;
+                        }
+                        if m == h {
+                            end = j;
+                            j += 1 + h;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let content: String = cs[start..end].iter().collect();
+                out.toks.push(Tok {
+                    line: tline,
+                    kind: TokKind::Str(content),
+                });
+                i = j;
+                continue;
+            }
+            // Not a raw string after all (e.g. a raw identifier): fall
+            // through to the ident path below.
+        }
+        // Normal string literal.
+        if c == '"' {
+            let tline = line;
+            let (content, ni, nl) = lex_string(&cs, i, line);
+            out.toks.push(Tok {
+                line: tline,
+                kind: TokKind::Str(content),
+            });
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if j < n && cs[j] == '\'' {
+                    i = j + 1; // char literal like 'a'
+                } else {
+                    i = j; // lifetime like 'static — ident not re-lexed
+                }
+                continue;
+            }
+            let mut j = i + 1;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && cs[j] != '\'' {
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Numeric literal (int, float, hex, suffixed).
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            if j < n && cs[j] == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok {
+                line,
+                kind: TokKind::Num(cs[start..j].iter().collect()),
+            });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                line,
+                kind: TokKind::Ident(cs[start..j].iter().collect()),
+            });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok {
+            line,
+            kind: TokKind::Punct(c),
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Consume a normal (escaped) string literal starting at the opening
+/// quote; returns (unescaped content, next index, next line).
+fn lex_string(cs: &[char], at: usize, mut line: usize) -> (String, usize, usize) {
+    let n = cs.len();
+    let mut j = at + 1;
+    let mut content = String::new();
+    while j < n {
+        let c = cs[j];
+        if c == '"' {
+            j += 1;
+            break;
+        }
+        if c == '\n' {
+            line += 1;
+            content.push('\n');
+            j += 1;
+            continue;
+        }
+        if c == '\\' && j + 1 < n {
+            let e = cs[j + 1];
+            match e {
+                'n' => content.push('\n'),
+                't' => content.push('\t'),
+                'r' => content.push('\r'),
+                '0' => content.push('\0'),
+                '\\' => content.push('\\'),
+                '\'' => content.push('\''),
+                '"' => content.push('"'),
+                'u' => {
+                    // \u{...}: skip the payload, contribute nothing.
+                    let mut k = j + 2;
+                    if k < n && cs[k] == '{' {
+                        while k < n && cs[k] != '}' {
+                            k += 1;
+                        }
+                    }
+                    j = (k + 1).min(n);
+                    continue;
+                }
+                '\n' => line += 1, // line-continuation escape
+                other => content.push(other),
+            }
+            j += 2;
+            continue;
+        }
+        content.push(c);
+        j += 1;
+    }
+    (content, j, line)
+}
+
+/// Recognize `lint:` pragmas in a line comment's text.
+fn scan_pragma(comment: &str, line: usize, out: &mut Lexed) {
+    // Doc comments arrive with a leading '/' or '!' still attached.
+    let t = comment.trim_start_matches(['/', '!']).trim();
+    if t == "lint: hot-path" || t == "lint:hot-path" {
+        out.hot_lines.push(line);
+        return;
+    }
+    if let Some(rest) = t.strip_prefix("lint:allow(") {
+        if let Some(close) = rest.find(')') {
+            let rule = rest[..close].trim().to_string();
+            let justified = match rest[close + 1..].trim_start().strip_prefix(':') {
+                Some(j) => !j.trim().is_empty(),
+                None => false,
+            };
+            out.allows.push(Allow {
+                line,
+                rule,
+                justified,
+            });
+        }
+    }
+}
+
+/// Skip one item starting at `k`: leading `#[...]` attributes, then
+/// either a `{ ... }` body (brace-matched) or a terminating `;`.
+/// Returns the index just past the item.
+fn skip_item(toks: &[Tok], mut k: usize) -> usize {
+    while k + 1 < toks.len() && is_punct(&toks[k], '#') && is_punct(&toks[k + 1], '[') {
+        let mut d = 0usize;
+        while k < toks.len() {
+            if is_punct(&toks[k], '[') {
+                d += 1;
+            } else if is_punct(&toks[k], ']') {
+                d -= 1;
+                if d == 0 {
+                    k += 1;
+                    break;
+                }
+            }
+            k += 1;
+        }
+    }
+    while k < toks.len() {
+        if is_punct(&toks[k], ';') {
+            return k + 1;
+        }
+        if is_punct(&toks[k], '{') {
+            let mut d = 0usize;
+            while k < toks.len() {
+                if is_punct(&toks[k], '{') {
+                    d += 1;
+                } else if is_punct(&toks[k], '}') {
+                    d -= 1;
+                    if d == 0 {
+                        return k + 1;
+                    }
+                }
+                k += 1;
+            }
+            return k;
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Drop tokens belonging to test-only regions: items annotated
+/// `#[test]` / `#[cfg(test)]` (but *not* `#[cfg(not(test))]`), and
+/// `mod tests { ... }` blocks.
+pub fn strip_test_regions(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if i + 1 < toks.len() && is_punct(&toks[i], '#') && is_punct(&toks[i + 1], '[') {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut idents: Vec<&str> = Vec::new();
+            let mut close = None;
+            while j < toks.len() {
+                match &toks[j].kind {
+                    TokKind::Punct('[') => depth += 1,
+                    TokKind::Punct(']') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            close = Some(j);
+                            break;
+                        }
+                    }
+                    TokKind::Ident(s) => idents.push(s),
+                    _ => {}
+                }
+                j += 1;
+            }
+            let Some(close) = close else {
+                out.push(toks[i].clone());
+                i += 1;
+                continue;
+            };
+            let first = idents.first().copied().unwrap_or("");
+            let is_test_attr = first == "test"
+                || (first == "cfg"
+                    && idents.iter().any(|s| *s == "test")
+                    && !idents.iter().any(|s| *s == "not"));
+            if is_test_attr {
+                i = skip_item(toks, close + 1);
+            } else {
+                out.extend(toks[i..=close].iter().cloned());
+                i = close + 1;
+            }
+            continue;
+        }
+        if ident_is(&toks[i], "mod") && ident_at(toks, i + 1, "tests") {
+            i = skip_item(toks, i + 2);
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Find function items and their brace-matched body spans in a
+/// (test-stripped) token stream. A `// lint: hot-path` annotation
+/// attaches to the next `fn` at a later (or equal) line.
+pub fn fn_spans(toks: &[Tok], hot_lines: &[usize]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    let mut hots: Vec<usize> = hot_lines.to_vec();
+    hots.sort_unstable();
+    let mut next_hot = 0usize;
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_is(&toks[i], "fn") && i + 1 < toks.len() {
+            if let TokKind::Ident(name) = &toks[i + 1].kind {
+                let fn_line = toks[i].line;
+                let mut hot = false;
+                while next_hot < hots.len() && hots[next_hot] <= fn_line {
+                    hot = true;
+                    next_hot += 1;
+                }
+                let mut k = i + 2;
+                let mut body = None;
+                while k < toks.len() {
+                    if is_punct(&toks[k], ';') {
+                        break; // trait method without a body
+                    }
+                    if is_punct(&toks[k], '{') {
+                        let start = k;
+                        let mut d = 0usize;
+                        while k < toks.len() {
+                            if is_punct(&toks[k], '{') {
+                                d += 1;
+                            } else if is_punct(&toks[k], '}') {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            k += 1;
+                        }
+                        body = Some((start, k.min(toks.len() - 1)));
+                        break;
+                    }
+                    k += 1;
+                }
+                if let Some(body) = body {
+                    spans.push(FnSpan {
+                        name: name.clone(),
+                        line: fn_line,
+                        body,
+                        hot,
+                    });
+                }
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn allowed(allows: &[Allow], rule: &str, line: usize, need_justification: bool) -> bool {
+    allows.iter().any(|a| {
+        a.rule == rule
+            && (a.line == line || a.line + 1 == line)
+            && (!need_justification || a.justified)
+    })
+}
+
+/// Is any path component exactly `module` (e.g. `obs` in
+/// `rust/src/obs/clock.rs`)?
+fn in_module(path: &str, module: &str) -> bool {
+    path.split(['/', '\\']).any(|c| c == module)
+}
+
+/// Extract `"key":`-shaped JSON keys from an (unescaped) string
+/// literal's content. Only identifier-like keys are reported, so format
+/// placeholders (`{}`) and interpolated values never false-positive.
+pub fn extract_json_keys(content: &str) -> Vec<String> {
+    let cs: Vec<char> = content.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < cs.len() {
+        if cs[i] != '"' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < cs.len() && cs[j] != '"' {
+            j += 1;
+        }
+        if j >= cs.len() {
+            break;
+        }
+        let cand: String = cs[start..j].iter().collect();
+        let mut k = j + 1;
+        while k < cs.len() && cs[k].is_whitespace() {
+            k += 1;
+        }
+        if k < cs.len() && cs[k] == ':' && is_ident_like(&cand) {
+            out.push(cand);
+        }
+        i = j + 1;
+    }
+    out
+}
+
+fn is_ident_like(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Run all rules over one file's source. `file` should be the
+/// workspace-relative path — module exemptions (`obs/`, `quant/`,
+/// `fp8/`) match on its components.
+pub fn check_file(file: &str, src: &str, schema: Option<&Schema>) -> Vec<Diag> {
+    let lexed = lex(src);
+    let toks = strip_test_regions(&lexed.toks);
+    let spans = fn_spans(&toks, &lexed.hot_lines);
+    let allows = &lexed.allows;
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut push = |diags: &mut Vec<Diag>, line: usize, rule: &'static str, message: String| {
+        diags.push(Diag {
+            file: file.to_string(),
+            line,
+            rule,
+            message,
+        });
+    };
+
+    // clock-discipline
+    if !in_module(file, "obs") {
+        for t in &toks {
+            if let TokKind::Ident(s) = &t.kind {
+                if (s == "Instant" || s == "SystemTime")
+                    && !allowed(allows, RULE_CLOCK, t.line, false)
+                {
+                    push(
+                        &mut diags,
+                        t.line,
+                        RULE_CLOCK,
+                        format!("`{s}` outside obs/ — route timing through obs::Clock"),
+                    );
+                }
+            }
+        }
+    }
+
+    // bytes-through-layout
+    if !in_module(file, "quant") && !in_module(file, "fp8") {
+        for t in &toks {
+            if ident_is(t, "size_of") && !allowed(allows, RULE_BYTES, t.line, false) {
+                push(
+                    &mut diags,
+                    t.line,
+                    RULE_BYTES,
+                    "`size_of` outside quant//fp8/ — derive byte rates from quant::KvLayout"
+                        .to_string(),
+                );
+            }
+        }
+        for sp in &spans {
+            if !sp.name.contains("byte") {
+                continue;
+            }
+            let (b0, b1) = sp.body;
+            for j in b0..b1.saturating_sub(1) {
+                if let (TokKind::Num(a), TokKind::Punct('*'), TokKind::Num(b)) =
+                    (&toks[j].kind, &toks[j + 1].kind, &toks[j + 2].kind)
+                {
+                    if !allowed(allows, RULE_BYTES, toks[j].line, false) {
+                        push(
+                            &mut diags,
+                            toks[j].line,
+                            RULE_BYTES,
+                            format!(
+                                "raw byte multiplication `{a} * {b}` in `{}` — \
+                                 name the widths via quant::KvLayout-derived constants",
+                                sp.name
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // hot-path-no-alloc
+    for sp in &spans {
+        if !sp.hot {
+            continue;
+        }
+        let (b0, b1) = sp.body;
+        for j in b0..=b1 {
+            let what = if ident_is(&toks[j], "Vec")
+                && punct_at(&toks, j + 1, ':')
+                && punct_at(&toks, j + 2, ':')
+                && ident_at(&toks, j + 3, "new")
+            {
+                Some("Vec::new")
+            } else if ident_is(&toks[j], "vec") && punct_at(&toks, j + 1, '!') {
+                Some("vec!")
+            } else if is_punct(&toks[j], '.') && ident_at(&toks, j + 1, "to_vec") {
+                Some(".to_vec()")
+            } else if is_punct(&toks[j], '.')
+                && ident_at(&toks, j + 1, "clone")
+                && punct_at(&toks, j + 2, '(')
+            {
+                Some(".clone()")
+            } else if is_punct(&toks[j], '.') && ident_at(&toks, j + 1, "collect") {
+                Some(".collect()")
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                if !allowed(allows, RULE_HOT, toks[j].line, false) {
+                    push(
+                        &mut diags,
+                        toks[j].line,
+                        RULE_HOT,
+                        format!(
+                            "`{what}` inside hot-path fn `{}` — the paged decode \
+                             path must stay allocation-free",
+                            sp.name
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // no-unwrap-in-lib
+    for j in 0..toks.len() {
+        let (what, line) = if is_punct(&toks[j], '.')
+            && ident_at(&toks, j + 1, "unwrap")
+            && punct_at(&toks, j + 2, '(')
+            && punct_at(&toks, j + 3, ')')
+        {
+            (Some(".unwrap()"), toks[j + 1].line)
+        } else if is_punct(&toks[j], '.')
+            && ident_at(&toks, j + 1, "expect")
+            && punct_at(&toks, j + 2, '(')
+        {
+            (Some(".expect("), toks[j + 1].line)
+        } else if ident_is(&toks[j], "panic") && punct_at(&toks, j + 1, '!') {
+            (Some("panic!"), toks[j].line)
+        } else {
+            (None, 0)
+        };
+        if let Some(what) = what {
+            if !allowed(allows, RULE_UNWRAP, line, true) {
+                push(
+                    &mut diags,
+                    line,
+                    RULE_UNWRAP,
+                    format!(
+                        "`{what}` in non-test library code — convert to a typed \
+                         error or justify with `// lint:allow(no-unwrap-in-lib): <why>`"
+                    ),
+                );
+            }
+        }
+    }
+
+    // bench-json-schema
+    if let Some(schema) = schema {
+        for sp in &spans {
+            if !sp.name.contains("json_row") {
+                continue;
+            }
+            let (b0, b1) = sp.body;
+            for j in b0..=b1 {
+                if let TokKind::Str(content) = &toks[j].kind {
+                    for key in extract_json_keys(content) {
+                        if !schema.contains(&key) && !allowed(allows, RULE_JSON, toks[j].line, false)
+                        {
+                            push(
+                                &mut diags,
+                                toks[j].line,
+                                RULE_JSON,
+                                format!(
+                                    "json key \"{key}\" emitted by `{}` is not declared \
+                                     in the bench schema list",
+                                    sp.name
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+/// Recursively collect `.rs` files under each path (files pass through).
+pub fn collect_rs_files(paths: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    fn walk(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        if fs::metadata(p)?.is_dir() {
+            for entry in fs::read_dir(p)? {
+                walk(&entry?.path(), out)?;
+            }
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p.to_path_buf());
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for p in paths {
+        walk(p, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `paths`; diagnostics come back sorted by
+/// (file, line, rule) so output and golden files are deterministic.
+pub fn lint_paths(paths: &[PathBuf], schema: Option<&Schema>) -> io::Result<Vec<Diag>> {
+    let files = collect_rs_files(paths)?;
+    let mut diags = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        diags.extend(check_file(&rel, &src, schema));
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(diags)
+}
+
+pub fn render_human(d: &Diag) -> String {
+    format!("{}:{}: [{}] {}", d.file, d.line, d.rule, d.message)
+}
+
+/// Serialize diagnostics as a JSON array (hand-rolled: the crate is
+/// dependency-free by design).
+pub fn diags_to_json(diags: &[Diag]) -> String {
+    let mut s = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n  {");
+        s.push_str(&format!("\"file\":{},", json_str(&d.file)));
+        s.push_str(&format!("\"line\":{},", d.line));
+        s.push_str(&format!("\"rule\":{},", json_str(d.rule)));
+        s.push_str(&format!("\"message\":{}", json_str(&d.message)));
+        s.push('}');
+    }
+    if !diags.is_empty() {
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    s
+}
+
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let src = r#"
+            // Instant in a comment
+            /* Instant in /* a nested */ block comment */
+            fn f() -> &'static str { "Instant::now()" }
+        "#;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(ids.contains(&"f".to_string()));
+        // The string content survives as a Str token.
+        let lexed = lex(src);
+        assert!(lexed
+            .toks
+            .iter()
+            .any(|t| matches!(&t.kind, TokKind::Str(s) if s == "Instant::now()")));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn g<'a>(x: &'a str) -> char { let c = 'x'; let q = '\\''; c }";
+        let ids = idents(src);
+        assert!(ids.contains(&"g".to_string()));
+        // Lifetime name is skipped, not lexed as an ident; the parameter
+        // names still are.
+        assert!(!ids.contains(&"a".to_string()), "{ids:?}");
+        assert!(ids.contains(&"c".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_are_skipped_whole() {
+        let src = r##"fn h() { let s = r#"Instant "quoted" inside"#; }"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn cfg_test_and_mod_tests_are_stripped() {
+        let src = r#"
+            fn live() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                fn t() { y.unwrap(); panic!("boom"); }
+            }
+            #[test]
+            fn unit() { z.unwrap(); }
+        "#;
+        let lexed = lex(src);
+        let toks = strip_test_regions(&lexed.toks);
+        let unwraps = toks.iter().filter(|t| ident_is(t, "unwrap")).count();
+        assert_eq!(unwraps, 1, "only the live fn's unwrap survives");
+        assert!(!toks.iter().any(|t| ident_is(t, "panic")));
+    }
+
+    #[test]
+    fn cfg_not_test_is_kept() {
+        let src = "#[cfg(not(test))] fn real() { a.unwrap(); }";
+        let lexed = lex(src);
+        let toks = strip_test_regions(&lexed.toks);
+        assert!(toks.iter().any(|t| ident_is(t, "unwrap")));
+    }
+
+    #[test]
+    fn pragma_parsing() {
+        let src = "
+            // lint:allow(no-unwrap-in-lib): queue checked non-empty above
+            x.unwrap();
+            y.expect(\"msg\"); // lint:allow(no-unwrap-in-lib)
+            // lint: hot-path
+            fn hot() {}
+        ";
+        let lexed = lex(src);
+        assert_eq!(lexed.allows.len(), 2);
+        assert!(lexed.allows[0].justified);
+        assert_eq!(lexed.allows[0].rule, "no-unwrap-in-lib");
+        assert!(!lexed.allows[1].justified);
+        assert_eq!(lexed.hot_lines.len(), 1);
+        let toks = strip_test_regions(&lexed.toks);
+        let spans = fn_spans(&toks, &lexed.hot_lines);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].hot);
+        assert_eq!(spans[0].name, "hot");
+    }
+
+    #[test]
+    fn unwrap_rule_requires_justification() {
+        let src = "
+            fn f() {
+                a.unwrap(); // lint:allow(no-unwrap-in-lib)
+            }
+        ";
+        let diags = check_file("rust/src/x.rs", src, None);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, RULE_UNWRAP);
+        let src_ok = "
+            fn f() {
+                a.unwrap(); // lint:allow(no-unwrap-in-lib): invariant: a is Some here
+            }
+        ";
+        assert!(check_file("rust/src/x.rs", src_ok, None).is_empty());
+    }
+
+    #[test]
+    fn json_keys_extraction() {
+        let keys = extract_json_keys("{\"label\":\"{}\",\"ttft_mean_ms\":{:.3},");
+        assert_eq!(keys, vec!["label".to_string(), "ttft_mean_ms".to_string()]);
+        // Placeholders and values are not keys.
+        assert!(extract_json_keys("\"{}\" , \"serve\",").is_empty());
+    }
+
+    #[test]
+    fn json_output_escapes() {
+        let d = Diag {
+            file: "a\"b.rs".to_string(),
+            line: 3,
+            rule: RULE_CLOCK,
+            message: "tab\there".to_string(),
+        };
+        let j = diags_to_json(&[d]);
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("tab\\there"));
+    }
+}

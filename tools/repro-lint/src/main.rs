@@ -1,0 +1,120 @@
+//! CLI for the workspace lint pass.
+//!
+//! Usage: `cargo run -p repro-lint -- [--deny] [--json <file>]
+//! [--schema <file>] <paths...>`
+//!
+//! Prints one `file:line: [rule] message` diagnostic per violation.
+//! `--deny` makes violations fatal (exit 1); `--json` additionally writes
+//! the diagnostics as a JSON array; `--schema` overrides the default
+//! bench key schema (`tools/repro-lint/bench_schema.txt`, resolved
+//! relative to the working directory — the workspace root when run via
+//! `cargo run -p repro-lint`).
+
+use std::env;
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use repro_lint::{diags_to_json, lint_paths, render_human, Schema};
+
+const DEFAULT_SCHEMA: &str = "tools/repro-lint/bench_schema.txt";
+
+fn print_help() {
+    eprintln!(
+        "repro-lint: static-analysis pass for the workspace's KV-bytes, \
+         clock, and hot-path contracts\n\n\
+         usage: repro-lint [--deny] [--json <file>] [--schema <file>] <paths...>\n\
+         \n  --deny            exit non-zero when violations are found\
+         \n  --json <file>     also write diagnostics as a JSON array\
+         \n  --schema <file>   bench-json-schema key list (default: {DEFAULT_SCHEMA})"
+    );
+}
+
+fn main() -> ExitCode {
+    let mut deny = false;
+    let mut json_out: Option<PathBuf> = None;
+    let mut schema_path: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--deny" => deny = true,
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("repro-lint: --json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--schema" => match args.next() {
+                Some(p) => schema_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("repro-lint: --schema requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(PathBuf::from(a)),
+        }
+    }
+    if paths.is_empty() {
+        print_help();
+        return ExitCode::from(2);
+    }
+
+    let schema_file = schema_path.unwrap_or_else(|| PathBuf::from(DEFAULT_SCHEMA));
+    let schema = if schema_file.exists() {
+        match Schema::load(&schema_file) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!(
+                    "repro-lint: cannot read schema {}: {e}",
+                    schema_file.display()
+                );
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        eprintln!(
+            "repro-lint: no bench schema at {} — skipping bench-json-schema",
+            schema_file.display()
+        );
+        None
+    };
+
+    let diags = match lint_paths(&paths, schema.as_ref()) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("repro-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for d in &diags {
+        println!("{}", render_human(d));
+    }
+    if let Some(p) = &json_out {
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = fs::create_dir_all(dir);
+            }
+        }
+        if let Err(e) = fs::write(p, diags_to_json(&diags)) {
+            eprintln!("repro-lint: cannot write {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if diags.is_empty() {
+        eprintln!("repro-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("repro-lint: {} violation(s)", diags.len());
+        if deny {
+            ExitCode::FAILURE
+        } else {
+            ExitCode::SUCCESS
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Golden-diagnostics tests over the fixture corpus, plus a live check
+//! that the real `rust/src` tree is lint-clean (the same gate CI's
+//! `lint` job enforces with `--deny`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use repro_lint::{check_file, collect_rs_files, diags_to_json, lint_paths, Diag, Schema};
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Lint every fixture with a stable `fixtures/<name>` label so the
+/// golden JSON is independent of where the checkout lives.
+fn lint_fixtures() -> Vec<Diag> {
+    let dir = manifest_dir().join("fixtures");
+    let schema = Schema::load(&dir.join("schema.txt")).expect("fixture schema");
+    let files = collect_rs_files(&[dir]).expect("fixture dir");
+    assert!(files.len() >= 7, "fixture corpus went missing: {files:?}");
+    let mut diags = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f).expect("fixture source");
+        let name = format!(
+            "fixtures/{}",
+            f.file_name().expect("file name").to_string_lossy()
+        );
+        diags.extend(check_file(&name, &src, Some(&schema)));
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    diags
+}
+
+#[test]
+fn fixture_diagnostics_match_golden_json() {
+    let got = diags_to_json(&lint_fixtures());
+    let golden = manifest_dir().join("fixtures").join("expected.json");
+    let want = fs::read_to_string(&golden).expect("golden json");
+    assert_eq!(
+        got, want,
+        "fixture diagnostics drifted from fixtures/expected.json — \
+         regenerate the golden only for intentional rule changes"
+    );
+}
+
+#[test]
+fn per_fixture_expectations() {
+    let diags = lint_fixtures();
+    let count = |file: &str| diags.iter().filter(|d| d.file.ends_with(file)).count();
+    // Known-bad snippets fire; pragma'd and test-only code stays silent.
+    assert_eq!(count("bad_clock.rs"), 2);
+    assert_eq!(count("bad_bytes.rs"), 2);
+    assert_eq!(count("bad_hotpath.rs"), 5, "warm()'s pragma must be honored");
+    assert_eq!(count("bad_unwrap.rs"), 2, "unjustified pragma must not count");
+    assert_eq!(count("bad_json_row.rs"), 1);
+    assert_eq!(count("good_testcode.rs"), 0, "#[cfg(test)]/#[test] excluded");
+    assert_eq!(count("good_strings.rs"), 0, "strings/comments are immune");
+}
+
+#[test]
+fn repo_tree_is_clean() {
+    let root = manifest_dir()
+        .parent()
+        .and_then(Path::parent)
+        .map(Path::to_path_buf)
+        .expect("workspace root");
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        return; // sliced checkout without the main crate
+    }
+    let schema = Schema::load(&manifest_dir().join("bench_schema.txt")).expect("bench schema");
+    let diags = lint_paths(&[src], Some(&schema)).expect("lint rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src must stay lint-clean:\n{}",
+        diags
+            .iter()
+            .map(repro_lint::render_human)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
