@@ -23,7 +23,9 @@
 //! pure JSON): at a 1024-token shared prefix the cache improves mean TTFT
 //! ≥ 2× and saves measurable KV bytes.
 
-use gaudi_fp8::coordinator::{KvStore, LatencyStat, PrefixCache, PrefixCacheConfig, Request};
+use gaudi_fp8::coordinator::{
+    AppendOutcome, KvStore, LatencyStat, PrefixCache, PrefixCacheConfig, Request,
+};
 use gaudi_fp8::gaudisim::{Device, MemoryModel};
 use gaudi_fp8::model::config::ModelConfig;
 use gaudi_fp8::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
@@ -111,10 +113,17 @@ fn paged_residency(requests: usize, shared: usize, tail: usize) -> (usize, usize
         *x = ((i % 97) as f32 - 48.0) * 0.01;
     }
     let vbuf = kbuf.clone();
+    // Tail tokens land one at a time through the paged write path (the
+    // dense scatter_batch staging is feature-gated out of the default
+    // surface); values are irrelevant here — only block residency counts.
+    let tail_row = vec![0.01f32; layers * row];
     let append = |kv: &mut KvStore, slot: usize, count: usize| {
-        let (k, v, _) = kv.gather_batch(&[slot]);
         for _ in 0..count {
-            kv.scatter_batch(&[slot], &k, &v);
+            assert_ne!(
+                kv.append_token(slot, &tail_row, &tail_row),
+                AppendOutcome::AtCapacity,
+                "tail append must fit the slot window"
+            );
         }
     };
 

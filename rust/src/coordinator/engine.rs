@@ -66,6 +66,7 @@ use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::router::{Admission, ReplicaHandle};
 use crate::runtime::{load_params_bin, Artifact, ArtifactKey, ArtifactRegistry, Runtime, TensorIn};
 use crate::util::json::Json;
+use crate::util::pool::Parallelism;
 
 /// Block granularity of the engine's prefix cache and paged block pool
 /// (tokens) — one constant, shared with the whole KV subsystem, so cached
@@ -172,6 +173,12 @@ pub struct EngineConfig {
     /// Chunked-prefill chunk size in tokens per engine step for cache-hit
     /// tails; 0 = process the whole tail in one step.
     pub prefill_chunk: usize,
+    /// Worker-count policy for the host-side paged KV hot path — the
+    /// scoped `util::pool` workers behind the per-step pool export in
+    /// [`Engine::paged_decode_forward`] (and the chunked-prefill
+    /// forced-decode path that routes through it). `Auto` honors
+    /// `REPRO_NUM_THREADS`; byte-for-byte deterministic at any count.
+    pub kv_parallelism: Parallelism,
     /// Route decode groups through the dense reference implementation
     /// ([`Engine::run_decode_group_dense`]) instead of the paged path —
     /// the paged-vs-dense roundtrip switch, compiled only with the
@@ -191,6 +198,7 @@ impl EngineConfig {
             kv_dtype: KvDtype::F32,
             prefix_cache_bytes: None,
             prefill_chunk: 0,
+            kv_parallelism: Parallelism::Auto,
             #[cfg(feature = "dense-decode-ref")]
             use_dense_decode: false,
         }
@@ -803,10 +811,15 @@ impl Engine {
             pk[at..at + per_block].fill(0.0);
             pv[at..at + per_block].fill(0.0);
         }
-        self.pool_exported = self
-            .kv
-            .pool()
-            .export_f32_blocks_into(&group_blocks, &mut pk, &mut pv);
+        // Fan the export across the scoped pool workers (cfg knob /
+        // REPRO_NUM_THREADS) — sorted block chunks write disjoint spans,
+        // so the exported bytes are identical at any worker count.
+        self.pool_exported = self.kv.pool().export_f32_blocks_into_par(
+            &group_blocks,
+            &mut pk,
+            &mut pv,
+            self.cfg.kv_parallelism.workers(),
+        );
         let pool_dims = [
             pool_blocks,
             self.meta.layers,

@@ -13,7 +13,7 @@
 //! [`super::prefix::PrefixCache`]) can map the **same** physical block: a
 //! shared 6144-token prefix costs its bytes once, no matter how many
 //! concurrent requests read it. Writes never touch a block another reader
-//! can still see — [`KvStore::scatter_batch`] copy-on-writes the partially
+//! can still see — [`KvStore::append_token`] copy-on-writes the partially
 //! filled tail block when it is shared.
 //!
 //! # The `KvLayout` accounting contract
@@ -52,21 +52,35 @@
 //!   into the hot block (copy-on-write first if that block is still
 //!   readable elsewhere), replacing the full dense scatter.
 //!
-//! [`KvStore::gather_batch_into`] / [`KvStore::gather_batch`] /
-//! [`KvStore::scatter_batch`] remain as the **dense reference
-//! implementation** — used by roundtrip/property tests and the
-//! feature-gated (`dense-decode-ref`) reference engine path — and are no
-//! longer on the decode hot path.
+//! # The single read entry point (ISSUE 8)
+//!
+//! All paged reads funnel through **one** public API:
+//! [`PagedAttentionView::attend_into`], which takes a batch of
+//! [`AttendTask`]s (independent (slot, layer, kv-head) online-softmax
+//! readouts) plus an [`AttendOptions`] selecting the worker count
+//! ([`Parallelism`]) and the dequant kernel ([`Dequant`]). Tasks run
+//! data-parallel on the scoped [`crate::util::pool`] workers; per-task
+//! tiles reduce in block-table order, so output is bit-identical for
+//! every worker count. [`PagedAttentionView::attend`] is a thin one-task
+//! convenience wrapper and [`KvStore::decode_attention_probe`] is built
+//! on the same entry point — future kernel variants (SIMD, PJRT) slot in
+//! behind this one signature.
+//!
+//! The pre-paged dense staging (`gather_batch` / `gather_batch_into` /
+//! `scatter_batch`) survives only behind the `dense-decode-ref` cargo
+//! feature as the reference implementation for roundtrip/property tests;
+//! the default public `KvStore` surface is paged-only.
 
-use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
 use crate::fp8::bf16::{bf16_to_f32, f32_to_bf16};
-use crate::fp8::{encode_rne, CastMode, DecodeTable, Fp8Format};
+use crate::fp8::{decode, decode_table, encode_rne, CastMode, DecodeTable, Fp8Format};
 use crate::quant::{
     weight_scale_per_tensor, KvDtype, KvLayout, FP8_SCALE_GROUP_BYTES, KV_BLOCK_TOKENS,
 };
+use crate::util::pool::{self, Parallelism};
 use crate::util::rng::XorShiftRng;
 
 /// Page-granular KV accounting (vLLM-style). Used for admission control and
@@ -198,7 +212,9 @@ pub type BlockId = usize;
 
 /// Dtype-specific backing storage: raw values (F32/BF16) or FP8 codes plus
 /// per-(block, layer, kv-head) max-abs scales, K and V scaled
-/// independently.
+/// independently. FP8 dequant indexes the process-wide
+/// [`crate::fp8::decode_table`] LUT — pools no longer carry a private
+/// table copy.
 enum KvData {
     F32 {
         k: Vec<f32>,
@@ -210,7 +226,6 @@ enum KvData {
     },
     Fp8 {
         format: Fp8Format,
-        table: DecodeTable,
         k: Vec<u8>,
         v: Vec<u8>,
         /// One scale per (block, layer, kv-head), row-major in that order;
@@ -311,7 +326,11 @@ pub struct BlockPool {
     /// instrumentation behind the "a decode step reads exactly the live
     /// block bytes" contract. Dense reference gathers are deliberately
     /// *not* counted: the counter measures the paged path alone.
-    bytes_read: Cell<u64>,
+    /// Atomic (relaxed) so the scoped attend workers can charge it
+    /// concurrently: each tile read adds one exact integer, and integer
+    /// addition is order-independent, so the total is byte-exact for
+    /// every worker count.
+    bytes_read: AtomicU64,
     /// Copy-on-write clones performed ([`Self::clone_block`]) over the
     /// pool's lifetime — the telemetry behind `CowCopy` trace events.
     cow_clones: u64,
@@ -339,7 +358,6 @@ impl BlockPool {
             },
             KvDtype::Fp8(format) => KvData::Fp8 {
                 format,
-                table: DecodeTable::new(format),
                 k: vec![0; n],
                 v: vec![0; n],
                 k_scale: vec![1.0; total_blocks * layers * kv_heads],
@@ -357,7 +375,7 @@ impl BlockPool {
             // Reversed so the first alloc hands out block 0 — deterministic
             // IDs make failures readable.
             free: (0..total_blocks).rev().collect(),
-            bytes_read: Cell::new(0),
+            bytes_read: AtomicU64::new(0),
             cow_clones: 0,
         }
     }
@@ -539,13 +557,13 @@ impl BlockPool {
                     }
                 }
                 KvData::Fp8 {
+                    format,
                     k,
                     v,
                     k_scale,
                     v_scale,
-                    table,
-                    ..
                 } => {
+                    let table = decode_table(*format);
                     let si = (id * self.layers + l) * self.kv_heads;
                     decode_region_fp8(
                         &k[src..src + n],
@@ -646,11 +664,11 @@ impl BlockPool {
     /// Physical bytes dequantized through the paged read path since the
     /// last [`Self::reset_bytes_read`].
     pub fn bytes_read(&self) -> u64 {
-        self.bytes_read.get()
+        self.bytes_read.load(Ordering::Relaxed)
     }
 
     pub fn reset_bytes_read(&self) {
-        self.bytes_read.set(0);
+        self.bytes_read.store(0, Ordering::Relaxed);
     }
 
     /// Copy-on-write clones performed over the pool's lifetime.
@@ -731,6 +749,7 @@ impl BlockPool {
     /// traffic: a whole block streams regardless of how many of its
     /// positions are valid (the caller masks scores past the sequence
     /// length), which is why [`Self::bytes_read`] charges full blocks.
+    /// Uses the LUT dequant kernel; [`Self::read_block_head_with`] selects.
     // lint: hot-path
     pub fn read_block_head(
         &self,
@@ -739,6 +758,24 @@ impl BlockPool {
         kv_head: usize,
         k_out: &mut [f32],
         v_out: &mut [f32],
+    ) {
+        self.read_block_head_with(id, layer, kv_head, k_out, v_out, Dequant::Lut);
+    }
+
+    /// [`Self::read_block_head`] with an explicit dequant kernel. Both
+    /// kernels produce bit-identical tiles (the LUT is the exact decode
+    /// table); [`Dequant::Scalar`] re-derives every element through the
+    /// exponent-math [`decode`] and exists as the honest pre-LUT baseline
+    /// the speedup benches compare against.
+    // lint: hot-path
+    pub fn read_block_head_with(
+        &self,
+        id: BlockId,
+        layer: usize,
+        kv_head: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        dequant: Dequant,
     ) {
         let bt = self.block_tokens;
         let d = self.head_dim;
@@ -759,34 +796,67 @@ impl BlockPool {
                 for ti in 0..bt {
                     let s = base + ti * row;
                     let o = ti * d;
-                    for i in 0..d {
-                        k_out[o + i] = bf16_to_f32(k[s + i]);
-                        v_out[o + i] = bf16_to_f32(v[s + i]);
+                    for (dst, &src) in k_out[o..o + d].iter_mut().zip(&k[s..s + d]) {
+                        *dst = bf16_to_f32(src);
+                    }
+                    for (dst, &src) in v_out[o..o + d].iter_mut().zip(&v[s..s + d]) {
+                        *dst = bf16_to_f32(src);
                     }
                 }
             }
             KvData::Fp8 {
+                format,
                 k,
                 v,
                 k_scale,
                 v_scale,
-                table,
-                ..
             } => {
                 let si = (id * self.layers + layer) * self.kv_heads + kv_head;
                 let (ks, vs) = (k_scale[si], v_scale[si]);
-                for ti in 0..bt {
-                    let s = base + ti * row;
-                    let o = ti * d;
-                    for i in 0..d {
-                        k_out[o + i] = table.get(k[s + i]) * ks;
-                        v_out[o + i] = table.get(v[s + i]) * vs;
+                match dequant {
+                    Dequant::Lut => {
+                        // Fold the tile's scale into a stack-resident
+                        // pre-scaled copy of the shared 256-entry LUT —
+                        // one scale multiply per code per tile instead of
+                        // one per element — then every element is a single
+                        // indexed load. Bit-identical to `table[c] * s`
+                        // computed per element: same operands, same
+                        // multiply.
+                        let table = &decode_table(*format).values;
+                        let mut kl = [0.0f32; 256];
+                        let mut vl = [0.0f32; 256];
+                        for ((kd, vd), &t) in kl.iter_mut().zip(vl.iter_mut()).zip(table.iter()) {
+                            *kd = t * ks;
+                            *vd = t * vs;
+                        }
+                        for ti in 0..bt {
+                            let s = base + ti * row;
+                            let o = ti * d;
+                            for (dst, &code) in k_out[o..o + d].iter_mut().zip(&k[s..s + d]) {
+                                *dst = kl[code as usize];
+                            }
+                            for (dst, &code) in v_out[o..o + d].iter_mut().zip(&v[s..s + d]) {
+                                *dst = vl[code as usize];
+                            }
+                        }
+                    }
+                    Dequant::Scalar => {
+                        for ti in 0..bt {
+                            let s = base + ti * row;
+                            let o = ti * d;
+                            for (dst, &code) in k_out[o..o + d].iter_mut().zip(&k[s..s + d]) {
+                                *dst = decode(code, *format) * ks;
+                            }
+                            for (dst, &code) in v_out[o..o + d].iter_mut().zip(&v[s..s + d]) {
+                                *dst = decode(code, *format) * vs;
+                            }
+                        }
                     }
                 }
             }
         }
         self.bytes_read
-            .set(self.bytes_read.get() + self.block_read_bytes_per_head() as u64);
+            .fetch_add(self.block_read_bytes_per_head() as u64, Ordering::Relaxed);
     }
 
     /// Write one token's (L, Hkv, D) K/V rows at block position `tok`,
@@ -825,12 +895,12 @@ impl BlockPool {
             }
             KvData::Fp8 {
                 format,
-                table,
                 k,
                 v,
                 k_scale,
                 v_scale,
             } => {
+                let table = decode_table(*format);
                 let mut ks = vec![0.0f32; bt * row];
                 let mut vs = vec![0.0f32; bt * row];
                 for l in 0..layers {
@@ -897,6 +967,22 @@ impl BlockPool {
         k: &mut [f32],
         v: &mut [f32],
     ) -> Vec<BlockId> {
+        self.export_f32_blocks_into_par(ids, k, v, 1)
+    }
+
+    /// [`Self::export_f32_blocks_into`] fanned out over `workers` scoped
+    /// pool workers. The deduped id list is sorted, so each worker's chunk
+    /// of blocks covers a contiguous byte span of the export buffers —
+    /// disjoint `split_at_mut` regions, no synchronization, and the same
+    /// bytes written for every worker count. Small exports (or
+    /// `workers <= 1`) run inline.
+    pub fn export_f32_blocks_into_par(
+        &self,
+        ids: &[BlockId],
+        k: &mut [f32],
+        v: &mut [f32],
+        workers: usize,
+    ) -> Vec<BlockId> {
         let per_block = self.layers * self.block_tokens * self.row();
         let mut seen = vec![false; self.total_blocks];
         let mut written = Vec::with_capacity(ids.len());
@@ -910,19 +996,52 @@ impl BlockPool {
                 "block id {id} beyond the export buffers"
             );
             written.push(id);
-            if self.refs[id] == 0 {
-                continue; // free block: its (pre-zeroed) region stays zero
-            }
-            self.gather_into(
-                id,
-                k,
-                v,
-                id * per_block,
-                self.block_tokens * self.row(),
-                0,
-                self.block_tokens,
-            );
         }
+        // Sorted order makes per-worker chunks contiguous in the buffers
+        // and the returned list deterministic regardless of `ids` order.
+        written.sort_unstable();
+        let export_chunk = |chunk: &[BlockId], k: &mut [f32], v: &mut [f32], off: usize| {
+            for &id in chunk {
+                if self.refs[id] == 0 {
+                    continue; // free block: its (pre-zeroed) region stays zero
+                }
+                self.gather_into(
+                    id,
+                    k,
+                    v,
+                    id * per_block - off,
+                    self.block_tokens * self.row(),
+                    0,
+                    self.block_tokens,
+                );
+            }
+        };
+        let w = workers.max(1).min(written.len());
+        if w <= 1 || written.len() < 2 * w {
+            export_chunk(&written, k, v, 0);
+            return written;
+        }
+        // Chunk i owns blocks written[i*n/w..(i+1)*n/w]; its byte span is
+        // [first*per_block, (last+1)*per_block), carved off the front of
+        // the remaining buffers (gaps between non-adjacent ids stay inside
+        // whichever chunk's span covers them — never written twice).
+        let mut jobs: Vec<(&[BlockId], &mut [f32], &mut [f32], usize)> = Vec::with_capacity(w);
+        let (mut k_rest, mut v_rest) = (k, v);
+        let mut off = 0usize;
+        for i in 0..w {
+            let r = pool::chunk_range(written.len(), w, i);
+            let chunk = &written[r.start..r.end];
+            let hi = (chunk[chunk.len() - 1] + 1) * per_block;
+            let (ka, kb) = std::mem::take(&mut k_rest).split_at_mut(hi - off);
+            let (va, vb) = std::mem::take(&mut v_rest).split_at_mut(hi - off);
+            jobs.push((chunk, ka, va, off));
+            k_rest = kb;
+            v_rest = vb;
+            off = hi;
+        }
+        pool::run_scoped(&mut jobs, |(chunk, k, v, off)| {
+            export_chunk(chunk, k, v, *off);
+        });
         written
     }
 }
@@ -1025,46 +1144,107 @@ impl<'a> PagedAttentionView<'a> {
 
     /// Single-head paged attention readout for slot `i`: softmax(q·Kᵀ/√d)·V
     /// over the slot's valid positions. Convenience wrapper over
-    /// [`Self::attend_into`] that allocates its own output and scratch —
-    /// fine for tests and one-off probes; steady-state decode loops should
-    /// hold an [`AttendScratch`] and call `attend_into` directly.
+    /// [`Self::attend_into`] that builds a one-task batch and allocates its
+    /// own output and scratch — fine for tests and one-off probes;
+    /// steady-state decode loops should hold an [`AttendScratch`] and call
+    /// `attend_into` with the full task batch.
     pub fn attend(&self, i: usize, layer: usize, kv_head: usize, q: &[f32]) -> Vec<f32> {
         let d = self.layout.head_dim;
         let mut out = vec![0.0f32; d];
         let mut scratch = AttendScratch::new(self.pool.block_tokens(), d);
-        self.attend_into(i, layer, kv_head, q, &mut out, &mut scratch);
+        let tasks = [AttendTask {
+            slot: i,
+            layer,
+            kv_head,
+        }];
+        self.attend_into(&tasks, q, &mut out, &mut scratch, &AttendOptions::default());
         out
     }
 
-    /// Allocation-free paged attention readout: softmax(q·Kᵀ/√d)·V over
-    /// slot `i`'s valid positions, walking the block table with an online
-    /// (streaming) softmax — one block-sized K/V tile in flight at a time,
-    /// dequantized on read, never a dense (T, …) buffer. Writes zeros for
-    /// an empty sequence. `out` must be `head_dim` long; `scratch` is
-    /// caller-owned so a decode loop reuses the same two tiles for every
-    /// (slot, layer, head) readout of a step.
+    /// **The** paged read entry point: run a batch of independent
+    /// (slot, layer, kv-head) online-softmax readouts, data-parallel
+    /// across the scoped [`crate::util::pool`] workers selected by
+    /// `opts.parallelism`, dequantizing with the `opts.dequant` kernel.
+    ///
+    /// `q` and `out` are row-major `(tasks.len(), head_dim)`; task `t`
+    /// reads query row `t` and writes output row `t`. Each task walks its
+    /// slot's block table with a streaming softmax — one block-sized K/V
+    /// tile in flight per worker, dequantized on read, never a dense
+    /// `(T, …)` buffer — and rows of empty sequences come back zero.
+    ///
+    /// Deterministic by construction: tasks are split into contiguous
+    /// chunks (never re-ordered), every task reduces its own tiles in
+    /// block-table order, and each owns a disjoint output row — so output
+    /// is **bit-identical for every worker count**, and
+    /// [`BlockPool::bytes_read`] (atomic, order-independent integer adds)
+    /// stays byte-exact. `scratch` is caller-owned and grows to one tile
+    /// pair per worker on first use; steady state allocates nothing.
     // lint: hot-path
     pub fn attend_into(
         &self,
-        i: usize,
-        layer: usize,
-        kv_head: usize,
+        tasks: &[AttendTask],
         q: &[f32],
         out: &mut [f32],
         scratch: &mut AttendScratch,
+        opts: &AttendOptions,
     ) {
         let d = self.layout.head_dim;
-        assert_eq!(q.len(), d, "query dim");
-        assert_eq!(out.len(), d, "output dim");
-        let s = &self.slots[i];
+        assert_eq!(q.len(), tasks.len() * d, "query batch size");
+        assert_eq!(out.len(), tasks.len() * d, "output batch size");
+        let bt = self.pool.block_tokens();
+        assert!(scratch.fits(bt, d), "scratch tiles sized for another pool");
+        if tasks.is_empty() {
+            return;
+        }
+        let w = if tasks.len() == 1 {
+            1 // single task: skip worker detection, run inline
+        } else {
+            opts.parallelism.workers().min(tasks.len())
+        };
+        scratch.ensure_workers(w);
+        let dequant = opts.dequant;
+        pool::run_partitioned(
+            &mut scratch.tiles[..w],
+            out,
+            tasks.len(),
+            d,
+            |tile, out_chunk, range| {
+                for (j, t) in range.enumerate() {
+                    self.attend_task_into(
+                        tasks[t],
+                        &q[t * d..(t + 1) * d],
+                        &mut out_chunk[j * d..(j + 1) * d],
+                        &mut tile.k,
+                        &mut tile.v,
+                        dequant,
+                    );
+                }
+            },
+        );
+    }
+
+    /// One task's streaming-softmax tile walk — the kernel every worker
+    /// runs. Tiles reduce strictly in block-table order and all dot
+    /// products / V accumulations are stride-1 slices over the decoded
+    /// tile, so the autovectorizer can chunk them.
+    // lint: hot-path
+    fn attend_task_into(
+        &self,
+        task: AttendTask,
+        q: &[f32],
+        out: &mut [f32],
+        k_tile: &mut [f32],
+        v_tile: &mut [f32],
+        dequant: Dequant,
+    ) {
+        let d = self.layout.head_dim;
+        let s = &self.slots[task.slot];
         out.fill(0.0);
         if s.len == 0 {
             return;
         }
         let bt = self.pool.block_tokens();
-        assert!(scratch.fits(bt, d), "scratch tiles sized for another pool");
         let scale = 1.0 / (d as f32).sqrt();
-        let (k_tile, v_tile) = scratch.tiles();
         // Online softmax state: running max, normalizer, weighted V sum.
         let mut m = f32::NEG_INFINITY;
         let mut z = 0.0f32;
@@ -1072,19 +1252,22 @@ impl<'a> PagedAttentionView<'a> {
         for (bi, &id) in s.blocks.iter().take(live).enumerate() {
             let tok0 = bi * bt;
             let count = bt.min(s.len - tok0);
-            self.pool.read_block_head(id, layer, kv_head, k_tile, v_tile);
+            self.pool
+                .read_block_head_with(id, task.layer, task.kv_head, k_tile, v_tile, dequant);
             for ti in 0..count {
+                let krow = &k_tile[ti * d..(ti + 1) * d];
                 let mut score = 0.0f32;
-                for (di, qd) in q.iter().enumerate() {
-                    score += qd * k_tile[ti * d + di];
+                for (qd, kd) in q.iter().zip(krow) {
+                    score += qd * kd;
                 }
                 score *= scale;
                 let m_new = m.max(score);
                 let corr = (m - m_new).exp(); // first iteration: exp(-inf) = 0
                 let w = (score - m_new).exp();
                 z = z * corr + w;
-                for di in 0..d {
-                    out[di] = out[di] * corr + w * v_tile[ti * d + di];
+                let vrow = &v_tile[ti * d..(ti + 1) * d];
+                for (o, vv) in out.iter_mut().zip(vrow) {
+                    *o = *o * corr + w * vv;
                 }
                 m = m_new;
             }
@@ -1096,44 +1279,110 @@ impl<'a> PagedAttentionView<'a> {
     }
 }
 
+/// One independent readout in an [`PagedAttentionView::attend_into`]
+/// batch: which view row (the `i` of [`PagedAttentionView::slot`] — not
+/// the store slot id), layer, and kv-head to attend over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttendTask {
+    /// Index of the slot row within the view.
+    pub slot: usize,
+    pub layer: usize,
+    pub kv_head: usize,
+}
+
+/// FP8 dequant kernel selector for the paged read path. Both kernels are
+/// bit-identical (the LUT *is* the exact decode table); `Scalar` is the
+/// honest per-element exponent-math baseline the speedup benches compare
+/// against. F32/BF16 tiles ignore the selector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dequant {
+    /// Indexed loads from the shared 256-entry [`crate::fp8::decode_table`]
+    /// LUT, scale folded in once per tile.
+    #[default]
+    Lut,
+    /// Per-element exponent-math [`decode`] — the pre-ISSUE-8 baseline.
+    Scalar,
+}
+
+/// Options for the single paged read entry point
+/// ([`PagedAttentionView::attend_into`]): worker-count policy and dequant
+/// kernel. `Default` is auto-detected workers (`REPRO_NUM_THREADS` or the
+/// machine's parallelism) with LUT dequant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AttendOptions {
+    pub parallelism: Parallelism,
+    pub dequant: Dequant,
+}
+
+impl AttendOptions {
+    /// Sequential LUT readout — one worker, no thread spawn.
+    pub fn sequential() -> Self {
+        Self {
+            parallelism: Parallelism::Sequential,
+            dequant: Dequant::Lut,
+        }
+    }
+}
+
+/// Per-worker dequantized K/V tile pair — one block's (token, dim) slab
+/// each. `Send` so the scoped pool can hand one to each worker.
+struct TileScratch {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
 /// Reusable K/V tile buffers for [`PagedAttentionView::attend_into`]: one
-/// block-sized dequantized K tile and V tile. Allocate once per decode
-/// loop (or per worker) and reuse across every (slot, layer, head)
-/// readout — the hot path itself never allocates.
+/// block-sized dequantized K tile and V tile **per worker**. Allocate once
+/// per decode loop and reuse across steps — the scratch grows to the
+/// worker count on first use and the hot path allocates nothing after
+/// that.
 pub struct AttendScratch {
-    k_tile: Vec<f32>,
-    v_tile: Vec<f32>,
+    tile_elems: usize,
+    tiles: Vec<TileScratch>,
 }
 
 impl AttendScratch {
     pub fn new(block_tokens: usize, head_dim: usize) -> Self {
+        let tile_elems = block_tokens * head_dim;
         Self {
-            k_tile: vec![0.0f32; block_tokens * head_dim],
-            v_tile: vec![0.0f32; block_tokens * head_dim],
+            tile_elems,
+            tiles: vec![TileScratch {
+                k: vec![0.0f32; tile_elems],
+                v: vec![0.0f32; tile_elems],
+            }],
         }
     }
 
     /// True when the tiles can hold one `block_tokens × head_dim` block.
     pub fn fits(&self, block_tokens: usize, head_dim: usize) -> bool {
-        self.k_tile.len() >= block_tokens * head_dim
-            && self.v_tile.len() >= block_tokens * head_dim
+        self.tile_elems >= block_tokens * head_dim
     }
 
-    fn tiles(&mut self) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k_tile, &mut self.v_tile)
+    /// Grow to at least `workers` tile pairs (amortized: steady-state
+    /// decode loops hit the fast path after the first call).
+    fn ensure_workers(&mut self, workers: usize) {
+        while self.tiles.len() < workers {
+            self.tiles.push(TileScratch {
+                k: vec![0.0f32; self.tile_elems],
+                v: vec![0.0f32; self.tile_elems],
+            });
+        }
     }
 }
 
 /// Host-side paged KV storage for `slots` concurrent sequences of up to
 /// `t` tokens each. The contiguous per-slot arena is gone: all bytes live
 /// in the shared [`BlockPool`], sequences are block tables, and a prefix
-/// hit maps cached physical blocks instead of copying them. The gather /
-/// scatter API still speaks the decode artifact's dense
-/// `(L, B, T, Hkv, D)` f32 layout — paging is invisible above this line.
+/// hit maps cached physical blocks instead of copying them. The public
+/// surface is paged-only: reads through [`Self::paged_view`] /
+/// [`PagedAttentionView::attend_into`], writes through
+/// [`Self::write_slot`] / [`Self::append_token`]. The dense
+/// `(L, B, T, Hkv, D)` gather/scatter reference survives behind the
+/// `dense-decode-ref` feature for roundtrip/property tests.
 ///
 /// Storage is [`KvDtype`]-backed: F32 roundtrips bit-exactly, BF16 rounds
-/// to 2 B/elem, FP8 quantizes on `write_slot`/`scatter_batch` and
-/// dequantizes on `gather_batch_into` (codes + per-(block, layer, kv-head)
+/// to 2 B/elem, FP8 quantizes on `write_slot`/`append_token` and
+/// dequantizes on read (codes + per-(block, layer, kv-head)
 /// scales — the paper's 1 B/elem serving configuration).
 pub struct KvStore {
     pub layers: usize,
@@ -1330,7 +1579,7 @@ impl KvStore {
     /// `len` is the slot's valid length after mapping (the engine sets it
     /// to the first position its tail recompute will write, which may sit
     /// *inside* the last shared block — the copy-on-write in
-    /// [`Self::scatter_batch`] keeps that write private).
+    /// [`Self::append_token`] keeps that write private).
     pub fn map_shared_prefix(&mut self, slot: usize, blocks: &[BlockId], len: usize) {
         assert!(len <= self.t, "mapped length exceeds the KV window");
         assert!(
@@ -1378,6 +1627,7 @@ impl KvStore {
     /// `dense-decode-ref` engine path — not the decode hot path, which
     /// reads through [`Self::paged_view`]): gather `group` slots into a
     /// contiguous (L, B, T, Hkv, D) batch buffer. Returns (k, v, lens).
+    #[cfg(feature = "dense-decode-ref")]
     pub fn gather_batch(&self, group: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
         let b = group.len();
         let ss = self.slot_stride();
@@ -1396,6 +1646,7 @@ impl KvStore {
     /// Rows ≥ group.len() are left untouched. Positions at or past each
     /// slot's valid length come back as exact zeros (the pool never
     /// stores masked pad positions).
+    #[cfg(feature = "dense-decode-ref")]
     pub fn gather_batch_into(
         &self,
         group: &[usize],
@@ -1459,6 +1710,7 @@ impl KvStore {
     /// (`len == t`) — the "sequence full" signal. The caller must finish
     /// those requests: a further decode step has no position to write, and
     /// clamping silently overwrote the last position forever.
+    #[cfg(feature = "dense-decode-ref")]
     pub fn scatter_batch(&mut self, group: &[usize], k_in: &[f32], v_in: &[f32]) -> Vec<usize> {
         let b = group.len();
         let ss = self.slot_stride();
@@ -1497,6 +1749,7 @@ impl KvStore {
     /// another sequence and/or owned by the prefix cache) is swapped for a
     /// fresh private block — copy-on-write; the caller rewrites the whole
     /// valid span from its batch buffer, so no payload copy is needed.
+    #[cfg(feature = "dense-decode-ref")]
     fn ensure_private_block(&mut self, slot: usize, hb: usize) {
         while self.table(slot).blocks.len() <= hb {
             let id = self.alloc_provisioned();
@@ -1627,33 +1880,51 @@ impl KvStore {
     /// (slot, layer, head, dim) order. Two stores holding the same written
     /// data produce comparable vectors regardless of dtype.
     ///
-    /// Block-table-native since ISSUE 5: each (slot, layer, head) readout
-    /// walks the slot's block table through
-    /// [`PagedAttentionView::attend_into`] — dequant-on-read at block
-    /// granularity, no dense gather — so the probe's HBM traffic is
-    /// exactly the group's live block bytes ([`BlockPool::bytes_read`]
-    /// instruments it). One [`AttendScratch`] and one query buffer are
-    /// reused across every (slot, layer, head) readout, mirroring how a
-    /// steady-state decode loop drives the hot path.
+    /// Block-table-native since ISSUE 5, and since ISSUE 8 a thin client
+    /// of the single read entry point: queries for every
+    /// (slot, layer, head) are drawn first (same RNG order as ever), then
+    /// **one** [`PagedAttentionView::attend_into`] call runs the whole
+    /// task batch — dequant-on-read at block granularity, no dense gather
+    /// — so the probe's HBM traffic is exactly the group's live block
+    /// bytes ([`BlockPool::bytes_read`] instruments it) and its output is
+    /// bit-identical for every worker count.
     pub fn decode_attention_probe(&self, slots: &[usize], seed: u64) -> Vec<f32> {
+        self.decode_attention_probe_opts(slots, seed, &AttendOptions::default())
+    }
+
+    /// [`Self::decode_attention_probe`] with explicit [`AttendOptions`] —
+    /// the worker-count / dequant-kernel axis the determinism suite and
+    /// the speedup benches drive.
+    pub fn decode_attention_probe_opts(
+        &self,
+        slots: &[usize],
+        seed: u64,
+        opts: &AttendOptions,
+    ) -> Vec<f32> {
         let mut rng = XorShiftRng::new(seed);
         let d = self.head_dim;
         let view = self.paged_view(slots);
-        let mut scratch = AttendScratch::new(self.pool.block_tokens(), d);
-        let mut q = vec![0.0f32; d];
-        let mut head = vec![0.0f32; d];
-        let mut out = Vec::with_capacity(slots.len() * self.layers * self.kv_heads * d);
+        let n = slots.len() * self.layers * self.kv_heads;
+        let mut tasks = Vec::with_capacity(n);
+        let mut q = vec![0.0f32; n * d];
         for bi in 0..slots.len() {
             for l in 0..self.layers {
                 for h in 0..self.kv_heads {
-                    for qd in q.iter_mut() {
+                    let at = tasks.len() * d;
+                    for qd in q[at..at + d].iter_mut() {
                         *qd = rng.normal();
                     }
-                    view.attend_into(bi, l, h, &q, &mut head, &mut scratch);
-                    out.extend_from_slice(&head);
+                    tasks.push(AttendTask {
+                        slot: bi,
+                        layer: l,
+                        kv_head: h,
+                    });
                 }
             }
         }
+        let mut out = vec![0.0f32; n * d];
+        let mut scratch = AttendScratch::new(self.pool.block_tokens(), d);
+        view.attend_into(&tasks, &q, &mut out, &mut scratch, opts);
         out
     }
 }

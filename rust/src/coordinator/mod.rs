@@ -23,7 +23,8 @@ pub mod scheduler;
 pub use batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 pub use engine::{Engine, EngineConfig};
 pub use kvcache::{
-    AppendOutcome, BlockAllocator, BlockId, BlockPool, KvStore, PagedAttentionView, PagedSlotView,
+    AppendOutcome, AttendOptions, AttendScratch, AttendTask, BlockAllocator, BlockId, BlockPool,
+    Dequant, KvStore, PagedAttentionView, PagedSlotView,
 };
 pub use metrics::{LatencyStat, ServeMetrics};
 pub use prefix::{PrefixCache, PrefixCacheConfig, PrefixStats};

@@ -36,7 +36,7 @@ pub use decode::{decode, DecodeTable};
 pub use encode::{encode_nearest_oracle, encode_rne, encode_rz, CastMode};
 pub use format::{Fp8Format, FormatParams, SpecialCase};
 pub use stochastic::encode_stochastic;
-pub use tables::{hw_scale_exponents, rescale_pow2, Fp8Gemm8x8};
+pub use tables::{decode_lut, decode_table, hw_scale_exponents, rescale_pow2, Fp8Gemm8x8};
 
 /// A quantized FP8 value paired with its format — convenience for tests and
 /// debugging; hot paths work on raw `u8` + a `Fp8Format`.

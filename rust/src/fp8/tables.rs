@@ -8,10 +8,37 @@
 //! directly, and [`hw_scale_exponents`] lists the scale sets each generation
 //! accelerates (Gaudi 2: {2⁻⁸, 2⁻⁴, 2⁰, 2⁴}; Gaudi 3: 2⁻³²…2³¹).
 
+use std::sync::OnceLock;
+
 use super::decode::{decode, DecodeTable};
 use super::encode::{encode_rne, CastMode};
 use super::format::Fp8Format;
 use crate::gaudisim::device::Generation;
+
+/// Process-wide decode LUT for `format`, built lazily on first use.
+/// `OnceLock` (not `lazy_static`/`Mutex`) so a panic elsewhere can never
+/// poison it, and repeated lookups are a single atomic load. This is the
+/// table the paged KV read path indexes per code — one 256-entry f32
+/// table, one scale multiply per 16-token tile — replacing per-element
+/// exponent math on the decode hot path.
+pub fn decode_table(format: Fp8Format) -> &'static DecodeTable {
+    static E4M3_GAUDI2: OnceLock<DecodeTable> = OnceLock::new();
+    static E4M3: OnceLock<DecodeTable> = OnceLock::new();
+    static E5M2: OnceLock<DecodeTable> = OnceLock::new();
+    let slot = match format {
+        Fp8Format::E4M3Gaudi2 => &E4M3_GAUDI2,
+        Fp8Format::E4M3 => &E4M3,
+        Fp8Format::E5M2 => &E5M2,
+    };
+    slot.get_or_init(|| DecodeTable::new(format))
+}
+
+/// Decode one code through the shared LUT. Exactly equal (bit-for-bit) to
+/// [`decode`] for every code — the table is built from it.
+#[inline]
+pub fn decode_lut(code: u8, format: Fp8Format) -> f32 {
+    decode_table(format).get(code)
+}
 
 /// Exponents `k` such that scale `2^k` is hardware-accelerated (exponent-bias
 /// adjustment, no per-element multiply) on the given Gaudi generation.
@@ -115,6 +142,26 @@ impl Fp8Gemm8x8 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_lut_matches_scalar_decode_for_all_256_codes() {
+        // Exhaustive scalar-vs-LUT equivalence, every format: the shared
+        // OnceLock table must be bit-identical to fp8::decode everywhere
+        // (NaN compares as NaN; zeros keep their sign).
+        for f in Fp8Format::ALL {
+            for c in 0u16..=255 {
+                let c = c as u8;
+                let scalar = decode(c, f);
+                let lut = decode_lut(c, f);
+                assert!(
+                    (scalar.is_nan() && lut.is_nan()) || scalar.to_bits() == lut.to_bits(),
+                    "format {f:?} code {c:#04x}: scalar {scalar} lut {lut}"
+                );
+            }
+            // And the returned table is the cached instance, not a rebuild.
+            assert!(std::ptr::eq(decode_table(f), decode_table(f)));
+        }
+    }
 
     #[test]
     fn hw_scale_sets_match_paper() {

@@ -17,6 +17,7 @@ use crate::router::{
     FleetConfig, FleetRouter, ReplicaHandle, RoutePolicy, SimReplica, SimReplicaConfig,
 };
 use crate::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig, WorkloadGen};
+use crate::util::pool::Parallelism;
 
 /// Parsed command line: subcommand + --key value flags.
 #[derive(Clone, Debug, Default)]
@@ -112,6 +113,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.prefix_cache_bytes = Some(args.get_f64("prefix-cache-mb", 64.0) * 1e6);
     }
     cfg.prefill_chunk = args.get_usize("prefill-chunk", 0);
+    // Scoped-pool workers for the host-side paged KV hot path;
+    // 0 = auto (REPRO_NUM_THREADS or the machine's parallelism).
+    cfg.kv_parallelism = match args.get_usize("kv-workers", 0) {
+        0 => Parallelism::Auto,
+        n => Parallelism::Fixed(n),
+    };
     if args.get("policy", "prefill-first") == "decode-first" {
         cfg.policy = SchedulePolicy::DecodeFirst {
             min_decode: args.get_usize("min-decode", 2),

@@ -1,14 +1,18 @@
 //! Dependency-free utilities: deterministic RNG, a small property-testing
 //! helper (stand-in for `proptest`, which is unreachable in this offline
 //! environment), a micro-benchmark harness (stand-in for `criterion`), and a
-//! minimal JSON emitter for experiment records.
+//! minimal JSON emitter for experiment records. `pool` adds a scoped
+//! worker pool (stand-in for `rayon`) driving the data-parallel paged
+//! attention read path.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
 pub use bench::Bencher;
+pub use pool::Parallelism;
 pub use rng::XorShiftRng;
 
 /// Format a float with engineering-style precision used across report tables.

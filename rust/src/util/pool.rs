@@ -1,0 +1,233 @@
+//! Dependency-free scoped worker pool for data-parallel hot paths.
+//!
+//! The paged attention read path splits an attend batch into independent
+//! per-(slot, layer, kv-head) online-softmax tile tasks; this module runs
+//! such task batches across `std::thread::scope` workers with zero
+//! dependencies and zero allocation inside the runners themselves. Two
+//! invariants make the result deterministic regardless of worker count:
+//!
+//! 1. tasks are split into **contiguous** index chunks — chunk `i` of `w`
+//!    is exactly `[i*n/w, (i+1)*n/w)` — so which worker executes a task
+//!    never changes *which* task writes *which* output row;
+//! 2. every task owns a disjoint output region, and per-task work reduces
+//!    internally in a fixed order (the caller's kernel), so no
+//!    cross-worker reduction order exists to vary.
+//!
+//! Worker count comes from [`Parallelism`]: an explicit count, sequential,
+//! or auto-detection via the `REPRO_NUM_THREADS` environment knob (the
+//! `RAYON_NUM_THREADS` convention) falling back to
+//! `std::thread::available_parallelism`.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Environment variable naming the worker count for `Parallelism::Auto`.
+pub const WORKERS_ENV: &str = "REPRO_NUM_THREADS";
+
+/// Worker-count policy for data-parallel sections.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Run inline on the calling thread (exactly one worker).
+    Sequential,
+    /// Exactly `n` workers (clamped to at least 1).
+    Fixed(usize),
+    /// `REPRO_NUM_THREADS` if set and valid, else the machine's available
+    /// parallelism. Detected once per process and cached.
+    #[default]
+    Auto,
+}
+
+impl Parallelism {
+    /// Resolve the policy to a concrete worker count (always ≥ 1).
+    pub fn workers(self) -> usize {
+        match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => auto_workers(),
+        }
+    }
+}
+
+fn parse_workers(s: &str) -> Option<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => None,
+    }
+}
+
+/// Auto-detected worker count: `REPRO_NUM_THREADS` (if set to a positive
+/// integer) else `std::thread::available_parallelism`. Read once per
+/// process — later environment changes are not observed, matching the
+/// rayon convention.
+pub fn auto_workers() -> usize {
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::env::var(WORKERS_ENV)
+            .ok()
+            .and_then(|s| parse_workers(&s))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Contiguous chunk `i` of `0..n` split `w` ways: `[i*n/w, (i+1)*n/w)`.
+/// Chunks tile `0..n` exactly, differ in size by at most one, and every
+/// chunk is non-empty when `w <= n`.
+#[inline]
+pub fn chunk_range(n: usize, w: usize, i: usize) -> Range<usize> {
+    (i * n / w)..((i + 1) * n / w)
+}
+
+/// Run `n` independent fixed-stride tasks across scoped workers.
+///
+/// Task `t` owns output rows `out[t*stride..(t+1)*stride]`. The task range
+/// is split into `min(states.len(), n)` contiguous chunks; each worker
+/// gets one `&mut S` scratch slot from `states` and the sub-slice of `out`
+/// covering exactly its chunk's rows, then `f(state, out_chunk, range)`
+/// must process every task in `range`, writing task `t` at
+/// `out_chunk[(t - range.start) * stride..]`. With one worker (or one
+/// task) everything runs inline on the calling thread — no threads spawn.
+///
+/// Deterministic by construction: chunk boundaries depend only on
+/// `(n, worker count)` and workers share no mutable state.
+// lint: hot-path
+pub fn run_partitioned<S, T, F>(states: &mut [S], out: &mut [T], n: usize, stride: usize, f: F)
+where
+    S: Send,
+    T: Send,
+    F: Fn(&mut S, &mut [T], Range<usize>) + Sync,
+{
+    assert!(!states.is_empty(), "run_partitioned needs >= 1 worker state");
+    assert_eq!(out.len(), n * stride, "out must hold n stride-wide rows");
+    let w = states.len().min(n.max(1));
+    if w <= 1 {
+        f(&mut states[0], out, 0..n);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut states = &mut states[..w];
+        let mut out = out;
+        for i in 0..w {
+            let r = chunk_range(n, w, i);
+            // lint:allow(no-unwrap-in-lib): i < w <= states.len(), split cannot fail
+            let (st, srest) = std::mem::take(&mut states).split_first_mut().expect("state");
+            states = srest;
+            let (o, orest) = std::mem::take(&mut out).split_at_mut((r.end - r.start) * stride);
+            out = orest;
+            if i == w - 1 {
+                // The caller's thread takes the last chunk instead of idling.
+                f(st, o, r);
+            } else {
+                let fr = &f;
+                scope.spawn(move || fr(st, o, r));
+            }
+        }
+    });
+}
+
+/// Run one pre-built job per scoped worker. The caller partitions its
+/// data into `jobs` (each owning disjoint `&mut` regions); the last job
+/// runs on the calling thread. For irregular partitions — e.g. exporting
+/// a sorted block-id list whose per-chunk byte spans differ — where
+/// [`run_partitioned`]'s uniform stride does not apply.
+// lint: hot-path
+pub fn run_scoped<J, F>(jobs: &mut [J], f: F)
+where
+    J: Send,
+    F: Fn(&mut J) + Sync,
+{
+    match jobs {
+        [] => {}
+        [only] => f(only),
+        many => std::thread::scope(|scope| {
+            // lint:allow(no-unwrap-in-lib): `many` has >= 2 elements, split cannot fail
+            let (last, rest) = many.split_last_mut().expect("job");
+            for j in rest.iter_mut() {
+                let fr = &f;
+                scope.spawn(move || fr(j));
+            }
+            f(last);
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_tile_the_range_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 97] {
+            for w in 1usize..=9 {
+                let mut next = 0usize;
+                for i in 0..w {
+                    let r = chunk_range(n, w, i);
+                    assert_eq!(r.start, next, "n={n} w={w} i={i}");
+                    next = r.end;
+                    if w <= n {
+                        assert!(!r.is_empty(), "n={n} w={w} i={i}");
+                    }
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_workers_accepts_positive_integers_only() {
+        assert_eq!(parse_workers("4"), Some(4));
+        assert_eq!(parse_workers(" 12 "), Some(12));
+        assert_eq!(parse_workers("0"), None);
+        assert_eq!(parse_workers("-3"), None);
+        assert_eq!(parse_workers("many"), None);
+        assert_eq!(parse_workers(""), None);
+    }
+
+    #[test]
+    fn parallelism_resolves_to_at_least_one_worker() {
+        assert_eq!(Parallelism::Sequential.workers(), 1);
+        assert_eq!(Parallelism::Fixed(0).workers(), 1);
+        assert_eq!(Parallelism::Fixed(7).workers(), 7);
+        assert!(Parallelism::Auto.workers() >= 1);
+    }
+
+    #[test]
+    fn run_partitioned_matches_serial_for_every_worker_count() {
+        let n = 23usize;
+        let stride = 3usize;
+        let mut expect = vec![0u64; n * stride];
+        for t in 0..n {
+            for s in 0..stride {
+                expect[t * stride + s] = (t * 31 + s) as u64;
+            }
+        }
+        for workers in [1usize, 2, 5, 8, 23, 40] {
+            let mut states = vec![0u64; workers]; // per-worker scratch: task counter
+            let mut out = vec![0u64; n * stride];
+            run_partitioned(&mut states, &mut out, n, stride, |st, chunk, range| {
+                for (j, t) in range.enumerate() {
+                    *st += 1;
+                    for s in 0..stride {
+                        chunk[j * stride + s] = (t * 31 + s) as u64;
+                    }
+                }
+            });
+            assert_eq!(out, expect, "workers={workers}");
+            assert_eq!(states.iter().sum::<u64>(), n as u64, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn run_scoped_visits_every_job_once() {
+        for jobs_n in [0usize, 1, 2, 6] {
+            let mut jobs: Vec<(usize, u32)> = (0..jobs_n).map(|i| (i, 0u32)).collect();
+            run_scoped(&mut jobs, |j| j.1 += 1);
+            for (i, hits) in &jobs {
+                assert_eq!(*hits, 1, "job {i}");
+            }
+        }
+    }
+}

@@ -18,8 +18,11 @@
 //!   prefix-cache owner), and append past capacity keeps returning the
 //!   "sequence full" signal the engine's `maybe_finish` retires on.
 
-use gaudi_fp8::coordinator::{AppendOutcome, KvStore, PrefixCache, PrefixCacheConfig};
+use gaudi_fp8::coordinator::{
+    AppendOutcome, AttendOptions, Dequant, KvStore, PrefixCache, PrefixCacheConfig,
+};
 use gaudi_fp8::quant::{KvDtype, KvLayout};
+use gaudi_fp8::util::pool::Parallelism;
 use gaudi_fp8::util::rng::XorShiftRng;
 
 const LAYERS: usize = 2;
@@ -379,4 +382,108 @@ fn append_past_capacity_keeps_signalling_sequence_full() {
     assert_eq!(s.len(slot), Some(T));
     let (after, _, _) = s.gather_batch(&[slot]);
     assert_eq!(before, after, "at-capacity appends must not write");
+}
+
+/// Build a ragged-length multi-slot store and return (store, group) —
+/// the shape the worker-count axis has to keep deterministic.
+fn ragged_store(dtype: KvDtype, seed: u64) -> (KvStore, Vec<usize>) {
+    let lens = [3usize, 8, 21, 48, 1, 30];
+    let mut s = store(dtype, lens.len(), 0);
+    let n = LAYERS * T * ROW;
+    let mut group = Vec::new();
+    for (i, &len) in lens.iter().enumerate() {
+        let slot = s.alloc_slot().unwrap();
+        let (k, v) = (randn(n, seed + 2 * i as u64), randn(n, seed + 2 * i as u64 + 1));
+        s.write_slot(slot, &k, &v, len);
+        group.push(slot);
+    }
+    (s, group)
+}
+
+#[test]
+fn attend_output_and_bytes_are_identical_for_every_worker_count() {
+    // ISSUE 8 determinism contract: the data-parallel single-entry read
+    // path must be bit-identical to the serial path at any worker count —
+    // tiles reduce per task in block order regardless of which worker runs
+    // the task — and `bytes_read` must stay byte-exact (relaxed atomic
+    // adds of per-call constants are order-independent).
+    let seed = std::env::var("PAGED_KV_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xB10C_5EED);
+    let ncpu = std::thread::available_parallelism().map_or(4, |n| n.get());
+    for dtype in ALL_DTYPES {
+        let (s, group) = ragged_store(dtype, seed);
+        s.pool().reset_bytes_read();
+        let serial = s.decode_attention_probe_opts(
+            &group,
+            seed ^ 0x5EED,
+            &AttendOptions::sequential(),
+        );
+        let serial_bytes = s.pool().bytes_read();
+        assert!(serial_bytes > 0, "{dtype:?}: probe must read blocks");
+        for workers in [1usize, 2, 7, ncpu] {
+            let opts = AttendOptions {
+                parallelism: Parallelism::Fixed(workers),
+                dequant: Dequant::default(),
+            };
+            s.pool().reset_bytes_read();
+            let out = s.decode_attention_probe_opts(&group, seed ^ 0x5EED, &opts);
+            assert_eq!(out.len(), serial.len());
+            for (i, (a, r)) in out.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    r.to_bits(),
+                    "{dtype:?}: output diverged at {i} with {workers} workers"
+                );
+            }
+            assert_eq!(
+                s.pool().bytes_read(),
+                serial_bytes,
+                "{dtype:?}: bytes_read drifted at {workers} workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn lut_and_scalar_dequant_read_bit_identically() {
+    // The shared 256-entry decode table holds exactly `decode(code) * 1.0`
+    // per code, and the pre-scaled tile LUT multiplies the same two f32
+    // operands the scalar path does — so Lut vs Scalar attend outputs are
+    // bit-identical, not merely close.
+    let (s, group) = ragged_store(KvDtype::FP8_DEFAULT, 0xD0_D0);
+    let lut = s.decode_attention_probe_opts(
+        &group,
+        77,
+        &AttendOptions {
+            parallelism: Parallelism::Sequential,
+            dequant: Dequant::Lut,
+        },
+    );
+    let scalar = s.decode_attention_probe_opts(
+        &group,
+        77,
+        &AttendOptions {
+            parallelism: Parallelism::Sequential,
+            dequant: Dequant::Scalar,
+        },
+    );
+    assert_eq!(lut.len(), scalar.len());
+    for (i, (a, b)) in lut.iter().zip(&scalar).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "Lut vs Scalar diverged at {i}");
+    }
+    // And the raw tile reads agree too, not just the softmax readout.
+    let view = s.paged_view(&group);
+    let id = view.slot(0).blocks[0];
+    let (mut kl, mut vl) = (vec![0.0f32; BT * HD], vec![0.0f32; BT * HD]);
+    let (mut ks, mut vs) = (vec![0.0f32; BT * HD], vec![0.0f32; BT * HD]);
+    view.pool()
+        .read_block_head_with(id, 0, 0, &mut kl, &mut vl, Dequant::Lut);
+    view.pool()
+        .read_block_head_with(id, 0, 0, &mut ks, &mut vs, Dequant::Scalar);
+    for i in 0..BT * HD {
+        assert_eq!(kl[i].to_bits(), ks[i].to_bits(), "K tile at {i}");
+        assert_eq!(vl[i].to_bits(), vs[i].to_bits(), "V tile at {i}");
+    }
 }
