@@ -1,0 +1,181 @@
+//! Fig OVERLOAD (beyond the paper): graceful degradation under offered
+//! load past capacity — scheduler preemption with the host KV tier
+//! (ISSUE 9) versus a reject-only baseline.
+//!
+//! One simulated Gaudi 2 replica with a deliberately tight block pool is
+//! driven open-loop at a sweep of arrival rates anchored to its measured
+//! capacity (a burst calibration run fixes `capacity_rps`, so the sweep
+//! stays under/over-loaded regardless of how the synthetic model's step
+//! times evolve). Four modes per rate:
+//!
+//!   reject_only — host tier off, tiny fleet + replica queues: overload
+//!                 sheds requests (`QueueFull`), the lost-work baseline;
+//!   swap        — preempt to the host tier, resume via PCIe swap-in;
+//!   recompute   — preempt by dropping blocks, resume via chunked
+//!                 re-prefill;
+//!   auto        — price swap vs recompute per victim, take the cheaper.
+//!
+//! Hard assertions (the ISSUE 9 acceptance bars):
+//!   * every preempting mode completes all requests with zero rejections
+//!     at every rate — overload degrades latency, never loses work;
+//!   * p99 TTFT under `auto` is monotone non-decreasing in offered load
+//!     (small tolerance for reservoir discretization) — no cliff;
+//!   * the reject-only baseline row is emitted at every rate for
+//!     comparison.
+//!
+//! Emits one JSON row per (mode, rate) cell — the shared
+//! `FleetMetrics::json_row_fig` emitter plus the bench-local sweep axes
+//! (`rate_rps`, `offered_x`) — then SHAPE lines (suppressed under
+//! `BENCH_SMOKE=1`, where stdout must stay pure JSON).
+
+use gaudi_fp8::coordinator::PreemptPolicy;
+use gaudi_fp8::router::{
+    FleetConfig, FleetRouter, FleetRunReport, RoutePolicy, SimReplica, SimReplicaConfig,
+};
+use gaudi_fp8::server::workload::{ArrivalPattern, OpenLoopConfig, WorkloadConfig};
+
+/// Tight-pool replica: 24 blocks of 16 tokens. The largest request
+/// (256-token prompt + 16 generated = 17 blocks) fits alone, but two
+/// large requests cannot coexist — so overload genuinely exhausts the
+/// pool instead of just queueing, and the preemption path is exercised.
+fn replica_cfg(mode: &str) -> SimReplicaConfig {
+    let mut cfg = SimReplicaConfig::synthetic_tiny();
+    cfg.kv_blocks_override = Some(24);
+    if mode == "reject_only" {
+        // No host tier and almost no local buffering: pressure surfaces
+        // as fleet-queue rejections instead of preemption.
+        cfg.queue_capacity = 4;
+    } else {
+        cfg.host_kv_bytes = 1e9;
+        cfg.preempt_policy = PreemptPolicy::parse(mode).expect("mode is a preempt policy");
+    }
+    cfg
+}
+
+fn workload(requests: usize) -> WorkloadConfig {
+    WorkloadConfig {
+        requests,
+        prompt_len_min: 64,
+        prompt_len_max: 256,
+        max_new_min: 16,
+        max_new_max: 16,
+        seed: 7,
+    }
+}
+
+fn run_mode(mode: &str, pattern: ArrivalPattern, requests: usize) -> FleetRunReport {
+    let mut router = FleetRouter::new(FleetConfig {
+        policy: RoutePolicy::RoundRobin,
+        queue_capacity: if mode == "reject_only" { 8 } else { 4096 },
+    });
+    router.add_replica(Box::new(
+        SimReplica::new(&format!("gaudi2-{mode}"), replica_cfg(mode)).expect("sim replica"),
+    ));
+    let open = OpenLoopConfig {
+        workload: workload(requests),
+        pattern,
+    };
+    let report = router.run_open_loop(open.generate()).expect("fleet run");
+    assert_eq!(
+        report.outputs.len() + report.rejected.len(),
+        requests,
+        "request accounting must balance in mode={mode}"
+    );
+    report
+}
+
+/// Measure this replica's saturated service rate: burst all requests at
+/// t=0 with the tier on and divide by the makespan.
+fn calibrate_capacity_rps(requests: usize) -> f64 {
+    let report = run_mode("auto", ArrivalPattern::Burst, requests);
+    let makespan = report.metrics.makespan_s;
+    assert!(makespan > 0.0, "calibration run must take virtual time");
+    requests as f64 / makespan
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("BENCH_SMOKE").as_deref(), Ok("1"));
+    let requests = if smoke { 24 } else { 96 };
+    let multipliers: &[f64] = if smoke {
+        &[0.5, 2.0, 4.0]
+    } else {
+        &[0.25, 0.5, 1.0, 2.0, 4.0]
+    };
+
+    let capacity_rps = calibrate_capacity_rps(requests);
+    let mut auto_p99_s: Vec<f64> = Vec::new();
+    let mut baseline_rejects_at_peak = 0usize;
+    let mut total_preemptions = 0u64;
+
+    for &mult in multipliers {
+        let rate = capacity_rps * mult;
+        for mode in ["reject_only", "swap", "recompute", "auto"] {
+            let pattern = ArrivalPattern::Uniform { rate_per_s: rate };
+            let report = run_mode(mode, pattern, requests);
+            if mode != "reject_only" {
+                // The acceptance bar: overload never loses work when the
+                // scheduler can preempt to the host tier.
+                assert_eq!(
+                    report.rejected.len(),
+                    0,
+                    "mode={mode} must reject nothing at {mult}x capacity"
+                );
+                assert_eq!(
+                    report.outputs.len(),
+                    requests,
+                    "mode={mode} must complete everything at {mult}x capacity"
+                );
+                total_preemptions += report.metrics.merged.preemptions;
+            } else if (mult - multipliers[multipliers.len() - 1]).abs() < f64::EPSILON {
+                baseline_rejects_at_peak = report.rejected.len();
+            }
+            if mode == "auto" {
+                auto_p99_s.push(report.metrics.merged.ttft.p99_s());
+            }
+            // The shared fleet-row emitter, plus the sweep axes this bench
+            // adds locally (benches are outside the rust/src schema lint).
+            let mut row = report.metrics.json_row_fig("fig_overload", 1, mode, requests);
+            row.pop();
+            row.push_str(&format!(
+                ",\"rate_rps\":{rate:.3},\"offered_x\":{mult:.2}}}"
+            ));
+            println!("{row}");
+        }
+    }
+
+    // No cliff: p99 TTFT degrades monotonically with offered load (10%
+    // slack absorbs percentile-reservoir discretization at light load).
+    for (i, w) in auto_p99_s.windows(2).enumerate() {
+        assert!(
+            w[1] >= w[0] * 0.9 - 1e-9,
+            "auto p99 TTFT must not improve under heavier load: \
+             {:.4}s at {}x -> {:.4}s at {}x",
+            w[0],
+            multipliers[i],
+            w[1],
+            multipliers[i + 1]
+        );
+    }
+    let first = auto_p99_s.first().copied().unwrap_or(0.0);
+    let last = auto_p99_s.last().copied().unwrap_or(0.0);
+    assert!(
+        last >= first,
+        "auto p99 TTFT must degrade from {first:.4}s to at least itself, got {last:.4}s"
+    );
+
+    if !smoke {
+        let ratio = if first > 0.0 { last / first } else { 0.0 };
+        println!(
+            "SHAPE: capacity {capacity_rps:.1} req/s; auto p99 TTFT degrades smoothly \
+             {:.2}ms -> {:.2}ms ({ratio:.2}x) from {}x to {}x offered load, zero lost ✓",
+            first * 1e3,
+            last * 1e3,
+            multipliers[0],
+            multipliers[multipliers.len() - 1]
+        );
+        println!(
+            "SHAPE: preemptions across preempting modes = {total_preemptions}; \
+             reject-only baseline sheds {baseline_rejects_at_peak} requests at peak load"
+        );
+    }
+}

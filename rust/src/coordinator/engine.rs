@@ -50,17 +50,21 @@
 //! `dense-decode-ref` cargo feature ([`Engine::run_decode_group_dense`])
 //! as the reference implementation for paged-vs-dense roundtrip tests.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{AdmissionQueue, PrefillPlan};
-use super::kvcache::{AppendOutcome, KvStore};
+use super::hosttier::HostTier;
+use super::kvcache::{AppendOutcome, KvStore, SwappedSlot};
 use super::metrics::ServeMetrics;
 use super::prefix::{PrefixCache, PrefixCacheConfig};
 use super::request::{Request, RequestId, RequestOutput};
-use super::scheduler::{chunk_spans, warm_admittable_without_bucket, SchedulePolicy, Scheduler};
+use super::scheduler::{
+    chunk_spans, select_preemption_victim, warm_admittable_without_bucket, PreemptCandidate,
+    PreemptPolicy, SchedulePolicy, Scheduler,
+};
 use crate::obs::{Clock, TraceEventKind, TraceRecorder};
 use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::router::{Admission, ReplicaHandle};
@@ -173,6 +177,18 @@ pub struct EngineConfig {
     /// Chunked-prefill chunk size in tokens per engine step for cache-hit
     /// tails; 0 = process the whole tail in one step.
     pub prefill_chunk: usize,
+    /// Host-memory KV tier byte budget for preemption swap-outs
+    /// (ISSUE 9); 0.0 disables the tier and with it slot preemption,
+    /// preserving the legacy admission behavior exactly.
+    pub host_kv_bytes: f64,
+    /// Preemption resume policy. The wall-clock engine has no analytic
+    /// device model to price recompute against a PCIe transfer, so
+    /// `Swap` and `Auto` both swap through the host tier; `Recompute`
+    /// disables preemption here (the virtual-clock [`SimReplica`] is
+    /// where the full recompute-vs-swap cost model lives).
+    ///
+    /// [`SimReplica`]: crate::router::SimReplica
+    pub preempt_policy: PreemptPolicy,
     /// Worker-count policy for the host-side paged KV hot path — the
     /// scoped `util::pool` workers behind the per-step pool export in
     /// [`Engine::paged_decode_forward`] (and the chunked-prefill
@@ -198,6 +214,8 @@ impl EngineConfig {
             kv_dtype: KvDtype::F32,
             prefix_cache_bytes: None,
             prefill_chunk: 0,
+            host_kv_bytes: 0.0,
+            preempt_policy: PreemptPolicy::Auto,
             kv_parallelism: Parallelism::Auto,
             #[cfg(feature = "dense-decode-ref")]
             use_dense_decode: false,
@@ -217,6 +235,9 @@ struct ActiveRequest {
     /// Clock anchored when the first token was produced; `None` until
     /// prefill completes.
     first_token_at: Option<Clock>,
+    /// Refreshed every time this request is part of a decode group; its
+    /// elapsed reading is the idleness key victim selection maximizes.
+    last_scheduled: Clock,
     generated: Vec<i32>,
     last_token: i32,
 }
@@ -250,6 +271,13 @@ pub struct Engine {
     /// At most one chunked prefill in flight (the one-prefill-per-step
     /// interleave discipline).
     chunked: Option<ChunkedPrefill>,
+    /// Preempted sequences awaiting swap-in, FIFO. Their KV payloads
+    /// (moved blocks: FP8 codes + scales together) live in `host`, keyed
+    /// by request id; re-admission holds strict priority over new
+    /// arrivals (no admission while this is non-empty).
+    preempted: VecDeque<ActiveRequest>,
+    /// Host-memory KV tier for swap-outs (None = preemption off).
+    host: Option<HostTier<SwappedSlot>>,
     pub metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
     /// Lifecycle-event recorder (None = tracing off, the hot-path default).
@@ -337,11 +365,18 @@ impl Engine {
             meta.prefill_seqs.clone(),
             meta.decode_batches.clone(),
         );
+        let host = if cfg.host_kv_bytes > 0.0 && cfg.preempt_policy != PreemptPolicy::Recompute {
+            Some(HostTier::new(cfg.host_kv_bytes as usize, &layout, bt))
+        } else {
+            None
+        };
         Ok(Self {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             active: HashMap::new(),
             prefix,
             chunked: None,
+            preempted: VecDeque::new(),
+            host,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
             trace: None,
@@ -405,7 +440,10 @@ impl Engine {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len() + usize::from(self.chunked.is_some())
+        self.queue.len()
+            + self.active.len()
+            + self.preempted.len()
+            + usize::from(self.chunked.is_some())
     }
 
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
@@ -419,7 +457,18 @@ impl Engine {
             self.advance_chunked()?;
             worked = true;
         }
-        let allow_admit = self.chunked.is_none();
+        // Preempted sequences resume ahead of every new arrival (strict
+        // FIFO priority): as long as any is parked, admission stays
+        // closed — except in the one step where a victim was just swapped
+        // out to make room for the queue head it yielded to.
+        let resumed = self.chunked.is_none() && self.resume_one_preempted();
+        worked |= resumed;
+        let made_room = !resumed
+            && self.chunked.is_none()
+            && self.preempted.is_empty()
+            && self.preempt_for_queue_head();
+        worked |= made_room;
+        let allow_admit = self.chunked.is_none() && (self.preempted.is_empty() || made_room);
         let plan = self.scheduler.plan_with_prefix(
             &self.queue,
             &mut self.kv,
@@ -609,6 +658,7 @@ impl Engine {
                 stop_token: req.stop_token,
                 arrival: req.arrival,
                 first_token_at: Some(now),
+                last_scheduled: Clock::wall(),
                 generated: vec![first_token],
                 last_token: first_token,
             },
@@ -741,6 +791,7 @@ impl Engine {
                 stop_token: cp.req.stop_token,
                 arrival: cp.req.arrival,
                 first_token_at: Some(now),
+                last_scheduled: Clock::wall(),
                 generated: vec![first_token],
                 last_token: first_token,
             },
@@ -942,6 +993,7 @@ impl Engine {
             let a = self.active.get_mut(&slot).unwrap();
             a.generated.push(tok);
             a.last_token = tok;
+            a.last_scheduled = Clock::wall();
             if let Some(ft) = &a.first_token_at {
                 self.metrics
                     .tpot
@@ -1038,6 +1090,7 @@ impl Engine {
             let a = self.active.get_mut(&slot).unwrap();
             a.generated.push(tok);
             a.last_token = tok;
+            a.last_scheduled = Clock::wall();
             if let Some(ft) = &a.first_token_at {
                 self.metrics
                     .tpot
@@ -1074,6 +1127,130 @@ impl Engine {
             self.maybe_finish(slot, full_slots.contains(&slot));
         }
         Ok(())
+    }
+
+    /// Swap out the least-recently-scheduled active sequence to the host
+    /// tier so the queue head can take its slot this step. Fires only
+    /// when the tier is configured, every slot is occupied, the queue
+    /// head could actually run here, and the tier has room for the
+    /// victim's moved blocks. Returns true when a slot was freed.
+    fn preempt_for_queue_head(&mut self) -> bool {
+        if self.host.is_none() || self.queue.is_empty() || self.kv.has_free_slot() {
+            return false;
+        }
+        let head_fits = self.queue.peek().is_some_and(|r| {
+            (self.scheduler.prefill_bucket(r.prompt.len()).is_some()
+                || warm_admittable_without_bucket(self.prefix.as_ref(), &r.prompt))
+                && r.prompt.len() + r.max_new_tokens <= self.meta.cache_t
+        });
+        if !head_fits {
+            return false;
+        }
+        let slots: Vec<usize> = self.active.keys().copied().collect();
+        let cands: Vec<PreemptCandidate> = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| PreemptCandidate {
+                idx: i,
+                idle_s: self.active[s].last_scheduled.now_s(),
+                generated: self.active[s].generated.len(),
+            })
+            .collect();
+        let Some(pick) = select_preemption_victim(&cands) else {
+            return false;
+        };
+        let slot = slots[pick];
+        // Budget-check against the worst case (every table block moves)
+        // before touching the slot — swap_out is not reversible.
+        let table_blocks = self.kv.slot_blocks(slot).len();
+        // lint:allow(no-unwrap-in-lib): host.is_none() returned above
+        let host = self.host.as_mut().expect("checked above");
+        if !host.can_store(table_blocks) {
+            return false;
+        }
+        // lint:allow(no-unwrap-in-lib): slot is a live key of self.active
+        let a = self.active.remove(&slot).expect("victim slot is active");
+        let record = self.kv.swap_out_slot(slot);
+        let moved = record.moved_blocks();
+        let bytes = record.swapped_bytes(&self.kv.layout(), self.kv.block_tokens());
+        let stored = host.store(a.id, moved, record);
+        debug_assert!(stored, "can_store admitted a superset of moved blocks");
+        self.metrics.preemptions += 1;
+        self.metrics.swapped_out_blocks += moved as u64;
+        self.metrics.host_swap_bytes += bytes as u64;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record(
+                Some(a.id),
+                TraceEventKind::Preempt {
+                    blocks: moved as u64,
+                    swap: true,
+                },
+            );
+            let now = tr.now_s();
+            tr.record_span(
+                Some(a.id),
+                now,
+                0.0,
+                TraceEventKind::SwapOut {
+                    blocks: moved as u64,
+                    bytes: bytes as u64,
+                },
+            );
+        }
+        self.preempted.push_back(a);
+        true
+    }
+
+    /// Swap the oldest preempted sequence back in when a slot is free:
+    /// moved blocks restore bit-identically (codes + scales), resident
+    /// shared blocks splice back refcount-balanced. Returns true when a
+    /// sequence rejoined the active set.
+    fn resume_one_preempted(&mut self) -> bool {
+        let Some(front_id) = self.preempted.front().map(|a| a.id) else {
+            return false;
+        };
+        if !self.kv.has_free_slot() {
+            return false;
+        }
+        let Some(host) = self.host.as_mut() else {
+            return false;
+        };
+        let Some((blocks, record)) = host.take(front_id) else {
+            debug_assert!(false, "preempted sequence missing from the host tier");
+            return false;
+        };
+        let bytes = record.swapped_bytes(&self.kv.layout(), self.kv.block_tokens());
+        let moved = record.moved_blocks();
+        match self.kv.swap_in_slot(record) {
+            Ok(slot) => {
+                // lint:allow(no-unwrap-in-lib): front() produced front_id just above
+                let mut a = self.preempted.pop_front().expect("front exists");
+                a.last_scheduled = Clock::wall();
+                self.metrics.swapped_in_blocks += moved as u64;
+                self.metrics.host_swap_bytes += bytes as u64;
+                if let Some(tr) = self.trace.as_mut() {
+                    let now = tr.now_s();
+                    tr.record_span(
+                        Some(a.id),
+                        now,
+                        0.0,
+                        TraceEventKind::SwapIn {
+                            blocks: moved as u64,
+                            bytes: bytes as u64,
+                        },
+                    );
+                }
+                self.active.insert(slot, a);
+                true
+            }
+            Err(record) => {
+                // Pool can't hold the moved blocks right now: put the
+                // payload back and retry on a later step.
+                let restored = host.store(front_id, blocks, record);
+                debug_assert!(restored, "re-storing a just-taken record must fit");
+                false
+            }
+        }
     }
 
     fn maybe_finish(&mut self, slot: usize, kv_full: bool) {
@@ -1150,13 +1327,17 @@ impl ReplicaHandle for Engine {
     }
 
     fn active(&self) -> usize {
-        self.active.len() + usize::from(self.chunked.is_some())
+        // Preempted sequences are resident work-in-progress (their KV
+        // sits in the host tier): counting them keeps has_work() true so
+        // the driver keeps stepping until they resume and finish.
+        self.active.len() + self.preempted.len() + usize::from(self.chunked.is_some())
     }
 
     fn outstanding_tokens(&self) -> usize {
         let resident: usize = self
             .active
             .values()
+            .chain(self.preempted.iter())
             .map(|a| a.prompt.len() + a.max_new_tokens.saturating_sub(a.generated.len()))
             .sum();
         let chunked: usize = self
@@ -1226,6 +1407,22 @@ impl ReplicaHandle for Engine {
             // lint:allow(no-unwrap-in-lib): iterating keys collected from the same map
             let a = self.active.remove(&slot).expect("slot key just listed");
             self.kv.free_slot(slot);
+            if a.cache_tokens > 0 {
+                if let Some(p) = self.prefix.as_mut() {
+                    p.release(&a.prompt, a.cache_tokens);
+                }
+            }
+            ids.push(a.id);
+        }
+        // Preempted sequences hold no slot, but their swap records pin
+        // resident shared blocks and their pins hold cache spans —
+        // discard both so the pool drains clean.
+        while let Some(a) = self.preempted.pop_front() {
+            if let Some(host) = self.host.as_mut() {
+                if let Some((_blocks, record)) = host.take(a.id) {
+                    self.kv.discard_swapped(record);
+                }
+            }
             if a.cache_tokens > 0 {
                 if let Some(p) = self.prefix.as_mut() {
                     p.release(&a.prompt, a.cache_tokens);

@@ -1,0 +1,161 @@
+//! The host-memory KV tier (ISSUE 9): a byte-budgeted store for
+//! swapped-out sequences, sitting one rung below the device
+//! [`super::kvcache::BlockPool`] in the memory hierarchy the
+//! datacenter-TCO analysis prices (HBM bytes are scarce and expensive;
+//! host DRAM is plentiful but sits behind the PCIe link).
+//!
+//! The tier is deliberately dumb: it holds opaque per-key payloads —
+//! typically a [`super::kvcache::SwappedSlot`] carrying FP8 codes and
+//! their per-(block, layer, kv-head) scales together — and accounts
+//! capacity in **blocks at the shared [`KvLayout`] rate**, the same
+//! bytes-per-block every other capacity consumer charges. Victim
+//! selection, transfer pricing, and the swap-vs-recompute decision all
+//! live with the callers (engine / sim replica); the tier only answers
+//! "does this fit" and "give it back".
+
+use crate::quant::KvLayout;
+
+/// Byte-budgeted host-memory store for swapped-out KV state, keyed by
+/// request id. Generic over the payload so the engine can park real
+/// [`super::kvcache::SwappedSlot`]s while the virtual-clock sim, which
+/// models transfers without materializing bytes, parks `()`.
+pub struct HostTier<P> {
+    capacity_bytes: usize,
+    block_bytes: usize,
+    entries: Vec<(u64, usize, P)>,
+    swapped_out_blocks: u64,
+    swapped_in_blocks: u64,
+}
+
+impl<P> HostTier<P> {
+    /// A tier holding up to `capacity_bytes` of swapped KV, accounted in
+    /// blocks at the layout's block rate (codes + scales together — the
+    /// same rate the device pool charges, so a block costs identical
+    /// bytes on either side of the link).
+    pub fn new(capacity_bytes: usize, layout: &KvLayout, block_tokens: usize) -> Self {
+        Self {
+            capacity_bytes,
+            block_bytes: layout.block_bytes(block_tokens),
+            entries: Vec::new(),
+            swapped_out_blocks: 0,
+            swapped_in_blocks: 0,
+        }
+    }
+
+    /// Bytes one stored block occupies (the shared layout rate).
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Bytes currently held, at the block rate.
+    pub fn used_bytes(&self) -> usize {
+        let blocks: usize = self.entries.iter().map(|(_, b, _)| *b).sum();
+        blocks * self.block_bytes
+    }
+
+    /// Whether `blocks` more blocks fit the remaining budget.
+    pub fn can_store(&self, blocks: usize) -> bool {
+        blocks * self.block_bytes <= self.capacity_bytes.saturating_sub(self.used_bytes())
+    }
+
+    /// Park `blocks` blocks of payload under `key`. Returns `false` —
+    /// payload dropped, nothing stored — when over budget or the key is
+    /// already present (a sequence is never swapped out twice).
+    pub fn store(&mut self, key: u64, blocks: usize, payload: P) -> bool {
+        if !self.can_store(blocks) || self.contains(key) {
+            return false;
+        }
+        self.entries.push((key, blocks, payload));
+        self.swapped_out_blocks += blocks as u64;
+        true
+    }
+
+    /// Reclaim `key`'s payload (swap-in or discard), freeing its budget.
+    pub fn take(&mut self, key: u64) -> Option<(usize, P)> {
+        let i = self.entries.iter().position(|(k, _, _)| *k == key)?;
+        let (_, blocks, payload) = self.entries.swap_remove(i);
+        self.swapped_in_blocks += blocks as u64;
+        Some((blocks, payload))
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.entries.iter().any(|(k, _, _)| *k == key)
+    }
+
+    /// Sequences currently parked.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Blocks ever stored (telemetry behind `repro_swapped_out_blocks`).
+    pub fn swapped_out_blocks(&self) -> u64 {
+        self.swapped_out_blocks
+    }
+
+    /// Blocks ever reclaimed (telemetry behind `repro_swapped_in_blocks`).
+    pub fn swapped_in_blocks(&self) -> u64 {
+        self.swapped_in_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::KvDtype;
+
+    fn tier(capacity_blocks: usize) -> HostTier<&'static str> {
+        let layout = KvLayout::new(KvDtype::FP8_DEFAULT, 2, 2, 4);
+        let bb = layout.block_bytes(16);
+        HostTier::new(capacity_blocks * bb, &layout, 16)
+    }
+
+    #[test]
+    fn budget_is_enforced_at_the_block_rate() {
+        let mut t = tier(4);
+        assert!(t.is_empty());
+        assert!(t.can_store(4));
+        assert!(!t.can_store(5));
+        assert!(t.store(1, 3, "a"));
+        assert_eq!(t.used_bytes(), 3 * t.block_bytes());
+        assert!(!t.store(2, 2, "b"), "over budget");
+        assert!(t.store(2, 1, "b"));
+        assert_eq!(t.len(), 2);
+        assert!(!t.can_store(1), "budget exhausted");
+        // Reclaim frees the budget.
+        let (blocks, payload) = t.take(1).expect("stored");
+        assert_eq!((blocks, payload), (3, "a"));
+        assert!(t.can_store(3));
+        assert!(t.take(1).is_none(), "already reclaimed");
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_and_counters_accumulate() {
+        let mut t = tier(8);
+        assert!(t.store(7, 2, "x"));
+        assert!(!t.store(7, 1, "y"), "a sequence is never swapped out twice");
+        assert!(t.contains(7));
+        assert!(!t.contains(8));
+        t.take(7);
+        assert!(t.store(7, 3, "z"), "key reusable after reclaim");
+        t.take(7);
+        assert_eq!(t.swapped_out_blocks(), 5);
+        assert_eq!(t.swapped_in_blocks(), 5);
+    }
+
+    #[test]
+    fn zero_capacity_tier_stores_nothing() {
+        let layout = KvLayout::new(KvDtype::FP8_DEFAULT, 2, 2, 4);
+        let mut t: HostTier<()> = HostTier::new(0, &layout, 16);
+        assert!(!t.can_store(1));
+        assert!(!t.store(1, 1, ()));
+        assert!(t.can_store(0), "degenerate zero-block record still fits");
+    }
+}

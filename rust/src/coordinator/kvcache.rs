@@ -725,6 +725,89 @@ impl BlockPool {
         Some(dst)
     }
 
+    /// Lift an exclusively-owned block off the device pool (ISSUE 9): the
+    /// raw stored payload — FP8 **codes**, never dequantized — plus, under
+    /// FP8, the block's per-(layer, kv-head) scales move together into the
+    /// returned [`SwappedBlock`], and the block is released back to the
+    /// free list. Swap-out of a shared block is a bug: other readers would
+    /// see it zeroed (the host tier keeps shared blocks resident instead).
+    pub fn swap_out_block(&mut self, id: BlockId) -> SwappedBlock {
+        assert_eq!(self.refs[id], 1, "swap-out of a shared or free block {id}");
+        let per_block = self.layers * self.block_tokens * self.row();
+        let base = id * per_block;
+        let groups = self.layers * self.kv_heads;
+        let data = match &self.data {
+            KvData::F32 { k, v } => SwappedData::F32 {
+                k: k[base..base + per_block].to_vec(),
+                v: v[base..base + per_block].to_vec(),
+            },
+            KvData::Bf16 { k, v } => SwappedData::Bf16 {
+                k: k[base..base + per_block].to_vec(),
+                v: v[base..base + per_block].to_vec(),
+            },
+            KvData::Fp8 {
+                k, v, k_scale, v_scale, ..
+            } => {
+                let sb = id * groups;
+                SwappedData::Fp8 {
+                    k: k[base..base + per_block].to_vec(),
+                    v: v[base..base + per_block].to_vec(),
+                    k_scale: k_scale[sb..sb + groups].to_vec(),
+                    v_scale: v_scale[sb..sb + groups].to_vec(),
+                }
+            }
+        };
+        self.release(id);
+        SwappedBlock { data }
+    }
+
+    /// Restore a swapped-out block into a freshly allocated pool block,
+    /// **bit-identically**: the codes (and FP8 scales) land exactly as
+    /// they were lifted — no re-quantization, so a swap-out/swap-in cycle
+    /// is lossless by construction. `None` when the pool is exhausted (the
+    /// caller checks [`Self::free_blocks`] before committing a swap-in).
+    pub fn swap_in_block(&mut self, swapped: &SwappedBlock) -> Option<BlockId> {
+        let id = self.alloc()?;
+        let per_block = self.layers * self.block_tokens * self.row();
+        let base = id * per_block;
+        let groups = self.layers * self.kv_heads;
+        match (&mut self.data, &swapped.data) {
+            (KvData::F32 { k, v }, SwappedData::F32 { k: sk, v: sv }) => {
+                assert_eq!(sk.len(), per_block, "swapped block from another geometry");
+                k[base..base + per_block].copy_from_slice(sk);
+                v[base..base + per_block].copy_from_slice(sv);
+            }
+            (KvData::Bf16 { k, v }, SwappedData::Bf16 { k: sk, v: sv }) => {
+                assert_eq!(sk.len(), per_block, "swapped block from another geometry");
+                k[base..base + per_block].copy_from_slice(sk);
+                v[base..base + per_block].copy_from_slice(sv);
+            }
+            (
+                KvData::Fp8 {
+                    k, v, k_scale, v_scale, ..
+                },
+                SwappedData::Fp8 {
+                    k: sk,
+                    v: sv,
+                    k_scale: sks,
+                    v_scale: svs,
+                },
+            ) => {
+                assert_eq!(sk.len(), per_block, "swapped block from another geometry");
+                assert_eq!(sks.len(), groups, "swapped scales from another geometry");
+                k[base..base + per_block].copy_from_slice(sk);
+                v[base..base + per_block].copy_from_slice(sv);
+                let s0 = id * groups;
+                k_scale[s0..s0 + groups].copy_from_slice(sks);
+                v_scale[s0..s0 + groups].copy_from_slice(svs);
+            }
+            // lint:allow(no-unwrap-in-lib): dtype mismatch between a swap record and its pool is a wiring bug, not a runtime condition
+            _ => panic!("swapped block dtype does not match the pool"),
+        }
+        self.audit();
+        Some(id)
+    }
+
     /// Per-block FP8 scale refs for one layer of block `id` (kv_heads-long
     /// K and V slices), `None` for scale-free dtypes. This is the scale
     /// metadata a paged kernel loads alongside each block's codes.
@@ -1052,6 +1135,89 @@ impl BlockPool {
 struct SlotTable {
     blocks: Vec<BlockId>,
     len: usize,
+}
+
+/// Host-resident payload of one swapped-out block: the pool's stored
+/// bytes verbatim (FP8 codes + per-(layer, kv-head) scales together,
+/// per the FP8-vs-INT8 result that codes are meaningless without their
+/// scales). Opaque outside this module; only
+/// [`BlockPool::swap_in_block`] can turn it back into device bytes.
+enum SwappedData {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Bf16 {
+        k: Vec<u16>,
+        v: Vec<u16>,
+    },
+    Fp8 {
+        k: Vec<u8>,
+        v: Vec<u8>,
+        k_scale: Vec<f32>,
+        v_scale: Vec<f32>,
+    },
+}
+
+/// One block lifted off the device pool into host memory (ISSUE 9).
+pub struct SwappedBlock {
+    data: SwappedData,
+}
+
+/// One entry of a swapped-out sequence's block table.
+enum SwapEntry {
+    /// The block was exclusively this sequence's: its payload moved to
+    /// host memory and the device block was freed.
+    Moved(SwappedBlock),
+    /// The block is shared (another sequence and/or the prefix cache
+    /// still reads it): it stays resident and the swap record keeps this
+    /// sequence's reference pinned, so the prefix cannot be evicted out
+    /// from under the preempted sequence. Zero bytes cross the host link
+    /// for this entry.
+    Resident(BlockId),
+}
+
+/// A preempted sequence's KV state, off-device: per-block host payloads
+/// for exclusively-owned blocks, pinned references for shared ones, plus
+/// the valid length ([`KvStore::swap_out_slot`] /
+/// [`KvStore::swap_in_slot`]). Refcount balance is preserved across the
+/// tiers — dropping this without [`KvStore::discard_swapped`] leaks the
+/// pinned shared blocks.
+pub struct SwappedSlot {
+    entries: Vec<SwapEntry>,
+    len: usize,
+}
+
+impl SwappedSlot {
+    /// Valid token count of the swapped sequence.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks whose payload actually moved to the host tier (what a
+    /// swap-in must re-allocate on device).
+    pub fn moved_blocks(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e, SwapEntry::Moved(_)))
+            .count()
+    }
+
+    /// Shared blocks that stayed device-resident (pinned, not copied).
+    pub fn resident_blocks(&self) -> usize {
+        self.entries.len() - self.moved_blocks()
+    }
+
+    /// Bytes that crossed the host link on swap-out — and will again on
+    /// swap-in: moved blocks at the shared [`KvLayout`] block rate (codes
+    /// and scales charged together). Resident entries cost zero.
+    pub fn swapped_bytes(&self, layout: &KvLayout, block_tokens: usize) -> usize {
+        self.moved_blocks() * layout.block_bytes(block_tokens)
+    }
 }
 
 /// Outcome of a paged single-token write ([`KvStore::append_token`]).
@@ -1482,6 +1648,13 @@ impl KvStore {
         self.t * self.row()
     }
 
+    /// Is at least one KV slot unoccupied? The slot table — not the
+    /// over-provisioned block pool — is the engine's binding admission
+    /// resource, so this is the signal its preemption trigger reads.
+    pub fn has_free_slot(&self) -> bool {
+        self.tables.iter().any(|t| t.is_none())
+    }
+
     pub fn alloc_slot(&mut self) -> Option<usize> {
         let idx = self.tables.iter().position(|t| t.is_none())?;
         self.tables[idx] = Some(SlotTable {
@@ -1834,6 +2007,78 @@ impl KvStore {
         }
         self.tables[dst] = Some(SlotTable { blocks, len });
         Some(dst)
+    }
+
+    /// Preempt `slot`: move its exclusively-owned blocks to host memory
+    /// and free them on device, keep shared blocks resident with this
+    /// sequence's reference pinned inside the record, and free the slot
+    /// itself for other work. The returned [`SwappedSlot`] restores the
+    /// sequence bit-identically via [`Self::swap_in_slot`], or is priced
+    /// for re-prefill and dropped via [`Self::discard_swapped`].
+    pub fn swap_out_slot(&mut self, slot: usize) -> SwappedSlot {
+        // lint:allow(no-unwrap-in-lib): preempting an inactive slot is a scheduler bookkeeping bug
+        let tab = self.tables[slot].take().expect("swap_out of an active slot");
+        let mut entries = Vec::with_capacity(tab.blocks.len());
+        for id in tab.blocks {
+            if self.pool.ref_count(id) > 1 {
+                entries.push(SwapEntry::Resident(id));
+            } else {
+                entries.push(SwapEntry::Moved(self.pool.swap_out_block(id)));
+            }
+        }
+        SwappedSlot {
+            entries,
+            len: tab.len,
+        }
+    }
+
+    /// Whether a swap-in of `swapped` can succeed right now: a free slot
+    /// plus enough free pool blocks for its moved entries.
+    pub fn can_swap_in(&self, swapped: &SwappedSlot) -> bool {
+        self.tables.iter().any(|t| t.is_none())
+            && swapped.moved_blocks() <= self.pool.free_blocks()
+    }
+
+    /// Resume a preempted sequence: allocate a fresh slot, restore each
+    /// moved block bit-identically from its host payload, and splice the
+    /// pinned resident blocks back into the table (their references
+    /// transfer from the record — refcounts balance across the whole
+    /// preempt/resume cycle). On failure (no slot, or the pool cannot
+    /// hold the moved blocks) nothing is mutated and the record comes
+    /// back in `Err` for a later retry.
+    pub fn swap_in_slot(&mut self, swapped: SwappedSlot) -> Result<usize, SwappedSlot> {
+        if !self.can_swap_in(&swapped) {
+            return Err(swapped);
+        }
+        // lint:allow(no-unwrap-in-lib): can_swap_in just verified a free slot exists
+        let slot = self.alloc_slot().expect("free slot verified");
+        let mut blocks = Vec::with_capacity(swapped.entries.len());
+        for e in swapped.entries {
+            match e {
+                SwapEntry::Resident(id) => blocks.push(id),
+                SwapEntry::Moved(sb) => {
+                    // lint:allow(no-unwrap-in-lib): can_swap_in just verified the pool headroom
+                    blocks.push(self.pool.swap_in_block(&sb).expect("pool headroom verified"));
+                }
+            }
+        }
+        self.tables[slot] = Some(SlotTable {
+            blocks,
+            len: swapped.len,
+        });
+        Ok(slot)
+    }
+
+    /// Abandon a swap record (the recompute-resume path, or request
+    /// abort): release the pinned shared blocks and drop the host
+    /// payloads. Required for refcount balance — a record must end in
+    /// exactly one of [`Self::swap_in_slot`] or here.
+    pub fn discard_swapped(&mut self, swapped: SwappedSlot) {
+        for e in swapped.entries {
+            if let SwapEntry::Resident(id) = e {
+                self.pool.release(id);
+            }
+        }
     }
 
     /// Borrow the group's block-table-native read state: per-slot block
@@ -2508,5 +2753,127 @@ mod tests {
         assert!(mse < 1e-2, "decode readout MSE {mse}");
         // And the exact store agrees with itself bit-for-bit.
         assert_eq!(pe, exact.decode_attention_probe(&[se], 99));
+    }
+
+    #[test]
+    fn swap_roundtrip_is_bit_identical_for_every_dtype() {
+        for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+            let (l, t, kvh, hd, bt) = (2, 24, 2, 3, 4);
+            let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, dtype, bt, 0);
+            let slot = s.alloc_slot().unwrap();
+            let ss = t * kvh * hd;
+            let mut rng = XorShiftRng::new(17);
+            let k0: Vec<f32> = (0..l * ss).map(|_| rng.normal()).collect();
+            let v0: Vec<f32> = (0..l * ss).map(|_| rng.normal() * 3.0).collect();
+            s.write_slot(slot, &k0, &v0, 14); // blocks 0..4, last partial
+            let before = s.decode_attention_probe(&[slot], 7);
+            let scales_before: Vec<Vec<f32>> = s
+                .slot_blocks(slot)
+                .iter()
+                .filter_map(|&id| s.pool().block_scales(id, 1))
+                .map(|(ks, vs)| ks.iter().chain(vs).copied().collect())
+                .collect();
+
+            let swapped = s.swap_out_slot(slot);
+            assert_eq!(swapped.len(), 14, "{dtype:?}");
+            assert_eq!(swapped.moved_blocks(), 4, "{dtype:?}");
+            assert_eq!(swapped.resident_blocks(), 0, "{dtype:?}");
+            assert_eq!(s.pool().used_blocks(), 0, "{dtype:?}: device fully freed");
+            let rate = s.layout().block_bytes(bt);
+            assert_eq!(swapped.swapped_bytes(&s.layout(), bt), 4 * rate, "{dtype:?}");
+
+            let restored = s
+                .swap_in_slot(swapped)
+                .unwrap_or_else(|_| panic!("{dtype:?}: swap-in must succeed with a free pool"));
+            assert_eq!(s.len(restored), Some(14), "{dtype:?}");
+            // Codes and scales came back bit-for-bit: the probe — which
+            // dequantizes every stored byte — reproduces exactly.
+            let after = s.decode_attention_probe(&[restored], 7);
+            assert_eq!(before.len(), after.len());
+            for (i, (a, b)) in before.iter().zip(&after).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} probe[{i}]");
+            }
+            let scales_after: Vec<Vec<f32>> = s
+                .slot_blocks(restored)
+                .iter()
+                .filter_map(|&id| s.pool().block_scales(id, 1))
+                .map(|(ks, vs)| ks.iter().chain(vs).copied().collect())
+                .collect();
+            assert_eq!(scales_before, scales_after, "{dtype:?}: scales must travel");
+        }
+    }
+
+    #[test]
+    fn shared_blocks_stay_resident_and_pinned_across_a_swap() {
+        let (l, t, kvh, hd, bt) = (1, 16, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, KvDtype::F32, bt, 0);
+        let ss = t * kvh * hd;
+        let writer = s.alloc_slot().unwrap();
+        let k0: Vec<f32> = (0..l * ss).map(|i| 1.0 + i as f32).collect();
+        s.write_slot(writer, &k0, &k0, 8); // blocks 0, 1
+        let shared = s.slot_blocks(writer);
+        let reader = s.alloc_slot().unwrap();
+        s.map_shared_prefix(reader, &shared, 8);
+        // Grow the reader past the shared prefix: one private block.
+        let kr = vec![9.0f32; l * kvh * hd];
+        assert_eq!(s.append_token(reader, &kr, &kr), AppendOutcome::Appended);
+        let rblocks = s.slot_blocks(reader);
+        assert_eq!(rblocks.len(), 3);
+
+        let swapped = s.swap_out_slot(reader);
+        // Only the private tail block moved; the shared prefix stayed
+        // resident with the reader's reference pinned in the record.
+        assert_eq!(swapped.moved_blocks(), 1);
+        assert_eq!(swapped.resident_blocks(), 2);
+        assert_eq!(s.pool().ref_count(shared[0]), 2, "pin survives the swap");
+        assert_eq!(s.pool().ref_count(shared[1]), 2);
+        assert_eq!(s.pool().used_blocks(), 2, "private block left the device");
+
+        let restored = s
+            .swap_in_slot(swapped)
+            .unwrap_or_else(|_| panic!("swap-in must succeed"));
+        assert_eq!(s.len(restored), Some(9));
+        let nb = s.slot_blocks(restored);
+        assert_eq!(&nb[..2], &shared[..], "prefix re-spliced, not copied");
+        assert_eq!(s.pool().ref_count(shared[0]), 2);
+        let (krr, _, _) = s.gather_batch(&[restored]);
+        let row = kvh * hd;
+        assert_eq!(krr[..8 * row], k0[..8 * row]);
+        assert!(krr[8 * row..9 * row].iter().all(|x| *x == 9.0));
+
+        // Discard path (recompute-resume): pinned refs are released.
+        let swapped = s.swap_out_slot(restored);
+        s.discard_swapped(swapped);
+        assert_eq!(s.pool().ref_count(shared[0]), 1, "pin released on discard");
+        assert_eq!(s.pool().used_blocks(), 2, "writer keeps the prefix alive");
+    }
+
+    #[test]
+    fn swap_in_fails_cleanly_without_headroom() {
+        let (l, t, kvh, hd, bt) = (1, 8, 1, 2, 4);
+        // Pool of exactly 2 blocks (t=8, bt=4, 1 slot, no extra).
+        let mut s = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::F32, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        s.write_slot(slot, &vec![1.0; l * ss], &vec![2.0; l * ss], 8);
+        let swapped = s.swap_out_slot(slot);
+        assert_eq!(swapped.moved_blocks(), 2);
+        // Refill the pool so the swap-in has a slot but no blocks.
+        let hog = s.alloc_slot().unwrap();
+        s.write_slot(hog, &vec![5.0; l * ss], &vec![5.0; l * ss], 8);
+        assert!(!s.can_swap_in(&swapped));
+        let swapped = match s.swap_in_slot(swapped) {
+            Err(back) => back,
+            Ok(_) => panic!("swap-in must fail with a full pool"),
+        };
+        assert_eq!(s.pool().free_blocks(), 0, "failed swap-in must not mutate");
+        // Free the hog: now it goes through, data intact.
+        s.free_slot(hog);
+        let restored = s
+            .swap_in_slot(swapped)
+            .unwrap_or_else(|_| panic!("headroom restored"));
+        let (k, v, _) = s.gather_batch(&[restored]);
+        assert!(k.iter().all(|x| *x == 1.0));
+        assert!(v.iter().all(|x| *x == 2.0));
     }
 }

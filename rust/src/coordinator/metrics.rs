@@ -173,6 +173,18 @@ pub struct ServeMetrics {
     pub trace_events_dropped: u64,
     /// Peak KV block-pool occupancy observed across steps (0–1).
     pub pool_occupancy_peak: f64,
+    /// Sequences preempted off the device under pool pressure (ISSUE 9).
+    pub preemptions: u64,
+    /// KV blocks moved device → host tier by preemption swap-outs.
+    pub swapped_out_blocks: u64,
+    /// KV blocks moved host tier → device by swap-in resumes.
+    pub swapped_in_blocks: u64,
+    /// Bytes that crossed the host link in either direction (blocks at
+    /// the shared `KvLayout` rate — codes and scales together).
+    pub host_swap_bytes: u64,
+    /// Preempted sequences resumed by chunked re-prefill instead of
+    /// swap-in (the recompute arm of the cost model).
+    pub recompute_resumes: u64,
     pub ttft: LatencyStat,
     pub tpot: LatencyStat,
     pub prefill_time: LatencyStat,
@@ -209,6 +221,11 @@ impl ServeMetrics {
             cow_block_copies: 0,
             trace_events_dropped: 0,
             pool_occupancy_peak: 0.0,
+            preemptions: 0,
+            swapped_out_blocks: 0,
+            swapped_in_blocks: 0,
+            host_swap_bytes: 0,
+            recompute_resumes: 0,
             ttft: LatencyStat::new(),
             tpot: LatencyStat::new(),
             prefill_time: LatencyStat::new(),
@@ -265,6 +282,11 @@ impl ServeMetrics {
             out.cow_block_copies += m.cow_block_copies;
             out.trace_events_dropped += m.trace_events_dropped;
             out.pool_occupancy_peak = out.pool_occupancy_peak.max(m.pool_occupancy_peak);
+            out.preemptions += m.preemptions;
+            out.swapped_out_blocks += m.swapped_out_blocks;
+            out.swapped_in_blocks += m.swapped_in_blocks;
+            out.host_swap_bytes += m.host_swap_bytes;
+            out.recompute_resumes += m.recompute_resumes;
         }
         out.ttft = LatencyStat::merge_many(all.iter().map(|m| &m.ttft));
         out.tpot = LatencyStat::merge_many(all.iter().map(|m| &m.tpot));
@@ -316,6 +338,17 @@ impl ServeMetrics {
                 self.pool_occupancy_peak
             ));
         }
+        if self.preemptions > 0 {
+            s.push_str(&format!(
+                " preemptions={} swapped_out_blocks={} swapped_in_blocks={} \
+                 host_swap_bytes={} recompute_resumes={}",
+                self.preemptions,
+                self.swapped_out_blocks,
+                self.swapped_in_blocks,
+                self.host_swap_bytes,
+                self.recompute_resumes
+            ));
+        }
         if self.trace_events_dropped > 0 {
             s.push_str(&format!(
                 "\nwarning: trace ring buffer dropped {} events (raise --trace-capacity for a complete timeline)",
@@ -336,7 +369,8 @@ impl ServeMetrics {
              \"tpot_p99_ms\":{:.5},\"prefix_hit_rate\":{:.4},\"prefix_hit_tokens\":{},\
              \"mfu_mean\":{:.6},\"mfu_p50\":{:.6},\"mfu_p99\":{:.6},\
              \"pool_occupancy_peak\":{:.6},\"kv_bytes_read\":{},\"cow_block_copies\":{},\
-             \"trace_events_dropped\":{}}}",
+             \"trace_events_dropped\":{},\"preemptions\":{},\"swapped_out_blocks\":{},\
+             \"swapped_in_blocks\":{},\"host_swap_bytes\":{},\"recompute_resumes\":{}}}",
             label.replace(['"', '\\'], "_"),
             self.requests_completed,
             self.prompt_tokens,
@@ -359,6 +393,11 @@ impl ServeMetrics {
             self.kv_bytes_read,
             self.cow_block_copies,
             self.trace_events_dropped,
+            self.preemptions,
+            self.swapped_out_blocks,
+            self.swapped_in_blocks,
+            self.host_swap_bytes,
+            self.recompute_resumes,
         )
     }
 }
@@ -579,5 +618,30 @@ mod tests {
         assert_eq!(j.get("trace_events_dropped").and_then(Json::as_f64), Some(3.0));
         assert_eq!(j.get("pool_occupancy_peak").and_then(Json::as_f64), Some(0.5));
         assert_eq!(j.get("mfu_mean").and_then(Json::as_f64), Some(0.6));
+        assert_eq!(j.get("preemptions").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("host_swap_bytes").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn preemption_counters_merge_and_report() {
+        let mut a = ServeMetrics::new();
+        a.preemptions = 2;
+        a.swapped_out_blocks = 10;
+        a.swapped_in_blocks = 6;
+        a.host_swap_bytes = 4096;
+        a.recompute_resumes = 1;
+        let mut b = ServeMetrics::new();
+        b.preemptions = 1;
+        b.swapped_out_blocks = 3;
+        b.host_swap_bytes = 512;
+        a.merge(&b);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.swapped_out_blocks, 13);
+        assert_eq!(a.swapped_in_blocks, 6);
+        assert_eq!(a.host_swap_bytes, 4608);
+        assert_eq!(a.recompute_resumes, 1);
+        assert!(a.report().contains("preemptions=3"));
+        // No preemptions: the report stays terse.
+        assert!(!ServeMetrics::new().report().contains("preemptions"));
     }
 }

@@ -14,6 +14,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod hosttier;
 pub mod kvcache;
 pub mod metrics;
 pub mod prefix;
@@ -22,13 +23,15 @@ pub mod scheduler;
 
 pub use batcher::{AdmissionQueue, BatchPlan, PrefillPlan};
 pub use engine::{Engine, EngineConfig};
+pub use hosttier::HostTier;
 pub use kvcache::{
     AppendOutcome, AttendOptions, AttendScratch, AttendTask, BlockAllocator, BlockId, BlockPool,
-    Dequant, KvStore, PagedAttentionView, PagedSlotView,
+    Dequant, KvStore, PagedAttentionView, PagedSlotView, SwappedBlock, SwappedSlot,
 };
 pub use metrics::{LatencyStat, ServeMetrics};
 pub use prefix::{PrefixCache, PrefixCacheConfig, PrefixStats};
 pub use request::{Request, RequestId, RequestOutput, RequestState};
 pub use scheduler::{
-    chunk_spans, warm_admittable_without_bucket, warm_start_pays, SchedulePolicy, Scheduler,
+    chunk_spans, select_preemption_victim, warm_admittable_without_bucket, warm_start_pays,
+    PreemptCandidate, PreemptPolicy, SchedulePolicy, Scheduler,
 };

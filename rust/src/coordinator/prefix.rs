@@ -318,6 +318,20 @@ fn referenced_blocks_rec(node: &Node) -> usize {
             .sum::<usize>()
 }
 
+fn hot_paths_rec(node: &Node, prefix: &mut Vec<i32>, out: &mut Vec<Vec<i32>>) {
+    if node.children.is_empty() {
+        if !prefix.is_empty() {
+            out.push(prefix.clone());
+        }
+        return;
+    }
+    for c in &node.children {
+        prefix.extend_from_slice(&c.tokens);
+        hot_paths_rec(c, prefix, out);
+        prefix.truncate(prefix.len() - c.tokens.len());
+    }
+}
+
 fn owned_blocks_rec(node: &Node, out: &mut Vec<BlockId>) {
     if let Some(ids) = &node.phys {
         out.extend_from_slice(ids);
@@ -389,6 +403,17 @@ impl PrefixCache {
     pub fn owned_blocks(&self) -> Vec<BlockId> {
         let mut out = Vec::with_capacity(self.cached_blocks);
         owned_blocks_rec(&self.root, &mut out);
+        out
+    }
+
+    /// Every cached root-to-leaf token path (interior prefixes are implied
+    /// by their leaves): re-`insert`ing the paths into a fresh cache
+    /// reproduces the tree's contents. This is the persistence surface the
+    /// host-tier snapshot/restore rides across replica restarts (ISSUE 9).
+    pub fn hot_paths(&self) -> Vec<Vec<i32>> {
+        let mut out = Vec::new();
+        let mut prefix = Vec::new();
+        hot_paths_rec(&self.root, &mut prefix, &mut out);
         out
     }
 
@@ -820,6 +845,26 @@ mod tests {
         c.evict_blocks(usize::MAX);
         assert_eq!(c.cached_blocks(), 0);
         assert_eq!(c.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn hot_paths_round_trip_through_a_fresh_cache() {
+        let mut c = cache(4, 64);
+        let a = prompt(&[1, 2, 3], 4);
+        let b = prompt(&[1, 2, 9], 4); // shares two blocks, splits the edge
+        c.insert(&a);
+        c.insert(&b);
+        let paths = c.hot_paths();
+        assert_eq!(paths.len(), 2, "one path per leaf: {paths:?}");
+        let mut fresh = cache(4, 64);
+        for p in &paths {
+            fresh.insert(p);
+        }
+        assert_eq!(fresh.cached_blocks(), c.cached_blocks());
+        assert_eq!(fresh.lookup(&a), 12);
+        assert_eq!(fresh.lookup(&b), 12);
+        // An empty cache exports nothing.
+        assert!(cache(4, 8).hot_paths().is_empty());
     }
 
     #[test]

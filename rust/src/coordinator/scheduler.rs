@@ -73,6 +73,66 @@ pub fn chunk_spans(prompt_len: usize, cached: usize, chunk_tokens: usize) -> Vec
     out
 }
 
+/// How a preempted sequence gets back on the device (ISSUE 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptPolicy {
+    /// Always move blocks to the host tier and swap them back in.
+    Swap,
+    /// Always drop the blocks and re-prefill the context chunked.
+    Recompute,
+    /// Per-victim choice: price chunked re-prefill against the modeled
+    /// host-link transfer and take the cheaper path (swap also requires
+    /// host-tier headroom).
+    Auto,
+}
+
+impl PreemptPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "swap" => Some(PreemptPolicy::Swap),
+            "recompute" => Some(PreemptPolicy::Recompute),
+            "auto" => Some(PreemptPolicy::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreemptPolicy::Swap => "swap",
+            PreemptPolicy::Recompute => "recompute",
+            PreemptPolicy::Auto => "auto",
+        }
+    }
+}
+
+/// One running sequence as seen by victim selection.
+#[derive(Clone, Copy, Debug)]
+pub struct PreemptCandidate {
+    /// Caller-side index (slot id, vec position — opaque to selection).
+    pub idx: usize,
+    /// Seconds since this sequence was last scheduled for a step.
+    pub idle_s: f64,
+    /// Tokens generated so far (progress already banked).
+    pub generated: usize,
+}
+
+/// Pick the preemption victim: the **least-recently-scheduled** sequence
+/// (max `idle_s`), breaking ties toward the **fewest generated tokens**
+/// (least banked progress to stall), then toward the smallest `idx` so the
+/// choice is deterministic under equal inputs. Returns the winning `idx`,
+/// or `None` for an empty field.
+pub fn select_preemption_victim(cands: &[PreemptCandidate]) -> Option<usize> {
+    cands
+        .iter()
+        .max_by(|a, b| {
+            a.idle_s
+                .total_cmp(&b.idle_s)
+                .then(b.generated.cmp(&a.generated))
+                .then(b.idx.cmp(&a.idx))
+        })
+        .map(|c| c.idx)
+}
+
 pub struct Scheduler {
     pub policy: SchedulePolicy,
     /// Compiled prefill sequence buckets (ascending).
@@ -487,6 +547,39 @@ mod tests {
         let pp = plan.prefill.expect("cold admission");
         assert_eq!(pp.cached_tokens, 0, "one-block hit must not go warm");
         assert_eq!(pp.chunks, vec![(0, 128)]);
+    }
+
+    #[test]
+    fn preempt_policy_parse_and_label_roundtrip() {
+        for p in [PreemptPolicy::Swap, PreemptPolicy::Recompute, PreemptPolicy::Auto] {
+            assert_eq!(PreemptPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(PreemptPolicy::parse("evict"), None);
+    }
+
+    #[test]
+    fn victim_selection_prefers_idle_then_least_progress() {
+        let c = |idx, idle_s, generated| PreemptCandidate {
+            idx,
+            idle_s,
+            generated,
+        };
+        assert_eq!(select_preemption_victim(&[]), None);
+        // Most idle wins outright.
+        assert_eq!(
+            select_preemption_victim(&[c(0, 0.1, 9), c(1, 2.0, 50), c(2, 0.5, 0)]),
+            Some(1)
+        );
+        // Idle tie → fewest generated tokens (least banked progress).
+        assert_eq!(
+            select_preemption_victim(&[c(0, 1.0, 9), c(1, 1.0, 2), c(2, 1.0, 5)]),
+            Some(1)
+        );
+        // Full tie → smallest idx, and order of candidates doesn't matter.
+        assert_eq!(
+            select_preemption_victim(&[c(2, 1.0, 3), c(0, 1.0, 3), c(1, 1.0, 3)]),
+            Some(0)
+        );
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub struct Device {
     /// Vector-engine (TPC) elementwise throughput in Gelem/s for f32 —
     /// bounds descale/quantize side ops.
     pub tpc_gelems_per_s: f64,
+    /// Host-link bandwidth (decimal GB/s) for device ↔ host DRAM
+    /// transfers — the PCIe path KV swap-outs ride (ISSUE 9). Gaudi 2:
+    /// PCIe Gen4 x16 ≈ 32 GB/s; Gaudi 3: Gen5 x16 ≈ 64 GB/s. Orders of
+    /// magnitude below HBM bandwidth, which is exactly why the
+    /// swap-vs-recompute policy has a real decision to make.
+    pub host_link_gb_s: f64,
 }
 
 impl Device {
@@ -50,6 +56,7 @@ impl Device {
             mme_tile: 256,
             mme_engines: 2,
             tpc_gelems_per_s: 600.0,
+            host_link_gb_s: 32.0,
         }
     }
 
@@ -64,6 +71,7 @@ impl Device {
             mme_tile: 256,
             mme_engines: 8,
             tpc_gelems_per_s: 1200.0,
+            host_link_gb_s: 64.0,
         }
     }
 
@@ -77,6 +85,13 @@ impl Device {
     /// Usable capacity in bytes, decimal-GB semantics matching the field.
     pub fn hbm_capacity_bytes(&self) -> f64 {
         self.hbm_capacity_gb * 1e9
+    }
+
+    /// Seconds to move `bytes` across the host link in one direction —
+    /// the transfer cost a KV swap-out (or swap-in) pays, priced against
+    /// chunked re-prefill by the preemption policy.
+    pub fn host_transfer_time_s(&self, bytes: f64) -> f64 {
+        bytes / (self.host_link_gb_s * 1e9)
     }
 }
 
@@ -99,5 +114,18 @@ mod tests {
         assert!(g3.peak_fp8_tflops > g2.peak_fp8_tflops);
         assert!(g3.hbm_bandwidth_tbps > g2.hbm_bandwidth_tbps);
         assert!(g3.hbm_capacity_gb > g2.hbm_capacity_gb);
+        assert!(g3.host_link_gb_s > g2.host_link_gb_s);
+    }
+
+    #[test]
+    fn host_link_is_the_slow_tier() {
+        let d = Device::gaudi2();
+        assert_eq!(d.host_link_gb_s, 32.0); // PCIe Gen4 x16
+        assert_eq!(d.host_transfer_time_s(32e9), 1.0);
+        assert_eq!(d.host_transfer_time_s(0.0), 0.0);
+        // The link sits ~2 orders of magnitude below HBM: moving a byte
+        // to host must never be mistaken for an HBM-priced operation.
+        let hbm_s = 32e9 / (d.hbm_bandwidth_tbps * 1e12);
+        assert!(d.host_transfer_time_s(32e9) > 50.0 * hbm_s);
     }
 }

@@ -104,6 +104,36 @@ impl ServeMetrics {
             "Trace events dropped by the bounded ring buffer.",
             self.trace_events_dropped,
         );
+        counter(
+            &mut out,
+            "repro_preemptions",
+            "Sequences preempted off the device under KV pool pressure.",
+            self.preemptions,
+        );
+        counter(
+            &mut out,
+            "repro_swapped_out_blocks",
+            "KV blocks moved device to host tier by preemption swap-outs.",
+            self.swapped_out_blocks,
+        );
+        counter(
+            &mut out,
+            "repro_swapped_in_blocks",
+            "KV blocks moved host tier to device by swap-in resumes.",
+            self.swapped_in_blocks,
+        );
+        counter(
+            &mut out,
+            "repro_host_swap_bytes",
+            "Bytes crossing the host link (KvLayout block rate, both directions).",
+            self.host_swap_bytes,
+        );
+        counter(
+            &mut out,
+            "repro_recompute_resumes",
+            "Preempted sequences resumed by chunked re-prefill.",
+            self.recompute_resumes,
+        );
         gauge(
             &mut out,
             "repro_prefix_hit_rate",
@@ -162,6 +192,11 @@ mod tests {
         m.kv_bytes_read = 4096;
         m.trace_events_dropped = 7;
         m.pool_occupancy_peak = 0.75;
+        m.preemptions = 2;
+        m.swapped_out_blocks = 9;
+        m.swapped_in_blocks = 5;
+        m.host_swap_bytes = 8192;
+        m.recompute_resumes = 1;
         m.ttft.record(0.5);
         m.mfu.record(0.9);
         let text = m.render_prometheus();
@@ -171,6 +206,12 @@ mod tests {
             "repro_generated_tokens 42",
             "repro_kv_bytes_read 4096",
             "repro_trace_events_dropped 7",
+            "# TYPE repro_preemptions counter",
+            "repro_preemptions 2",
+            "repro_swapped_out_blocks 9",
+            "repro_swapped_in_blocks 5",
+            "repro_host_swap_bytes 8192",
+            "repro_recompute_resumes 1",
             "repro_pool_occupancy_peak 0.75",
             "# TYPE repro_ttft_seconds summary",
             "repro_ttft_seconds{quantile=\"0.5\"} 0.5",

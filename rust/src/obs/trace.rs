@@ -8,10 +8,15 @@
 //! `steps` track carrying the device-level prefill/decode spans.
 //!
 //! The buffer drops the **newest** events once full (and counts them in
-//! [`TraceRecorder::dropped`]) rather than overwriting the oldest:
-//! retire events synthesize whole-request spans from their own payload,
-//! so a truncated tail loses recent detail but never tears an
-//! already-recorded span in half.
+//! [`TraceRecorder::dropped`], per event kind in
+//! [`TraceRecorder::dropped_by_kind`]) rather than overwriting the oldest:
+//! a truncated tail loses recent detail but never tears an
+//! already-recorded span in half. **Terminal events are exempt**: `Retire`
+//! and `Reject` are always retained even past capacity — they are the sole
+//! source of the synthesized per-request spans, and overload (the very
+//! condition that fills the ring) is exactly when their latency payloads
+//! matter most. The memory bound stays firm: capacity + one terminal
+//! event per request.
 
 use super::clock::Clock;
 use crate::coordinator::RequestId;
@@ -53,6 +58,14 @@ pub enum TraceEventKind {
     },
     /// Request completed unservable / rejected at the replica.
     Reject { reason: String },
+    /// A running sequence was preempted under pool pressure; `swap` says
+    /// whether its blocks moved to the host tier (vs dropped for
+    /// re-prefill on resume).
+    Preempt { blocks: u64, swap: bool },
+    /// Blocks (codes + scales together) written out to the host KV tier.
+    SwapOut { blocks: u64, bytes: u64 },
+    /// Blocks restored from the host KV tier into the pool.
+    SwapIn { blocks: u64, bytes: u64 },
 }
 
 impl TraceEventKind {
@@ -66,7 +79,20 @@ impl TraceEventKind {
             TraceEventKind::Evict { .. } => "evict",
             TraceEventKind::Retire { .. } => "retire",
             TraceEventKind::Reject { .. } => "reject",
+            TraceEventKind::Preempt { .. } => "preempt",
+            TraceEventKind::SwapOut { .. } => "swap_out",
+            TraceEventKind::SwapIn { .. } => "swap_in",
         }
+    }
+
+    /// Terminal events survive a full ring: they carry the only copy of
+    /// the per-request latency summary the exporter synthesizes spans
+    /// from, and there is at most one per request (bounded growth).
+    fn always_retained(&self) -> bool {
+        matches!(
+            self,
+            TraceEventKind::Retire { .. } | TraceEventKind::Reject { .. }
+        )
     }
 }
 
@@ -89,6 +115,7 @@ pub struct TraceRecorder {
     capacity: usize,
     events: Vec<TraceEvent>,
     dropped: u64,
+    dropped_by_kind: std::collections::BTreeMap<&'static str, u64>,
 }
 
 impl TraceRecorder {
@@ -103,6 +130,7 @@ impl TraceRecorder {
             capacity: capacity.max(1),
             events: Vec::new(),
             dropped: 0,
+            dropped_by_kind: std::collections::BTreeMap::new(),
         }
     }
 
@@ -154,10 +182,11 @@ impl TraceRecorder {
     }
 
     fn push(&mut self, ev: TraceEvent) {
-        if self.events.len() < self.capacity {
+        if self.events.len() < self.capacity || ev.kind.always_retained() {
             self.events.push(ev);
         } else {
             self.dropped += 1;
+            *self.dropped_by_kind.entry(ev.kind.name()).or_insert(0) += 1;
         }
     }
 
@@ -168,6 +197,13 @@ impl TraceRecorder {
     /// Events refused because the buffer was full.
     pub fn dropped(&self) -> u64 {
         self.dropped
+    }
+
+    /// Drop counts broken down by event kind (`name()` → count). Terminal
+    /// kinds (`retire`, `reject`) never appear here — they are always
+    /// retained.
+    pub fn dropped_by_kind(&self) -> &std::collections::BTreeMap<&'static str, u64> {
+        &self.dropped_by_kind
     }
 
     pub fn len(&self) -> usize {
@@ -294,6 +330,50 @@ pub fn chrome_trace_json(tracks: &[(String, &TraceRecorder)]) -> String {
                         instant_event(pid, tid, "prefix_hit", ts_us, &format!("\"tokens\":{tokens}")),
                     ));
                 }
+                TraceEventKind::Preempt { blocks, swap } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(
+                            pid,
+                            tid,
+                            "preempt",
+                            ts_us,
+                            &format!("\"blocks\":{blocks},\"swap\":{swap}"),
+                        ),
+                    ));
+                }
+                TraceEventKind::SwapOut { blocks, bytes } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        complete_event(
+                            pid,
+                            tid,
+                            "swap_out",
+                            ts_us,
+                            dur_us,
+                            &format!("\"blocks\":{blocks},\"bytes\":{bytes}"),
+                        ),
+                    ));
+                }
+                TraceEventKind::SwapIn { blocks, bytes } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        complete_event(
+                            pid,
+                            tid,
+                            "swap_in",
+                            ts_us,
+                            dur_us,
+                            &format!("\"blocks\":{blocks},\"bytes\":{bytes}"),
+                        ),
+                    ));
+                }
                 TraceEventKind::Reject { reason } => {
                     let tid = request_tid(ev.request.unwrap_or(0));
                     named_tids.insert(tid);
@@ -408,6 +488,93 @@ mod tests {
         // The *oldest* events survive.
         assert_eq!(r.events()[0].ts_s, 0.0);
         assert_eq!(r.events()[1].ts_s, 1.0);
+        // Drops are attributed per kind.
+        assert_eq!(r.dropped_by_kind().get("cow_copy"), Some(&3));
+        r.record_at(9.0, None, TraceEventKind::PrefixHit { tokens: 16 });
+        assert_eq!(r.dropped(), 4);
+        assert_eq!(r.dropped_by_kind().get("prefix_hit"), Some(&1));
+        assert_eq!(r.dropped_by_kind().get("cow_copy"), Some(&3));
+    }
+
+    #[test]
+    fn terminal_events_survive_a_full_ring() {
+        let mut r = TraceRecorder::with_capacity(0, Clock::virtual_at(0.0), 2);
+        for i in 0..4 {
+            r.record_at(i as f64, None, TraceEventKind::CowCopy { blocks: 1 });
+        }
+        r.record_at(
+            4.0,
+            Some(1),
+            TraceEventKind::Retire {
+                generated: 2,
+                ttft_s: 0.1,
+                tpot_s: 0.05,
+                total_s: 0.5,
+            },
+        );
+        r.record_at(
+            4.5,
+            Some(2),
+            TraceEventKind::Reject {
+                reason: "queue_full".to_string(),
+            },
+        );
+        // The ring held 2 events; both terminal events were still retained.
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        assert!(r.dropped_by_kind().get("retire").is_none());
+        assert!(r.dropped_by_kind().get("reject").is_none());
+    }
+
+    #[test]
+    fn span_reconstruction_survives_an_undersized_ring_under_overload() {
+        // An overloaded replica floods the ring with step-level events; the
+        // per-request spans are synthesized solely from Retire payloads, so
+        // every completed request must still reconstruct even when the ring
+        // is far too small for the step traffic.
+        let requests = 16u64;
+        let mut r = TraceRecorder::with_capacity(0, Clock::virtual_at(0.0), 4);
+        for id in 0..requests {
+            let t = id as f64;
+            r.record_at(t, Some(id), TraceEventKind::Admit { queued_s: 0.5 });
+            for s in 0..8 {
+                r.record_span(
+                    None,
+                    t + 0.01 * s as f64,
+                    0.01,
+                    TraceEventKind::DecodeStep {
+                        batch: 4,
+                        mfu: 0.5,
+                        kv_bytes: 4096,
+                        pool_occupancy: 0.9,
+                    },
+                );
+            }
+            r.record_at(
+                t + 0.9,
+                Some(id),
+                TraceEventKind::Retire {
+                    generated: 8,
+                    ttft_s: 0.2,
+                    tpot_s: 0.1,
+                    total_s: 0.9,
+                },
+            );
+        }
+        assert!(r.dropped() > 0, "the undersized ring must have overflowed");
+        let out = chrome_trace_json(&[("overloaded".to_string(), &r)]);
+        let j = Json::parse(&out).expect("chrome trace must be valid JSON");
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        for id in 0..requests {
+            let tid = (id + 1) as f64;
+            assert!(
+                events.iter().any(|e| {
+                    e.get("name").and_then(Json::as_str) == Some("request")
+                        && e.get("tid").and_then(Json::as_f64) == Some(tid)
+                }),
+                "request {id} span lost to the ring"
+            );
+        }
     }
 
     #[test]

@@ -1,8 +1,16 @@
 //! Fleet-aggregated serving metrics: per-replica snapshots plus a merged
 //! view (TTFT/TPOT percentiles over every replica's samples, total token
 //! throughput over the fleet makespan).
+//!
+//! Rejections are counted per [`RejectReason`] label so the Prometheus
+//! exposition can render one zero-filled
+//! `repro_fleet_rejected_reason_total{reason=...}` sample for every label
+//! in [`RejectReason::ALL_LABELS`] — a reason that never fires still
+//! exists as a series, which is what alerting rules need.
 
+use super::queue::RejectReason;
 use super::registry::{ReplicaRegistry, ReplicaState};
+use super::RejectedRequest;
 use crate::coordinator::{LatencyStat, ServeMetrics};
 
 /// One replica's end-of-run snapshot.
@@ -26,6 +34,10 @@ pub struct FleetMetrics {
     /// Every replica's counters and latency samples folded together.
     pub merged: ServeMetrics,
     pub rejected: usize,
+    /// `rejected` split by [`RejectReason::label`], indexed in
+    /// [`RejectReason::ALL_LABELS`] order (zero-filled: every label has a
+    /// slot whether or not it fired).
+    pub rejected_by_reason: [usize; RejectReason::ALL_LABELS.len()],
     /// Deepest the fleet backlog queue got.
     pub queued_peak: usize,
     /// Latest replica clock — the virtual wall time of the whole run.
@@ -33,7 +45,18 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
-    pub fn collect(registry: &ReplicaRegistry, rejected: usize, queued_peak: usize) -> Self {
+    pub fn collect(
+        registry: &ReplicaRegistry,
+        rejected: &[RejectedRequest],
+        queued_peak: usize,
+    ) -> Self {
+        let mut rejected_by_reason = [0usize; RejectReason::ALL_LABELS.len()];
+        for r in rejected {
+            let label = r.reason.label();
+            if let Some(i) = RejectReason::ALL_LABELS.iter().position(|l| *l == label) {
+                rejected_by_reason[i] += 1;
+            }
+        }
         let mut replicas = Vec::with_capacity(registry.len());
         let mut makespan: f64 = 0.0;
         for e in registry.entries() {
@@ -59,7 +82,8 @@ impl FleetMetrics {
         FleetMetrics {
             replicas,
             merged,
-            rejected,
+            rejected: rejected.len(),
+            rejected_by_reason,
             queued_peak,
             makespan_s: makespan,
         }
@@ -116,6 +140,26 @@ impl FleetMetrics {
                 self.merged.pool_occupancy_peak,
             ));
         }
+        if self.merged.preemptions > 0 {
+            s.push_str(&format!(
+                "\noverload: preemptions={} swapped_out={} swapped_in={} \
+                 host_swap_bytes={} recompute_resumes={}",
+                self.merged.preemptions,
+                self.merged.swapped_out_blocks,
+                self.merged.swapped_in_blocks,
+                self.merged.host_swap_bytes,
+                self.merged.recompute_resumes,
+            ));
+        }
+        if self.rejected > 0 {
+            let split: Vec<String> = RejectReason::ALL_LABELS
+                .iter()
+                .zip(self.rejected_by_reason)
+                .filter(|(_, n)| *n > 0)
+                .map(|(l, n)| format!("{l}={n}"))
+                .collect();
+            s.push_str(&format!("\nrejections: {}", split.join(" ")));
+        }
         if self.merged.trace_events_dropped > 0 {
             s.push_str(&format!(
                 "\nwarning: trace ring buffer dropped {} events across the fleet \
@@ -135,6 +179,14 @@ impl FleetMetrics {
         s.push_str(&format!("repro_fleet_replicas {}\n", self.replicas.len()));
         s.push_str("# TYPE repro_fleet_rejected_total counter\n");
         s.push_str(&format!("repro_fleet_rejected_total {}\n", self.rejected));
+        // Zero-filled per-reason split: every RejectReason label exists as
+        // a series even when it never fired this run.
+        s.push_str("# TYPE repro_fleet_rejected_reason_total counter\n");
+        for (label, n) in RejectReason::ALL_LABELS.iter().zip(self.rejected_by_reason) {
+            s.push_str(&format!(
+                "repro_fleet_rejected_reason_total{{reason=\"{label}\"}} {n}\n"
+            ));
+        }
         s.push_str("# TYPE repro_fleet_queued_peak gauge\n");
         s.push_str(&format!("repro_fleet_queued_peak {}\n", self.queued_peak));
         s.push_str("# TYPE repro_fleet_makespan_seconds gauge\n");
@@ -149,15 +201,25 @@ impl FleetMetrics {
 
     /// One JSON object per (replicas, policy) cell — the fig_d bench rows.
     pub fn json_row(&self, replicas: usize, policy: &str, requests: usize) -> String {
+        self.json_row_fig("fig_d_fleet_scaling", replicas, policy, requests)
+    }
+
+    /// [`Self::json_row`] with the figure id as a parameter, so overload
+    /// benches (fig_overload) share one emitter — and one declared schema
+    /// — with fleet scaling instead of forking the row format.
+    pub fn json_row_fig(&self, fig: &str, replicas: usize, policy: &str, requests: usize) -> String {
         format!(
-            "{{\"fig\":\"fig_d_fleet_scaling\",\"replicas\":{},\"policy\":\"{}\",\
+            "{{\"fig\":\"{}\",\"replicas\":{},\"policy\":\"{}\",\
              \"requests\":{},\"completed\":{},\"rejected\":{},\"generated_tokens\":{},\
              \"makespan_s\":{:.6},\"throughput_tok_s\":{:.3},\
              \"ttft_p50_ms\":{:.4},\"ttft_p95_ms\":{:.4},\"ttft_p99_ms\":{:.4},\
              \"tpot_p50_ms\":{:.5},\"tpot_p95_ms\":{:.5},\"tpot_p99_ms\":{:.5},\
              \"prefix_hits\":{},\"prefix_hit_tokens\":{},\
              \"mfu_mean\":{:.6},\"pool_occupancy_peak\":{:.6},\
-             \"trace_events_dropped\":{}}}",
+             \"trace_events_dropped\":{},\
+             \"preemptions\":{},\"swapped_out_blocks\":{},\"swapped_in_blocks\":{},\
+             \"host_swap_bytes\":{},\"recompute_resumes\":{}}}",
+            fig,
             replicas,
             policy,
             requests,
@@ -177,6 +239,11 @@ impl FleetMetrics {
             self.merged.mfu.mean_s(),
             self.merged.pool_occupancy_peak,
             self.merged.trace_events_dropped,
+            self.merged.preemptions,
+            self.merged.swapped_out_blocks,
+            self.merged.swapped_in_blocks,
+            self.merged.host_swap_bytes,
+            self.merged.recompute_resumes,
         )
     }
 }
@@ -186,20 +253,37 @@ mod tests {
     use super::*;
     use crate::util::json::Json;
 
+    fn rejections(reasons: &[RejectReason]) -> Vec<RejectedRequest> {
+        reasons
+            .iter()
+            .enumerate()
+            .map(|(i, r)| RejectedRequest {
+                id: i as u64,
+                reason: r.clone(),
+            })
+            .collect()
+    }
+
     #[test]
     fn empty_registry_yields_zeroes() {
         let reg = ReplicaRegistry::new();
-        let fm = FleetMetrics::collect(&reg, 0, 0);
+        let fm = FleetMetrics::collect(&reg, &[], 0);
         assert!(fm.replicas.is_empty());
         assert_eq!(fm.merged.generated_tokens, 0);
         assert_eq!(fm.throughput_tok_s(), 0.0);
+        assert_eq!(fm.rejected_by_reason, [0; RejectReason::ALL_LABELS.len()]);
         assert!(fm.report().contains("fleet:"));
+        assert!(!fm.report().contains("rejections:"));
     }
 
     #[test]
     fn json_row_parses_back() {
         let reg = ReplicaRegistry::new();
-        let fm = FleetMetrics::collect(&reg, 2, 5);
+        let rej = rejections(&[
+            RejectReason::QueueFull { capacity: 8 },
+            RejectReason::NoReplicas,
+        ]);
+        let fm = FleetMetrics::collect(&reg, &rej, 5);
         let row = fm.json_row(4, "least_outstanding", 64);
         let j = Json::parse(&row).expect("bench row must be valid JSON");
         assert_eq!(j.get("replicas").and_then(Json::as_f64), Some(4.0));
@@ -215,12 +299,32 @@ mod tests {
             Some(0.0)
         );
         assert!(j.get("pool_occupancy_peak").is_some());
+        // Overload counters ride along too (ISSUE 9).
+        for key in [
+            "preemptions",
+            "swapped_out_blocks",
+            "swapped_in_blocks",
+            "host_swap_bytes",
+            "recompute_resumes",
+        ] {
+            assert_eq!(j.get(key).and_then(Json::as_f64), Some(0.0), "{key}");
+        }
+        // The parameterized-figure emitter only swaps the fig id.
+        let over = fm.json_row_fig("fig_overload", 1, "auto", 64);
+        let jo = Json::parse(&over).expect("fig row must be valid JSON");
+        assert_eq!(jo.get("fig").and_then(Json::as_str), Some("fig_overload"));
+        assert_eq!(jo.get("policy").and_then(Json::as_str), Some("auto"));
     }
 
     #[test]
     fn prometheus_includes_fleet_families_and_drop_warning() {
         let reg = ReplicaRegistry::new();
-        let mut fm = FleetMetrics::collect(&reg, 3, 7);
+        let rej = rejections(&[
+            RejectReason::QueueFull { capacity: 4 },
+            RejectReason::QueueFull { capacity: 4 },
+            RejectReason::KvExhausted { needed_tokens: 99 },
+        ]);
+        let mut fm = FleetMetrics::collect(&reg, &rej, 7);
         let prom = fm.render_prometheus();
         for needle in [
             "repro_fleet_replicas 0",
@@ -229,12 +333,49 @@ mod tests {
             "repro_fleet_makespan_seconds",
             "repro_fleet_throughput_tokens_per_second",
             "repro_ttft_seconds_count",
+            // Fired reasons carry their counts...
+            "repro_fleet_rejected_reason_total{reason=\"queue_full\"} 2",
+            "repro_fleet_rejected_reason_total{reason=\"kv_exhausted\"} 1",
         ] {
             assert!(prom.contains(needle), "missing {needle:?} in:\n{prom}");
         }
-        assert!(!fm.report().contains("warning:"));
+        // ...and every label that never fired is still a zero-filled series.
+        for label in RejectReason::ALL_LABELS {
+            assert!(
+                prom.contains(&format!(
+                    "repro_fleet_rejected_reason_total{{reason=\"{label}\"}} "
+                )),
+                "missing zero-filled series for {label:?} in:\n{prom}"
+            );
+        }
+        let rep = fm.report();
+        assert!(!rep.contains("warning:"));
+        assert!(
+            rep.contains("rejections: queue_full=2 kv_exhausted=1"),
+            "{rep}"
+        );
         fm.merged.trace_events_dropped = 41;
         let rep = fm.report();
         assert!(rep.contains("warning:") && rep.contains("41"), "{rep}");
+    }
+
+    #[test]
+    fn report_surfaces_preemption_counters_when_present() {
+        let reg = ReplicaRegistry::new();
+        let mut fm = FleetMetrics::collect(&reg, &[], 0);
+        assert!(!fm.report().contains("overload:"));
+        fm.merged.preemptions = 4;
+        fm.merged.swapped_out_blocks = 12;
+        fm.merged.swapped_in_blocks = 12;
+        fm.merged.host_swap_bytes = 65_536;
+        fm.merged.recompute_resumes = 1;
+        let rep = fm.report();
+        assert!(
+            rep.contains(
+                "overload: preemptions=4 swapped_out=12 swapped_in=12 \
+                 host_swap_bytes=65536 recompute_resumes=1"
+            ),
+            "{rep}"
+        );
     }
 }

@@ -444,7 +444,7 @@ impl FleetRouter {
             }
             break;
         }
-        let metrics = FleetMetrics::collect(&self.registry, self.rejected.len(), self.queue.peak());
+        let metrics = FleetMetrics::collect(&self.registry, &self.rejected, self.queue.peak());
         Ok(FleetRunReport {
             outputs,
             rejected: std::mem::take(&mut self.rejected),

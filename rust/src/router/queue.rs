@@ -59,6 +59,19 @@ pub enum RejectReason {
 }
 
 impl RejectReason {
+    /// Every label [`RejectReason::label`] can produce, in a fixed order —
+    /// the source of truth for zero-filled Prometheus counter families, so
+    /// a new variant cannot ship without a corresponding family (the
+    /// exhaustiveness test pins this list against the enum).
+    pub const ALL_LABELS: [&'static str; 6] = [
+        "queue_full",
+        "kv_exhausted",
+        "prompt_too_long",
+        "no_replicas",
+        "unroutable",
+        "replica_failed",
+    ];
+
     pub fn label(&self) -> &'static str {
         match self {
             RejectReason::QueueFull { .. } => "queue_full",
@@ -110,10 +123,24 @@ impl FleetQueue {
         self.q.pop_front()
     }
 
-    /// Return a popped-but-unplaced request to the head. No capacity
-    /// check: it already held a slot.
+    /// Return a popped-but-unplaced request to the head.
+    ///
+    /// The request held a slot when it was popped, but new pushes may have
+    /// refilled the queue since — so the capacity invariant is re-checked
+    /// (debug builds assert it; callers must re-queue before accepting new
+    /// pushes) and `peak` is updated like every other enqueue. Skipping
+    /// both here let the backlog silently exceed `capacity` and made the
+    /// saturation signal undercount exactly when the overload benches read
+    /// it. The request is never dropped: it was already admitted, and
+    /// losing it would violate the zero-lost-requests contract.
     pub fn push_front(&mut self, tr: TimedRequest) {
+        debug_assert!(
+            self.q.len() < self.capacity,
+            "push_front would exceed capacity {} — re-queue before accepting new pushes",
+            self.capacity
+        );
         self.q.push_front(tr);
+        self.peak = self.peak.max(self.q.len());
     }
 
     pub fn len(&self) -> usize {
@@ -160,10 +187,60 @@ mod tests {
     }
 
     #[test]
+    fn push_front_after_pop_and_push_keeps_peak_and_capacity_honest() {
+        // The pop → push → push_front interleaving that used to corrupt
+        // the accounting: a popped request is returned to the head after a
+        // new arrival took its slot's worth of headroom.
+        let mut q = FleetQueue::new(4);
+        assert!(q.push(tr(0)).is_none());
+        assert!(q.push(tr(1)).is_none());
+        assert_eq!(q.peak(), 2);
+        let popped = q.pop().unwrap();
+        assert_eq!(popped.req.id, 0);
+        assert!(q.push(tr(2)).is_none());
+        assert!(q.push(tr(3)).is_none()); // len back to 3
+        q.push_front(popped);
+        // FIFO order restored with the returned request at the head …
+        assert_eq!(q.front().unwrap().req.id, 0);
+        assert_eq!(q.len(), 4);
+        // … and the saturation signal saw the true depth (the old
+        // push_front left peak at 3).
+        assert_eq!(q.peak(), 4, "push_front must update peak");
+        assert!(q.len() <= q.capacity(), "capacity invariant");
+        assert_eq!(q.push(tr(4)).map(|t| t.req.id), Some(4), "full queue bounces");
+    }
+
+    #[test]
     fn reject_reason_labels() {
         assert_eq!(RejectReason::QueueFull { capacity: 8 }.label(), "queue_full");
         assert_eq!(RejectReason::KvExhausted { needed_tokens: 9 }.label(), "kv_exhausted");
         assert_eq!(RejectReason::PromptTooLong { prompt_len: 4 }.label(), "prompt_too_long");
         assert_eq!(RejectReason::NoReplicas.label(), "no_replicas");
+        assert_eq!(RejectReason::Unroutable.label(), "unroutable");
+        assert_eq!(RejectReason::ReplicaFailed { replica: 3 }.label(), "replica_failed");
+    }
+
+    #[test]
+    fn every_label_is_declared_exactly_once() {
+        // ALL_LABELS drives the zero-filled Prometheus reject families;
+        // every constructible variant's label must appear in it exactly
+        // once (a new variant that misses this list fails here).
+        let variants = [
+            RejectReason::QueueFull { capacity: 1 },
+            RejectReason::KvExhausted { needed_tokens: 1 },
+            RejectReason::PromptTooLong { prompt_len: 1 },
+            RejectReason::NoReplicas,
+            RejectReason::Unroutable,
+            RejectReason::ReplicaFailed { replica: 0 },
+        ];
+        assert_eq!(variants.len(), RejectReason::ALL_LABELS.len());
+        for v in &variants {
+            assert_eq!(
+                RejectReason::ALL_LABELS.iter().filter(|l| **l == v.label()).count(),
+                1,
+                "label {:?} must appear exactly once in ALL_LABELS",
+                v.label()
+            );
+        }
     }
 }

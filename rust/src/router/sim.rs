@@ -20,19 +20,33 @@
 //! so the byte contract stays exact end to end. Warm prompts pay the
 //! chunked-tail prefill time ([`chunked_prefill_time_s`]) instead of the
 //! full bucket.
+//!
+//! Under overload (ISSUE 9) the replica preempts instead of queueing
+//! forever behind a full pool: when admission or decode growth would
+//! exhaust the blocks, the least-recently-scheduled victim yields its
+//! residency — its blocks move to a byte-budgeted host tier
+//! ([`HostTier`], swap) or are dropped for a chunked re-prefill
+//! (recompute); `auto` prices the PCIe round trip
+//! ([`Device::host_transfer_time_s`]) against the re-prefill and takes
+//! the cheaper path. Preempted sequences resume FIFO, strictly ahead of
+//! new arrivals, and resumption never preempts anyone else. With the
+//! tier off (`host_kv_bytes == 0`, the default) admission charges the
+//! full lifetime footprint up front and behavior is bit-identical to the
+//! pre-tier replica.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::coordinator::{
-    chunk_spans, warm_admittable_without_bucket, warm_start_pays, BlockAllocator, PrefixCache,
-    PrefixCacheConfig, Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
+    chunk_spans, select_preemption_victim, warm_admittable_without_bucket, warm_start_pays,
+    BlockAllocator, HostTier, PreemptCandidate, PreemptPolicy, PrefixCache, PrefixCacheConfig,
+    Request, RequestId, RequestOutput, SchedulePolicy, Scheduler, ServeMetrics,
 };
 use crate::gaudisim::{
-    chunked_prefill_report, decode_group_report_paged, decode_step_tflops_dense,
-    kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, Device, E2eConfig, MemoryModel,
-    ScalingKind,
+    chunked_prefill_report, chunked_prefill_time_s, decode_group_report_paged,
+    decode_step_tflops_dense, kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, Device,
+    E2eConfig, MemoryModel, ScalingKind,
 };
 use crate::model::config::{ModelConfig, ModelFamily};
 use crate::obs::{Clock, StepStats, TraceEventKind, TraceRecorder};
@@ -71,6 +85,15 @@ pub struct SimReplicaConfig {
     /// default — the block-table-native path charges each slot's actual
     /// live blocks. For paged-vs-dense A/B comparisons only.
     pub dense_decode: bool,
+    /// Host-DRAM byte budget for the KV swap tier backing preemption
+    /// (ISSUE 9). `0.0` disables the tier entirely: admission then
+    /// charges the full lifetime footprint up front and the replica
+    /// never preempts — bit-identical to the pre-tier replica.
+    pub host_kv_bytes: f64,
+    /// How preempted sequences resume: always swap through the host
+    /// tier, always re-prefill chunked, or price both and take the
+    /// cheaper (`Auto`). Irrelevant while `host_kv_bytes == 0`.
+    pub preempt_policy: PreemptPolicy,
     pub prefill_seqs: Vec<usize>,
     pub decode_batches: Vec<usize>,
 }
@@ -94,6 +117,8 @@ impl SimReplicaConfig {
             prefix_cache: false,
             prefill_chunk: 0,
             dense_decode: false,
+            host_kv_bytes: 0.0,
+            preempt_policy: PreemptPolicy::Auto,
             prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
             decode_batches: vec![1, 2, 4, 8],
         }
@@ -112,6 +137,8 @@ impl SimReplicaConfig {
             prefix_cache: false,
             prefill_chunk: 0,
             dense_decode: false,
+            host_kv_bytes: 0.0,
+            preempt_policy: PreemptPolicy::Auto,
             prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
             decode_batches: vec![1, 8, 16, 32, 64, 128],
         }
@@ -134,6 +161,27 @@ struct SimActive {
     blocks: usize,
     /// Current context length (prompt + generated), drives KV-read cost.
     context: usize,
+    /// Virtual-clock stamp of the last decode step (or admission) that
+    /// scheduled this sequence — preemption victims are picked
+    /// least-recently-scheduled first.
+    last_scheduled_s: f64,
+}
+
+/// How a specific preempted sequence gets back on the device — fixed at
+/// preempt time so the accounting (host budget, transfer spans) matches
+/// the decision the policy actually took.
+enum ResumeMode {
+    /// `blocks` are parked in the host tier; resume re-allocates them and
+    /// pays the PCIe transfer back.
+    SwapIn { blocks: usize },
+    /// Blocks were dropped; resume re-prefills the full context chunked,
+    /// warming back through whatever prefix is still cached.
+    Recompute,
+}
+
+struct PreemptedSeq {
+    a: SimActive,
+    resume: ResumeMode,
 }
 
 pub struct SimReplica {
@@ -144,6 +192,13 @@ pub struct SimReplica {
     prefix: Option<PrefixCache>,
     queue: VecDeque<(Request, f64)>,
     active: Vec<SimActive>,
+    /// Sequences preempted off the device, FIFO; resumed strictly ahead
+    /// of new arrivals.
+    preempted: VecDeque<PreemptedSeq>,
+    /// Host-DRAM swap tier (`None` = preemption disabled). The sim
+    /// models transfers on the virtual clock without materializing
+    /// bytes, so payloads are `()`.
+    host: Option<HostTier<()>>,
     now_s: f64,
     metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
@@ -186,6 +241,15 @@ impl SimReplica {
             cfg.prefill_seqs.clone(),
             cfg.decode_batches.clone(),
         );
+        let host = if cfg.host_kv_bytes > 0.0 {
+            Some(HostTier::new(
+                cfg.host_kv_bytes as usize,
+                &cfg.e2e.model.kv_layout(cfg.kv_dtype),
+                cfg.block_tokens,
+            ))
+        } else {
+            None
+        };
         Ok(Self {
             label: label.to_string(),
             cfg,
@@ -194,6 +258,8 @@ impl SimReplica {
             prefix,
             queue: VecDeque::new(),
             active: Vec::new(),
+            preempted: VecDeque::new(),
+            host,
             now_s: 0.0,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
@@ -208,6 +274,52 @@ impl SimReplica {
     /// The replica's prefix cache, when enabled.
     pub fn prefix_cache(&self) -> Option<&PrefixCache> {
         self.prefix.as_ref()
+    }
+
+    /// The host swap tier, when preemption is enabled.
+    pub fn host_tier(&self) -> Option<&HostTier<()>> {
+        self.host.as_ref()
+    }
+
+    /// The cached prompt paths — the hot subtrees a host-tier-persisted
+    /// cache carries across a replica restart (ISSUE 9). Pair with
+    /// [`Self::restore_prefixes`] on the replacement replica.
+    pub fn snapshot_prefixes(&self) -> Vec<Vec<i32>> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| p.hot_paths())
+    }
+
+    /// Seed this (fresh) replica's prefix cache from a snapshot, charging
+    /// the pool at the usual block rate. Paths that no longer fit are
+    /// skipped. Returns the tokens restored.
+    pub fn restore_prefixes(&mut self, paths: &[Vec<i32>]) -> usize {
+        let bt = self.cfg.block_tokens;
+        let mut tokens = 0usize;
+        for path in paths {
+            let Some(pc) = self.prefix.as_mut() else {
+                break;
+            };
+            let aligned = path.len() - path.len() % bt;
+            let new = aligned.saturating_sub(pc.lookup(path));
+            if new == 0 || !self.alloc.can_allocate_blocks(new / bt) {
+                continue;
+            }
+            let rep = pc.insert(path);
+            if rep.evicted_blocks > 0 {
+                self.metrics.prefix_evicted_blocks += rep.evicted_blocks as u64;
+                self.alloc
+                    .release(rep.evicted_blocks)
+                    // lint:allow(no-unwrap-in-lib): the allocator accounted these blocks to the cache; release cannot underflow
+                    .expect("evicted cache blocks return to the pool");
+            }
+            if rep.new_tokens > 0 {
+                self.alloc
+                    .allocate_blocks(rep.new_tokens / bt)
+                    // lint:allow(no-unwrap-in-lib): headroom for the whole path was checked before the insert
+                    .expect("restore charged within checked headroom");
+                tokens += rep.new_tokens;
+            }
+        }
+        tokens
     }
 
     /// Complete a request that can never run here with an empty output
@@ -238,6 +350,15 @@ impl SimReplica {
     /// Admit at most one queued request (the engine's one-prefill-per-step
     /// interleave). Returns whether anything happened.
     fn admit_one_prefill(&mut self) -> bool {
+        if self.resume_one_preempted() {
+            return true;
+        }
+        if !self.preempted.is_empty() {
+            // Preempted sequences hold strict re-admission priority:
+            // admitting new arrivals past them would starve them behind
+            // an endless arrival stream.
+            return false;
+        }
         if self.active.len() >= self.cfg.slots {
             return false;
         }
@@ -274,29 +395,22 @@ impl SimReplica {
                 return true;
             }
         }
-        let need_blocks = total_need - cached / bt;
-        if !self.alloc.can_allocate_blocks(need_blocks) {
-            // Reclaim refcount-0 cached blocks before giving up.
-            if let Some(p) = self.prefix.as_mut() {
-                let shortfall = need_blocks - self.alloc.free_blocks();
-                let freed = p.evict_blocks(shortfall);
-                if freed > 0 {
-                    self.metrics.prefix_evicted_blocks += freed as u64;
-                    self.alloc
-                        .release(freed)
-                        // lint:allow(no-unwrap-in-lib): the allocator accounted these blocks to the cache; release cannot underflow
-                        .expect("evicted cache blocks return to the pool");
-                    if let Some(tr) = self.trace.as_mut() {
-                        tr.record_at(
-                            self.now_s,
-                            None,
-                            TraceEventKind::Evict {
-                                blocks: freed as u64,
-                            },
-                        );
-                    }
-                }
-            }
+        // With the host tier on, admission charges only the resident
+        // prefill footprint (prompt + first token); generation then grows
+        // block-by-block, preempting under pressure. Tier off keeps the
+        // legacy whole-lifetime charge.
+        let resident_need = if self.host.is_some() {
+            self.alloc.blocks_for(prompt_len + 1)
+        } else {
+            total_need
+        };
+        let need_blocks = resident_need - cached / bt;
+        // Reclaim refcount-0 cached blocks before anything drastic.
+        self.evict_cache_for(need_blocks);
+        if !self.alloc.can_allocate_blocks(need_blocks) && self.host.is_some() {
+            // Overload: take residency from the least-recently-scheduled
+            // victim instead of queueing behind a full pool.
+            self.preempt_until(need_blocks, None);
         }
         if !self.alloc.can_allocate_blocks(need_blocks) {
             // Blocks will free as active requests retire: wait.
@@ -428,8 +542,306 @@ impl SimReplica {
             first_token_s: self.now_s,
             blocks: private_blocks,
             context: prompt_len + 1,
+            last_scheduled_s: self.now_s,
         });
         true
+    }
+
+    /// Reclaim refcount-0 cached blocks until `need` blocks are
+    /// allocatable (or nothing evictable remains).
+    fn evict_cache_for(&mut self, need: usize) {
+        if self.alloc.can_allocate_blocks(need) {
+            return;
+        }
+        if let Some(p) = self.prefix.as_mut() {
+            let shortfall = need - self.alloc.free_blocks();
+            let freed = p.evict_blocks(shortfall);
+            if freed > 0 {
+                self.metrics.prefix_evicted_blocks += freed as u64;
+                self.alloc
+                    .release(freed)
+                    // lint:allow(no-unwrap-in-lib): the allocator accounted these blocks to the cache; release cannot underflow
+                    .expect("evicted cache blocks return to the pool");
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record_at(
+                        self.now_s,
+                        None,
+                        TraceEventKind::Evict {
+                            blocks: freed as u64,
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    /// Preempt victims — least-recently-scheduled first, fewest generated
+    /// tokens as the tiebreak — until `need` blocks are allocatable or no
+    /// victim remains. `protect` shields the sequence whose growth is
+    /// being served from eviction by its own demand; victims' cache pins
+    /// are released as they leave, so the next eviction pass can reclaim
+    /// the blocks they were holding.
+    fn preempt_until(&mut self, need: usize, protect: Option<RequestId>) {
+        loop {
+            self.evict_cache_for(need);
+            if self.alloc.can_allocate_blocks(need) {
+                return;
+            }
+            let cands: Vec<PreemptCandidate> = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| Some(a.id) != protect)
+                .filter(|(_, a)| a.blocks > 0 || a.cache_tokens > 0)
+                .map(|(idx, a)| PreemptCandidate {
+                    idx,
+                    idle_s: self.now_s - a.last_scheduled_s,
+                    generated: a.generated,
+                })
+                .collect();
+            let Some(victim) = select_preemption_victim(&cands) else {
+                return;
+            };
+            self.preempt_active(victim);
+        }
+    }
+
+    /// Evict one active sequence from the device. Its cache pins are
+    /// released (a recompute resume warms back through whatever is still
+    /// cached), its private blocks either move to the host tier (swap) or
+    /// are dropped (recompute), and it joins the FIFO resume queue.
+    fn preempt_active(&mut self, idx: usize) {
+        let mut a = self.active.swap_remove(idx);
+        if a.cache_tokens > 0 {
+            if let Some(p) = self.prefix.as_mut() {
+                p.release(&a.prompt, a.cache_tokens);
+            }
+            a.cache_tokens = 0;
+        }
+        let blocks = a.blocks;
+        let mut swap = false;
+        let mut bytes = 0usize;
+        if let Some(host) = self.host.as_mut() {
+            bytes = blocks * host.block_bytes();
+            let wants_swap = blocks > 0
+                && match self.cfg.preempt_policy {
+                    PreemptPolicy::Swap => true,
+                    PreemptPolicy::Recompute => false,
+                    // The round trip over the host link vs re-running the
+                    // chunked prefill of the whole context.
+                    PreemptPolicy::Auto => {
+                        2.0 * self.cfg.e2e.device.host_transfer_time_s(bytes as f64)
+                            < chunked_prefill_time_s(
+                                &self.cfg.e2e,
+                                a.context,
+                                0,
+                                self.cfg.prefill_chunk,
+                            )
+                    }
+                };
+            swap = wants_swap && host.store(a.id, blocks, ());
+        }
+        if blocks > 0 {
+            self.alloc
+                .release(blocks)
+                // lint:allow(no-unwrap-in-lib): a preempted sequence frees exactly the blocks its admission and growth charged
+                .expect("preempt releases exactly the blocks it held");
+            a.blocks = 0;
+        }
+        self.metrics.preemptions += 1;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record_at(
+                self.now_s,
+                Some(a.id),
+                TraceEventKind::Preempt {
+                    blocks: blocks as u64,
+                    swap,
+                },
+            );
+        }
+        if swap {
+            self.metrics.swapped_out_blocks += blocks as u64;
+            self.metrics.host_swap_bytes += bytes as u64;
+            let t = self.cfg.e2e.device.host_transfer_time_s(bytes as f64);
+            let start = self.now_s;
+            self.now_s += t;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record_span(
+                    Some(a.id),
+                    start,
+                    t,
+                    TraceEventKind::SwapOut {
+                        blocks: blocks as u64,
+                        bytes: bytes as u64,
+                    },
+                );
+            }
+            self.preempted.push_back(PreemptedSeq {
+                a,
+                resume: ResumeMode::SwapIn { blocks },
+            });
+        } else {
+            self.preempted.push_back(PreemptedSeq {
+                a,
+                resume: ResumeMode::Recompute,
+            });
+        }
+    }
+
+    /// Try to put the oldest preempted sequence back on the device.
+    /// Resumption never preempts anyone else (two sequences trading
+    /// residency would livelock); it waits for organic headroom.
+    fn resume_one_preempted(&mut self) -> bool {
+        if self.preempted.is_empty() || self.active.len() >= self.cfg.slots {
+            return false;
+        }
+        let bt = self.cfg.block_tokens;
+        let Some(PreemptedSeq { mut a, resume }) = self.preempted.pop_front() else {
+            return false;
+        };
+        match resume {
+            ResumeMode::SwapIn { blocks } => {
+                self.evict_cache_for(blocks);
+                if !self.alloc.can_allocate_blocks(blocks) {
+                    self.preempted.push_front(PreemptedSeq {
+                        a,
+                        resume: ResumeMode::SwapIn { blocks },
+                    });
+                    return false;
+                }
+                self.alloc
+                    .allocate_blocks(blocks)
+                    // lint:allow(no-unwrap-in-lib): availability just checked
+                    .expect("availability just checked");
+                let mut bytes = 0usize;
+                if let Some(host) = self.host.as_mut() {
+                    if host.take(a.id).is_some() {
+                        bytes = blocks * host.block_bytes();
+                    }
+                }
+                let t = self.cfg.e2e.device.host_transfer_time_s(bytes as f64);
+                let start = self.now_s;
+                self.now_s += t;
+                self.metrics.swapped_in_blocks += blocks as u64;
+                self.metrics.host_swap_bytes += bytes as u64;
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record_span(
+                        Some(a.id),
+                        start,
+                        t,
+                        TraceEventKind::SwapIn {
+                            blocks: blocks as u64,
+                            bytes: bytes as u64,
+                        },
+                    );
+                }
+                a.blocks = blocks;
+            }
+            ResumeMode::Recompute => {
+                let cached = match self.prefix.as_mut() {
+                    Some(pc) => pc.acquire(&a.prompt),
+                    None => 0,
+                };
+                let need = self.alloc.blocks_for(a.context).saturating_sub(cached / bt);
+                self.evict_cache_for(need);
+                if !self.alloc.can_allocate_blocks(need) {
+                    if cached > 0 {
+                        if let Some(pc) = self.prefix.as_mut() {
+                            pc.release(&a.prompt, cached);
+                        }
+                    }
+                    self.preempted.push_front(PreemptedSeq {
+                        a,
+                        resume: ResumeMode::Recompute,
+                    });
+                    return false;
+                }
+                self.alloc
+                    .allocate_blocks(need)
+                    // lint:allow(no-unwrap-in-lib): availability just checked
+                    .expect("availability just checked");
+                // Re-prefill the full context (prompt + generated so
+                // far), chunked, warm over whatever is still cached.
+                let rep = chunked_prefill_report(
+                    &self.cfg.e2e,
+                    a.context,
+                    cached,
+                    self.cfg.prefill_chunk,
+                );
+                let t = rep.time_s;
+                let start = self.now_s;
+                self.now_s += t;
+                self.metrics.recompute_resumes += 1;
+                self.metrics.prefill_steps += 1;
+                self.metrics.prefill_time.record(t);
+                let step = StepStats {
+                    time_s: t,
+                    model_flops: rep.model_flops,
+                    kv_bytes_read: 0,
+                    pool_occupancy: self.alloc.utilization(),
+                };
+                let step_mfu = step.apply(&mut self.metrics, self.cfg.e2e.device.peak_fp8_tflops);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record_span(
+                        Some(a.id),
+                        start,
+                        t,
+                        TraceEventKind::PrefillChunk {
+                            tokens: a.context - cached,
+                            mfu: step_mfu,
+                        },
+                    );
+                }
+                a.cache_tokens = cached;
+                a.blocks = need;
+            }
+        }
+        a.last_scheduled_s = self.now_s;
+        self.active.push(a);
+        true
+    }
+
+    /// Tier-on decode pre-pass: every active sequence gets room for the
+    /// token this round appends, growing block-by-block and preempting
+    /// under pressure. A sequence that cannot take a block from anyone
+    /// else yields its own residency (self-preempt) and resumes once
+    /// blocks free up.
+    fn ensure_decode_headroom(&mut self) {
+        if self.host.is_none() {
+            return;
+        }
+        let bt = self.cfg.block_tokens;
+        let mut i = 0;
+        while i < self.active.len() {
+            let (id, need_extra) = {
+                let a = &self.active[i];
+                let private_need = self.alloc.blocks_for(a.context + 1) - a.cache_tokens / bt;
+                (a.id, private_need.saturating_sub(a.blocks))
+            };
+            if need_extra == 0 {
+                i += 1;
+                continue;
+            }
+            self.evict_cache_for(need_extra);
+            if !self.alloc.can_allocate_blocks(need_extra) {
+                self.preempt_until(need_extra, Some(id));
+            }
+            if self.alloc.can_allocate_blocks(need_extra) {
+                self.alloc
+                    .allocate_blocks(need_extra)
+                    // lint:allow(no-unwrap-in-lib): availability just checked
+                    .expect("availability just checked");
+                if let Some(a) = self.active.iter_mut().find(|a| a.id == id) {
+                    a.blocks += need_extra;
+                }
+            } else if let Some(idx) = self.active.iter().position(|a| a.id == id) {
+                self.preempt_active(idx);
+            }
+            // Preemption swap_removes victims: indices shifted, rescan.
+            // Terminates — each pass either grows a sequence (its demand
+            // drops to zero) or removes one from `active`.
+            i = 0;
+        }
     }
 
     /// One decode step for every active request, split into compiled batch
@@ -444,6 +856,11 @@ impl SimReplica {
     fn decode_round(&mut self) -> bool {
         if self.active.is_empty() {
             return false;
+        }
+        self.ensure_decode_headroom();
+        if self.active.is_empty() {
+            // Everyone yielded residency; preemption was the progress.
+            return true;
         }
         let groups: Vec<Vec<usize>> = if self.cfg.dense_decode {
             let slots_ctx: Vec<(usize, usize)> = (0..self.active.len())
@@ -510,6 +927,7 @@ impl SimReplica {
                     let a = &mut self.active[i];
                     a.generated += 1;
                     a.context += 1;
+                    a.last_scheduled_s = self.now_s;
                 }
                 self.metrics.generated_tokens += 1;
                 self.metrics.tpot.record(t);
@@ -578,7 +996,7 @@ impl ReplicaHandle for SimReplica {
     }
 
     fn advance_clock_to(&mut self, t_s: f64) {
-        if self.active.is_empty() && self.queue.is_empty() {
+        if self.active.is_empty() && self.queue.is_empty() && self.preempted.is_empty() {
             self.now_s = self.now_s.max(t_s);
         }
     }
@@ -587,8 +1005,10 @@ impl ReplicaHandle for SimReplica {
         self.queue.len()
     }
 
+    /// Preempted sequences count as active: they are accepted, resident
+    /// work the replica still owes (and `has_work` must keep stepping).
     fn active(&self) -> usize {
-        self.active.len()
+        self.active.len() + self.preempted.len()
     }
 
     fn outstanding_tokens(&self) -> usize {
@@ -602,7 +1022,12 @@ impl ReplicaHandle for SimReplica {
             .iter()
             .map(|a| a.prompt.len() + a.max_new.saturating_sub(a.generated))
             .sum();
-        queued + resident
+        let parked: usize = self
+            .preempted
+            .iter()
+            .map(|p| p.a.prompt.len() + p.a.max_new.saturating_sub(p.a.generated))
+            .sum();
+        queued + resident + parked
     }
 
     fn queue_capacity(&self) -> usize {
@@ -678,6 +1103,14 @@ impl ReplicaHandle for SimReplica {
                 }
             }
             ids.push(a.id);
+        }
+        for p in self.preempted.drain(..) {
+            // Preempted sequences hold no pool blocks and no cache pins;
+            // a swap record just vacates its host-tier budget.
+            if let Some(host) = self.host.as_mut() {
+                host.take(p.a.id);
+            }
+            ids.push(p.a.id);
         }
         ids
     }
@@ -965,5 +1398,199 @@ mod tests {
             r.allocator().free_blocks() + held,
             r.allocator().total_blocks
         );
+    }
+
+    fn drain(r: &mut SimReplica) -> Vec<RequestOutput> {
+        let mut outs = Vec::new();
+        let mut guard = 0;
+        while r.has_work() {
+            r.step().unwrap();
+            outs.extend(r.take_finished());
+            guard += 1;
+            assert!(guard < 20_000, "replica wedged under preemption");
+        }
+        outs
+    }
+
+    #[test]
+    fn preemption_completes_overload_without_losing_requests() {
+        // 8 requests × blocks_for(32+32) = 4 blocks of lifetime footprint
+        // each, against a 10-block pool: the legacy up-front charge holds
+        // at most 3 concurrently; the tier admits on the prompt footprint
+        // and preempts its way through decode growth.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(10);
+        cfg.slots = 8;
+        cfg.host_kv_bytes = 1e9;
+        cfg.preempt_policy = PreemptPolicy::Swap;
+        let mut r = SimReplica::new("overload", cfg).unwrap();
+        for i in 0..8 {
+            assert!(r.submit(Request::new(i, vec![1; 32], 32), 0.0));
+        }
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 8, "zero lost requests under overload");
+        for o in &outs {
+            assert_eq!(o.tokens.len(), 32, "request {} lost tokens", o.id);
+        }
+        let m = r.metrics();
+        assert!(m.preemptions > 0, "a tight pool must preempt");
+        assert!(m.swapped_out_blocks > 0, "swap policy must use the tier");
+        assert_eq!(
+            m.swapped_in_blocks, m.swapped_out_blocks,
+            "every swapped-out block must come back"
+        );
+        assert!(m.host_swap_bytes > 0);
+        assert_eq!(m.recompute_resumes, 0, "swap policy never re-prefills");
+        // All state fully unwound.
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+        assert!(r.host_tier().unwrap().is_empty());
+    }
+
+    #[test]
+    fn recompute_policy_drops_blocks_and_reprefills() {
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(8);
+        cfg.slots = 6;
+        cfg.host_kv_bytes = 1e9;
+        cfg.preempt_policy = PreemptPolicy::Recompute;
+        let mut r = SimReplica::new("recompute", cfg).unwrap();
+        for i in 0..6 {
+            assert!(r.submit(Request::new(i, vec![2; 32], 24), 0.0));
+        }
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 6);
+        let m = r.metrics();
+        assert!(m.preemptions > 0);
+        assert!(m.recompute_resumes > 0, "recompute resumes must fire");
+        assert_eq!(m.swapped_out_blocks, 0, "recompute never touches the tier");
+        assert_eq!(m.host_swap_bytes, 0);
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+        assert!(r.host_tier().unwrap().is_empty());
+    }
+
+    #[test]
+    fn auto_falls_back_to_recompute_when_the_tier_is_full() {
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(8);
+        cfg.slots = 6;
+        cfg.host_kv_bytes = 1.0; // a one-byte tier holds no block
+        cfg.preempt_policy = PreemptPolicy::Auto;
+        let mut r = SimReplica::new("tiny-tier", cfg).unwrap();
+        for i in 0..6 {
+            assert!(r.submit(Request::new(i, vec![3; 32], 24), 0.0));
+        }
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 6);
+        let m = r.metrics();
+        assert!(m.preemptions > 0);
+        assert_eq!(m.swapped_out_blocks, 0, "nothing fits a one-byte tier");
+        assert!(m.recompute_resumes > 0, "auto must fall back to recompute");
+    }
+
+    #[test]
+    fn auto_swaps_when_transfer_beats_reprefill_at_scale() {
+        // 70B geometry: a ~65-block (~170 MB) PCIe round trip costs ~10 ms
+        // while re-prefilling a 1k-token context costs >100 ms — auto must
+        // always choose the link.
+        let mut cfg = SimReplicaConfig::gaudi2_llama31_70b();
+        cfg.kv_blocks_override = Some(140);
+        cfg.slots = 4;
+        cfg.host_kv_bytes = 2e9;
+        cfg.preempt_policy = PreemptPolicy::Auto;
+        let mut r = SimReplica::new("auto70b", cfg).unwrap();
+        for i in 0..4 {
+            assert!(r.submit(Request::new(i, vec![7; 1024], 64), 0.0));
+        }
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 4);
+        let m = r.metrics();
+        assert!(m.preemptions > 0, "140 blocks cannot hold 4×69 residents");
+        assert!(m.swapped_out_blocks > 0);
+        assert_eq!(
+            m.recompute_resumes, 0,
+            "at 70B geometry the PCIe round trip always beats re-prefill"
+        );
+    }
+
+    #[test]
+    fn tier_off_never_preempts_and_stays_legacy_exact() {
+        // The same tight-pool workload with the tier off serializes via
+        // the legacy wait-for-retire path: zero preemption machinery.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(10);
+        cfg.slots = 8;
+        let mut r = SimReplica::new("legacy", cfg).unwrap();
+        for i in 0..8 {
+            assert!(r.submit(Request::new(i, vec![1; 32], 32), 0.0));
+        }
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 8);
+        let m = r.metrics();
+        assert_eq!(m.preemptions, 0);
+        assert_eq!(m.swapped_out_blocks + m.swapped_in_blocks, 0);
+        assert_eq!(m.host_swap_bytes, 0);
+        assert!(r.host_tier().is_none());
+    }
+
+    #[test]
+    fn prefix_snapshot_restores_warm_ttft_across_restart() {
+        let mut cfg = SimReplicaConfig::gaudi2_llama31_70b();
+        cfg.prefix_cache = true;
+        let mut r = SimReplica::new("gen0", cfg.clone()).unwrap();
+        let prompt = vec![3i32; 1024];
+        r.submit(Request::new(0, prompt.clone(), 4), 0.0);
+        let cold = drain(&mut r).remove(0);
+        let snap = r.snapshot_prefixes();
+        assert!(!snap.is_empty(), "the hot prompt must be exported");
+        // Restart: a fresh replica (new process, empty HBM) reloads the
+        // host-persisted subtrees and serves the repeat prompt warm.
+        let mut r2 = SimReplica::new("gen1", cfg).unwrap();
+        assert_eq!(r2.restore_prefixes(&snap), 1024);
+        assert_eq!(r2.cached_prefix_tokens(&prompt), 1024);
+        r2.submit(Request::new(1, prompt.clone(), 4), 0.0);
+        let warm = drain(&mut r2).remove(0);
+        assert!(
+            warm.ttft_s < cold.ttft_s / 2.0,
+            "restored cache must serve warm: {} vs {}",
+            warm.ttft_s,
+            cold.ttft_s
+        );
+        // The restored cache is pool-charged at the usual block rate.
+        let held = r2.prefix_cache().unwrap().cached_blocks();
+        assert_eq!(
+            r2.allocator().free_blocks() + held,
+            r2.allocator().total_blocks
+        );
+    }
+
+    #[test]
+    fn abort_under_preemption_reports_parked_ids_and_frees_everything() {
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.kv_blocks_override = Some(6);
+        cfg.slots = 4;
+        cfg.host_kv_bytes = 1e9;
+        cfg.preempt_policy = PreemptPolicy::Swap;
+        let mut r = SimReplica::new("abort", cfg).unwrap();
+        for i in 0..4 {
+            assert!(r.submit(Request::new(i, vec![4; 32], 32), 0.0));
+        }
+        // Step until something is parked in the tier.
+        let mut guard = 0;
+        while r.metrics().preemptions == 0 && r.has_work() {
+            r.step().unwrap();
+            guard += 1;
+            assert!(guard < 1000, "never preempted");
+        }
+        let preempted_now = r.preempted.len();
+        assert!(preempted_now > 0);
+        let mut ids = r.abort_active();
+        assert!(ids.len() >= preempted_now, "parked ids must be reported");
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no duplicate ids");
+        assert_eq!(r.active(), 0);
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+        assert!(r.host_tier().unwrap().is_empty());
     }
 }

@@ -5,7 +5,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{Engine, EngineConfig, SchedulePolicy};
+use crate::coordinator::{Engine, EngineConfig, PreemptPolicy, SchedulePolicy};
 use crate::eval::suite::{evaluate_model, paper_schemes, EvalConfig};
 use crate::eval::tables::render_accuracy_table;
 use crate::fp8::Fp8Format;
@@ -76,6 +76,12 @@ fn parse_kv_dtype(s: &str) -> Result<KvDtype> {
     })
 }
 
+/// `--preempt-policy swap|recompute|auto` spellings.
+fn parse_preempt_policy(s: &str) -> Result<PreemptPolicy> {
+    PreemptPolicy::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --preempt-policy {s:?} (swap|recompute|auto)"))
+}
+
 /// `--prefix-cache on|off` spellings.
 fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
     match s {
@@ -113,6 +119,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.prefix_cache_bytes = Some(args.get_f64("prefix-cache-mb", 64.0) * 1e6);
     }
     cfg.prefill_chunk = args.get_usize("prefill-chunk", 0);
+    // Host KV tier for slot preemption under overload (ISSUE 9);
+    // 0 GB (the default) keeps the legacy reject-only admission.
+    cfg.host_kv_bytes = args.get_f64("host-kv-gb", 0.0) * 1e9;
+    cfg.preempt_policy = parse_preempt_policy(&args.get("preempt-policy", "auto"))?;
     // Scoped-pool workers for the host-side paged KV hot path;
     // 0 = auto (REPRO_NUM_THREADS or the machine's parallelism).
     cfg.kv_parallelism = match args.get_usize("kv-workers", 0) {
@@ -185,6 +195,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// --model tiny|small|base|llama31-70b, --kv-dtype f32|bf16|fp8,
 /// --prefix-cache on|off (radix shared-prefix KV cache per replica),
 /// --prefill-chunk TOK (chunked-prefill tail granularity, 0 = one chunk),
+/// --host-kv-gb GB (host KV tier for preemption swap-outs, 0 = off),
+/// --preempt-policy swap|recompute|auto (how preempted sequences resume),
 /// --prompt-min/--prompt-max TOK, --max-new TOK, --seed N,
 /// --fleet-queue N, --json,
 /// --trace-out PATH (per-request Chrome trace-event timeline, Perfetto-
@@ -223,6 +235,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // routing and radix lookups agree on what "same prefix" means.
     sim_cfg.prefix_cache = parse_on_off("prefix-cache", &args.get("prefix-cache", "off"))?;
     sim_cfg.prefill_chunk = args.get_usize("prefill-chunk", 0);
+    // Host KV tier per replica: under overload the replica preempts and
+    // swaps instead of rejecting with KvExhausted (0 GB = legacy off).
+    sim_cfg.host_kv_bytes = args.get_f64("host-kv-gb", 0.0) * 1e9;
+    sim_cfg.preempt_policy = parse_preempt_policy(&args.get("preempt-policy", "auto"))?;
 
     let mut router = FleetRouter::new(FleetConfig {
         policy,
@@ -515,6 +531,37 @@ mod tests {
         .unwrap();
         cmd_fleet(&args).unwrap();
         let bad = Args::parse(&["fleet".into(), "--prefix-cache".into(), "maybe".into()]).unwrap();
+        assert!(cmd_fleet(&bad).is_err());
+    }
+
+    #[test]
+    fn preempt_flags_parse_and_run() {
+        assert_eq!(parse_preempt_policy("swap").unwrap(), PreemptPolicy::Swap);
+        assert_eq!(
+            parse_preempt_policy("recompute").unwrap(),
+            PreemptPolicy::Recompute
+        );
+        assert_eq!(parse_preempt_policy("auto").unwrap(), PreemptPolicy::Auto);
+        assert!(parse_preempt_policy("drop").is_err());
+        // Through the fleet path end to end with the host tier enabled.
+        let args = Args::parse(&[
+            "fleet".into(),
+            "--replicas".into(),
+            "1".into(),
+            "--requests".into(),
+            "8".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--host-kv-gb".into(),
+            "1".into(),
+            "--preempt-policy".into(),
+            "auto".into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_fleet(&args).unwrap();
+        let bad =
+            Args::parse(&["fleet".into(), "--preempt-policy".into(), "drop".into()]).unwrap();
         assert!(cmd_fleet(&bad).is_err());
     }
 

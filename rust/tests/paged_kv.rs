@@ -1,17 +1,23 @@
 //! Property suite for the paged KV subsystem (ISSUE 4).
 //!
 //! * **Randomized interleavings** of alloc / warm-map / CoW-append /
-//!   publish / free / evict over a prefix-sharing prompt family, asserting
+//!   publish / free / evict / swap-out / swap-in (the ISSUE 9 host-tier
+//!   preemption cycle) over a prefix-sharing prompt family, asserting
 //!   after every op:
 //!   (a) pool refcount balance — each block's refcount equals the number
-//!       of live block tables mapping it plus one if the prefix cache owns
-//!       it;
+//!       of live block tables mapping it, plus one if the prefix cache
+//!       owns it, plus one per swap record pinning it resident;
 //!   (b) the capacity partition — free-listed blocks plus the distinct
-//!       union of mapped and prefix-owned blocks always equals pool
-//!       capacity;
+//!       union of mapped, prefix-owned, and swap-pinned blocks always
+//!       equals pool capacity (moved blocks live on the host, off-pool);
 //!   (c) write isolation — after a copy-on-write append, the written block
 //!       is reachable from exactly one sequence, and every sequence still
 //!       reads exactly its own expected values (shared prefixes included).
+//!   Swapped-in sequences must read back every value bit-identically (the
+//!   value check covers them the moment they rejoin `live`), and swap
+//!   traffic is metered by `SwappedSlot::swapped_bytes` at the `KvLayout`
+//!   rate — never by `BlockPool::bytes_read`, which stays byte-exact for
+//!   HBM reads alone.
 //!   The schedule is seeded (`PAGED_KV_SEED` overrides) and failures are
 //!   shrunk to a minimal op subsequence before reporting.
 //! * **Dtype-parametrized roundtrips**: gather→scatter through block
@@ -22,7 +28,9 @@
 //!   prefix hold P-worth of blocks once plus N private tails, verified by
 //!   reading pool occupancy, versus N·P under private copies.
 
-use gaudi_fp8::coordinator::{AppendOutcome, BlockId, KvStore, PrefixCache, PrefixCacheConfig};
+use gaudi_fp8::coordinator::{
+    AppendOutcome, BlockId, KvStore, PrefixCache, PrefixCacheConfig, SwappedSlot,
+};
 use gaudi_fp8::fp8::bf16::{bf16_to_f32, f32_to_bf16};
 use gaudi_fp8::fp8::Fp8Format;
 use gaudi_fp8::quant::{KvDtype, KvLayout};
@@ -61,6 +69,14 @@ enum Op {
     Finish(usize),
     /// Evict up to `n` refcount-0 cached blocks back into the pool.
     Evict(usize),
+    /// Preempt live sequence `i % live` to the host tier
+    /// (`swap_out_slot`): exclusive blocks move off-device, shared ones
+    /// stay pinned resident inside the record, the slot frees.
+    SwapOut(usize),
+    /// Resume swapped sequence `i % swapped` (`swap_in_slot`) if a slot
+    /// and pool headroom exist right now; otherwise the record is kept
+    /// for a later retry (the call must not mutate anything on refusal).
+    SwapIn(usize),
 }
 
 struct Seq {
@@ -75,6 +91,18 @@ struct Seq {
     /// Started cold (owns true prompt KV) — only these may Publish,
     /// mirroring the engine, where warm tails are never inserted.
     cold: bool,
+}
+
+/// A preempted sequence parked in the host tier: its model state rides
+/// along so the value check can verify a bit-identical restore the moment
+/// it swaps back in.
+struct Swapped {
+    seq: Seq,
+    record: SwappedSlot,
+    /// Blocks that stayed device-resident under the record's pin
+    /// (refcount > 1 at swap-out time) — the census charges the record
+    /// one reference for each.
+    resident_ids: Vec<BlockId>,
 }
 
 /// Prompts sharing prefixes at block and sub-block depths; all ≤ 16
@@ -117,12 +145,23 @@ fn poke(k: &mut [f32], v: &mut [f32], p: usize, val: f32) {
     }
 }
 
-fn check_invariants(kv: &KvStore, pc: &PrefixCache, live: &[Seq]) -> Result<(), String> {
+fn check_invariants(
+    kv: &KvStore,
+    pc: &PrefixCache,
+    live: &[Seq],
+    swapped: &[Swapped],
+) -> Result<(), String> {
     let pool = kv.pool();
-    // Ownership census: block table references + cache ownership.
+    // Ownership census: block table references + cache ownership + swap
+    // records' resident pins.
     let mut owners: HashMap<BlockId, u32> = HashMap::new();
     for s in live {
         for id in kv.slot_blocks(s.slot) {
+            *owners.entry(id).or_insert(0) += 1;
+        }
+    }
+    for sw in swapped {
+        for &id in &sw.resident_ids {
             *owners.entry(id).or_insert(0) += 1;
         }
     }
@@ -163,8 +202,13 @@ fn check_invariants(kv: &KvStore, pc: &PrefixCache, live: &[Seq]) -> Result<(), 
             cache_ids.len()
         ));
     }
-    // Prefix pin balance.
-    let expect_pins: u64 = live.iter().map(|s| (s.pinned / BT) as u64).sum();
+    // Prefix pin balance: swapped sequences keep their prompt pinned in
+    // the cache for the whole preemption round trip.
+    let expect_pins: u64 = live
+        .iter()
+        .map(|s| (s.pinned / BT) as u64)
+        .chain(swapped.iter().map(|sw| (sw.seq.pinned / BT) as u64))
+        .sum();
     if pc.total_refs() != expect_pins {
         return Err(format!(
             "pin imbalance: cache holds {} refs, sequences hold {expect_pins}",
@@ -231,6 +275,7 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
         layout: KvLayout::new(KvDtype::F32, LAYERS, KV_HEADS, HEAD_DIM),
     });
     let mut live: Vec<Seq> = Vec::new();
+    let mut swapped: Vec<Swapped> = Vec::new();
     let mut next_uid = 0usize;
 
     for op in ops {
@@ -360,14 +405,108 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
             Op::Evict(n) => {
                 pc.evict_blocks_pooled(n.max(1), kv.pool_mut());
             }
+            Op::SwapOut(i) => {
+                if live.is_empty() {
+                    continue;
+                }
+                let s = live.remove(i % live.len());
+                let table = kv.slot_blocks(s.slot);
+                // Predict the resident/moved split from pre-swap refcounts:
+                // shared blocks (refs > 1) must stay pinned on device.
+                let resident_ids: Vec<BlockId> = table
+                    .iter()
+                    .copied()
+                    .filter(|&id| kv.pool().ref_count(id) > 1)
+                    .collect();
+                let hbm_reads = kv.pool().bytes_read();
+                let record = kv.swap_out_slot(s.slot);
+                if kv.pool().bytes_read() != hbm_reads {
+                    return Err("swap-out charged the HBM read meter".into());
+                }
+                if record.len() != s.vals.len() {
+                    return Err(format!(
+                        "swap record len {} vs model len {} for seq {}",
+                        record.len(),
+                        s.vals.len(),
+                        s.uid
+                    ));
+                }
+                if record.resident_blocks() != resident_ids.len()
+                    || record.moved_blocks() + record.resident_blocks() != table.len()
+                {
+                    return Err(format!(
+                        "swap split drift for seq {}: record says {} moved + {} resident, \
+                         refcounts said {} resident of {} total",
+                        s.uid,
+                        record.moved_blocks(),
+                        record.resident_blocks(),
+                        resident_ids.len(),
+                        table.len()
+                    ));
+                }
+                // Byte-exact host-link accounting at the layout rate:
+                // moved blocks only, codes and scales charged together.
+                let rate = kv.layout().block_bytes(BT);
+                if record.swapped_bytes(&kv.layout(), BT) != record.moved_blocks() * rate {
+                    return Err(format!(
+                        "swapped_bytes {} != {} moved blocks × {rate} B/block",
+                        record.swapped_bytes(&kv.layout(), BT),
+                        record.moved_blocks()
+                    ));
+                }
+                swapped.push(Swapped {
+                    seq: s,
+                    record,
+                    resident_ids,
+                });
+            }
+            Op::SwapIn(i) => {
+                if swapped.is_empty() {
+                    continue;
+                }
+                let idx = i % swapped.len();
+                if !kv.can_swap_in(&swapped[idx].record) {
+                    // Pool or slot pressure: the record waits. Nothing may
+                    // have been mutated, which the per-op census verifies.
+                    continue;
+                }
+                let sw = swapped.remove(idx);
+                let hbm_reads = kv.pool().bytes_read();
+                match kv.swap_in_slot(sw.record) {
+                    Ok(slot) => {
+                        if kv.pool().bytes_read() != hbm_reads {
+                            return Err("swap-in charged the HBM read meter".into());
+                        }
+                        let mut seq = sw.seq;
+                        seq.slot = slot;
+                        // The value check now re-verifies every position of
+                        // this sequence — a bit-identical restore or bust.
+                        live.push(seq);
+                    }
+                    Err(_) => {
+                        return Err(format!(
+                            "swap_in_slot refused seq {} after can_swap_in approved",
+                            sw.seq.uid
+                        ));
+                    }
+                }
+            }
         }
-        check_invariants(&kv, &pc, &live)?;
+        check_invariants(&kv, &pc, &live, &swapped)?;
     }
-    // Drain: everything must come home.
+    // Drain: everything must come home. Swap records end in
+    // discard_swapped (the abort path), which must release their
+    // resident pins for the leak checks below to balance.
     while let Some(s) = live.pop() {
         kv.free_slot(s.slot);
         if s.pinned > 0 {
             pc.release(&fams[s.fam], s.pinned);
+        }
+    }
+    while let Some(sw) = swapped.pop() {
+        kv.discard_swapped(sw.record);
+        if sw.seq.pinned > 0 {
+            pc.release(&fams[sw.seq.fam], sw.seq.pinned);
         }
     }
     if pc.total_refs() != 0 {
@@ -388,12 +527,14 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
 
 fn gen_ops(rng: &mut XorShiftRng, n: usize) -> Vec<Op> {
     (0..n)
-        .map(|_| match rng.below(8) {
+        .map(|_| match rng.below(10) {
             0 | 1 => Op::Start(rng.below(64)),
             2 | 3 | 4 => Op::Append(rng.below(64)),
             5 => Op::Publish(rng.below(64)),
             6 => Op::Finish(rng.below(64)),
-            _ => Op::Evict(1 + rng.below(4)),
+            7 => Op::Evict(1 + rng.below(4)),
+            8 => Op::SwapOut(rng.below(64)),
+            _ => Op::SwapIn(rng.below(64)),
         })
         .collect()
 }
@@ -617,6 +758,66 @@ fn paged_fp8_roundtrip_within_half_ulp_of_block_group_maxabs() {
                     }
                 }
             }
+        }
+    }
+}
+
+/// ISSUE 9: a swap-out/swap-in round trip through the host tier must be
+/// lossless **by construction** — raw stored codes plus (under FP8) the
+/// per-(block, layer, kv-head) scales move together, so the restored
+/// sequence dequantizes to exactly the same bits with no re-quantization
+/// step. Also pins down the metering split: host-link traffic is
+/// `swapped_bytes` at the `KvLayout` block rate, and the HBM read meter
+/// (`BlockPool::bytes_read`) never moves for swap traffic.
+#[test]
+fn swap_roundtrip_restores_codes_and_scales_bit_identically() {
+    let mut dtypes = vec![KvDtype::F32, KvDtype::Bf16];
+    dtypes.extend(Fp8Format::ALL.iter().map(|&f| KvDtype::Fp8(f)));
+    for dtype in dtypes {
+        let (ks, vs) = rt_source(0x5A);
+        let mut store = rt_store(dtype);
+        let slot = store.alloc_slot().unwrap();
+        store.write_slot(slot, &ks, &vs, RT_LEN);
+        let (k0, v0, lens0) = store.gather_batch(&[slot]);
+        let used0 = store.pool().used_blocks();
+        let hbm_reads = store.pool().bytes_read();
+
+        let record = store.swap_out_slot(slot);
+        assert_eq!(record.len(), RT_LEN);
+        let blocks = RT_LEN.div_ceil(RT_BT);
+        assert_eq!(
+            record.moved_blocks(),
+            blocks,
+            "{dtype:?}: every block is exclusive here, so every block moves"
+        );
+        assert_eq!(record.resident_blocks(), 0);
+        assert_eq!(
+            record.swapped_bytes(&store.layout(), RT_BT),
+            blocks * store.layout().block_bytes(RT_BT),
+            "{dtype:?}: host-link bytes at the declared layout rate, scales included"
+        );
+        assert_eq!(
+            store.pool().used_blocks(),
+            0,
+            "{dtype:?}: moved blocks return to the device free list"
+        );
+
+        let slot2 = store
+            .swap_in_slot(record)
+            .unwrap_or_else(|_| panic!("{dtype:?}: swap-in must fit an empty pool"));
+        assert_eq!(store.pool().used_blocks(), used0);
+        assert_eq!(
+            store.pool().bytes_read(),
+            hbm_reads,
+            "{dtype:?}: swap traffic must never charge the HBM read meter"
+        );
+        let (k1, v1, lens1) = store.gather_batch(&[slot2]);
+        assert_eq!(lens1, lens0);
+        for (i, (a, b)) in k0.iter().zip(&k1).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}: K drift at {i}");
+        }
+        for (i, (a, b)) in v0.iter().zip(&v1).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}: V drift at {i}");
         }
     }
 }

@@ -12,8 +12,9 @@
 //! - **clock-discipline**: no `std::time::Instant` / `SystemTime` outside
 //!   `obs/`.
 //! - **bytes-through-layout**: no `size_of` and no numeric-literal byte
-//!   multiplications (inside `*byte*`-named functions) outside `quant/`
-//!   and `fp8/`.
+//!   multiplications (inside `*byte*`-, `*swap*`-, and `*transfer*`-named
+//!   functions — the host KV tier's swap/transfer paths move the same
+//!   accounted bytes) outside `quant/` and `fp8/`.
 //! - **hot-path-no-alloc**: no `Vec::new` / `vec!` / `.to_vec()` /
 //!   `.clone()` / `.collect()` inside functions annotated with a
 //!   `// lint: hot-path` comment.
@@ -684,7 +685,13 @@ pub fn check_file(file: &str, src: &str, schema: Option<&Schema>) -> Vec<Diag> {
             }
         }
         for sp in &spans {
-            if !sp.name.contains("byte") {
+            // Swap/transfer paths (the ISSUE 9 host KV tier) move the same
+            // accounted bytes across the PCIe link, so their functions are
+            // held to the layout discipline even without "byte" in the name.
+            if !(sp.name.contains("byte")
+                || sp.name.contains("swap")
+                || sp.name.contains("transfer"))
+            {
                 continue;
             }
             let (b0, b1) = sp.body;
@@ -1019,6 +1026,25 @@ mod tests {
         assert_eq!(keys, vec!["label".to_string(), "ttft_mean_ms".to_string()]);
         // Placeholders and values are not keys.
         assert!(extract_json_keys("\"{}\" , \"serve\",").is_empty());
+    }
+
+    #[test]
+    fn bytes_rule_covers_swap_and_transfer_named_fns() {
+        // Raw literal byte math inside swap/transfer paths is held to the
+        // same KvLayout discipline as *byte*-named functions (ISSUE 9:
+        // the host tier moves accounted bytes across the PCIe link).
+        for name in ["swap_out_cost", "host_transfer_budget", "kv_bytes_for"] {
+            let src = format!("fn {name}() -> usize {{ 4 * 16 }}");
+            let diags = check_file("rust/src/x.rs", &src, None);
+            assert_eq!(diags.len(), 1, "{name}: {diags:?}");
+            assert_eq!(diags[0].rule, RULE_BYTES);
+        }
+        // Functions outside the naming net keep their literal math...
+        let free = "fn unrelated_math() -> usize { 4 * 16 }";
+        assert!(check_file("rust/src/x.rs", free, None).is_empty());
+        // ...and quant/ owns the byte-rate definitions, so it is exempt.
+        let quant = "fn swap_block_bytes() -> usize { 4 * 16 }";
+        assert!(check_file("rust/src/quant/x.rs", quant, None).is_empty());
     }
 
     #[test]
