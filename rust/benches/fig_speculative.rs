@@ -1,0 +1,119 @@
+//! Fig SPEC (beyond the paper): single-stream speculative draft-verify
+//! decoding on the Gaudi 2 performance model (ISSUE 10).
+//!
+//! Token-by-token decode at batch 1 (Table 6) is weight-streaming-bound:
+//! the FP8 MME sits idle while ~35 GB of weights cross HBM per emitted
+//! token. A draft-verify round moves the same weights once but scores
+//! `γ + 1` positions in a single chunked multi-token target step — the
+//! Table 5 vs Table 6 utilization gap converted into a latency win, priced
+//! entirely from the existing gaudisim primitives
+//! (`speculative_round_time_s` = γ tiny-draft decode steps + one
+//! `chunked_prefill_time_s` verify chunk; nothing in the Table 5/6 pricing
+//! changes).
+//!
+//! The sweep runs γ ∈ {2, 4, 8} × an acceptance grid × paper contexts and
+//! emits one JSON row per cell. Hard assertions (the ISSUE 10 acceptance
+//! bars):
+//!
+//!   * speedup ≥ 1.5× at the reference point γ = 4, α = 0.8, at every
+//!     context in the sweep;
+//!   * speedup is monotone non-decreasing in acceptance for fixed (γ,
+//!     context) — more agreement never hurts;
+//!   * bounded α → 0 loss: the verify chunk costs at most 2× one plain
+//!     decode step, so the worst case degrades to plain decode plus the
+//!     draft overhead and one extra step — never a cliff.
+//!
+//! SHAPE lines are suppressed under `BENCH_SMOKE=1` (stdout must stay
+//! pure JSON for the CI validator).
+
+use gaudi_fp8::gaudisim::{
+    decode_group_time_s_paged, speculative_expected_tokens_per_round, speculative_round_time_s,
+    speculative_tpot_s, E2eConfig,
+};
+
+fn main() {
+    let smoke = matches!(std::env::var("BENCH_SMOKE").as_deref(), Ok("1"));
+    let target = E2eConfig::llama31_70b_paper();
+    let draft = E2eConfig::synthetic_tiny_draft();
+    let contexts: &[usize] = if smoke {
+        &[1024]
+    } else {
+        &[1024, 4096, 16384]
+    };
+    let alphas: &[f64] = if smoke {
+        &[0.0, 0.4, 0.8]
+    } else {
+        &[0.0, 0.2, 0.4, 0.6, 0.8, 0.9]
+    };
+
+    let mut headline_speedups: Vec<(usize, f64)> = Vec::new();
+    for &context in contexts {
+        let baseline = decode_group_time_s_paged(&target, &[context]);
+        assert!(baseline > 0.0, "baseline decode step must take time");
+        for gamma in [2usize, 4, 8] {
+            let draft_s: f64 = (0..gamma)
+                .map(|i| decode_group_time_s_paged(&draft, &[context + i]))
+                .sum();
+            let round = speculative_round_time_s(&target, &draft, context, gamma);
+            let verify = round - draft_s;
+            // Bounded loss at α → 0: a fully-rejected round still emits one
+            // token at cost draft + verify, and the verify chunk streams the
+            // weights once — within 2× a plain step even with the extra
+            // attention rows. So speculation never degrades beyond draft
+            // overhead plus one step, at any acceptance.
+            assert!(
+                verify <= 2.0 * baseline,
+                "verify chunk (γ={gamma}, ctx={context}) costs {:.2}ms > 2x the \
+                 {:.2}ms plain decode step — the α→0 bound is broken",
+                verify * 1e3,
+                baseline * 1e3
+            );
+            let mut prev_speedup = 0.0f64;
+            for &alpha in alphas {
+                let expected = speculative_expected_tokens_per_round(gamma, alpha);
+                let tpot = speculative_tpot_s(&target, &draft, context, gamma, alpha);
+                let speedup = baseline / tpot;
+                assert!(
+                    speedup >= prev_speedup - 1e-12,
+                    "speedup must be monotone in acceptance at γ={gamma}, ctx={context}: \
+                     {prev_speedup:.3}x then {speedup:.3}x at α={alpha}"
+                );
+                prev_speedup = speedup;
+                if gamma == 4 && (alpha - 0.8).abs() < 1e-9 {
+                    // The ISSUE 10 headline bar.
+                    assert!(
+                        speedup > 1.5,
+                        "γ=4 at 80% acceptance must beat token-by-token by 1.5x \
+                         at ctx={context}, got {speedup:.3}x"
+                    );
+                    headline_speedups.push((context, speedup));
+                }
+                println!(
+                    "{{\"bench\":\"fig_speculative\",\"context\":{context},\"gamma\":{gamma},\
+                     \"acceptance\":{alpha:.2},\"baseline_tpot_ms\":{:.4},\
+                     \"draft_ms\":{:.4},\"verify_ms\":{:.4},\"round_ms\":{:.4},\
+                     \"expected_tokens\":{expected:.4},\"spec_tpot_ms\":{:.4},\
+                     \"speedup\":{speedup:.4}}}",
+                    baseline * 1e3,
+                    draft_s * 1e3,
+                    verify * 1e3,
+                    round * 1e3,
+                    tpot * 1e3,
+                );
+            }
+        }
+    }
+
+    if !smoke {
+        for (context, speedup) in &headline_speedups {
+            println!(
+                "SHAPE: ctx {context}: γ=4 @ 80% acceptance emits tokens {speedup:.2}x \
+                 faster than token-by-token decode ✓"
+            );
+        }
+        println!(
+            "SHAPE: verify chunk stays within 2x a plain decode step at every (γ, ctx) — \
+             α→0 loses only the draft overhead, never a cliff ✓"
+        );
+    }
+}

@@ -65,6 +65,7 @@ use super::scheduler::{
     chunk_spans, select_preemption_victim, warm_admittable_without_bucket, PreemptCandidate,
     PreemptPolicy, SchedulePolicy, Scheduler,
 };
+use crate::model::{DraftLm, ModelConfig, ModelFamily};
 use crate::obs::{Clock, TraceEventKind, TraceRecorder};
 use crate::quant::{KvDtype, KvLayout, KV_BLOCK_TOKENS};
 use crate::router::{Admission, ReplicaHandle};
@@ -181,14 +182,31 @@ pub struct EngineConfig {
     /// (ISSUE 9); 0.0 disables the tier and with it slot preemption,
     /// preserving the legacy admission behavior exactly.
     pub host_kv_bytes: f64,
-    /// Preemption resume policy. The wall-clock engine has no analytic
-    /// device model to price recompute against a PCIe transfer, so
-    /// `Swap` and `Auto` both swap through the host tier; `Recompute`
-    /// disables preemption here (the virtual-clock [`SimReplica`] is
-    /// where the full recompute-vs-swap cost model lives).
-    ///
-    /// [`SimReplica`]: crate::router::SimReplica
+    /// Preemption resume policy. `Swap` round-trips the victim's KV
+    /// through the host tier; `Recompute` drops the blocks and replays
+    /// the victim's context through the forced-decode chain on resume;
+    /// `Auto` prices the two arms against each other with *measured*
+    /// EMAs (seconds/block over the host link vs. seconds/token of
+    /// re-prefill) — the wall-clock engine has no analytic device model,
+    /// so it measures instead, falling back to `Swap` until both EMAs
+    /// are seeded. Preemption stays gated on `host_kv_bytes > 0` except
+    /// under pure `Recompute`, which needs no host bytes at all.
     pub preempt_policy: PreemptPolicy,
+    /// Draft-verify speculative decoding (ISSUE 10): the prompt-lookup
+    /// draft proposes this many tokens per round and the target verifies
+    /// them with a greedy accept-prefix pass (0 = off). Accepted output
+    /// is bit-identical to plain greedy decode; a rejection rolls the
+    /// slot back by block truncation. Applied to lone decode rows only —
+    /// batched rows already amortize the step overhead speculation
+    /// exists to beat.
+    pub spec_gamma: usize,
+    /// Default beam width for width-k beam groups (1 = off; requests can
+    /// override per-request). A beam request forks `k-1` branches off
+    /// the shared prompt KV at its first token, seeds each with one of
+    /// the top-k first tokens, decodes the branches as one co-resident
+    /// group, and emits the best cumulative-log-prob branch; the rest
+    /// are pruned forks.
+    pub beam_width: usize,
     /// Worker-count policy for the host-side paged KV hot path — the
     /// scoped `util::pool` workers behind the per-step pool export in
     /// [`Engine::paged_decode_forward`] (and the chunked-prefill
@@ -216,6 +234,8 @@ impl EngineConfig {
             prefill_chunk: 0,
             host_kv_bytes: 0.0,
             preempt_policy: PreemptPolicy::Auto,
+            spec_gamma: 0,
+            beam_width: 1,
             kv_parallelism: Parallelism::Auto,
             #[cfg(feature = "dense-decode-ref")]
             use_dense_decode: false,
@@ -240,6 +260,37 @@ struct ActiveRequest {
     last_scheduled: Clock,
     generated: Vec<i32>,
     last_token: i32,
+    /// Beam membership: the owning request's id when this slot is one
+    /// branch of a width-k beam group, `None` for plain requests.
+    beam_group: Option<RequestId>,
+    /// Cumulative log-softmax score of this branch's sampled tokens —
+    /// the beam's pruning key at retirement.
+    beam_score: f64,
+}
+
+/// How a preempted sequence's KV comes back on resume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ResumeKind {
+    /// Blocks round-trip through the host tier bit-identically.
+    Swap,
+    /// Blocks were dropped; resume replays the context through the
+    /// forced-decode chain (the chunked-prefill workhorse).
+    Recompute,
+}
+
+/// A preempted sequence parked off-device, FIFO behind its peers.
+struct PreemptedSeq {
+    a: ActiveRequest,
+    kind: ResumeKind,
+}
+
+/// Aggregate finish state of one width-k beam group: branches retire
+/// individually, the group emits once — the best-scoring branch wins.
+struct BeamPending {
+    width: usize,
+    done: usize,
+    best_score: f64,
+    best: Option<RequestOutput>,
 }
 
 /// A warm admission whose uncached tail is still being recomputed, one
@@ -271,13 +322,24 @@ pub struct Engine {
     /// At most one chunked prefill in flight (the one-prefill-per-step
     /// interleave discipline).
     chunked: Option<ChunkedPrefill>,
-    /// Preempted sequences awaiting swap-in, FIFO. Their KV payloads
-    /// (moved blocks: FP8 codes + scales together) live in `host`, keyed
-    /// by request id; re-admission holds strict priority over new
-    /// arrivals (no admission while this is non-empty).
-    preempted: VecDeque<ActiveRequest>,
-    /// Host-memory KV tier for swap-outs (None = preemption off).
+    /// Preempted sequences awaiting resume, FIFO. Swap victims' KV
+    /// payloads (moved blocks: FP8 codes + scales together) live in
+    /// `host`, keyed by request id; recompute victims carry no payload.
+    /// Re-admission holds strict priority over new arrivals (no
+    /// admission while this is non-empty).
+    preempted: VecDeque<PreemptedSeq>,
+    /// Host-memory KV tier for swap-outs (None = swap arm off).
     host: Option<HostTier<SwappedSlot>>,
+    /// Prompt-lookup draft model for speculative rounds (`spec_gamma > 0`).
+    draft: Option<DraftLm>,
+    /// Beam groups in flight, keyed by the owning request id.
+    beams: HashMap<RequestId, BeamPending>,
+    /// Measured seconds/token of re-prefill (cold prefills, warm chunks,
+    /// and recompute resumes all feed it) — prices `Auto`'s recompute arm.
+    reprefill_s_per_token: Option<f64>,
+    /// Measured seconds/block over the host link (swap-outs and
+    /// swap-ins feed it) — prices `Auto`'s swap arm.
+    swap_s_per_block: Option<f64>,
     pub metrics: ServeMetrics,
     finished: Vec<RequestOutput>,
     /// Lifecycle-event recorder (None = tracing off, the hot-path default).
@@ -365,11 +427,19 @@ impl Engine {
             meta.prefill_seqs.clone(),
             meta.decode_batches.clone(),
         );
-        let host = if cfg.host_kv_bytes > 0.0 && cfg.preempt_policy != PreemptPolicy::Recompute {
+        let host = if cfg.host_kv_bytes > 0.0 {
             Some(HostTier::new(cfg.host_kv_bytes as usize, &layout, bt))
         } else {
             None
         };
+        // The draft shares the target's vocabulary (its proposals are fed
+        // straight to the target's embedding) but keeps the tiny synthetic
+        // geometry — the whole point is that drafting is nearly free.
+        let draft = (cfg.spec_gamma > 0).then(|| {
+            let mut dc = ModelConfig::synthetic_tiny(ModelFamily::Llama3);
+            dc.vocab = meta.vocab;
+            DraftLm::new(dc)
+        });
         Ok(Self {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             active: HashMap::new(),
@@ -377,6 +447,10 @@ impl Engine {
             chunked: None,
             preempted: VecDeque::new(),
             host,
+            draft,
+            beams: HashMap::new(),
+            reprefill_s_per_token: None,
+            swap_s_per_block: None,
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
             trace: None,
@@ -461,7 +535,7 @@ impl Engine {
         // FIFO priority): as long as any is parked, admission stays
         // closed — except in the one step where a victim was just swapped
         // out to make room for the queue head it yielded to.
-        let resumed = self.chunked.is_none() && self.resume_one_preempted();
+        let resumed = self.chunked.is_none() && self.resume_one_preempted()?;
         worked |= resumed;
         let made_room = !resumed
             && self.chunked.is_none()
@@ -498,13 +572,45 @@ impl Engine {
             return Ok(false);
         }
 
-        let active: Vec<usize> = {
-            let mut s: Vec<usize> = self.active.keys().copied().collect();
-            s.sort_unstable();
-            s
+        // Beam branches decode as one co-scheduled cohort (never split
+        // across groups); everything else is a singleton cohort, so with
+        // no beams in flight this reduces to the legacy grouping exactly.
+        let groups = {
+            let mut slots: Vec<usize> = self.active.keys().copied().collect();
+            slots.sort_unstable();
+            let mut cohorts: Vec<Vec<usize>> = Vec::new();
+            let mut beam_cohorts: HashMap<RequestId, Vec<usize>> = HashMap::new();
+            let mut beam_order: Vec<RequestId> = Vec::new();
+            for s in slots {
+                match self.active[&s].beam_group {
+                    Some(g) => {
+                        let c = beam_cohorts.entry(g).or_default();
+                        if c.is_empty() {
+                            beam_order.push(g);
+                        }
+                        c.push(s);
+                    }
+                    None => cohorts.push(vec![s]),
+                }
+            }
+            for g in beam_order {
+                // lint:allow(no-unwrap-in-lib): every ordered id was inserted just above
+                cohorts.push(beam_cohorts.remove(&g).expect("ordered beam cohort"));
+            }
+            self.scheduler.decode_groups_cohorts(&cohorts)
         };
-        for group in self.scheduler.decode_groups(&active) {
-            self.run_decode_group(&group)?;
+        for group in groups {
+            // Speculative fast path: a lone non-beam row with a draft
+            // attached and room for the whole γ+1 verify chain.
+            if group.len() == 1
+                && self.draft.is_some()
+                && self.active[&group[0]].beam_group.is_none()
+                && self.kv.remaining(group[0]).unwrap_or(0) > self.cfg.spec_gamma
+            {
+                self.run_speculative_round(group[0])?;
+            } else {
+                self.run_decode_group(&group)?;
+            }
         }
         self.sync_observability();
         Ok(true)
@@ -592,7 +698,6 @@ impl Engine {
         let v = self.meta.vocab;
         let last = req.prompt.len() - 1;
         let row = &logits.data[last * v..(last + 1) * v];
-        let first_token = argmax(row);
 
         self.kv
             .write_slot(slot, &outs[1].data, &outs[2].data, req.prompt.len());
@@ -624,8 +729,10 @@ impl Engine {
         self.metrics.prefill_steps += 1;
         let prefill_s = t0.now_s();
         self.metrics.prefill_time.record(prefill_s);
-        let now = Clock::wall();
-        self.metrics.ttft.record(req.arrival.now_s());
+        ema_update(
+            &mut self.reprefill_s_per_token,
+            prefill_s / req.prompt.len().max(1) as f64,
+        );
         self.note_occupancy();
         if let Some(tr) = self.trace.as_mut() {
             let end_s = tr.now_s();
@@ -648,27 +755,78 @@ impl Engine {
             );
         }
 
-        self.active.insert(
-            slot,
-            ActiveRequest {
-                id: req.id,
-                prompt: req.prompt,
-                cache_tokens,
-                max_new_tokens: req.max_new_tokens,
-                stop_token: req.stop_token,
-                arrival: req.arrival,
-                first_token_at: Some(now),
-                last_scheduled: Clock::wall(),
-                generated: vec![first_token],
-                last_token: first_token,
-            },
-        );
-        self.metrics.generated_tokens += 1;
+        self.activate_request(req, slot, cache_tokens, row);
+        Ok(())
+    }
+
+    /// Activate an admitted request off its first-token logits. Width-1
+    /// requests take the argmax, exactly the legacy path; width-k beam
+    /// requests fork `k-1` branches off the shared prompt KV
+    /// ([`KvStore::fork_slot`] — refcounts, zero bytes copied), seed each
+    /// branch with one of the top-k first tokens and its log-prob, and
+    /// register the group for best-branch retirement. Fork failures
+    /// (typed: no slot / no blocks) degrade the width to whatever fit —
+    /// a beam never blocks admission.
+    fn activate_request(&mut self, req: Request, slot: usize, cache_tokens: usize, row: &[f32]) {
+        let now = Clock::wall();
+        self.metrics.ttft.record(req.arrival.now_s());
+        let width = req
+            .beam_width
+            .unwrap_or(self.cfg.beam_width)
+            .max(1)
+            .min(self.meta.decode_batches.last().copied().unwrap_or(1).max(1));
+        let (toks, scores) = top_k_log_softmax(row, width);
+        let mut branch_slots = vec![slot];
+        for _ in 1..toks.len() {
+            match self.kv.fork_slot(slot) {
+                Ok(fork) => {
+                    branch_slots.push(fork);
+                    self.metrics.beam_forks += 1;
+                }
+                // Degrade: serve the branches that fit.
+                Err(_) => break,
+            }
+        }
+        let nb = branch_slots.len();
+        if nb > 1 {
+            self.beams.insert(
+                req.id,
+                BeamPending {
+                    width: nb,
+                    done: 0,
+                    best_score: f64::NEG_INFINITY,
+                    best: None,
+                },
+            );
+        }
+        for (i, &bslot) in branch_slots.iter().enumerate() {
+            self.active.insert(
+                bslot,
+                ActiveRequest {
+                    id: req.id,
+                    prompt: req.prompt.clone(),
+                    // Only the root branch pins the cached prefix; forks
+                    // hold the shared blocks through their own refcounts.
+                    cache_tokens: if i == 0 { cache_tokens } else { 0 },
+                    max_new_tokens: req.max_new_tokens,
+                    stop_token: req.stop_token,
+                    arrival: req.arrival.clone(),
+                    first_token_at: Some(now.clone()),
+                    last_scheduled: Clock::wall(),
+                    generated: vec![toks[i]],
+                    last_token: toks[i],
+                    beam_group: (nb > 1).then_some(req.id),
+                    beam_score: scores[i],
+                },
+            );
+        }
+        self.metrics.generated_tokens += nb as u64;
         // Immediately-finished request (max_new_tokens == 1, stop token, or
         // a prompt that already fills the cache).
-        let kv_full = self.kv.is_full(slot);
-        self.maybe_finish(slot, kv_full);
-        Ok(())
+        for &bslot in &branch_slots {
+            let kv_full = self.kv.is_full(bslot);
+            self.maybe_finish(bslot, kv_full);
+        }
     }
 
     /// Start a warm prefill: map the cached prefix's physical blocks into
@@ -758,6 +916,12 @@ impl Engine {
         let chunk_s = t0.now_s();
         self.metrics.prefill_time.record(chunk_s);
         if chunk_tokens > 0 {
+            ema_update(
+                &mut self.reprefill_s_per_token,
+                chunk_s / chunk_tokens as f64,
+            );
+        }
+        if chunk_tokens > 0 {
             if let Some(tr) = self.trace.as_mut() {
                 let end_s = tr.now_s();
                 tr.record_span(
@@ -777,28 +941,9 @@ impl Engine {
         }
         // Tail complete: the last forced decode's logits are the
         // first-token distribution.
-        let first_token = argmax(&cp.last_logits);
         self.metrics.prefill_steps += 1;
-        let now = Clock::wall();
-        self.metrics.ttft.record(cp.req.arrival.now_s());
-        self.active.insert(
-            cp.slot,
-            ActiveRequest {
-                id: cp.req.id,
-                prompt: cp.req.prompt,
-                cache_tokens: cp.cache_tokens,
-                max_new_tokens: cp.req.max_new_tokens,
-                stop_token: cp.req.stop_token,
-                arrival: cp.req.arrival,
-                first_token_at: Some(now),
-                last_scheduled: Clock::wall(),
-                generated: vec![first_token],
-                last_token: first_token,
-            },
-        );
-        self.metrics.generated_tokens += 1;
-        let kv_full = self.kv.is_full(cp.slot);
-        self.maybe_finish(cp.slot, kv_full);
+        let row = std::mem::take(&mut cp.last_logits);
+        self.activate_request(cp.req, cp.slot, cp.cache_tokens, &row);
         Ok(())
     }
 
@@ -991,6 +1136,9 @@ impl Engine {
             let tok = argmax(row);
             // lint:allow(no-unwrap-in-lib): group is built from self.active's live slot keys
             let a = self.active.get_mut(&slot).unwrap();
+            if a.beam_group.is_some() {
+                a.beam_score += log_softmax_at(row, tok as usize);
+            }
             a.generated.push(tok);
             a.last_token = tok;
             a.last_scheduled = Clock::wall();
@@ -1025,6 +1173,121 @@ impl Engine {
         for &slot in group {
             self.maybe_finish(slot, full_slots.contains(&slot));
         }
+        Ok(())
+    }
+
+    /// One draft-verify speculative round for a lone decode row (the
+    /// tentpole of ISSUE 10).
+    ///
+    /// The prompt-lookup draft proposes γ tokens; the target then runs
+    /// the γ+1-token verify chain — `forced_decode` over `last_token`
+    /// followed by every draft token, each call appending its input's KV
+    /// (the chunked-prefill machinery verbatim, so the chain *is* the
+    /// chunked multi-token step). Greedy accept-prefix rule: draft token
+    /// `j` stands iff it equals the target's `j`-th argmax, and the round
+    /// emits the accepted prefix plus the target's first divergent token.
+    /// By induction every emitted token — and every accepted token's KV —
+    /// is bit-identical to plain token-by-token greedy decode. Rejected
+    /// tokens' KV is rolled back with [`KvStore::truncate_slot`]
+    /// (CoW-safe block-truncation; accepted KV stands), and the FP8 store
+    /// re-encodes scales over the valid span on the next append, so stale
+    /// codes can never poison a scale.
+    fn run_speculative_round(&mut self, slot: usize) -> Result<()> {
+        let gamma = self.cfg.spec_gamma;
+        let (id, last, context) = {
+            let a = &self.active[&slot];
+            let mut ctx = a.prompt.clone();
+            ctx.extend_from_slice(&a.generated);
+            (a.id, a.last_token, ctx)
+        };
+        // lint:allow(no-unwrap-in-lib): the step loop schedules speculation only with a draft attached
+        let drafts = self
+            .draft
+            .as_ref()
+            .expect("speculative round without a draft")
+            .propose(&context, gamma);
+        let t0 = Clock::wall();
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record(Some(id), TraceEventKind::DraftPropose { gamma });
+        }
+        let base_len = self.kv.len(slot).unwrap_or(0);
+        // Optimistic verify chain: as long as drafts[..j] were accepted,
+        // targets[j] is the model's true greedy choice at position j.
+        let mut targets = Vec::with_capacity(gamma + 1);
+        targets.push(argmax(&self.forced_decode(slot, last)?));
+        for &d in &drafts {
+            targets.push(argmax(&self.forced_decode(slot, d)?));
+        }
+        let accepted = drafts
+            .iter()
+            .zip(&targets)
+            .take_while(|(d, t)| d == t)
+            .count();
+        let rejected = gamma - accepted;
+        // The chain appended 1 + γ tokens; only 1 + `accepted` are real
+        // (the divergent token's own KV is appended next round, exactly
+        // the plain-decode pending-last-token invariant).
+        let blocks_before = self.kv.slot_blocks(slot).len();
+        if rejected > 0 {
+            self.kv.truncate_slot(slot, base_len + 1 + accepted);
+        }
+        let blocks_freed = (blocks_before - self.kv.slot_blocks(slot).len()) as u64;
+        let mut pushed = 0usize;
+        {
+            // lint:allow(no-unwrap-in-lib): slot is a live key of self.active
+            let a = self.active.get_mut(&slot).unwrap();
+            for &tok in &targets[..=accepted] {
+                a.generated.push(tok);
+                a.last_token = tok;
+                pushed += 1;
+                if let Some(ft) = &a.first_token_at {
+                    self.metrics
+                        .tpot
+                        .record(ft.now_s() / a.generated.len().max(1) as f64);
+                }
+                let hit_stop = a.stop_token.is_some_and(|s| tok == s);
+                if hit_stop || a.generated.len() >= a.max_new_tokens {
+                    break;
+                }
+            }
+            a.last_scheduled = Clock::wall();
+        }
+        self.metrics.generated_tokens += pushed as u64;
+        self.metrics.spec_rounds += 1;
+        self.metrics.spec_accepted_tokens += accepted as u64;
+        self.metrics.spec_rejected_tokens += rejected as u64;
+        if rejected > 0 {
+            self.metrics.spec_rollbacks += 1;
+        }
+        // Each chain link is one batch-1 artifact call.
+        self.metrics.decode_steps += (gamma + 1) as u64;
+        self.metrics.decode_batch_sum += (gamma + 1) as u64;
+        let round_s = t0.now_s();
+        self.metrics.decode_time.record(round_s);
+        self.note_occupancy();
+        if let Some(tr) = self.trace.as_mut() {
+            let end_s = tr.now_s();
+            tr.record_span(
+                Some(id),
+                (end_s - round_s).max(0.0),
+                round_s,
+                TraceEventKind::VerifyAccept {
+                    accepted,
+                    emitted: pushed,
+                },
+            );
+            if rejected > 0 {
+                tr.record(
+                    Some(id),
+                    TraceEventKind::Rollback {
+                        tokens: rejected,
+                        blocks: blocks_freed,
+                    },
+                );
+            }
+        }
+        let kv_full = self.kv.is_full(slot);
+        self.maybe_finish(slot, kv_full);
         Ok(())
     }
 
@@ -1088,6 +1351,9 @@ impl Engine {
             let tok = argmax(row);
             // lint:allow(no-unwrap-in-lib): group is built from self.active's live slot keys
             let a = self.active.get_mut(&slot).unwrap();
+            if a.beam_group.is_some() {
+                a.beam_score += log_softmax_at(row, tok as usize);
+            }
             a.generated.push(tok);
             a.last_token = tok;
             a.last_scheduled = Clock::wall();
@@ -1129,13 +1395,18 @@ impl Engine {
         Ok(())
     }
 
-    /// Swap out the least-recently-scheduled active sequence to the host
-    /// tier so the queue head can take its slot this step. Fires only
-    /// when the tier is configured, every slot is occupied, the queue
-    /// head could actually run here, and the tier has room for the
-    /// victim's moved blocks. Returns true when a slot was freed.
+    /// Evict the least-recently-scheduled active sequence so the queue
+    /// head can take its slot this step. Fires only when preemption is
+    /// enabled (a host tier, or pure `Recompute` which needs none),
+    /// every slot is occupied, and the queue head could actually run
+    /// here. Beam branches are never victims: a group is co-resident by
+    /// contract and would otherwise be torn apart one branch at a time.
+    /// The victim goes out through [`Self::choose_preempt_kind`]'s arm.
+    /// Returns true when a slot was freed.
     fn preempt_for_queue_head(&mut self) -> bool {
-        if self.host.is_none() || self.queue.is_empty() || self.kv.has_free_slot() {
+        let enabled =
+            self.host.is_some() || self.cfg.preempt_policy == PreemptPolicy::Recompute;
+        if !enabled || self.queue.is_empty() || self.kv.has_free_slot() {
             return false;
         }
         let head_fits = self.queue.peek().is_some_and(|r| {
@@ -1146,7 +1417,16 @@ impl Engine {
         if !head_fits {
             return false;
         }
-        let slots: Vec<usize> = self.active.keys().copied().collect();
+        let slots: Vec<usize> = {
+            let mut s: Vec<usize> = self
+                .active
+                .iter()
+                .filter(|(_, a)| a.beam_group.is_none())
+                .map(|(s, _)| *s)
+                .collect();
+            s.sort_unstable();
+            s
+        };
         let cands: Vec<PreemptCandidate> = slots
             .iter()
             .enumerate()
@@ -1160,78 +1440,151 @@ impl Engine {
             return false;
         };
         let slot = slots[pick];
-        // Budget-check against the worst case (every table block moves)
-        // before touching the slot — swap_out is not reversible.
         let table_blocks = self.kv.slot_blocks(slot).len();
-        // lint:allow(no-unwrap-in-lib): host.is_none() returned above
-        let host = self.host.as_mut().expect("checked above");
-        if !host.can_store(table_blocks) {
+        let Some(kind) = self.choose_preempt_kind(slot, table_blocks) else {
             return false;
-        }
+        };
         // lint:allow(no-unwrap-in-lib): slot is a live key of self.active
         let a = self.active.remove(&slot).expect("victim slot is active");
-        let record = self.kv.swap_out_slot(slot);
-        let moved = record.moved_blocks();
-        let bytes = record.swapped_bytes(&self.kv.layout(), self.kv.block_tokens());
-        let stored = host.store(a.id, moved, record);
-        debug_assert!(stored, "can_store admitted a superset of moved blocks");
-        self.metrics.preemptions += 1;
-        self.metrics.swapped_out_blocks += moved as u64;
-        self.metrics.host_swap_bytes += bytes as u64;
-        if let Some(tr) = self.trace.as_mut() {
-            tr.record(
-                Some(a.id),
-                TraceEventKind::Preempt {
-                    blocks: moved as u64,
-                    swap: true,
-                },
-            );
-            let now = tr.now_s();
-            tr.record_span(
-                Some(a.id),
-                now,
-                0.0,
-                TraceEventKind::SwapOut {
-                    blocks: moved as u64,
-                    bytes: bytes as u64,
-                },
-            );
+        match kind {
+            ResumeKind::Swap => {
+                let sw0 = Clock::wall();
+                let record = self.kv.swap_out_slot(slot);
+                let moved = record.moved_blocks();
+                let bytes = record.swapped_bytes(&self.kv.layout(), self.kv.block_tokens());
+                // lint:allow(no-unwrap-in-lib): choose_preempt_kind only picks Swap with a tier
+                let host = self.host.as_mut().expect("swap arm requires a tier");
+                let stored = host.store(a.id, moved, record);
+                debug_assert!(stored, "can_store admitted a superset of moved blocks");
+                if moved > 0 {
+                    ema_update(&mut self.swap_s_per_block, sw0.now_s() / moved as f64);
+                }
+                self.metrics.preemptions += 1;
+                self.metrics.swapped_out_blocks += moved as u64;
+                self.metrics.host_swap_bytes += bytes as u64;
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record(
+                        Some(a.id),
+                        TraceEventKind::Preempt {
+                            blocks: moved as u64,
+                            swap: true,
+                        },
+                    );
+                    let now = tr.now_s();
+                    tr.record_span(
+                        Some(a.id),
+                        now,
+                        0.0,
+                        TraceEventKind::SwapOut {
+                            blocks: moved as u64,
+                            bytes: bytes as u64,
+                        },
+                    );
+                }
+                self.preempted.push_back(PreemptedSeq {
+                    a,
+                    kind: ResumeKind::Swap,
+                });
+            }
+            ResumeKind::Recompute => {
+                // Drop the victim's blocks outright — shared prefix
+                // blocks just lose one refcount; resume replays the
+                // context instead of moving bytes.
+                self.kv.free_slot(slot);
+                self.metrics.preemptions += 1;
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record(
+                        Some(a.id),
+                        TraceEventKind::Preempt {
+                            blocks: table_blocks as u64,
+                            swap: false,
+                        },
+                    );
+                }
+                self.preempted.push_back(PreemptedSeq {
+                    a,
+                    kind: ResumeKind::Recompute,
+                });
+            }
         }
-        self.preempted.push_back(a);
         true
     }
 
-    /// Swap the oldest preempted sequence back in when a slot is free:
-    /// moved blocks restore bit-identically (codes + scales), resident
-    /// shared blocks splice back refcount-balanced. Returns true when a
-    /// sequence rejoined the active set.
-    fn resume_one_preempted(&mut self) -> bool {
-        let Some(front_id) = self.preempted.front().map(|a| a.id) else {
-            return false;
+    /// Pick the eviction arm for one victim (PR 9 residual). `Swap` and
+    /// `Recompute` are fixed arms (`Swap` additionally requires the tier
+    /// to fit the victim's worst case — swap_out is not reversible, so
+    /// the budget check happens here, before the slot is touched).
+    /// `Auto` prices the arms with the engine's *measured* EMAs: a swap
+    /// costs the table's blocks over the host link twice (out + in), a
+    /// recompute costs the live context through re-prefill. Until both
+    /// EMAs are seeded, `Auto` falls back to the bit-identical swap arm.
+    fn choose_preempt_kind(&self, slot: usize, table_blocks: usize) -> Option<ResumeKind> {
+        let host_fits = self
+            .host
+            .as_ref()
+            .is_some_and(|h| h.can_store(table_blocks));
+        match self.cfg.preempt_policy {
+            PreemptPolicy::Swap => host_fits.then_some(ResumeKind::Swap),
+            PreemptPolicy::Recompute => Some(ResumeKind::Recompute),
+            PreemptPolicy::Auto => {
+                if !host_fits {
+                    return Some(ResumeKind::Recompute);
+                }
+                match (self.swap_s_per_block, self.reprefill_s_per_token) {
+                    (Some(per_block), Some(per_token)) => {
+                        let swap_s = 2.0 * table_blocks as f64 * per_block;
+                        let rec_s = self.kv.len(slot).unwrap_or(0) as f64 * per_token;
+                        Some(if rec_s < swap_s {
+                            ResumeKind::Recompute
+                        } else {
+                            ResumeKind::Swap
+                        })
+                    }
+                    _ => Some(ResumeKind::Swap),
+                }
+            }
+        }
+    }
+
+    /// Resume the oldest preempted sequence when a slot is free. Swap
+    /// victims restore bit-identically (moved blocks: codes + scales;
+    /// resident shared blocks splice back refcount-balanced); recompute
+    /// victims replay their context through the forced-decode chain.
+    /// Returns true when a sequence rejoined the active set.
+    fn resume_one_preempted(&mut self) -> Result<bool> {
+        let Some((front_id, kind)) = self.preempted.front().map(|p| (p.a.id, p.kind)) else {
+            return Ok(false);
         };
         if !self.kv.has_free_slot() {
-            return false;
+            return Ok(false);
+        }
+        if kind == ResumeKind::Recompute {
+            return self.resume_by_recompute();
         }
         let Some(host) = self.host.as_mut() else {
-            return false;
+            return Ok(false);
         };
         let Some((blocks, record)) = host.take(front_id) else {
             debug_assert!(false, "preempted sequence missing from the host tier");
-            return false;
+            return Ok(false);
         };
         let bytes = record.swapped_bytes(&self.kv.layout(), self.kv.block_tokens());
         let moved = record.moved_blocks();
+        let sw0 = Clock::wall();
         match self.kv.swap_in_slot(record) {
             Ok(slot) => {
+                if moved > 0 {
+                    ema_update(&mut self.swap_s_per_block, sw0.now_s() / moved as f64);
+                }
                 // lint:allow(no-unwrap-in-lib): front() produced front_id just above
-                let mut a = self.preempted.pop_front().expect("front exists");
-                a.last_scheduled = Clock::wall();
+                let mut p = self.preempted.pop_front().expect("front exists");
+                p.a.last_scheduled = Clock::wall();
                 self.metrics.swapped_in_blocks += moved as u64;
                 self.metrics.host_swap_bytes += bytes as u64;
                 if let Some(tr) = self.trace.as_mut() {
                     let now = tr.now_s();
                     tr.record_span(
-                        Some(a.id),
+                        Some(p.a.id),
                         now,
                         0.0,
                         TraceEventKind::SwapIn {
@@ -1240,17 +1593,61 @@ impl Engine {
                         },
                     );
                 }
-                self.active.insert(slot, a);
-                true
+                self.active.insert(slot, p.a);
+                Ok(true)
             }
             Err(record) => {
                 // Pool can't hold the moved blocks right now: put the
                 // payload back and retry on a later step.
                 let restored = host.store(front_id, blocks, record);
                 debug_assert!(restored, "re-storing a just-taken record must fit");
-                false
+                Ok(false)
             }
         }
+    }
+
+    /// Re-admit the queue-front recompute victim: replay its prompt plus
+    /// every generated token but the last (whose KV is always pending —
+    /// the plain-decode invariant) through the forced-decode chain into a
+    /// fresh slot. The replayed KV is computed by the same artifacts over
+    /// the same tokens, so the sequence continues bit-identically; the
+    /// measured chain time feeds the re-prefill EMA that `Auto` prices
+    /// future victims with.
+    fn resume_by_recompute(&mut self) -> Result<bool> {
+        let Some(slot) = self.kv.alloc_slot() else {
+            return Ok(false);
+        };
+        // lint:allow(no-unwrap-in-lib): the caller checked front() exists
+        let mut p = self.preempted.pop_front().expect("front exists");
+        let t0 = Clock::wall();
+        let n_ctx = p.a.prompt.len() + p.a.generated.len() - 1;
+        let mut chain: Vec<i32> = Vec::with_capacity(n_ctx);
+        chain.extend_from_slice(&p.a.prompt);
+        chain.extend_from_slice(&p.a.generated[..p.a.generated.len() - 1]);
+        for &tok in &chain {
+            self.forced_decode(slot, tok)?;
+        }
+        let re_s = t0.now_s();
+        self.metrics.prefill_time.record(re_s);
+        if n_ctx > 0 {
+            ema_update(&mut self.reprefill_s_per_token, re_s / n_ctx as f64);
+        }
+        self.metrics.recompute_resumes += 1;
+        p.a.last_scheduled = Clock::wall();
+        if let Some(tr) = self.trace.as_mut() {
+            let end_s = tr.now_s();
+            tr.record_span(
+                Some(p.a.id),
+                (end_s - re_s).max(0.0),
+                re_s,
+                TraceEventKind::PrefillChunk {
+                    tokens: n_ctx,
+                    mfu: 0.0,
+                },
+            );
+        }
+        self.active.insert(slot, p.a);
+        Ok(true)
     }
 
     fn maybe_finish(&mut self, slot: usize, kv_full: bool) {
@@ -1281,9 +1678,51 @@ impl Engine {
                 .unwrap_or(total);
             let n = a.generated.len();
             let tpot_s = if n > 1 { (total - ttft) / (n - 1) as f64 } else { 0.0 };
+            let out = RequestOutput {
+                id: a.id,
+                prompt_len: a.prompt.len(),
+                tokens: a.generated,
+                ttft_s: ttft,
+                tpot_s,
+                total_s: total,
+            };
+            if let Some(gid) = a.beam_group {
+                // Fold the branch into its beam group: the branch with the
+                // best cumulative log-prob is the request's output; the
+                // group emits once, when its last branch retires — losers
+                // are pruned forks (their blocks were just released).
+                // lint:allow(no-unwrap-in-lib): beam_group is set only by the fork path that registers the group
+                let pending = self.beams.get_mut(&gid).expect("beam branch without a group");
+                pending.done += 1;
+                if pending.best.is_none() || a.beam_score > pending.best_score {
+                    pending.best_score = a.beam_score;
+                    pending.best = Some(out);
+                }
+                if pending.done >= pending.width {
+                    // lint:allow(no-unwrap-in-lib): the entry was read two lines above
+                    let group = self.beams.remove(&gid).expect("entry exists");
+                    self.metrics.beam_prunes += (group.width - 1) as u64;
+                    // lint:allow(no-unwrap-in-lib): done > 0 means a branch was folded in
+                    let best = group.best.expect("a finished branch was folded");
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.record(
+                            Some(best.id),
+                            TraceEventKind::Retire {
+                                generated: best.tokens.len(),
+                                ttft_s: best.ttft_s,
+                                tpot_s: best.tpot_s,
+                                total_s: best.total_s,
+                            },
+                        );
+                    }
+                    self.finished.push(best);
+                    self.metrics.requests_completed += 1;
+                }
+                return;
+            }
             if let Some(tr) = self.trace.as_mut() {
                 tr.record(
-                    Some(a.id),
+                    Some(out.id),
                     TraceEventKind::Retire {
                         generated: n,
                         ttft_s: ttft,
@@ -1292,14 +1731,7 @@ impl Engine {
                     },
                 );
             }
-            self.finished.push(RequestOutput {
-                id: a.id,
-                prompt_len: a.prompt.len(),
-                tokens: a.generated,
-                ttft_s: ttft,
-                tpot_s,
-                total_s: total,
-            });
+            self.finished.push(out);
             self.metrics.requests_completed += 1;
         }
     }
@@ -1337,7 +1769,7 @@ impl ReplicaHandle for Engine {
         let resident: usize = self
             .active
             .values()
-            .chain(self.preempted.iter())
+            .chain(self.preempted.iter().map(|p| &p.a))
             .map(|a| a.prompt.len() + a.max_new_tokens.saturating_sub(a.generated.len()))
             .sum();
         let chunked: usize = self
@@ -1414,22 +1846,28 @@ impl ReplicaHandle for Engine {
             }
             ids.push(a.id);
         }
-        // Preempted sequences hold no slot, but their swap records pin
+        // Preempted sequences hold no slot, but swap victims' records pin
         // resident shared blocks and their pins hold cache spans —
-        // discard both so the pool drains clean.
-        while let Some(a) = self.preempted.pop_front() {
+        // discard both so the pool drains clean (recompute victims have
+        // no record to take).
+        while let Some(p) = self.preempted.pop_front() {
             if let Some(host) = self.host.as_mut() {
-                if let Some((_blocks, record)) = host.take(a.id) {
+                if let Some((_blocks, record)) = host.take(p.a.id) {
                     self.kv.discard_swapped(record);
                 }
             }
-            if a.cache_tokens > 0 {
-                if let Some(p) = self.prefix.as_mut() {
-                    p.release(&a.prompt, a.cache_tokens);
+            if p.a.cache_tokens > 0 {
+                if let Some(pc) = self.prefix.as_mut() {
+                    pc.release(&p.a.prompt, p.a.cache_tokens);
                 }
             }
-            ids.push(a.id);
+            ids.push(p.a.id);
         }
+        // Beam branches share one request id — report each aborted
+        // request once.
+        self.beams.clear();
+        ids.sort_unstable();
+        ids.dedup();
         ids
     }
 
@@ -1462,6 +1900,43 @@ fn argmax(xs: &[f32]) -> i32 {
     best as i32
 }
 
+/// Top-k token ids by logit (descending) with their log-softmax scores.
+/// Ties break toward the lower index, so the first entry always equals
+/// [`argmax`] — beam width 1 reduces to plain greedy exactly.
+fn top_k_log_softmax(row: &[f32], k: usize) -> (Vec<i32>, Vec<f64>) {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b]
+            .partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lz = row.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>().ln();
+    idx.into_iter()
+        .take(k.min(row.len()))
+        .map(|i| (i as i32, (row[i] as f64 - m) - lz))
+        .unzip()
+}
+
+/// Log-softmax of `row[idx]`, accumulated in f64 — the per-step beam
+/// score increment.
+fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lz = row.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>().ln();
+    (row[idx] as f64 - m) - lz
+}
+
+/// Exponential moving average with a 0.3 step: seeded by the first
+/// sample, then recent measurements dominate within a handful — what
+/// `Auto` preemption wants on a machine whose load shifts.
+fn ema_update(cur: &mut Option<f64>, sample: f64) {
+    *cur = Some(match *cur {
+        Some(c) => 0.7 * c + 0.3 * sample,
+        None => sample,
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1470,6 +1945,31 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
         assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn top_k_agrees_with_argmax_and_normalizes() {
+        let row = [0.5f32, 2.0, 2.0, -1.0];
+        let (toks, scores) = top_k_log_softmax(&row, 3);
+        // Ties break toward the lower index, matching argmax.
+        assert_eq!(toks[0], argmax(&row));
+        assert_eq!(toks, vec![1, 2, 0]);
+        // Scores are log-probs: the full softmax sums to 1.
+        let total: f64 = (0..row.len()).map(|i| log_softmax_at(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+        assert!((scores[0] - scores[1]).abs() < 1e-9);
+        assert!(scores[1] > scores[2]);
+        // k larger than the vocab clamps.
+        assert_eq!(top_k_log_softmax(&row, 10).0.len(), 4);
+    }
+
+    #[test]
+    fn ema_seeds_then_tracks() {
+        let mut e = None;
+        ema_update(&mut e, 10.0);
+        assert_eq!(e, Some(10.0));
+        ema_update(&mut e, 0.0);
+        assert_eq!(e, Some(7.0));
     }
 
     // Engine integration tests (require artifacts) are in

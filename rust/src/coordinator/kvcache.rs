@@ -1235,6 +1235,37 @@ pub enum AppendOutcome {
     AtCapacity,
 }
 
+/// Why a [`KvStore::fork_slot`] could not produce a branch. The two
+/// resources a fork consumes are distinct and recover differently — a
+/// caller that conflates them retries at the wrong time (a freed *slot*
+/// does not help a block-starved fork, and vice versa), so the store
+/// names the missing one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForkError {
+    /// Every slot table is occupied; retry after a sequence retires or
+    /// is preempted.
+    NoFreeSlot,
+    /// The pool has zero free blocks. A fork itself allocates nothing,
+    /// but its very first append must copy-on-write the shared hot
+    /// block (or open a fresh one) — with no free block that append
+    /// would hit the provisioning panic, so the fork is refused up
+    /// front. Retry after blocks are released.
+    NoFreeBlocks,
+    /// `src` holds no active sequence — a caller bookkeeping bug
+    /// surfaced as data, not a panic, so schedulers can route it.
+    InactiveSource,
+}
+
+impl std::fmt::Display for ForkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ForkError::NoFreeSlot => write!(f, "fork: no free slot"),
+            ForkError::NoFreeBlocks => write!(f, "fork: no free blocks for branch divergence"),
+            ForkError::InactiveSource => write!(f, "fork: source slot is inactive"),
+        }
+    }
+}
+
 /// One slot's borrowed decode-read state: its physical block table and
 /// valid length. Shared entries (refcount > 1) are fine to *read* — only
 /// writes trigger copy-on-write.
@@ -1994,19 +2025,54 @@ impl KvStore {
     /// beam-search primitive, a thin wrapper over the pool's multi-reader
     /// blocks: every block gains a reference, zero bytes are copied, and
     /// each branch's next [`Self::append_token`] copy-on-writes its own
-    /// hot block so the branches diverge privately. `None` when no slot is
-    /// free or `src` is inactive.
-    pub fn fork_slot(&mut self, src: usize) -> Option<usize> {
+    /// hot block so the branches diverge privately. The typed error says
+    /// *which* resource is missing ([`ForkError`]): slot exhaustion and
+    /// block exhaustion recover on different events, and a fork admitted
+    /// into an empty pool would only defer the failure to the branch's
+    /// first CoW append.
+    pub fn fork_slot(&mut self, src: usize) -> Result<usize, ForkError> {
         let (blocks, len) = {
-            let tab = self.tables[src].as_ref()?;
+            let tab = self.tables[src].as_ref().ok_or(ForkError::InactiveSource)?;
             (tab.blocks.clone(), tab.len)
         };
-        let dst = self.alloc_slot()?;
+        if self.pool.free_blocks() == 0 {
+            return Err(ForkError::NoFreeBlocks);
+        }
+        let dst = self.alloc_slot().ok_or(ForkError::NoFreeSlot)?;
         for &id in &blocks {
             self.pool.retain(id);
         }
         self.tables[dst] = Some(SlotTable { blocks, len });
-        Some(dst)
+        Ok(dst)
+    }
+
+    /// Roll `slot` back to `new_len` tokens — the speculative-decode
+    /// reject path. Blocks wholly past the new length are dead: each is
+    /// released, which on a *shared* block (a beam sibling or the prefix
+    /// cache still reads it) merely drops this sequence's reference and
+    /// on an exclusive block returns it to the pool — CoW-safe by the
+    /// same refcount discipline as [`Self::free_slot`]. A truncation
+    /// landing *inside* a block keeps that block: positions at or past
+    /// `new_len` are never read (attention masks by `len`, gathers
+    /// zero-fill past it) and the next [`Self::append_token`] re-encodes
+    /// the hot block over exactly the valid span, so stale rejected
+    /// tokens cannot leak into reads or FP8 scales.
+    ///
+    /// No-op when `new_len` is not an actual shrink; panics on an
+    /// inactive slot (rolling back nothing is a scheduler bug).
+    pub fn truncate_slot(&mut self, slot: usize, new_len: usize) {
+        let bt = self.pool.block_tokens();
+        // lint:allow(no-unwrap-in-lib): truncating an inactive slot is a scheduler bookkeeping bug
+        let tab = self.tables[slot].as_mut().expect("truncate of an active slot");
+        if new_len >= tab.len {
+            return;
+        }
+        let keep = new_len.div_ceil(bt);
+        let dead: Vec<BlockId> = tab.blocks.drain(keep.min(tab.blocks.len())..).collect();
+        tab.len = new_len;
+        for id in dead {
+            self.pool.release(id);
+        }
     }
 
     /// Preempt `slot`: move its exclusively-owned blocks to host memory
@@ -2643,6 +2709,151 @@ mod tests {
         s.free_slot(b);
         assert_eq!(s.pool().ref_count(nab[0]), 1, "branch release keeps a's refs");
         assert_eq!(s.pool().used_blocks(), 2);
+    }
+
+    #[test]
+    fn fork_slot_reports_which_resource_is_missing() {
+        // slots = 3, t = 12, bt = 4 → pool = 9 blocks.
+        let (l, t, kvh, hd, bt) = (1, 12, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 3, t, kvh, hd, KvDtype::F32, bt, 0);
+        let ss = t * kvh * hd;
+        let a = s.alloc_slot().unwrap();
+        s.write_slot(a, &vec![1.0; l * ss], &vec![1.0; l * ss], t); // 3 blocks
+        assert_eq!(s.fork_slot(2), Err(ForkError::InactiveSource));
+        // Slot axis: all tables occupied while free blocks remain.
+        let b = s.fork_slot(a).expect("slots + blocks free");
+        let c = s.alloc_slot().unwrap();
+        s.write_slot(c, &vec![2.0; l * ss], &vec![2.0; l * ss], t); // 3 blocks
+        assert!(s.pool().free_blocks() > 0);
+        assert_eq!(s.fork_slot(a), Err(ForkError::NoFreeSlot));
+        // Block axis: preempting the two beam siblings frees their slots
+        // but their shared blocks stay pinned in the swap records, so the
+        // pool can reach zero free blocks *with* free slots — exactly the
+        // state a fork must refuse (its first append could not CoW).
+        let rec_b = s.swap_out_slot(b); // shared with a → all Resident
+        let d = s.alloc_slot().unwrap();
+        s.write_slot(d, &vec![3.0; l * ss], &vec![3.0; l * ss], t); // last 3 blocks
+        let rec_a = s.swap_out_slot(a); // shared with rec_b → all Resident
+        assert_eq!(s.pool().free_blocks(), 0);
+        assert!(s.has_free_slot());
+        assert_eq!(s.fork_slot(c), Err(ForkError::NoFreeBlocks));
+        // Dropping the records releases the pinned history: the identical
+        // fork now succeeds — the two failures recover on different
+        // events, which is why the error is typed.
+        s.discard_swapped(rec_a);
+        s.discard_swapped(rec_b);
+        assert!(s.pool().free_blocks() > 0);
+        let e = s.fork_slot(c).expect("blocks recovered");
+        assert_eq!(s.len(e), Some(t));
+    }
+
+    #[test]
+    fn truncate_slot_releases_dead_tail_blocks() {
+        // bt = 4: write 11 tokens (3 blocks), roll back to 5 (2 blocks).
+        let (l, t, kvh, hd, bt) = (2, 16, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::F32, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let k0: Vec<f32> = (0..l * ss).map(|i| 1.0 + i as f32).collect();
+        s.write_slot(slot, &k0, &k0, 11);
+        assert_eq!(s.slot_blocks(slot).len(), 3);
+        let used = s.pool().used_blocks();
+        s.truncate_slot(slot, 5);
+        assert_eq!(s.len(slot), Some(5));
+        assert_eq!(s.slot_blocks(slot).len(), 2, "block 2 is wholly dead");
+        assert_eq!(s.pool().used_blocks(), used - 1, "dead block returned");
+        // Positions < 5 are untouched; past-len reads are exact zeros.
+        let row = kvh * hd;
+        let (k, _, lens) = s.gather_batch(&[slot]);
+        assert_eq!(lens, vec![5]);
+        for li in 0..l {
+            let base = li * ss;
+            assert_eq!(k[base..base + 5 * row], k0[base..base + 5 * row]);
+            assert!(k[base + 5 * row..base + ss].iter().all(|x| *x == 0.0));
+        }
+        // Growing again is a plain append at the rollback point.
+        let kr = vec![42.0f32; l * row];
+        assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::Appended);
+        assert_eq!(s.len(slot), Some(6));
+        let (k, _, _) = s.gather_batch(&[slot]);
+        for li in 0..l {
+            let base = li * ss;
+            assert!(k[base + 5 * row..base + 6 * row].iter().all(|x| *x == 42.0));
+        }
+        // Truncate to a *larger* length is a no-op, never a grow.
+        s.truncate_slot(slot, 12);
+        assert_eq!(s.len(slot), Some(6));
+    }
+
+    #[test]
+    fn truncate_inside_a_shared_block_keeps_the_block_and_its_readers() {
+        // Fork at len 6 (blocks [0,4) + [4,6) shared), then roll the
+        // branch back to 5 — inside shared block 1. The block must stay
+        // mapped for both readers with refcounts unchanged, and the
+        // branch's next append must CoW away exactly as a fresh fork
+        // would.
+        let (l, t, kvh, hd, bt) = (1, 16, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 2, t, kvh, hd, KvDtype::F32, bt, 0);
+        let a = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let row = kvh * hd;
+        let k0: Vec<f32> = (0..l * ss).map(|i| 1.0 + i as f32).collect();
+        s.write_slot(a, &k0, &k0, 6);
+        let b = s.fork_slot(a).expect("fork");
+        let shared = s.slot_blocks(a);
+        s.truncate_slot(b, 5);
+        assert_eq!(s.len(b), Some(5));
+        assert_eq!(s.slot_blocks(b), shared, "partial block survives rollback");
+        assert_eq!(s.pool().ref_count(shared[0]), 2);
+        assert_eq!(s.pool().ref_count(shared[1]), 2);
+        let kb = vec![9.0f32; l * row];
+        assert_eq!(s.append_token(b, &kb, &kb), AppendOutcome::Appended);
+        let bb = s.slot_blocks(b);
+        assert_ne!(bb[1], shared[1], "append after rollback CoWs the shared hot block");
+        assert_eq!(s.pool().ref_count(shared[1]), 1, "a keeps its block");
+        // a still reads its full 6-token history bit-for-bit; b reads 5
+        // shared tokens plus its own divergent write at position 5.
+        let (ka, _, _) = s.gather_batch(&[a]);
+        assert_eq!(ka[..6 * row], k0[..6 * row]);
+        let (kbr, _, _) = s.gather_batch(&[b]);
+        assert_eq!(kbr[..5 * row], k0[..5 * row]);
+        assert!(kbr[5 * row..6 * row].iter().all(|x| *x == 9.0));
+    }
+
+    #[test]
+    fn truncate_then_append_reencodes_fp8_scales_over_the_valid_span_only() {
+        // The rollback contract for scaled storage: stale rejected tokens
+        // left inside the kept hot block must not poison the scales of
+        // later appends. Write a huge-magnitude token at position 3,
+        // roll back to 3, then append small tokens — their quantization
+        // error must be on the small-value grid.
+        let (l, t, kvh, hd, bt) = (1, 8, 1, 2, 4);
+        let mut s = KvStore::with_block_tokens(l, 1, t, kvh, hd, KvDtype::FP8_DEFAULT, bt, 0);
+        let slot = s.alloc_slot().unwrap();
+        let ss = t * kvh * hd;
+        let row = kvh * hd;
+        let mut k0 = vec![0.0f32; l * ss];
+        for (i, x) in k0.iter_mut().enumerate().take(3 * row) {
+            *x = 0.25 + (i % 3) as f32 * 0.25; // |x| ≤ 0.75
+        }
+        k0[3 * row..4 * row].iter_mut().for_each(|x| *x = 1e6); // speculative junk
+        s.write_slot(slot, &k0, &k0, 4);
+        s.truncate_slot(slot, 3);
+        let kr = vec![0.5f32; l * row];
+        assert_eq!(s.append_token(slot, &kr, &kr), AppendOutcome::Appended);
+        let (k, _, _) = s.gather_batch(&[slot]);
+        // E4M3 on a maxabs ≈ 0.75 grid: error ≤ maxabs/16. A scale still
+        // contaminated by the rejected 1e6 token would flush everything
+        // to zero.
+        for i in 0..4 * row {
+            let want = if i < 3 * row { k0[i] } else { 0.5 };
+            assert!(
+                (k[i] - want).abs() <= 0.75 / 16.0 * 1.001,
+                "stale rejected token poisoned the hot-block scale: k[{i}]={} want {}",
+                k[i],
+                want
+            );
+        }
     }
 
     #[test]

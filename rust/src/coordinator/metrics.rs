@@ -185,6 +185,18 @@ pub struct ServeMetrics {
     /// Preempted sequences resumed by chunked re-prefill instead of
     /// swap-in (the recompute arm of the cost model).
     pub recompute_resumes: u64,
+    /// Speculative draft-verify rounds executed (ISSUE 10).
+    pub spec_rounds: u64,
+    /// Draft tokens the target's greedy verify accepted.
+    pub spec_accepted_tokens: u64,
+    /// Draft tokens rejected and rolled back by block truncation.
+    pub spec_rejected_tokens: u64,
+    /// Verify rounds that ended in a truncation rollback (< full accept).
+    pub spec_rollbacks: u64,
+    /// Beam branches forked off a live sequence (`fork_slot` successes).
+    pub beam_forks: u64,
+    /// Beam branches pruned (fork released before winning the beam).
+    pub beam_prunes: u64,
     pub ttft: LatencyStat,
     pub tpot: LatencyStat,
     pub prefill_time: LatencyStat,
@@ -226,6 +238,12 @@ impl ServeMetrics {
             swapped_in_blocks: 0,
             host_swap_bytes: 0,
             recompute_resumes: 0,
+            spec_rounds: 0,
+            spec_accepted_tokens: 0,
+            spec_rejected_tokens: 0,
+            spec_rollbacks: 0,
+            beam_forks: 0,
+            beam_prunes: 0,
             ttft: LatencyStat::new(),
             tpot: LatencyStat::new(),
             prefill_time: LatencyStat::new(),
@@ -287,6 +305,12 @@ impl ServeMetrics {
             out.swapped_in_blocks += m.swapped_in_blocks;
             out.host_swap_bytes += m.host_swap_bytes;
             out.recompute_resumes += m.recompute_resumes;
+            out.spec_rounds += m.spec_rounds;
+            out.spec_accepted_tokens += m.spec_accepted_tokens;
+            out.spec_rejected_tokens += m.spec_rejected_tokens;
+            out.spec_rollbacks += m.spec_rollbacks;
+            out.beam_forks += m.beam_forks;
+            out.beam_prunes += m.beam_prunes;
         }
         out.ttft = LatencyStat::merge_many(all.iter().map(|m| &m.ttft));
         out.tpot = LatencyStat::merge_many(all.iter().map(|m| &m.tpot));
@@ -349,6 +373,23 @@ impl ServeMetrics {
                 self.recompute_resumes
             ));
         }
+        if self.spec_rounds > 0 {
+            s.push_str(&format!(
+                " spec_rounds={} spec_accepted_tokens={} spec_rejected_tokens={} \
+                 spec_rollbacks={} spec_acceptance={:.2}",
+                self.spec_rounds,
+                self.spec_accepted_tokens,
+                self.spec_rejected_tokens,
+                self.spec_rollbacks,
+                self.spec_acceptance_rate()
+            ));
+        }
+        if self.beam_forks > 0 {
+            s.push_str(&format!(
+                " beam_forks={} beam_prunes={}",
+                self.beam_forks, self.beam_prunes
+            ));
+        }
         if self.trace_events_dropped > 0 {
             s.push_str(&format!(
                 "\nwarning: trace ring buffer dropped {} events (raise --trace-capacity for a complete timeline)",
@@ -356,6 +397,17 @@ impl ServeMetrics {
             ));
         }
         s
+    }
+
+    /// Fraction of draft tokens the greedy verify accepted (0 when no
+    /// speculative rounds ran).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        let total = self.spec_accepted_tokens + self.spec_rejected_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.spec_accepted_tokens as f64 / total as f64
+        }
     }
 
     /// One machine-readable JSON object per snapshot (the serve-side analog
@@ -370,7 +422,9 @@ impl ServeMetrics {
              \"mfu_mean\":{:.6},\"mfu_p50\":{:.6},\"mfu_p99\":{:.6},\
              \"pool_occupancy_peak\":{:.6},\"kv_bytes_read\":{},\"cow_block_copies\":{},\
              \"trace_events_dropped\":{},\"preemptions\":{},\"swapped_out_blocks\":{},\
-             \"swapped_in_blocks\":{},\"host_swap_bytes\":{},\"recompute_resumes\":{}}}",
+             \"swapped_in_blocks\":{},\"host_swap_bytes\":{},\"recompute_resumes\":{},\
+             \"spec_rounds\":{},\"spec_accepted_tokens\":{},\"spec_rejected_tokens\":{},\
+             \"spec_rollbacks\":{},\"beam_forks\":{},\"beam_prunes\":{}}}",
             label.replace(['"', '\\'], "_"),
             self.requests_completed,
             self.prompt_tokens,
@@ -398,6 +452,12 @@ impl ServeMetrics {
             self.swapped_in_blocks,
             self.host_swap_bytes,
             self.recompute_resumes,
+            self.spec_rounds,
+            self.spec_accepted_tokens,
+            self.spec_rejected_tokens,
+            self.spec_rollbacks,
+            self.beam_forks,
+            self.beam_prunes,
         )
     }
 }
@@ -620,6 +680,47 @@ mod tests {
         assert_eq!(j.get("mfu_mean").and_then(Json::as_f64), Some(0.6));
         assert_eq!(j.get("preemptions").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("host_swap_bytes").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn speculative_counters_merge_report_and_export() {
+        use crate::util::json::Json;
+        let mut a = ServeMetrics::new();
+        a.spec_rounds = 4;
+        a.spec_accepted_tokens = 12;
+        a.spec_rejected_tokens = 4;
+        a.spec_rollbacks = 3;
+        a.beam_forks = 2;
+        let mut b = ServeMetrics::new();
+        b.spec_rounds = 1;
+        b.spec_accepted_tokens = 4;
+        b.beam_prunes = 1;
+        a.merge(&b);
+        assert_eq!(a.spec_rounds, 5);
+        assert_eq!(a.spec_accepted_tokens, 16);
+        assert_eq!(a.spec_rejected_tokens, 4);
+        assert_eq!(a.spec_rollbacks, 3);
+        assert_eq!(a.beam_forks, 2);
+        assert_eq!(a.beam_prunes, 1);
+        assert!((a.spec_acceptance_rate() - 0.8).abs() < 1e-12);
+        assert!(a.report().contains("spec_rounds=5"));
+        assert!(a.report().contains("spec_acceptance=0.80"));
+        assert!(a.report().contains("beam_forks=2"));
+        // Zero-valued keys still export (dashboards need the series).
+        let fresh = ServeMetrics::new();
+        assert!(!fresh.report().contains("spec_rounds"));
+        assert!(!fresh.report().contains("beam_forks"));
+        let j = Json::parse(&fresh.json_row("x")).unwrap();
+        for key in [
+            "spec_rounds",
+            "spec_accepted_tokens",
+            "spec_rejected_tokens",
+            "spec_rollbacks",
+            "beam_forks",
+            "beam_prunes",
+        ] {
+            assert_eq!(j.get(key).and_then(Json::as_f64), Some(0.0), "{key}");
+        }
     }
 
     #[test]

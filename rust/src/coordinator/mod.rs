@@ -26,7 +26,7 @@ pub use engine::{Engine, EngineConfig};
 pub use hosttier::HostTier;
 pub use kvcache::{
     AppendOutcome, AttendOptions, AttendScratch, AttendTask, BlockAllocator, BlockId, BlockPool,
-    Dequant, KvStore, PagedAttentionView, PagedSlotView, SwappedBlock, SwappedSlot,
+    Dequant, ForkError, KvStore, PagedAttentionView, PagedSlotView, SwappedBlock, SwappedSlot,
 };
 pub use metrics::{LatencyStat, ServeMetrics};
 pub use prefix::{PrefixCache, PrefixCacheConfig, PrefixStats};

@@ -22,6 +22,10 @@ pub struct Request {
     /// policy keeps every turn of a session on the replica that already
     /// holds its KV history.
     pub session: Option<u64>,
+    /// Per-request beam width override: `Some(k)` forks `k` branches off
+    /// the prompt KV at the first token and emits the best-scoring one;
+    /// `None` inherits the engine's configured default.
+    pub beam_width: Option<usize>,
 }
 
 impl Request {
@@ -33,11 +37,17 @@ impl Request {
             stop_token: None,
             arrival: Clock::wall(),
             session: None,
+            beam_width: None,
         }
     }
 
     pub fn with_session(mut self, session: u64) -> Self {
         self.session = Some(session);
+        self
+    }
+
+    pub fn with_beam_width(mut self, k: usize) -> Self {
+        self.beam_width = Some(k.max(1));
         self
     }
 }
@@ -85,7 +95,10 @@ mod tests {
         assert_eq!(r.prompt.len(), 3);
         assert!(r.stop_token.is_none());
         assert!(r.session.is_none());
+        assert!(r.beam_width.is_none());
         assert_eq!(Request::new(8, vec![1], 4).with_session(42).session, Some(42));
+        assert_eq!(Request::new(9, vec![1], 4).with_beam_width(0).beam_width, Some(1));
+        assert_eq!(Request::new(9, vec![1], 4).with_beam_width(4).beam_width, Some(4));
     }
 
     #[test]

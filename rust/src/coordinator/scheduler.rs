@@ -196,6 +196,43 @@ impl Scheduler {
         groups
     }
 
+    /// Grouping for **beam decode**: each cohort is a set of slots that
+    /// must step together in one decode group (a beam's branches share a
+    /// softmax round — splitting them would let one branch run ahead of
+    /// its siblings and break the lockstep scoring contract). Cohorts are
+    /// packed order-preserving into groups of the same max batch as
+    /// [`Self::decode_groups`], but a cohort is never split across a
+    /// group boundary: if it does not fit the current group's remaining
+    /// room it starts the next group, and a cohort *larger* than the max
+    /// batch gets a group of its own (the artifact runner pads to the
+    /// next bucket; correctness over packing).
+    pub fn decode_groups_cohorts(&self, cohorts: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        let max_b = self
+            .decode_batches
+            .last()
+            .copied()
+            .unwrap_or_else(|| cohorts.iter().map(|c| c.len()).sum::<usize>())
+            .max(1);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        for cohort in cohorts {
+            if cohort.is_empty() {
+                continue;
+            }
+            if !cur.is_empty() && cur.len() + cohort.len() > max_b {
+                groups.push(std::mem::take(&mut cur));
+            }
+            cur.extend_from_slice(cohort);
+            if cur.len() >= max_b {
+                groups.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+        groups
+    }
+
     /// Grouping for the **dense reference** path: a dense batched-attention
     /// kernel pads every row of a group to the group-max context, so slots
     /// are sorted by context (descending, slot id tie-break for
@@ -305,6 +342,33 @@ mod tests {
         assert_eq!(s.decode_bucket(8), 8);
         assert_eq!(s.decode_bucket(9), 8); // split into groups
         assert_eq!(s.decode_groups(&[0, 1, 2, 3, 4, 5, 6, 7, 8]).len(), 2);
+    }
+
+    #[test]
+    fn cohort_grouping_never_splits_a_beam() {
+        let s = sched(SchedulePolicy::PrefillFirst); // max batch 8
+        // Singles pack exactly like decode_groups.
+        let singles: Vec<Vec<usize>> = (0..9).map(|i| vec![i]).collect();
+        let ids: Vec<usize> = (0..9).collect();
+        assert_eq!(s.decode_groups_cohorts(&singles), s.decode_groups(&ids));
+        // A width-4 beam + singles: the beam that would straddle the
+        // boundary starts the next group instead of splitting.
+        let mut cohorts: Vec<Vec<usize>> = (0..6).map(|i| vec![i]).collect();
+        cohorts.push(vec![10, 11, 12, 13]);
+        let groups = s.decode_groups_cohorts(&cohorts);
+        assert_eq!(groups, vec![vec![0, 1, 2, 3, 4, 5], vec![10, 11, 12, 13]]);
+        for g in &groups {
+            let beam: Vec<usize> = g.iter().copied().filter(|&x| x >= 10).collect();
+            assert!(beam.is_empty() || beam == vec![10, 11, 12, 13], "beam split across groups");
+        }
+        // A cohort larger than the max batch still steps as one group.
+        let wide: Vec<usize> = (0..10).collect();
+        assert_eq!(s.decode_groups_cohorts(&[wide.clone()]), vec![wide]);
+        // Empty cohorts vanish; order is preserved across the rest.
+        assert_eq!(
+            s.decode_groups_cohorts(&[vec![], vec![7, 8], vec![], vec![9]]),
+            vec![vec![7, 8, 9]]
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub use e2e::{
     chunked_prefill_report, chunked_prefill_time_s, decode_group_model_flops,
     decode_group_report_paged, decode_group_time_s_paged, decode_step_tflops,
     decode_step_tflops_dense, kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops,
+    speculative_expected_tokens_per_round, speculative_round_time_s, speculative_tpot_s,
     E2eConfig, E2eReport, KV_PAGED_STREAM_INEFFICIENCY,
 };
 pub use memory::MemoryModel;

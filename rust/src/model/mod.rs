@@ -12,4 +12,4 @@ pub mod synthetic;
 pub use config::{ModelConfig, ModelFamily};
 pub use flops::{decode_step_model_flops, prefill_model_flops};
 pub use layers::{LayerKind, LinearOp};
-pub use synthetic::SyntheticLm;
+pub use synthetic::{DraftLm, SyntheticLm};

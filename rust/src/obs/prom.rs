@@ -134,6 +134,48 @@ impl ServeMetrics {
             "Preempted sequences resumed by chunked re-prefill.",
             self.recompute_resumes,
         );
+        counter(
+            &mut out,
+            "repro_spec_rounds",
+            "Speculative draft-verify rounds executed.",
+            self.spec_rounds,
+        );
+        counter(
+            &mut out,
+            "repro_spec_accepted_tokens",
+            "Draft tokens accepted by the target's greedy verify.",
+            self.spec_accepted_tokens,
+        );
+        counter(
+            &mut out,
+            "repro_spec_rejected_tokens",
+            "Draft tokens rejected and rolled back by block truncation.",
+            self.spec_rejected_tokens,
+        );
+        counter(
+            &mut out,
+            "repro_spec_rollbacks",
+            "Verify rounds that ended in a truncation rollback.",
+            self.spec_rollbacks,
+        );
+        counter(
+            &mut out,
+            "repro_beam_forks",
+            "Beam branches forked off live sequences.",
+            self.beam_forks,
+        );
+        counter(
+            &mut out,
+            "repro_beam_prunes",
+            "Beam branches pruned before winning their beam.",
+            self.beam_prunes,
+        );
+        gauge(
+            &mut out,
+            "repro_spec_acceptance_rate",
+            "Fraction of draft tokens accepted (0 with no spec rounds).",
+            self.spec_acceptance_rate(),
+        );
         gauge(
             &mut out,
             "repro_prefix_hit_rate",
@@ -197,10 +239,23 @@ mod tests {
         m.swapped_in_blocks = 5;
         m.host_swap_bytes = 8192;
         m.recompute_resumes = 1;
+        m.spec_rounds = 6;
+        m.spec_accepted_tokens = 20;
+        m.spec_rejected_tokens = 4;
+        m.spec_rollbacks = 3;
+        m.beam_forks = 4;
+        m.beam_prunes = 3;
         m.ttft.record(0.5);
         m.mfu.record(0.9);
         let text = m.render_prometheus();
         for needle in [
+            "# TYPE repro_spec_rounds counter",
+            "repro_spec_rounds 6",
+            "repro_spec_accepted_tokens 20",
+            "repro_spec_rejected_tokens 4",
+            "repro_spec_rollbacks 3",
+            "repro_beam_forks 4",
+            "repro_beam_prunes 3",
             "# TYPE repro_requests_completed counter",
             "repro_requests_completed 3",
             "repro_generated_tokens 42",

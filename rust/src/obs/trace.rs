@@ -66,6 +66,16 @@ pub enum TraceEventKind {
     SwapOut { blocks: u64, bytes: u64 },
     /// Blocks restored from the host KV tier into the pool.
     SwapIn { blocks: u64, bytes: u64 },
+    /// The draft model proposed `gamma` tokens for a speculative round.
+    DraftPropose { gamma: usize },
+    /// A speculative verify round finished: `accepted` of the proposals
+    /// matched the target's greedy choice, `emitted` tokens entered the
+    /// stream (accepted prefix + the correction/bonus token).
+    VerifyAccept { accepted: usize, emitted: usize },
+    /// Rejected speculative tokens were rolled back by block truncation;
+    /// `tokens` rejected positions dropped, `blocks` now-dead tail
+    /// blocks released.
+    Rollback { tokens: usize, blocks: u64 },
 }
 
 impl TraceEventKind {
@@ -82,6 +92,9 @@ impl TraceEventKind {
             TraceEventKind::Preempt { .. } => "preempt",
             TraceEventKind::SwapOut { .. } => "swap_out",
             TraceEventKind::SwapIn { .. } => "swap_in",
+            TraceEventKind::DraftPropose { .. } => "draft_propose",
+            TraceEventKind::VerifyAccept { .. } => "verify_accept",
+            TraceEventKind::Rollback { .. } => "rollback",
         }
     }
 
@@ -374,6 +387,43 @@ pub fn chrome_trace_json(tracks: &[(String, &TraceRecorder)]) -> String {
                         ),
                     ));
                 }
+                TraceEventKind::DraftPropose { gamma } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(pid, tid, "draft_propose", ts_us, &format!("\"gamma\":{gamma}")),
+                    ));
+                }
+                TraceEventKind::VerifyAccept { accepted, emitted } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        complete_event(
+                            pid,
+                            tid,
+                            "verify_accept",
+                            ts_us,
+                            dur_us,
+                            &format!("\"accepted\":{accepted},\"emitted\":{emitted}"),
+                        ),
+                    ));
+                }
+                TraceEventKind::Rollback { tokens, blocks } => {
+                    let tid = request_tid(ev.request.unwrap_or(0));
+                    named_tids.insert(tid);
+                    per_tid.entry(tid).or_default().push((
+                        ts_us,
+                        instant_event(
+                            pid,
+                            tid,
+                            "rollback",
+                            ts_us,
+                            &format!("\"tokens\":{tokens},\"blocks\":{blocks}"),
+                        ),
+                    ));
+                }
                 TraceEventKind::Reject { reason } => {
                     let tid = request_tid(ev.request.unwrap_or(0));
                     named_tids.insert(tid);
@@ -642,6 +692,40 @@ mod tests {
             .find(|e| e.get("name").and_then(Json::as_str) == Some("ttft"))
             .unwrap();
         assert!((ttft_span.get("dur").and_then(Json::as_f64).unwrap() - 1.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn speculative_events_export_on_the_request_track() {
+        let mut r = recorder();
+        r.record_at(1.0, Some(3), TraceEventKind::DraftPropose { gamma: 4 });
+        r.record_span(
+            Some(3),
+            1.0,
+            0.05,
+            TraceEventKind::VerifyAccept {
+                accepted: 3,
+                emitted: 4,
+            },
+        );
+        r.record_at(1.05, Some(3), TraceEventKind::Rollback { tokens: 1, blocks: 1 });
+        let out = chrome_trace_json(&[("spec".to_string(), &r)]);
+        let j = Json::parse(&out).expect("valid JSON");
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        for name in ["draft_propose", "verify_accept", "rollback"] {
+            let e = events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("{name} missing from export"));
+            // All three ride the request's own track, not `steps`.
+            assert_eq!(e.get("tid").and_then(Json::as_f64), Some(4.0), "{name}");
+        }
+        let va = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("verify_accept"))
+            .unwrap();
+        let arg = |k: &str| va.get("args").and_then(|a| a.get(k)).and_then(Json::as_f64);
+        assert_eq!(arg("accepted"), Some(3.0));
+        assert_eq!(arg("emitted"), Some(4.0));
     }
 
     #[test]

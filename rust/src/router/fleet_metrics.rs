@@ -151,6 +151,19 @@ impl FleetMetrics {
                 self.merged.recompute_resumes,
             ));
         }
+        if self.merged.spec_rounds > 0 || self.merged.beam_forks > 0 {
+            s.push_str(&format!(
+                "\nspeculative: rounds={} accepted={} rejected={} rollbacks={} \
+                 acceptance={:.2} beam_forks={} beam_prunes={}",
+                self.merged.spec_rounds,
+                self.merged.spec_accepted_tokens,
+                self.merged.spec_rejected_tokens,
+                self.merged.spec_rollbacks,
+                self.merged.spec_acceptance_rate(),
+                self.merged.beam_forks,
+                self.merged.beam_prunes,
+            ));
+        }
         if self.rejected > 0 {
             let split: Vec<String> = RejectReason::ALL_LABELS
                 .iter()
@@ -218,7 +231,10 @@ impl FleetMetrics {
              \"mfu_mean\":{:.6},\"pool_occupancy_peak\":{:.6},\
              \"trace_events_dropped\":{},\
              \"preemptions\":{},\"swapped_out_blocks\":{},\"swapped_in_blocks\":{},\
-             \"host_swap_bytes\":{},\"recompute_resumes\":{}}}",
+             \"host_swap_bytes\":{},\"recompute_resumes\":{},\
+             \"spec_rounds\":{},\"spec_accepted_tokens\":{},\
+             \"spec_rejected_tokens\":{},\"spec_rollbacks\":{},\
+             \"beam_forks\":{},\"beam_prunes\":{}}}",
             fig,
             replicas,
             policy,
@@ -244,6 +260,12 @@ impl FleetMetrics {
             self.merged.swapped_in_blocks,
             self.merged.host_swap_bytes,
             self.merged.recompute_resumes,
+            self.merged.spec_rounds,
+            self.merged.spec_accepted_tokens,
+            self.merged.spec_rejected_tokens,
+            self.merged.spec_rollbacks,
+            self.merged.beam_forks,
+            self.merged.beam_prunes,
         )
     }
 }
@@ -306,6 +328,12 @@ mod tests {
             "swapped_in_blocks",
             "host_swap_bytes",
             "recompute_resumes",
+            "spec_rounds",
+            "spec_accepted_tokens",
+            "spec_rejected_tokens",
+            "spec_rollbacks",
+            "beam_forks",
+            "beam_prunes",
         ] {
             assert_eq!(j.get(key).and_then(Json::as_f64), Some(0.0), "{key}");
         }
@@ -374,6 +402,20 @@ mod tests {
             rep.contains(
                 "overload: preemptions=4 swapped_out=12 swapped_in=12 \
                  host_swap_bytes=65536 recompute_resumes=1"
+            ),
+            "{rep}"
+        );
+        fm.merged.spec_rounds = 5;
+        fm.merged.spec_accepted_tokens = 16;
+        fm.merged.spec_rejected_tokens = 4;
+        fm.merged.spec_rollbacks = 3;
+        fm.merged.beam_forks = 2;
+        fm.merged.beam_prunes = 1;
+        let rep = fm.report();
+        assert!(
+            rep.contains(
+                "speculative: rounds=5 accepted=16 rejected=4 rollbacks=3 \
+                 acceptance=0.80 beam_forks=2 beam_prunes=1"
             ),
             "{rep}"
         );

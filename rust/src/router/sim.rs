@@ -45,8 +45,9 @@ use crate::coordinator::{
 };
 use crate::gaudisim::{
     chunked_prefill_report, chunked_prefill_time_s, decode_group_report_paged,
-    decode_step_tflops_dense, kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops, Device,
-    E2eConfig, MemoryModel, ScalingKind,
+    decode_step_tflops_dense, kv_read_bytes_dense, kv_read_bytes_paged, prefill_tflops,
+    speculative_expected_tokens_per_round, speculative_round_time_s, Device, E2eConfig,
+    MemoryModel, ScalingKind,
 };
 use crate::model::config::{ModelConfig, ModelFamily};
 use crate::obs::{Clock, StepStats, TraceEventKind, TraceRecorder};
@@ -94,6 +95,19 @@ pub struct SimReplicaConfig {
     /// tier, always re-prefill chunked, or price both and take the
     /// cheaper (`Auto`). Irrelevant while `host_kv_bytes == 0`.
     pub preempt_policy: PreemptPolicy,
+    /// Draft-verify speculative decoding (ISSUE 10): the tiny draft
+    /// proposes this many tokens per round, the target verifies them in
+    /// one chunked multi-token step (0 = off). Priced only for
+    /// single-stream decode — exactly one resident sequence; a batch
+    /// already amortizes the per-step overhead speculation exists to
+    /// hide.
+    pub spec_gamma: usize,
+    /// Modeled acceptance rate α ∈ [0, 1]: the expected fraction of
+    /// draft tokens the target's greedy accept-prefix verify keeps.
+    pub spec_acceptance: f64,
+    /// Width-k beam groups (1 = off): admission forks `k-1` co-resident
+    /// branches that decode in lockstep and retire as one request.
+    pub beam_width: usize,
     pub prefill_seqs: Vec<usize>,
     pub decode_batches: Vec<usize>,
 }
@@ -119,6 +133,9 @@ impl SimReplicaConfig {
             dense_decode: false,
             host_kv_bytes: 0.0,
             preempt_policy: PreemptPolicy::Auto,
+            spec_gamma: 0,
+            spec_acceptance: 0.8,
+            beam_width: 1,
             prefill_seqs: vec![16, 32, 64, 128, 256, 512, 1024],
             decode_batches: vec![1, 2, 4, 8],
         }
@@ -139,6 +156,9 @@ impl SimReplicaConfig {
             dense_decode: false,
             host_kv_bytes: 0.0,
             preempt_policy: PreemptPolicy::Auto,
+            spec_gamma: 0,
+            spec_acceptance: 0.8,
+            beam_width: 1,
             prefill_seqs: vec![1024, 2048, 4096, 8192, 16384],
             decode_batches: vec![1, 8, 16, 32, 64, 128],
         }
@@ -165,6 +185,13 @@ struct SimActive {
     /// scheduled this sequence — preemption victims are picked
     /// least-recently-scheduled first.
     last_scheduled_s: f64,
+    /// Blocks of history this row shares with its beam siblings (the
+    /// prompt KV at fork time, owned by the root's allocation). Growth
+    /// charges only blocks past this shared span. 0 for plain rows.
+    shared_blocks: usize,
+    /// Width of this row's beam group (1 = not a beam branch). All k
+    /// rows of a group share one request id and retire as one output.
+    beam_width: usize,
 }
 
 /// How a specific preempted sequence gets back on the device — fixed at
@@ -205,6 +232,15 @@ pub struct SimReplica {
     /// Lifecycle trace recorder (None = tracing off; the default, so the
     /// hot path pays nothing).
     trace: Option<TraceRecorder>,
+    /// Draft-model pricing config for speculative rounds (`None` while
+    /// `spec_gamma == 0`): the tiny synthetic geometry on the *target's*
+    /// device, so draft and verify share one roofline.
+    draft_e2e: Option<E2eConfig>,
+    /// Fractional accepted-token credit carried between speculative
+    /// rounds: each round banks `speculative_expected_tokens_per_round`
+    /// and emits the integer part, so long-run throughput matches the
+    /// analytic expectation exactly with an RNG-free virtual clock.
+    spec_credit: f64,
 }
 
 impl SimReplica {
@@ -250,6 +286,12 @@ impl SimReplica {
         } else {
             None
         };
+        let draft_e2e = (cfg.spec_gamma > 0).then(|| E2eConfig {
+            model: ModelConfig::synthetic_tiny(ModelFamily::Llama3),
+            device: cfg.e2e.device,
+            scaling: cfg.e2e.scaling,
+            lm_head_bf16: cfg.e2e.lm_head_bf16,
+        });
         Ok(Self {
             label: label.to_string(),
             cfg,
@@ -264,6 +306,8 @@ impl SimReplica {
             metrics: ServeMetrics::new(),
             finished: Vec::new(),
             trace: None,
+            draft_e2e,
+            spec_credit: 0.0,
         })
     }
 
@@ -395,16 +439,38 @@ impl SimReplica {
                 return true;
             }
         }
+        // Width-k beam groups (ISSUE 10): admission forks `k-1` branches
+        // off the freshly prefilled prompt KV. Branches share the prompt
+        // history (CoW in the engine), so each charges only its divergent
+        // growth: the blocks past the fork point plus one copied-on-write
+        // hot block. Width degrades rather than wedging — the group must
+        // fit the slots and the pool as one co-resident unit.
+        let mut width = req
+            .beam_width
+            .unwrap_or(self.cfg.beam_width)
+            .max(1)
+            .min(self.cfg.decode_batches.last().copied().unwrap_or(1).max(1));
+        let branch_total = self.alloc.blocks_for(prompt_len + req.max_new_tokens.max(1))
+            - self.alloc.blocks_for(prompt_len + 1)
+            + 1;
+        while width > 1 {
+            let slots_ok = self.active.len() + width <= self.cfg.slots;
+            let pool_ok = total_need + (width - 1) * branch_total <= self.alloc.total_blocks;
+            if slots_ok && pool_ok {
+                break;
+            }
+            width -= 1;
+        }
         // With the host tier on, admission charges only the resident
         // prefill footprint (prompt + first token); generation then grows
         // block-by-block, preempting under pressure. Tier off keeps the
-        // legacy whole-lifetime charge.
-        let resident_need = if self.host.is_some() {
-            self.alloc.blocks_for(prompt_len + 1)
+        // legacy whole-lifetime charge (branches included).
+        let (resident_need, branch_blocks) = if self.host.is_some() {
+            (self.alloc.blocks_for(prompt_len + 1), 0)
         } else {
-            total_need
+            (total_need, branch_total)
         };
-        let need_blocks = resident_need - cached / bt;
+        let need_blocks = resident_need - cached / bt + (width - 1) * branch_blocks;
         // Reclaim refcount-0 cached blocks before anything drastic.
         self.evict_cache_for(need_blocks);
         if !self.alloc.can_allocate_blocks(need_blocks) && self.host.is_some() {
@@ -532,18 +598,45 @@ impl SimReplica {
                 );
             }
         }
+        let max_new = req.max_new_tokens.max(1);
         self.active.push(SimActive {
             id: req.id,
-            prompt: req.prompt,
+            prompt: req.prompt.clone(),
             cache_tokens,
-            max_new: req.max_new_tokens.max(1),
+            max_new,
             generated: 1,
             ttft_s: ttft,
             first_token_s: self.now_s,
-            blocks: private_blocks,
+            blocks: private_blocks - (width - 1) * branch_blocks,
             context: prompt_len + 1,
             last_scheduled_s: self.now_s,
+            shared_blocks: 0,
+            beam_width: width,
         });
+        if width > 1 {
+            // Forking is KV-table metadata in the engine — zero model
+            // time; each branch's first token was sampled from the same
+            // prefill logits row.
+            self.metrics.beam_forks += (width - 1) as u64;
+            self.metrics.generated_tokens += (width - 1) as u64;
+            let shared = self.alloc.blocks_for(prompt_len + 1);
+            for _ in 1..width {
+                self.active.push(SimActive {
+                    id: req.id,
+                    prompt: req.prompt.clone(),
+                    cache_tokens: 0,
+                    max_new,
+                    generated: 1,
+                    ttft_s: ttft,
+                    first_token_s: self.now_s,
+                    blocks: branch_blocks,
+                    context: prompt_len + 1,
+                    last_scheduled_s: self.now_s,
+                    shared_blocks: shared,
+                    beam_width: width,
+                });
+            }
+        }
         true
     }
 
@@ -592,6 +685,10 @@ impl SimReplica {
                 .iter()
                 .enumerate()
                 .filter(|(_, a)| Some(a.id) != protect)
+                // Beam groups stay co-resident: evicting one branch of a
+                // group that must decode in lockstep stalls the whole
+                // group, so branches are not preemption victims.
+                .filter(|(_, a)| a.beam_width == 1)
                 .filter(|(_, a)| a.blocks > 0 || a.cache_tokens > 0)
                 .map(|(idx, a)| PreemptCandidate {
                     idx,
@@ -794,6 +891,9 @@ impl SimReplica {
                 }
                 a.cache_tokens = cached;
                 a.blocks = need;
+                // The re-prefill re-materialized the whole context into
+                // this row's own allocation — nothing is shared anymore.
+                a.shared_blocks = 0;
             }
         }
         a.last_scheduled_s = self.now_s;
@@ -815,7 +915,10 @@ impl SimReplica {
         while i < self.active.len() {
             let (id, need_extra) = {
                 let a = &self.active[i];
-                let private_need = self.alloc.blocks_for(a.context + 1) - a.cache_tokens / bt;
+                // A beam branch owns only the blocks past its shared fork
+                // history (the root holds the prompt span).
+                let private_need = (self.alloc.blocks_for(a.context + 1) - a.cache_tokens / bt)
+                    .saturating_sub(a.shared_blocks);
                 (a.id, private_need.saturating_sub(a.blocks))
             };
             if need_extra == 0 {
@@ -831,17 +934,157 @@ impl SimReplica {
                     .allocate_blocks(need_extra)
                     // lint:allow(no-unwrap-in-lib): availability just checked
                     .expect("availability just checked");
-                if let Some(a) = self.active.iter_mut().find(|a| a.id == id) {
-                    a.blocks += need_extra;
+                if let Some(j) = self.growth_row(id) {
+                    self.active[j].blocks += need_extra;
                 }
-            } else if let Some(idx) = self.active.iter().position(|a| a.id == id) {
-                self.preempt_active(idx);
+            } else if let Some(j) = self.growth_row(id) {
+                self.preempt_active(j);
             }
             // Preemption swap_removes victims: indices shifted, rescan.
             // Terminates — each pass either grows a sequence (its demand
             // drops to zero) or removes one from `active`.
             i = 0;
         }
+    }
+
+    /// Index of the row with this id whose block demand for the next
+    /// token is still unmet. Beam branches share one request id, so a
+    /// plain first-id-match could credit growth blocks to a sibling that
+    /// needs nothing (and re-demand forever); falls back to the first id
+    /// match when every sibling is satisfied.
+    fn growth_row(&self, id: RequestId) -> Option<usize> {
+        let bt = self.cfg.block_tokens;
+        let mut first = None;
+        for (j, a) in self.active.iter().enumerate() {
+            if a.id != id {
+                continue;
+            }
+            let unmet = (self.alloc.blocks_for(a.context + 1) - a.cache_tokens / bt)
+                .saturating_sub(a.shared_blocks)
+                > a.blocks;
+            if unmet {
+                return Some(j);
+            }
+            first.get_or_insert(j);
+        }
+        first
+    }
+
+    /// One draft-verify speculative round for the lone resident sequence
+    /// (ISSUE 10): the draft decodes γ proposals, the target verifies all
+    /// γ+1 positions in one chunked multi-token step
+    /// ([`speculative_round_time_s`]), and the accepted-token yield flows
+    /// through a deterministic fractional-credit accumulator seeded from
+    /// the modeled acceptance rate — the virtual clock stays RNG-free
+    /// (clock discipline) while long-run throughput matches
+    /// [`speculative_expected_tokens_per_round`] exactly.
+    ///
+    /// Returns `false` (caller falls back to the plain decode round) when
+    /// speculation is off, more than one sequence is resident — a batch
+    /// already amortizes the per-step overhead speculation hides — or the
+    /// pool cannot grow by this round's kept tokens.
+    fn speculative_round(&mut self) -> bool {
+        if self.cfg.spec_gamma == 0 || self.active.len() != 1 {
+            return false;
+        }
+        if self.active[0].beam_width > 1 {
+            // Engine parity: beam branches carry scores the accept-prefix
+            // rule does not model — a lone surviving branch decodes plain.
+            return false;
+        }
+        let gamma = self.cfg.spec_gamma;
+        let bt = self.cfg.block_tokens;
+        let (id, ctx, remaining) = {
+            let a = &self.active[0];
+            (a.id, a.context, a.max_new - a.generated)
+        };
+        if remaining == 0 {
+            return false;
+        }
+        let t = {
+            let Some(draft) = self.draft_e2e.as_ref() else {
+                return false;
+            };
+            speculative_round_time_s(&self.cfg.e2e, draft, ctx, gamma)
+        };
+        let alpha = self.cfg.spec_acceptance.clamp(0.0, 1.0);
+        let expected = speculative_expected_tokens_per_round(gamma, alpha);
+        let n = ((self.spec_credit + expected).floor() as usize)
+            .clamp(1, gamma + 1)
+            .min(remaining);
+        // Headroom for the n tokens this round keeps. The engine's
+        // optimistic appends past the kept prefix are rolled back by
+        // truncation within the round, so they never hold blocks across
+        // rounds.
+        let need_extra = {
+            let a = &self.active[0];
+            (self.alloc.blocks_for(ctx + n) - a.cache_tokens / bt)
+                .saturating_sub(a.shared_blocks)
+                .saturating_sub(a.blocks)
+        };
+        if need_extra > 0 {
+            self.evict_cache_for(need_extra);
+            if !self.alloc.can_allocate_blocks(need_extra) {
+                // Let the plain round grow block-by-block and preempt.
+                return false;
+            }
+            self.alloc
+                .allocate_blocks(need_extra)
+                // lint:allow(no-unwrap-in-lib): availability just checked
+                .expect("availability just checked");
+            self.active[0].blocks += need_extra;
+        }
+        self.spec_credit += expected - n as f64;
+        let accepted = n - 1;
+        let rejected = gamma - accepted;
+        let start_s = self.now_s;
+        self.now_s += t;
+        self.metrics.spec_rounds += 1;
+        self.metrics.spec_accepted_tokens += accepted as u64;
+        self.metrics.spec_rejected_tokens += rejected as u64;
+        if rejected > 0 {
+            self.metrics.spec_rollbacks += 1;
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_batch_sum += 1;
+        self.metrics.decode_time.record(t);
+        self.metrics.generated_tokens += n as u64;
+        for _ in 0..n {
+            self.metrics.tpot.record(t / n as f64);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record_at(start_s, Some(id), TraceEventKind::DraftPropose { gamma });
+            tr.record_span(
+                Some(id),
+                start_s,
+                t,
+                TraceEventKind::VerifyAccept {
+                    accepted,
+                    emitted: n,
+                },
+            );
+            if rejected > 0 {
+                // The tail blocks the optimistic γ+1 appends would have
+                // dirtied past the kept context — truncation's reclaim.
+                let blocks = self
+                    .alloc
+                    .blocks_for(ctx + 1 + gamma)
+                    .saturating_sub(self.alloc.blocks_for(ctx + n));
+                tr.record_at(
+                    self.now_s,
+                    Some(id),
+                    TraceEventKind::Rollback {
+                        tokens: rejected,
+                        blocks: blocks as u64,
+                    },
+                );
+            }
+        }
+        let a = &mut self.active[0];
+        a.generated += n;
+        a.context += n;
+        a.last_scheduled_s = self.now_s;
+        true
     }
 
     /// One decode step for every active request, split into compiled batch
@@ -950,6 +1193,19 @@ impl SimReplica {
                         p.release(&a.prompt, a.cache_tokens);
                     }
                 }
+                // A beam group retires as one request: branches release
+                // their blocks as they finish, but only the last branch
+                // standing emits the output (the engine emits the
+                // best-scoring branch; the sim models timing, and all
+                // branches share it).
+                if a.beam_width > 1 {
+                    let group_live = self.active.iter().any(|x| x.id == a.id)
+                        || self.preempted.iter().any(|p| p.a.id == a.id);
+                    if group_live {
+                        continue;
+                    }
+                    self.metrics.beam_prunes += (a.beam_width - 1) as u64;
+                }
                 let n = a.generated;
                 let tpot_s = if n > 1 {
                     (self.now_s - a.first_token_s) / (n - 1) as f64
@@ -982,6 +1238,11 @@ impl SimReplica {
             } else {
                 i += 1;
             }
+        }
+        if self.active.is_empty() {
+            // The fractional credit is per-stream state: a fresh lone
+            // sequence starts its speculation ledger from zero.
+            self.spec_credit = 0.0;
         }
     }
 }
@@ -1073,7 +1334,9 @@ impl ReplicaHandle for SimReplica {
 
     fn step(&mut self) -> Result<bool> {
         let mut did = self.admit_one_prefill();
-        did |= self.decode_round();
+        // Single-stream decode goes through the draft-verify fast path
+        // when configured; any other shape falls back to plain rounds.
+        did |= self.speculative_round() || self.decode_round();
         self.retire_finished();
         if let Some(tr) = self.trace.as_mut() {
             tr.set_virtual_now(self.now_s);
@@ -1592,5 +1855,129 @@ mod tests {
         assert_eq!(r.active(), 0);
         assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
         assert!(r.host_tier().unwrap().is_empty());
+    }
+
+    #[test]
+    fn speculative_single_stream_beats_plain_decode() {
+        // 70B paper geometry, one long single-stream request: draft-verify
+        // at γ=4 / α=0.8 must cut TPOT well below token-by-token decode
+        // (the tiny draft's rounds are nearly free next to a 70B step).
+        let mk = |gamma: usize| {
+            let mut cfg = SimReplicaConfig::gaudi2_llama31_70b();
+            cfg.spec_gamma = gamma;
+            cfg.spec_acceptance = 0.8;
+            let mut r = SimReplica::new("spec", cfg).unwrap();
+            r.submit(Request::new(0, vec![1i32; 1024], 64), 0.0);
+            let outs = drain(&mut r);
+            assert_eq!(outs.len(), 1);
+            assert_eq!(outs[0].tokens.len(), 64, "no tokens lost to rollback");
+            assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+            (outs[0].tpot_s, r.metrics().clone())
+        };
+        let (plain_tpot, plain_m) = mk(0);
+        assert_eq!(plain_m.spec_rounds, 0, "γ=0 means speculation is off");
+        let (spec_tpot, m) = mk(4);
+        assert!(m.spec_rounds > 0, "speculative rounds must fire");
+        // Every decoded token came through a verify round: prefill's first
+        // token plus each round's accepted prefix + bonus/correction.
+        assert_eq!(
+            m.spec_accepted_tokens + m.spec_rounds + 1,
+            m.generated_tokens
+        );
+        assert_eq!(m.spec_rejected_tokens, 4 * m.spec_rounds - m.spec_accepted_tokens);
+        // Accept-prefix geometry: E[accepted]/γ < α (a miss forfeits the
+        // tail), but well above the α→0 floor.
+        let rate = m.spec_acceptance_rate();
+        assert!((0.4..0.8).contains(&rate), "acceptance rate {rate}");
+        assert!(
+            plain_tpot / spec_tpot > 1.5,
+            "γ=4/α=0.8 speedup: plain {plain_tpot} vs spec {spec_tpot}"
+        );
+    }
+
+    #[test]
+    fn speculative_zero_acceptance_still_progresses() {
+        // α=0: every round rejects the whole draft and keeps only the
+        // target's correction token — forward progress never stalls and
+        // every round is a rollback.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.spec_gamma = 2;
+        cfg.spec_acceptance = 0.0;
+        let mut r = SimReplica::new("spec0", cfg).unwrap();
+        r.submit(Request::new(0, vec![0; 32], 8), 0.0);
+        let outs = drain(&mut r);
+        assert_eq!(outs[0].tokens.len(), 8);
+        let m = r.metrics();
+        assert_eq!(m.spec_rounds, 7, "one correction token per round");
+        assert_eq!(m.spec_accepted_tokens, 0);
+        assert_eq!(m.spec_rollbacks, m.spec_rounds);
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+    }
+
+    #[test]
+    fn speculation_steps_aside_for_batches() {
+        // With two sequences resident the batch already amortizes the
+        // per-step overhead, so the spec fast path must not fire — but
+        // solo phases (before the second admission, after the first
+        // retire) still speculate.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.spec_gamma = 4;
+        let mut r = SimReplica::new("specbatch", cfg).unwrap();
+        r.submit(Request::new(0, vec![0; 16], 24), 0.0);
+        r.submit(Request::new(1, vec![0; 16], 24), 0.0);
+        let mut guard = 0;
+        while r.has_work() {
+            let paired = r.active.len() == 2;
+            let before = r.metrics().spec_rounds;
+            r.step().unwrap();
+            if paired {
+                assert_eq!(
+                    r.metrics().spec_rounds,
+                    before,
+                    "no speculative rounds while two sequences are resident"
+                );
+            }
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert_eq!(r.metrics().requests_completed, 2);
+        assert!(r.metrics().spec_rounds > 0, "solo phases must speculate");
+    }
+
+    #[test]
+    fn beam_group_retires_once_with_fork_accounting() {
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.beam_width = 3;
+        let mut r = SimReplica::new("beam", cfg).unwrap();
+        r.submit(Request::new(9, vec![0; 32], 8), 0.0);
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 1, "a beam group emits one output");
+        assert_eq!(outs[0].tokens.len(), 8);
+        let m = r.metrics();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.beam_forks, 2);
+        assert_eq!(m.beam_prunes, 2);
+        // Branches decode together as a continuous batch.
+        assert!(m.mean_decode_batch() > 1.0);
+        // First token per branch, then 7 more each.
+        assert_eq!(m.generated_tokens, 24);
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
+    }
+
+    #[test]
+    fn beam_width_degrades_to_fit_slots_and_pool() {
+        // 2 slots: a width-8 request degrades to width 2 instead of
+        // wedging; per-request override beats the config default.
+        let mut cfg = SimReplicaConfig::synthetic_tiny();
+        cfg.slots = 2;
+        cfg.beam_width = 1;
+        let mut r = SimReplica::new("beamfit", cfg).unwrap();
+        r.submit(Request::new(3, vec![0; 16], 4).with_beam_width(8), 0.0);
+        let outs = drain(&mut r);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(r.metrics().beam_forks, 1, "width clamped to the 2 slots");
+        assert_eq!(r.metrics().beam_prunes, 1);
+        assert_eq!(r.allocator().free_blocks(), r.allocator().total_blocks);
     }
 }

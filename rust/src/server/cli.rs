@@ -82,6 +82,27 @@ fn parse_preempt_policy(s: &str) -> Result<PreemptPolicy> {
         .ok_or_else(|| anyhow::anyhow!("unknown --preempt-policy {s:?} (swap|recompute|auto)"))
 }
 
+/// `--spec-decode gamma=K` (or a bare `K`): draft tokens proposed per
+/// speculative draft-verify round, 0 = off.
+fn parse_spec_gamma(s: &str) -> Result<usize> {
+    s.strip_prefix("gamma=")
+        .unwrap_or(s)
+        .parse()
+        .map_err(|_| anyhow::anyhow!("unknown --spec-decode {s:?} (gamma=K, K >= 0)"))
+}
+
+/// Speculation and beam groups are mutually exclusive: the accept-prefix
+/// verify rule is defined against greedy decode, not scored beams.
+fn reject_spec_beam_combo(spec_gamma: usize, beam_width: usize) -> Result<()> {
+    if spec_gamma > 0 && beam_width > 1 {
+        bail!(
+            "--spec-decode and --beam-width are mutually exclusive \
+             (accept-prefix verification is defined for greedy decode)"
+        );
+    }
+    Ok(())
+}
+
 /// `--prefix-cache on|off` spellings.
 fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
     match s {
@@ -123,6 +144,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // 0 GB (the default) keeps the legacy reject-only admission.
     cfg.host_kv_bytes = args.get_f64("host-kv-gb", 0.0) * 1e9;
     cfg.preempt_policy = parse_preempt_policy(&args.get("preempt-policy", "auto"))?;
+    // Draft-verify speculative decoding and width-k beam groups
+    // (ISSUE 10). Speculation stays bit-identical to greedy decode; beam
+    // groups fork the prompt KV and emit the best-scoring branch.
+    cfg.spec_gamma = parse_spec_gamma(&args.get("spec-decode", "0"))?;
+    cfg.beam_width = args.get_usize("beam-width", 1).max(1);
+    reject_spec_beam_combo(cfg.spec_gamma, cfg.beam_width)?;
     // Scoped-pool workers for the host-side paged KV hot path;
     // 0 = auto (REPRO_NUM_THREADS or the machine's parallelism).
     cfg.kv_parallelism = match args.get_usize("kv-workers", 0) {
@@ -197,6 +224,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// --prefill-chunk TOK (chunked-prefill tail granularity, 0 = one chunk),
 /// --host-kv-gb GB (host KV tier for preemption swap-outs, 0 = off),
 /// --preempt-policy swap|recompute|auto (how preempted sequences resume),
+/// --spec-decode gamma=K (draft-verify speculative decoding, 0 = off),
+/// --spec-acceptance A (modeled draft acceptance rate, default 0.8),
+/// --beam-width K (width-k beam groups per request, 1 = off),
 /// --prompt-min/--prompt-max TOK, --max-new TOK, --seed N,
 /// --fleet-queue N, --json,
 /// --trace-out PATH (per-request Chrome trace-event timeline, Perfetto-
@@ -239,6 +269,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // swaps instead of rejecting with KvExhausted (0 GB = legacy off).
     sim_cfg.host_kv_bytes = args.get_f64("host-kv-gb", 0.0) * 1e9;
     sim_cfg.preempt_policy = parse_preempt_policy(&args.get("preempt-policy", "auto"))?;
+    // Draft-verify speculative decoding (single-stream fast path) and
+    // width-k beam groups per replica (ISSUE 10).
+    sim_cfg.spec_gamma = parse_spec_gamma(&args.get("spec-decode", "0"))?;
+    sim_cfg.spec_acceptance = args.get_f64("spec-acceptance", 0.8).clamp(0.0, 1.0);
+    sim_cfg.beam_width = args.get_usize("beam-width", 1).max(1);
+    reject_spec_beam_combo(sim_cfg.spec_gamma, sim_cfg.beam_width)?;
 
     let mut router = FleetRouter::new(FleetConfig {
         policy,
@@ -563,6 +599,56 @@ mod tests {
         let bad =
             Args::parse(&["fleet".into(), "--preempt-policy".into(), "drop".into()]).unwrap();
         assert!(cmd_fleet(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_and_beam_flags_parse_and_run() {
+        assert_eq!(parse_spec_gamma("gamma=4").unwrap(), 4);
+        assert_eq!(parse_spec_gamma("2").unwrap(), 2);
+        assert_eq!(parse_spec_gamma("0").unwrap(), 0);
+        assert!(parse_spec_gamma("gamma=lots").is_err());
+        // Speculation through the fleet path end to end.
+        let spec = Args::parse(&[
+            "fleet".into(),
+            "--replicas".into(),
+            "1".into(),
+            "--requests".into(),
+            "4".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--spec-decode".into(),
+            "gamma=2".into(),
+            "--spec-acceptance".into(),
+            "0.7".into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_fleet(&spec).unwrap();
+        // Beam groups through the fleet path end to end.
+        let beam = Args::parse(&[
+            "fleet".into(),
+            "--replicas".into(),
+            "1".into(),
+            "--requests".into(),
+            "4".into(),
+            "--pattern".into(),
+            "burst".into(),
+            "--beam-width".into(),
+            "2".into(),
+            "--json".into(),
+        ])
+        .unwrap();
+        cmd_fleet(&beam).unwrap();
+        // Mutually exclusive: accept-prefix verification assumes greedy.
+        let both = Args::parse(&[
+            "fleet".into(),
+            "--spec-decode".into(),
+            "2".into(),
+            "--beam-width".into(),
+            "2".into(),
+        ])
+        .unwrap();
+        assert!(cmd_fleet(&both).is_err());
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! * **Randomized interleavings** of alloc / warm-map / CoW-append /
 //!   publish / free / evict / swap-out / swap-in (the ISSUE 9 host-tier
-//!   preemption cycle) over a prefix-sharing prompt family, asserting
-//!   after every op:
+//!   preemption cycle) / truncate (the ISSUE 10 speculative rollback,
+//!   including cuts landing inside shared blocks) / fork (the beam
+//!   branch primitive; prune = Finish of a branch) over a prefix-sharing
+//!   prompt family, asserting after every op:
 //!   (a) pool refcount balance — each block's refcount equals the number
 //!       of live block tables mapping it, plus one if the prefix cache
 //!       owns it, plus one per swap record pinning it resident;
@@ -29,7 +31,7 @@
 //!   reading pool occupancy, versus N·P under private copies.
 
 use gaudi_fp8::coordinator::{
-    AppendOutcome, BlockId, KvStore, PrefixCache, PrefixCacheConfig, SwappedSlot,
+    AppendOutcome, BlockId, ForkError, KvStore, PrefixCache, PrefixCacheConfig, SwappedSlot,
 };
 use gaudi_fp8::fp8::bf16::{bf16_to_f32, f32_to_bf16};
 use gaudi_fp8::fp8::Fp8Format;
@@ -77,6 +79,15 @@ enum Op {
     /// and pool headroom exist right now; otherwise the record is kept
     /// for a later retry (the call must not mutate anything on refusal).
     SwapIn(usize),
+    /// Roll live sequence `i % live` back to `n % len` tokens
+    /// (`truncate_slot`, the speculative-reject path): blocks wholly past
+    /// the cut are released (shared ones by refcount drop), a cut inside
+    /// a shared block keeps it shared, and the model truncates with it.
+    Truncate(usize, usize),
+    /// Fork live sequence `i % live` into a fresh slot sharing its whole
+    /// history (`fork_slot`, the beam primitive). The typed refusal must
+    /// name the genuinely missing resource.
+    Fork(usize),
 }
 
 struct Seq {
@@ -491,6 +502,74 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
                     }
                 }
             }
+            Op::Truncate(i, n) => {
+                if live.is_empty() {
+                    continue;
+                }
+                let idx = i % live.len();
+                let len = live[idx].vals.len();
+                if len == 0 {
+                    continue;
+                }
+                // Strict shrink (0..len-1): the speculative-reject shape.
+                // Cuts landing mid-block leave that block shared if it was;
+                // the value check only reads the kept span, and gather
+                // zero-fills past len, so stale positions must be invisible.
+                let new_len = n % len;
+                kv.truncate_slot(live[idx].slot, new_len);
+                live[idx].vals.truncate(new_len);
+                // A cut can reach into the prompt prefix; appends after it
+                // rewrite positions Publish would claim as prompt content,
+                // so a truncated sequence is never inserted into the cache.
+                live[idx].cold = false;
+            }
+            Op::Fork(i) => {
+                if live.is_empty() {
+                    continue;
+                }
+                let idx = i % live.len();
+                let free_slots = live.len() < SLOTS;
+                let free_blocks = kv.pool().free_blocks();
+                match kv.fork_slot(live[idx].slot) {
+                    Ok(slot) => {
+                        // Zero-copy branch: shares every block; the census
+                        // now expects +1 refs on each, and the value check
+                        // re-reads the whole history through the new slot.
+                        let vals = live[idx].vals.clone();
+                        let fam = live[idx].fam;
+                        live.push(Seq {
+                            uid: next_uid,
+                            slot,
+                            fam,
+                            pinned: 0,
+                            vals,
+                            cold: false,
+                        });
+                        next_uid += 1;
+                    }
+                    Err(ForkError::NoFreeBlocks) => {
+                        if free_blocks != 0 {
+                            return Err(format!(
+                                "fork said NoFreeBlocks with {free_blocks} blocks free"
+                            ));
+                        }
+                    }
+                    Err(ForkError::NoFreeSlot) => {
+                        if free_slots {
+                            return Err("fork said NoFreeSlot with a slot free".into());
+                        }
+                        if free_blocks == 0 {
+                            return Err("NoFreeBlocks must win when both are exhausted".into());
+                        }
+                    }
+                    Err(ForkError::InactiveSource) => {
+                        return Err(format!(
+                            "fork of live seq {} said InactiveSource",
+                            live[idx].uid
+                        ));
+                    }
+                }
+            }
         }
         check_invariants(&kv, &pc, &live, &swapped)?;
     }
@@ -527,14 +606,16 @@ fn run_ops(ops: &[Op]) -> Result<(), String> {
 
 fn gen_ops(rng: &mut XorShiftRng, n: usize) -> Vec<Op> {
     (0..n)
-        .map(|_| match rng.below(10) {
+        .map(|_| match rng.below(12) {
             0 | 1 => Op::Start(rng.below(64)),
             2 | 3 | 4 => Op::Append(rng.below(64)),
             5 => Op::Publish(rng.below(64)),
             6 => Op::Finish(rng.below(64)),
             7 => Op::Evict(1 + rng.below(4)),
             8 => Op::SwapOut(rng.below(64)),
-            _ => Op::SwapIn(rng.below(64)),
+            9 => Op::SwapIn(rng.below(64)),
+            10 => Op::Truncate(rng.below(64), rng.below(24)),
+            _ => Op::Fork(rng.below(64)),
         })
         .collect()
 }
@@ -581,6 +662,60 @@ fn randomized_interleavings_preserve_pool_invariants() {
             );
         }
     }
+}
+
+/// A speculative rollback whose cut lands *inside* a block another branch
+/// still reads must keep that block shared (no clone, no zeroing): the
+/// sibling reads every original value bit-identically, blocks wholly past
+/// the cut return to the pool, and the branch's next append CoWs its own
+/// copy before writing anything.
+#[test]
+fn truncation_inside_a_shared_block_preserves_the_sibling() {
+    let mut kv = KvStore::with_block_tokens(LAYERS, 2, T, KV_HEADS, HEAD_DIM, KvDtype::F32, BT, 0);
+    let root = kv.alloc_slot().unwrap();
+    let n = LAYERS * T * ROW;
+    let (mut k, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    for p in 0..6 {
+        poke(&mut k, &mut v, p, (10 + p) as f32);
+    }
+    kv.write_slot(root, &k, &v, 6); // one full block + a half block
+    let branch = kv.fork_slot(root).unwrap();
+    assert_eq!(kv.pool().used_blocks(), 2, "fork copies no blocks");
+    // The branch speculates one token (CoW of the hot block), then the
+    // verifier rejects back to 3 tokens — a cut inside the first block,
+    // which the root still reads.
+    let row = vec![99.0f32; LAYERS * ROW];
+    kv.append_token(branch, &row, &row);
+    assert_eq!(kv.pool().used_blocks(), 3, "append CoW'd the hot block");
+    kv.truncate_slot(branch, 3);
+    assert_eq!(kv.len(branch), Some(3));
+    assert_eq!(
+        kv.pool().used_blocks(),
+        2,
+        "the branch's private hot-block copy returned to the pool"
+    );
+    let shared = kv.slot_blocks(branch)[0];
+    assert_eq!(kv.slot_blocks(root)[0], shared, "kept block stays shared");
+    assert_eq!(kv.pool().ref_count(shared), 2);
+    let (kr, _, lens) = kv.gather_batch(&[root]);
+    assert_eq!(lens, vec![6]);
+    for p in 0..6 {
+        assert_eq!(kr[p * ROW], (10 + p) as f32, "sibling value at {p}");
+    }
+    // Writing after the rollback goes through CoW again — the rejected
+    // positions never leak into the sibling's block.
+    let row2 = vec![7.0f32; LAYERS * ROW];
+    kv.append_token(branch, &row2, &row2);
+    assert_eq!(kv.pool().ref_count(shared), 1, "root's block went private");
+    let (kb, _, lens) = kv.gather_batch(&[branch]);
+    assert_eq!(lens, vec![4]);
+    assert_eq!(kb[3 * ROW], 7.0);
+    for p in 0..3 {
+        assert_eq!(kb[p * ROW], (10 + p) as f32, "kept value at {p}");
+    }
+    kv.free_slot(root);
+    kv.free_slot(branch);
+    assert_eq!(kv.pool().used_blocks(), 0);
 }
 
 // ---------------------------------------------------------------------------

@@ -218,3 +218,72 @@ fn dense_reference_engine_matches_paged_tokens() {
         "paged and dense-reference decode diverged: {paged:?} vs {dense:?}"
     );
 }
+
+/// ISSUE 10: speculative draft-verify decoding under the greedy
+/// accept-prefix rule must be **bit-identical** to plain token-by-token
+/// greedy decode, for every KV dtype: a draft token stands iff it equals
+/// the target's argmax, the first mismatch is replaced by the target's
+/// own token, and rejected KV rolls back via block truncation.
+#[test]
+fn speculative_decode_is_bit_identical_to_plain_greedy() {
+    let Some(dir) = artifacts_dir() else { return };
+    for dtype in [KvDtype::F32, KvDtype::Bf16, KvDtype::FP8_DEFAULT] {
+        let run = |gamma: usize| {
+            let mut cfg = EngineConfig::new(&dir, "fp8_pt");
+            cfg.kv_dtype = dtype;
+            cfg.spec_gamma = gamma;
+            let mut eng = Engine::new(cfg).unwrap();
+            let mut req = Request::new(1, prompt("the quick "), 16);
+            req.stop_token = None;
+            eng.submit(req);
+            let tokens = eng.run_to_completion().unwrap()[0].tokens.clone();
+            (tokens, eng.metrics.clone())
+        };
+        let (plain, base) = run(0);
+        let (spec, m) = run(3);
+        assert_eq!(base.spec_rounds, 0);
+        assert_eq!(
+            plain, spec,
+            "speculation changed greedy output under {dtype:?}: {plain:?} vs {spec:?}"
+        );
+        assert!(m.spec_rounds > 0, "single-stream decode must speculate");
+        // Every round verifies exactly γ draft tokens.
+        assert_eq!(
+            m.spec_accepted_tokens + m.spec_rejected_tokens,
+            3 * m.spec_rounds,
+            "round accounting must balance under {dtype:?}"
+        );
+    }
+}
+
+/// ISSUE 10: a width-k beam request decodes k co-resident CoW branches
+/// but retires as exactly ONE output with fork/prune accounting
+/// balanced; width 1 is plain greedy with zero forks.
+#[test]
+fn beam_group_emits_one_output_with_balanced_forks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |k: usize| {
+        let mut cfg = EngineConfig::new(&dir, "fp8_pt");
+        cfg.beam_width = k;
+        let mut eng = Engine::new(cfg).unwrap();
+        let mut req = Request::new(1, prompt("the quick "), 8);
+        req.stop_token = None;
+        eng.submit(req);
+        let outs = eng.run_to_completion().unwrap();
+        assert_eq!(outs.len(), 1, "beam width {k} must emit one output");
+        assert_eq!(outs[0].tokens.len(), 8, "beam width {k} token budget");
+        (outs[0].tokens.clone(), eng.metrics.clone())
+    };
+    let (_, m1) = run(1);
+    assert_eq!(m1.beam_forks, 0);
+    assert_eq!(m1.beam_prunes, 0);
+    let (_, m3) = run(3);
+    assert_eq!(m3.beam_forks, 2, "width 3 forks two branches");
+    assert_eq!(m3.beam_prunes, 2, "every forked branch is pruned at retire");
+    // Branches decode as one co-scheduled group.
+    assert!(
+        m3.mean_decode_batch() > 1.0,
+        "beam branches must batch together, got {}",
+        m3.mean_decode_batch()
+    );
+}
